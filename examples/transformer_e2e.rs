@@ -1,0 +1,106 @@
+//! End-to-end driver: decentralized training of a causal transformer LM.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example transformer_e2e [rounds]
+//! ```
+//!
+//! This is the full-system proof that all layers compose:
+//! * L1 — the Pallas dense (fwd+bwd), fused SGD, and masked-mean kernels,
+//! * L2 — the JAX transformer train/eval graphs AOT'd to HLO text,
+//! * L3 — the rust MoDeST coordinator sampling trainers/aggregators over a
+//!   simulated WAN of 32 nodes,
+//! with a 421k-parameter transformer (vocab 64, d=128, 2 layers, T=64)
+//! learning a synthetic Markov corpus sharded across the nodes. The loss
+//! curve and token accuracy are logged every few rounds; the run is
+//! recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! (The paper targets edge-scale CNNs; a 100M-parameter model at hundreds
+//! of rounds is not feasible on this single-core CPU image — the model is
+//! scaled to keep the full three-layer round path identical. See
+//! EXPERIMENTS.md for the scaling note.)
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::net::traffic::fmt_bytes;
+use modest_dl::runtime::XlaRuntime;
+use modest_dl::sim::ChurnSchedule;
+
+fn main() -> Result<()> {
+    let rounds: u64 = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("rounds must be an integer"))
+        .unwrap_or(200);
+
+    let spec = SessionSpec {
+        dataset: "transformer".into(),
+        algo: Algo::Modest,
+        nodes: 32,
+        s: 8,
+        a: 2,
+        sf: 1.0,
+        max_rounds: rounds,
+        max_time_s: 86_400.0,
+        eval_interval_s: 30.0,
+        ..Default::default()
+    };
+
+    println!("loading artifacts + compiling transformer executables...");
+    let t0 = Instant::now();
+    let runtime = XlaRuntime::load(&spec.artifacts_dir)?;
+    let vm = runtime.manifest().variant("transformer")?;
+    println!(
+        "  {} params ({}), vocab={}, layers={}, compiled in {:.1}s",
+        vm.param_count,
+        fmt_bytes(vm.model_bytes),
+        vm.meta_usize("vocab").unwrap_or(0),
+        vm.meta_usize("layers").unwrap_or(0),
+        t0.elapsed().as_secs_f64()
+    );
+
+    let session = spec.build_modest(Some(&runtime), ChurnSchedule::empty())?;
+    println!(
+        "training for {rounds} rounds across {} nodes (s={}, a={})...",
+        spec.nodes, spec.s, spec.a
+    );
+    let wall = Instant::now();
+    let (metrics, _) = session.run();
+    let wall_s = wall.elapsed().as_secs_f64();
+
+    println!("\nloss curve (token-level NLL on held-out sequences):");
+    for p in &metrics.curve {
+        println!(
+            "  t={:>7.0}s round={:>5} token-acc={:.4} loss={:.4}",
+            p.time_s, p.round, p.metric, p.loss
+        );
+    }
+
+    let first = metrics.curve.first().expect("curve");
+    let last = metrics.curve.last().expect("curve");
+    println!("\nsummary:");
+    println!(
+        "  loss {:.4} -> {:.4} over {} rounds ({:.0}s virtual, {:.1}s wallclock)",
+        first.loss, last.loss, metrics.final_round, metrics.duration_s, wall_s
+    );
+    println!(
+        "  token accuracy {:.4} -> {:.4} (chance = {:.4})",
+        first.metric,
+        last.metric,
+        1.0 / vm.meta_usize("vocab").unwrap_or(64) as f64
+    );
+    let t = &metrics.traffic;
+    println!(
+        "  traffic total={} max-node={} overhead={:.1}%",
+        fmt_bytes(t.total),
+        fmt_bytes(t.max_node),
+        100.0 * t.overhead_fraction
+    );
+    anyhow::ensure!(
+        last.loss < first.loss * 0.8,
+        "end-to-end training failed to reduce loss meaningfully"
+    );
+    println!("\nEND-TO-END OK: all three layers compose.");
+    Ok(())
+}

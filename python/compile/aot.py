@@ -1,0 +1,155 @@
+"""AOT pipeline: lower every model variant to HLO text + write the manifest.
+
+This is the only place Python runs — once, at build time (`make artifacts`).
+The rust coordinator afterwards loads ``artifacts/*.hlo.txt`` via
+``HloModuleProto::from_text_file`` and never touches Python again.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(what the published ``xla`` 0.1.6 crate links) rejects (``proto.id() <=
+INT_MAX``). The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/gen_hlo.py.
+
+Artifacts per variant ``v``:
+
+* ``{v}_train.hlo.txt`` — (params, vel, x, y, lr, mu) -> (params', vel', loss)
+* ``{v}_eval.hlo.txt``  — (params, x, y) -> (metric_sum, loss_sum)
+* ``{v}_avg.hlo.txt``   — (stack[smax,P], mask[smax], count) -> (params,)
+* ``{v}_init.bin``      — little-endian f32 initial flat parameters
+* ``manifest.json``     — shapes/dtypes/hyperparameters for the rust loader
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, Variant, make_avg_step, make_train_step
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape_dtype: tuple[tuple[int, ...], str]) -> jax.ShapeDtypeStruct:
+    shape, dtype = shape_dtype
+    return jax.ShapeDtypeStruct(shape, _DTYPES[dtype])
+
+
+def lower_variant(v: Variant) -> dict[str, str]:
+    """Lower train/eval/avg for one variant; returns {kind: hlo_text}."""
+    p = jax.ShapeDtypeStruct((v.param_count,), jnp.float32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    train = make_train_step(v.loss)
+    train_hlo = to_hlo_text(
+        jax.jit(train).lower(
+            p, p, _spec(v.train_x), _spec(v.train_y), scalar, scalar
+        )
+    )
+
+    def eval_step(params, x, y):
+        return v.evaluate(params, x, y)
+
+    eval_hlo = to_hlo_text(
+        jax.jit(eval_step).lower(p, _spec(v.eval_x), _spec(v.eval_y))
+    )
+
+    avg = make_avg_step()
+    stack = jax.ShapeDtypeStruct((v.smax, v.param_count), jnp.float32)
+    mask = jax.ShapeDtypeStruct((v.smax,), jnp.float32)
+    avg_hlo = to_hlo_text(jax.jit(avg).lower(stack, mask, scalar))
+
+    return {"train": train_hlo, "eval": eval_hlo, "avg": avg_hlo}
+
+
+def _io_entry(shape_dtype: tuple[tuple[int, ...], str]) -> dict:
+    shape, dtype = shape_dtype
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def build_manifest_entry(v: Variant, files: dict[str, str], init_sha: str) -> dict:
+    return {
+        "name": v.name,
+        "kind": v.kind,
+        "param_count": v.param_count,
+        "model_bytes": v.param_count * 4,
+        "smax": v.smax,
+        "lr": v.lr,
+        "momentum": v.momentum,
+        "nodes": v.nodes,
+        "train_batch": v.train_x[0][0],
+        "eval_batch": v.eval_x[0][0],
+        "train_x": _io_entry(v.train_x),
+        "train_y": _io_entry(v.train_y),
+        "eval_x": _io_entry(v.eval_x),
+        "eval_y": _io_entry(v.eval_y),
+        "files": files,
+        "init_sha256": init_sha,
+        "meta": v.meta or {},
+    }
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts", help="artifact dir")
+    ap.add_argument(
+        "--variants",
+        default="",
+        help="comma-separated subset of variants (default: all)",
+    )
+    ap.add_argument("--seed", type=int, default=42, help="init param seed")
+    # Kept for Makefile compatibility; ignored when --out-dir is used.
+    ap.add_argument("--out", default=None, help=argparse.SUPPRESS)
+    args = ap.parse_args(argv)
+
+    out_dir = pathlib.Path(args.out_dir)
+    if args.out is not None:
+        out_dir = pathlib.Path(args.out).parent
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    wanted = [s for s in args.variants.split(",") if s]
+    manifest: dict = {"seed": args.seed, "variants": {}}
+    for name, v in VARIANTS.items():
+        if wanted and name not in wanted:
+            continue
+        print(f"[aot] lowering {name} (P={v.param_count:,})", flush=True)
+        hlos = lower_variant(v)
+        files = {}
+        for kind, text in hlos.items():
+            fname = f"{name}_{kind}.hlo.txt"
+            (out_dir / fname).write_text(text)
+            files[kind] = fname
+            print(f"[aot]   {fname}: {len(text):,} chars")
+        init = v.init(args.seed).astype("<f4")
+        assert init.shape == (v.param_count,)
+        init_name = f"{name}_init.bin"
+        (out_dir / init_name).write_bytes(init.tobytes())
+        files["init"] = init_name
+        sha = hashlib.sha256(init.tobytes()).hexdigest()
+        manifest["variants"][name] = build_manifest_entry(v, files, sha)
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"[aot] wrote manifest with {len(manifest['variants'])} variants")
+    # Marker file used by the Makefile as the artifact-freshness stamp.
+    (out_dir / ".stamp").write_text("ok\n")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""Layer-1 Pallas kernels for the MoDeST reproduction.
+
+These are the compute hot spots of the system, written as Pallas kernels
+(interpret=True so they lower to plain HLO ops executable on the CPU PJRT
+client; see DESIGN.md §Hardware-Adaptation for the TPU tiling story):
+
+* :mod:`dense`  — tiled matmul + bias, forward and backward (custom_vjp).
+  The per-round training hot spot (every local SGD step of every sampled
+  trainer runs through it).
+* :mod:`sgd`    — fused (momentum-)SGD update on the flat parameter vector.
+* :mod:`avg`    — masked mean over a stack of flat models: the aggregator
+  hot spot (Alg. 4 line 21, ``AVG(Θ)``).
+
+``ref.py`` holds the pure-jnp oracles used by the pytest/hypothesis suite.
+"""
+
+from . import avg, dense, ref, sgd  # noqa: F401
+
+__all__ = ["avg", "dense", "ref", "sgd"]

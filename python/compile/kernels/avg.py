@@ -1,0 +1,73 @@
+"""Masked model averaging — the aggregator hot spot (Alg. 4, ``AVG(Θ)``).
+
+An aggregator in MoDeST receives between ``ceil(sf*s)`` and ``s`` updated
+models per round and averages them. XLA needs static shapes, so the AOT'd
+module is compiled for a fixed ``smax`` rows; the rust side zero-pads the
+stack and passes a 0/1 mask plus the live count:
+
+    out[p] = sum_j mask[j] * stack[j, p] / count
+
+The masked mean is computed as a single ``mask @ stack`` matvec — on TPU an
+MXU matvec with the mask resident, streaming ``(smax, T)`` tiles through
+VMEM (grid along the flat parameter axis). On CPU-interpret the whole stack
+is one block: grids copy full arrays per step on that backend (see
+EXPERIMENTS.md §Perf, L1 iteration 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dense import target
+
+_TPU_TILE = 8 * 1024
+
+
+def _avg_kernel(s_ref, m_ref, c_ref, o_ref):
+    # (smax,) @ (smax, T) -> (T,) masked sum, then scale by 1/count.
+    o_ref[...] = jnp.dot(
+        m_ref[...], s_ref[...], preferred_element_type=jnp.float32
+    ) * (1.0 / c_ref[0])
+
+
+def masked_mean(
+    stack: jax.Array, mask: jax.Array, count: jax.Array
+) -> jax.Array:
+    """Masked mean over the first axis of ``stack [smax, P]``.
+
+    ``mask`` is an f32 0/1 vector of length smax; ``count`` a positive scalar
+    (the number of live rows). Rows with mask 0 are ignored.
+    """
+    smax, p = stack.shape
+    assert mask.shape == (smax,)
+    c1 = jnp.reshape(count.astype(jnp.float32), (1,))
+
+    if target() != "tpu":
+        return pl.pallas_call(
+            _avg_kernel,
+            out_shape=jax.ShapeDtypeStruct((p,), jnp.float32),
+            interpret=True,
+        )(stack, mask, c1)
+
+    tile = _TPU_TILE
+    pad = (-p) % tile
+    sp = jnp.pad(stack, ((0, 0), (0, pad)))
+    n = sp.shape[1] // tile
+    out = pl.pallas_call(
+        _avg_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((smax, tile), lambda i: (0, i)),
+            pl.BlockSpec((smax,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((sp.shape[1],), jnp.float32),
+        interpret=True,
+    )(sp, mask, c1)
+    return out[:p]
+
+
+__all__ = ["masked_mean"]

@@ -1,0 +1,150 @@
+"""Tiled dense (matmul + bias) layer as Pallas kernels, fwd + bwd.
+
+This is the training hot spot: every hidden layer of every model variant
+routes through :func:`dense`, both forward and (via ``jax.custom_vjp``)
+backward, so the whole local-SGD step of a sampled trainer is dominated by
+these three kernels.
+
+TPU tiling story (DESIGN.md §Hardware-Adaptation): blocks are chosen as the
+largest divisor of each dimension capped at MXU-friendly 128. The grid walks
+output tiles; the contraction dimension is kept resident per tile (all our
+model widths fit VMEM comfortably — see the §Perf VMEM table). On CPU we run
+interpret=True, which lowers to plain HLO so the AOT'd module executes on the
+PJRT CPU client from rust.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def target() -> str:
+    """Lowering target: "tpu" tiles for the MXU/VMEM; "cpu" (default here)
+    uses large blocks because interpret-mode grids materialize full-array
+    copies per grid step on the CPU backend (measured 3.9ms/step on a 1.75M
+    param model — see EXPERIMENTS.md §Perf L1 iteration 1)."""
+    return os.environ.get("MODEST_PALLAS_TARGET", "cpu")
+
+
+def block_cap() -> int:
+    # 128 matches the MXU systolic array edge and keeps worst-case VMEM
+    # residency (x, w, o tiles + K-strip) under ~2 MB; on CPU-interpret we
+    # want as few grid steps as possible.
+    return 128 if target() == "tpu" else 2048
+
+
+def _tile(dim: int, cap: int | None = None) -> int:
+    """Largest divisor of ``dim`` that is <= cap (>=1 always exists)."""
+    cap = block_cap() if cap is None else cap
+    t = min(dim, cap)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _matmul_bias_kernel(x_ref, w_ref, b_ref, o_ref):
+    """o = x @ w + b over one (bm, bn) output tile; K resident."""
+    o_ref[...] = (
+        jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...]
+    )
+
+
+def _dx_kernel(g_ref, w_ref, o_ref):
+    """dx = g @ w.T over one (bm, bd) tile; N resident."""
+    o_ref[...] = jnp.dot(
+        g_ref[...], w_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+def _dw_kernel(x_ref, g_ref, o_ref):
+    """dw = x.T @ g over one (bd, bn) tile; M resident."""
+    o_ref[...] = jnp.dot(
+        x_ref[...].T, g_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _dense_fwd_pallas(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,)
+    bm, bn = _tile(m), _tile(n)
+    return pl.pallas_call(
+        _matmul_bias_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+def _dense_dx_pallas(g: jax.Array, w: jax.Array) -> jax.Array:
+    m, n = g.shape
+    d, n2 = w.shape
+    assert n == n2
+    bm, bd = _tile(m), _tile(d)
+    return pl.pallas_call(
+        _dx_kernel,
+        grid=(m // bm, d // bd),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((bd, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bd), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, d), g.dtype),
+        interpret=True,
+    )(g, w)
+
+
+def _dense_dw_pallas(x: jax.Array, g: jax.Array) -> jax.Array:
+    m, d = x.shape
+    m2, n = g.shape
+    assert m == m2
+    bd, bn = _tile(d), _tile(n)
+    return pl.pallas_call(
+        _dw_kernel,
+        grid=(d // bd, n // bn),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda i, j: (0, i)),
+            pl.BlockSpec((m, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bd, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d, n), x.dtype),
+        interpret=True,
+    )(x, g)
+
+
+@jax.custom_vjp
+def dense(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """``x @ w + b`` through the Pallas forward kernel.
+
+    Differentiable: the VJP routes dx/dw through the Pallas backward kernels
+    and db through a cheap jnp reduction.
+    """
+    return _dense_fwd_pallas(x, w, b)
+
+
+def _dense_vjp_fwd(x, w, b):
+    return _dense_fwd_pallas(x, w, b), (x, w)
+
+
+def _dense_vjp_bwd(res, g):
+    x, w = res
+    return _dense_dx_pallas(g, w), _dense_dw_pallas(x, g), jnp.sum(g, axis=0)
+
+
+dense.defvjp(_dense_vjp_fwd, _dense_vjp_bwd)
+
+
+__all__ = ["dense", "_tile"]

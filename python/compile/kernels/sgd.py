@@ -1,0 +1,100 @@
+"""Fused (momentum-)SGD update on the flat parameter vector, as a Pallas kernel.
+
+The whole model is a single flat f32 vector (the interchange format with the
+rust coordinator), so the optimizer update is one streaming pass:
+
+    v' = mu * v + g
+    p' = p - lr * v'
+
+With ``mu == 0`` this degenerates to plain SGD (``p - lr*g``) regardless of
+the incoming velocity, which lets every model variant share one train-step
+signature (the paper uses momentum only for CIFAR10, plain SGD elsewhere).
+
+Target-dependent structure (see ``dense.target``):
+
+* ``tpu`` — tiled along the flat vector in (8x1024)-f32 strips: each grid
+  step streams one strip HBM->VMEM, fuses the two FMAs on the VPU, and
+  writes both outputs back; VMEM residency is 5 strips = 160 KB.
+* ``cpu`` (default) — a single whole-vector block. Interpret-mode grids
+  materialize full-array copies per grid step on the CPU backend (measured
+  ~3.9 ms/step x 215 steps = 838 ms on the FEMNIST-sized model), so the
+  CPU lowering uses one grid step: 6 ms for the same update
+  (EXPERIMENTS.md §Perf, L1 iteration 1).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .dense import target
+
+# TPU strip: 8 sublanes x 1024 lanes of f32 — a full VREG tile times 8.
+_TPU_TILE = 8 * 1024
+
+
+def _sgd_kernel(p_ref, v_ref, g_ref, lr_ref, mu_ref, p_out_ref, v_out_ref):
+    v_new = mu_ref[0] * v_ref[...] + g_ref[...]
+    v_out_ref[...] = v_new
+    p_out_ref[...] = p_ref[...] - lr_ref[0] * v_new
+
+
+def sgd_update(
+    params: jax.Array,
+    velocity: jax.Array,
+    grads: jax.Array,
+    lr: jax.Array,
+    mu: jax.Array,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused momentum-SGD step over flat ``[P]`` vectors.
+
+    Returns ``(new_params, new_velocity)``. ``lr`` and ``mu`` are scalars.
+    """
+    (p,) = params.shape
+    assert velocity.shape == (p,) and grads.shape == (p,)
+    lr1 = jnp.reshape(lr.astype(jnp.float32), (1,))
+    mu1 = jnp.reshape(mu.astype(jnp.float32), (1,))
+
+    if target() != "tpu":
+        # Single-block lowering: no grid, refs see the whole vectors.
+        new_p, new_v = pl.pallas_call(
+            _sgd_kernel,
+            out_shape=[
+                jax.ShapeDtypeStruct((p,), jnp.float32),
+                jax.ShapeDtypeStruct((p,), jnp.float32),
+            ],
+            interpret=True,
+        )(params, velocity, grads, lr1, mu1)
+        return new_p, new_v
+
+    tile = _TPU_TILE
+    pad = (-p) % tile
+    pp = jnp.pad(params, (0, pad))
+    vp = jnp.pad(velocity, (0, pad))
+    gp = jnp.pad(grads, (0, pad))
+    n = pp.shape[0] // tile
+    new_p, new_v = pl.pallas_call(
+        _sgd_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(pp.shape, jnp.float32),
+            jax.ShapeDtypeStruct(vp.shape, jnp.float32),
+        ],
+        interpret=True,
+    )(pp, vp, gp, lr1, mu1)
+    return new_p[:p], new_v[:p]
+
+
+__all__ = ["sgd_update"]

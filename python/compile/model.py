@@ -1,0 +1,472 @@
+"""Layer-2: JAX model definitions for every learning task in the paper.
+
+Table 3 of the paper evaluates four tasks (CIFAR10 / CelebA / FEMNIST image
+classification, MovieLens matrix factorization); we add a small causal
+transformer LM for the end-to-end example. Real image datasets are replaced
+by seeded synthetic feature tasks generated on the rust side (DESIGN.md §3);
+what matters for the systems results is that the **parameter byte counts
+match the paper's Table 3**, which they do (see ``VARIANTS``).
+
+Interchange with the rust coordinator is a single flat f32 vector:
+
+    train_step(params[P], vel[P], x, y, lr, mu) -> (params'[P], vel'[P], loss)
+    eval_step(params[P], x, y)                  -> (metric_sum, loss_sum)
+    avg(stack[smax,P], mask[smax], count)       -> params[P]
+
+``mu=0`` makes the momentum step exact plain SGD, so one signature serves
+all variants. Hidden layers route through the Pallas ``dense`` kernel
+(fwd+bwd), the optimizer through the fused Pallas ``sgd_update``, and
+aggregation through the Pallas ``masked_mean`` — the three L1 hot spots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.avg import masked_mean
+from .kernels.dense import dense
+from .kernels.sgd import sgd_update
+
+# --------------------------------------------------------------------------
+# Flat parameter plumbing
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Ordered (name, shape) list defining the flat layout of a model."""
+
+    entries: tuple[tuple[str, tuple[int, ...]], ...]
+
+    @property
+    def sizes(self) -> list[int]:
+        return [int(np.prod(s)) for _, s in self.entries]
+
+    @property
+    def total(self) -> int:
+        return sum(self.sizes)
+
+    def unflatten(self, flat: jax.Array) -> dict[str, jax.Array]:
+        out, off = {}, 0
+        for (name, shape), size in zip(self.entries, self.sizes):
+            out[name] = flat[off : off + size].reshape(shape)
+            off += size
+        return out
+
+    def flatten(self, tree: dict[str, jax.Array]) -> jax.Array:
+        return jnp.concatenate(
+            [tree[name].reshape(-1) for name, _ in self.entries]
+        )
+
+
+def _glorot(rng: np.random.Generator, shape: tuple[int, ...]) -> np.ndarray:
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    fan_out = shape[-1]
+    lim = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-lim, lim, size=shape).astype(np.float32)
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (stands in for the paper's small CNNs at equal byte size)
+# --------------------------------------------------------------------------
+
+
+def mlp_spec(input_dim: int, hidden: int, classes: int) -> ParamSpec:
+    return ParamSpec(
+        (
+            ("w1", (input_dim, hidden)),
+            ("b1", (hidden,)),
+            ("w2", (hidden, hidden)),
+            ("b2", (hidden,)),
+            ("w3", (hidden, classes)),
+            ("b3", (classes,)),
+        )
+    )
+
+
+def mlp_init(spec: ParamSpec, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in spec.entries:
+        if name.startswith("w"):
+            parts.append(_glorot(rng, shape).reshape(-1))
+        else:
+            parts.append(np.zeros(int(np.prod(shape)), np.float32))
+    return np.concatenate(parts)
+
+
+def mlp_logits(spec: ParamSpec, flat: jax.Array, x: jax.Array) -> jax.Array:
+    p = spec.unflatten(flat)
+    h = jax.nn.relu(dense(x, p["w1"], p["b1"]))
+    h = jax.nn.relu(dense(h, p["w2"], p["b2"]))
+    return dense(h, p["w3"], p["b3"])
+
+
+def _xent(logits: jax.Array, y: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=-1))
+
+
+def mlp_loss(spec: ParamSpec, flat: jax.Array, x: jax.Array, y: jax.Array):
+    return _xent(mlp_logits(spec, flat, x), y)
+
+
+def mlp_eval(spec: ParamSpec, flat: jax.Array, x: jax.Array, y: jax.Array):
+    logits = mlp_logits(spec, flat, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    loss_sum = -jnp.sum(jnp.take_along_axis(logp, y[:, None], axis=-1))
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == y).astype(jnp.float32))
+    return correct, loss_sum
+
+
+# --------------------------------------------------------------------------
+# Matrix factorization (MovieLens task, one-user-one-node)
+# --------------------------------------------------------------------------
+
+
+def matfact_spec(users: int, items: int, dim: int) -> ParamSpec:
+    return ParamSpec(
+        (
+            ("u_emb", (users, dim)),
+            ("i_emb", (items, dim)),
+            ("u_bias", (users,)),
+            ("i_bias", (items,)),
+            ("g_bias", (1,)),
+        )
+    )
+
+
+def matfact_init(spec: ParamSpec, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in spec.entries:
+        n = int(np.prod(shape))
+        if name.endswith("emb"):
+            parts.append((0.1 * rng.standard_normal(n)).astype(np.float32))
+        else:
+            parts.append(np.zeros(n, np.float32))
+    return np.concatenate(parts)
+
+
+def matfact_predict(spec: ParamSpec, flat: jax.Array, x: jax.Array):
+    """x is int32 [B, 2] of (user, item) indices."""
+    p = spec.unflatten(flat)
+    u, i = x[:, 0], x[:, 1]
+    dot = jnp.sum(p["u_emb"][u] * p["i_emb"][i], axis=-1)
+    return p["g_bias"][0] + p["u_bias"][u] + p["i_bias"][i] + dot
+
+
+_MF_REG = 1e-4
+
+
+def matfact_loss(spec: ParamSpec, flat: jax.Array, x: jax.Array, y: jax.Array):
+    pred = matfact_predict(spec, flat, x)
+    p = spec.unflatten(flat)
+    u, i = x[:, 0], x[:, 1]
+    reg = _MF_REG * (
+        jnp.sum(p["u_emb"][u] ** 2) + jnp.sum(p["i_emb"][i] ** 2)
+    )
+    return jnp.mean((pred - y) ** 2) + reg / x.shape[0]
+
+
+def matfact_eval(spec: ParamSpec, flat: jax.Array, x: jax.Array, y: jax.Array):
+    pred = matfact_predict(spec, flat, x)
+    se = jnp.sum((pred - y) ** 2)
+    return se, se  # metric and loss are both squared-error sums (MSE task)
+
+
+# --------------------------------------------------------------------------
+# Tiny causal transformer LM (end-to-end example workload)
+# --------------------------------------------------------------------------
+
+
+def transformer_spec(
+    vocab: int, d: int, layers: int, d_ff: int, max_t: int
+) -> ParamSpec:
+    entries: list[tuple[str, tuple[int, ...]]] = [
+        ("tok_emb", (vocab, d)),
+        ("pos_emb", (max_t, d)),
+    ]
+    for l in range(layers):
+        entries += [
+            (f"l{l}.ln1_g", (d,)),
+            (f"l{l}.ln1_b", (d,)),
+            (f"l{l}.wqkv", (d, 3 * d)),
+            (f"l{l}.bqkv", (3 * d,)),
+            (f"l{l}.wo", (d, d)),
+            (f"l{l}.bo", (d,)),
+            (f"l{l}.ln2_g", (d,)),
+            (f"l{l}.ln2_b", (d,)),
+            (f"l{l}.w1", (d, d_ff)),
+            (f"l{l}.b1", (d_ff,)),
+            (f"l{l}.w2", (d_ff, d)),
+            (f"l{l}.b2", (d,)),
+        ]
+    entries += [("lnf_g", (d,)), ("lnf_b", (d,)), ("head", (d, vocab))]
+    return ParamSpec(tuple(entries))
+
+
+def transformer_init(spec: ParamSpec, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    parts = []
+    for name, shape in spec.entries:
+        n = int(np.prod(shape))
+        if "ln" in name and name.endswith("_g"):
+            parts.append(np.ones(n, np.float32))
+        elif name.endswith("_b") or ".b" in name:
+            parts.append(np.zeros(n, np.float32))
+        elif "emb" in name:
+            parts.append((0.02 * rng.standard_normal(n)).astype(np.float32))
+        else:
+            parts.append(_glorot(rng, shape).reshape(-1))
+    return np.concatenate(parts)
+
+
+def _layer_norm(x: jax.Array, g: jax.Array, b: jax.Array) -> jax.Array:
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def transformer_logits(
+    spec: ParamSpec,
+    flat: jax.Array,
+    x: jax.Array,
+    *,
+    d: int,
+    layers: int,
+    heads: int,
+) -> jax.Array:
+    """x is int32 [B, T] tokens; returns [B, T, vocab] logits."""
+    p = spec.unflatten(flat)
+    b, t = x.shape
+    h = p["tok_emb"][x] + p["pos_emb"][:t]
+    hd = d // heads
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    for l in range(layers):
+        pre = _layer_norm(h, p[f"l{l}.ln1_g"], p[f"l{l}.ln1_b"])
+        qkv = dense(pre.reshape(b * t, d), p[f"l{l}.wqkv"], p[f"l{l}.bqkv"])
+        q, k, v = jnp.split(qkv.reshape(b, t, 3 * d), 3, axis=-1)
+        q = q.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, t, heads, hd).transpose(0, 2, 1, 3)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / np.sqrt(hd)
+        att = jnp.where(mask[None, None], att, -1e9)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(b * t, d)
+        h = h + dense(o, p[f"l{l}.wo"], p[f"l{l}.bo"]).reshape(b, t, d)
+        pre = _layer_norm(h, p[f"l{l}.ln2_g"], p[f"l{l}.ln2_b"])
+        ff = jax.nn.gelu(
+            dense(pre.reshape(b * t, d), p[f"l{l}.w1"], p[f"l{l}.b1"])
+        )
+        ff = dense(ff, p[f"l{l}.w2"], p[f"l{l}.b2"])
+        h = h + ff.reshape(b, t, d)
+    h = _layer_norm(h, p["lnf_g"], p["lnf_b"])
+    return h @ p["head"]
+
+
+def transformer_loss(spec, flat, x, y, *, d, layers, heads):
+    logits = transformer_logits(spec, flat, x, d=d, layers=layers, heads=heads)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def transformer_eval(spec, flat, x, y, *, d, layers, heads):
+    logits = transformer_logits(spec, flat, x, d=d, layers=layers, heads=heads)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)
+    correct = jnp.sum((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+    return correct, jnp.sum(nll)
+
+
+# --------------------------------------------------------------------------
+# Unified step builders
+# --------------------------------------------------------------------------
+
+
+def make_train_step(loss_fn: Callable) -> Callable:
+    """Wrap a loss into the uniform (params, vel, x, y, lr, mu) signature."""
+
+    def train_step(params, vel, x, y, lr, mu):
+        loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+        new_p, new_v = sgd_update(params, vel, grads, lr, mu)
+        return new_p, new_v, loss
+
+    return train_step
+
+
+def make_avg_step() -> Callable:
+    """(stack[smax,P], mask[smax], count) -> (avg[P],) via the Pallas kernel."""
+
+    def avg_step(stack, mask, count):
+        return (masked_mean(stack, mask, count),)
+
+    return avg_step
+
+
+# --------------------------------------------------------------------------
+# Variant registry — byte sizes match the paper's Table 3
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    """One learning task: specs, step fns, and the paper's hyperparameters."""
+
+    name: str
+    kind: str  # classifier | matfact | lm
+    spec: ParamSpec
+    init: Callable[[int], np.ndarray]
+    loss: Callable
+    evaluate: Callable
+    train_x: tuple[tuple[int, ...], str]  # (shape, dtype)
+    train_y: tuple[tuple[int, ...], str]
+    eval_x: tuple[tuple[int, ...], str]
+    eval_y: tuple[tuple[int, ...], str]
+    lr: float
+    momentum: float
+    nodes: int  # paper Table 3 network size
+    smax: int = 16
+    meta: dict | None = None
+
+    @property
+    def param_count(self) -> int:
+        return self.spec.total
+
+
+_B = 20  # paper batch size (Section 4.2)
+_EVAL_B = 256
+
+
+def _classifier_variant(
+    name: str, hidden: int, classes: int, lr: float, momentum: float, nodes: int
+) -> Variant:
+    input_dim = 128
+    spec = mlp_spec(input_dim, hidden, classes)
+    return Variant(
+        name=name,
+        kind="classifier",
+        spec=spec,
+        init=lambda seed: mlp_init(spec, seed),
+        loss=lambda flat, x, y: mlp_loss(spec, flat, x, y),
+        evaluate=lambda flat, x, y: mlp_eval(spec, flat, x, y),
+        train_x=((_B, input_dim), "f32"),
+        train_y=((_B,), "i32"),
+        eval_x=((_EVAL_B, input_dim), "f32"),
+        eval_y=((_EVAL_B,), "i32"),
+        lr=lr,
+        momentum=momentum,
+        nodes=nodes,
+        meta={"input_dim": input_dim, "hidden": hidden, "classes": classes},
+    )
+
+
+def _matfact_variant() -> Variant:
+    users, items, dim = 610, 9724, 20
+    spec = matfact_spec(users, items, dim)
+    return Variant(
+        name="movielens",
+        kind="matfact",
+        spec=spec,
+        init=lambda seed: matfact_init(spec, seed),
+        loss=lambda flat, x, y: matfact_loss(spec, flat, x, y),
+        evaluate=lambda flat, x, y: matfact_eval(spec, flat, x, y),
+        train_x=((_B, 2), "i32"),
+        train_y=((_B,), "f32"),
+        eval_x=((_EVAL_B, 2), "i32"),
+        eval_y=((_EVAL_B,), "f32"),
+        lr=0.2,
+        momentum=0.0,
+        nodes=610,
+        meta={"users": users, "items": items, "dim": dim},
+    )
+
+
+def _transformer_variant() -> Variant:
+    vocab, d, layers, heads, d_ff, max_t = 64, 128, 2, 4, 512, 64
+    bt = 8
+    spec = transformer_spec(vocab, d, layers, d_ff, max_t)
+    kw = dict(d=d, layers=layers, heads=heads)
+    return Variant(
+        name="transformer",
+        kind="lm",
+        spec=spec,
+        init=lambda seed: transformer_init(spec, seed),
+        loss=lambda flat, x, y: transformer_loss(spec, flat, x, y, **kw),
+        evaluate=lambda flat, x, y: transformer_eval(spec, flat, x, y, **kw),
+        train_x=((bt, max_t), "i32"),
+        train_y=((bt, max_t), "i32"),
+        eval_x=((bt, max_t), "i32"),
+        eval_y=((bt, max_t), "i32"),
+        lr=0.05,
+        momentum=0.9,
+        nodes=32,
+        smax=8,
+        meta={
+            "vocab": vocab,
+            "d": d,
+            "layers": layers,
+            "heads": heads,
+            "d_ff": d_ff,
+            "max_t": max_t,
+        },
+    )
+
+
+def build_variants() -> dict[str, Variant]:
+    """All model variants; parameter bytes track the paper's Table 3."""
+    return {
+        v.name: v
+        for v in [
+            # paper: LeNet CNN, 346 KB -> here 86,082 params = 344.3 KB
+            _classifier_variant(
+                "cifar10", 232, 10, lr=0.002, momentum=0.9, nodes=100
+            ),
+            # paper: CNN, 124 KB -> here 30,122 params = 120.5 KB
+            _classifier_variant(
+                "celeba", 120, 2, lr=0.001, momentum=0.0, nodes=500
+            ),
+            # paper: CNN, 6.7 MB -> here 1,754,430 params = 6.69 MB
+            _classifier_variant(
+                "femnist", 1232, 62, lr=0.004, momentum=0.0, nodes=355
+            ),
+            # paper: MF 827 KB -> here 217,015 params = 848 KB
+            _matfact_variant(),
+            # extra end-to-end workload (not in paper Table 3)
+            _transformer_variant(),
+        ]
+    }
+
+
+VARIANTS = build_variants()
+
+__all__ = [
+    "ParamSpec",
+    "Variant",
+    "VARIANTS",
+    "build_variants",
+    "make_train_step",
+    "make_avg_step",
+    "mlp_spec",
+    "mlp_init",
+    "mlp_logits",
+    "mlp_loss",
+    "mlp_eval",
+    "matfact_spec",
+    "matfact_init",
+    "matfact_loss",
+    "matfact_eval",
+    "matfact_predict",
+    "transformer_spec",
+    "transformer_init",
+    "transformer_logits",
+    "transformer_loss",
+    "transformer_eval",
+]

@@ -1,0 +1,134 @@
+"""L2 model checks: shapes, determinism, and loss-decreases-under-SGD."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import VARIANTS, make_avg_step, make_train_step
+
+_DTYPES = {"f32": np.float32, "i32": np.int32}
+
+
+def _fake_batch(io_x, io_y, seed, classes=None, vocab=None):
+    r = np.random.default_rng(seed)
+    (xs, xd), (ys, yd) = io_x, io_y
+    if xd == "f32":
+        x = r.standard_normal(xs).astype(np.float32)
+    else:
+        hi = vocab if vocab else 2
+        x = r.integers(0, hi, size=xs).astype(np.int32)
+    if yd == "i32":
+        hi = classes if classes else 2
+        y = r.integers(0, hi, size=ys).astype(np.int32)
+    else:
+        y = r.uniform(0.5, 5.0, size=ys).astype(np.float32)
+    return x, y
+
+
+def _batch_for(v, seed, eval_io=False):
+    io_x = v.eval_x if eval_io else v.train_x
+    io_y = v.eval_y if eval_io else v.train_y
+    meta = v.meta or {}
+    classes = meta.get("classes")
+    vocab = meta.get("vocab")
+    if v.kind == "matfact":
+        r = np.random.default_rng(seed)
+        b = io_x[0][0]
+        x = np.stack(
+            [
+                r.integers(0, meta["users"], size=b),
+                r.integers(0, meta["items"], size=b),
+            ],
+            axis=1,
+        ).astype(np.int32)
+        y = r.uniform(0.5, 5.0, size=(b,)).astype(np.float32)
+        return x, y
+    return _fake_batch(io_x, io_y, seed, classes=classes, vocab=vocab)
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_init_shape_and_determinism(name):
+    v = VARIANTS[name]
+    p1 = v.init(42)
+    p2 = v.init(42)
+    p3 = v.init(43)
+    assert p1.shape == (v.param_count,)
+    assert p1.dtype == np.float32
+    assert np.array_equal(p1, p2)
+    assert not np.array_equal(p1, p3)
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_model_bytes_close_to_paper(name):
+    """Parameter byte counts must track the paper's Table 3 (±10%)."""
+    paper_bytes = {
+        "cifar10": 346 * 1024,
+        "celeba": 124 * 1024,
+        "femnist": 6.7 * 1024 * 1024,
+        "movielens": 827 * 1024,
+        "transformer": None,  # ours, no paper target
+    }
+    target = paper_bytes[name]
+    if target is None:
+        return
+    ours = VARIANTS[name].param_count * 4
+    assert abs(ours - target) / target < 0.10, (ours, target)
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_train_step_decreases_loss(name):
+    v = VARIANTS[name]
+    step = make_train_step(v.loss)
+    params = jnp.asarray(v.init(0))
+    vel = jnp.zeros_like(params)
+    x, y = _batch_for(v, 0)
+    lr = jnp.float32(v.lr)
+    mu = jnp.float32(v.momentum)
+    first = None
+    for i in range(8):
+        params, vel, loss = step(params, vel, x, y, lr, mu)
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first, f"{name}: {first} -> {float(loss)}"
+    assert params.shape == (v.param_count,)
+    assert np.all(np.isfinite(np.asarray(params)))
+
+
+@pytest.mark.parametrize("name", sorted(VARIANTS))
+def test_eval_step_bounds(name):
+    v = VARIANTS[name]
+    params = jnp.asarray(v.init(0))
+    x, y = _batch_for(v, 1, eval_io=True)
+    metric, loss = v.evaluate(params, x, y)
+    n = x.shape[0] * (x.shape[1] if v.kind == "lm" else 1)
+    assert np.isfinite(float(loss))
+    if v.kind in ("classifier", "lm"):
+        assert 0 <= float(metric) <= n
+    else:
+        assert float(metric) >= 0
+
+
+def test_avg_step_mixes_models():
+    v = VARIANTS["celeba"]
+    avg_step = make_avg_step()
+    p0 = jnp.asarray(v.init(0))
+    p1 = jnp.asarray(v.init(1))
+    stack = jnp.zeros((v.smax, v.param_count), jnp.float32)
+    stack = stack.at[0].set(p0).at[1].set(p1)
+    mask = jnp.zeros((v.smax,), jnp.float32).at[0].set(1.0).at[1].set(1.0)
+    (out,) = avg_step(stack, mask, jnp.float32(2.0))
+    np.testing.assert_allclose(
+        np.asarray(out), (np.asarray(p0) + np.asarray(p1)) / 2, rtol=1e-5, atol=1e-6
+    )
+
+
+def test_momentum_accelerates_cifar():
+    """Sanity: with mu=0.9 the velocity actually accumulates."""
+    v = VARIANTS["cifar10"]
+    step = make_train_step(v.loss)
+    params = jnp.asarray(v.init(0))
+    vel = jnp.zeros_like(params)
+    x, y = _batch_for(v, 2)
+    _, vel1, _ = step(params, vel, x, y, jnp.float32(v.lr), jnp.float32(0.9))
+    p2, vel2, _ = step(params, vel1, x, y, jnp.float32(v.lr), jnp.float32(0.9))
+    assert float(jnp.linalg.norm(vel2)) > float(jnp.linalg.norm(vel1)) * 1.05

@@ -1,0 +1,95 @@
+"""Both lowering targets (cpu single-block, tpu tiled) must agree with ref.
+
+The target is chosen via MODEST_PALLAS_TARGET at trace time, so the tpu
+path runs in a subprocess with the env var set (jit caches would otherwise
+leak the cpu-path tracing into the comparison).
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile.kernels import avg, dense, ref, sgd
+
+
+def test_default_target_is_cpu():
+    assert os.environ.get("MODEST_PALLAS_TARGET", "cpu") == "cpu"
+    assert dense.block_cap() >= 1024
+
+
+def test_cpu_path_kernels_match_ref():
+    r = np.random.default_rng(0)
+    p = r.standard_normal(50_000).astype(np.float32)
+    v = r.standard_normal(50_000).astype(np.float32)
+    g = r.standard_normal(50_000).astype(np.float32)
+    gp, gv = sgd.sgd_update(p, v, g, jnp.float32(0.05), jnp.float32(0.9))
+    wp, wv = ref.sgd_update(p, v, g, jnp.float32(0.05), jnp.float32(0.9))
+    assert_allclose(np.asarray(gp), np.asarray(wp), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-5, atol=1e-6)
+
+    stack = r.standard_normal((6, 30_000)).astype(np.float32)
+    mask = np.array([1, 1, 1, 1, 0, 0], np.float32)
+    stack[4:] = 0
+    got = avg.masked_mean(stack, mask, jnp.float32(4.0))
+    want = ref.masked_mean(stack, mask, jnp.float32(4.0))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+_TPU_SNIPPET = textwrap.dedent(
+    """
+    import os
+    os.environ["MODEST_PALLAS_TARGET"] = "tpu"
+    import numpy as np, jax.numpy as jnp
+    from numpy.testing import assert_allclose
+    from compile.kernels import avg, dense, ref, sgd
+
+    assert dense.target() == "tpu"
+    assert dense.block_cap() == 128
+
+    r = np.random.default_rng(1)
+    # sgd: tiled path with padding
+    p = r.standard_normal(20_000).astype(np.float32)
+    v = r.standard_normal(20_000).astype(np.float32)
+    g = r.standard_normal(20_000).astype(np.float32)
+    gp, gv = sgd.sgd_update(p, v, g, jnp.float32(0.1), jnp.float32(0.9))
+    wp, wv = ref.sgd_update(p, v, g, jnp.float32(0.1), jnp.float32(0.9))
+    assert_allclose(np.asarray(gp), np.asarray(wp), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(gv), np.asarray(wv), rtol=1e-5, atol=1e-6)
+
+    # avg: tiled path
+    stack = r.standard_normal((4, 9_000)).astype(np.float32)
+    mask = np.array([1, 1, 1, 0], np.float32)
+    stack[3] = 0
+    got = avg.masked_mean(stack, mask, jnp.float32(3.0))
+    want = ref.masked_mean(stack, mask, jnp.float32(3.0))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+    # dense: 128-tile grid path
+    x = r.standard_normal((20, 256)).astype(np.float32)
+    w = r.standard_normal((256, 384)).astype(np.float32)
+    b = r.standard_normal(384).astype(np.float32)
+    assert_allclose(
+        np.asarray(dense.dense(x, w, b)), x @ w + b, rtol=1e-4, atol=1e-4
+    )
+    print("TPU-PATH-OK")
+    """
+)
+
+
+def test_tpu_target_path_matches_ref_in_subprocess():
+    env = dict(os.environ, MODEST_PALLAS_TARGET="tpu")
+    out = subprocess.run(
+        [sys.executable, "-c", _TPU_SNIPPET],
+        capture_output=True,
+        text=True,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr
+    assert "TPU-PATH-OK" in out.stdout

@@ -1,0 +1,73 @@
+//! End-to-end bench regenerating the paper's Fig. 3 / Fig. 1 rows (scaled).
+//!
+//! Runs FedAvg, D-SGD and MoDeST on the CIFAR10-sized task (real artifacts
+//! when available, mock otherwise) and prints the time-to-target /
+//! best-metric rows the figure is built from, plus the wallclock cost of
+//! each simulated session.
+//!
+//! Run: `cargo bench --bench convergence`
+//! (larger replication: `repro exp fig3 --scale 1.0`)
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::sim::ChurnSchedule;
+use modest_dl::util::bench::Bencher;
+
+fn main() {
+    let have_artifacts = modest_dl::runtime::XlaRuntime::load("artifacts").is_ok();
+    let dataset = if have_artifacts { "cifar10" } else { "mock" };
+    let runtime = if have_artifacts {
+        Some(modest_dl::runtime::XlaRuntime::load("artifacts").unwrap())
+    } else {
+        None
+    };
+    println!("== Fig. 3 bench (dataset: {dataset}) ==");
+    let mut b = Bencher::new("convergence");
+    let mut rows = Vec::new();
+    for algo in [Algo::Fedavg, Algo::Dsgd, Algo::Modest] {
+        let spec = SessionSpec {
+            dataset: dataset.into(),
+            algo,
+            nodes: 24,
+            s: 8,
+            a: 3,
+            sf: 1.0,
+            max_rounds: if algo == Algo::Dsgd { 60 } else { 120 },
+            max_time_s: 7200.0,
+            eval_interval_s: 10.0,
+            ..Default::default()
+        };
+        let mut result = None;
+        b.bench_once(&format!("session/{algo:?}"), || {
+            let out = match algo {
+                Algo::Dsgd => spec.build_dsgd(runtime.as_ref()).unwrap().run(),
+                _ => spec
+                    .build_modest(runtime.as_ref(), ChurnSchedule::empty())
+                    .unwrap()
+                    .run(),
+            };
+            result = Some(out);
+        });
+        let (m, _) = result.unwrap();
+        rows.push((algo, m));
+    }
+    println!();
+    println!(
+        "{:<8} {:>7} {:>10} {:>14} {:>12}",
+        "algo", "rounds", "best", "t-to-0.75", "virtual-dur"
+    );
+    for (algo, m) in &rows {
+        println!(
+            "{:<8} {:>7} {:>10.4} {:>14} {:>11.0}s",
+            format!("{algo:?}"),
+            m.final_round,
+            m.best_metric(true).unwrap_or(f64::NAN),
+            m.time_to_target(0.75, true)
+                .map(|(t, _)| format!("{t:.0}s"))
+                .unwrap_or_else(|| "-".into()),
+            m.duration_s
+        );
+    }
+    println!();
+    println!("expected shape: MoDeST ~ FedAvg time-to-target; D-SGD behind.");
+    b.finish();
+}

@@ -1,0 +1,122 @@
+//! Microbenchmarks of the L3 hot paths (§Perf):
+//!
+//! * model aggregation — native mean vs naive indexed loop vs the
+//!   XLA/Pallas masked-mean executable (if artifacts are present),
+//! * the sampler's per-round hash+sort candidate ordering,
+//! * DES event-queue throughput,
+//! * registry/view merge, and view wire-size computation.
+//!
+//! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
+
+use modest_dl::learning::{aggregate_native, Model};
+use modest_dl::modest::registry::MembershipEvent;
+use modest_dl::modest::sampler::candidate_order;
+use modest_dl::modest::View;
+use modest_dl::net::SizeModel;
+use modest_dl::runtime::XlaRuntime;
+use modest_dl::sim::{EventQueue, SimRng, SimTime};
+use modest_dl::util::bench::{black_box, Bencher};
+use modest_dl::NodeId;
+
+/// Naive baseline: per-element indexed accumulation (what the optimized
+/// `aggregate_native` is measured against).
+fn aggregate_naive(models: &[&Model]) -> Model {
+    let n = models[0].len();
+    let mut out = vec![0f32; n];
+    for i in 0..n {
+        let mut acc = 0f32;
+        for m in models {
+            acc += m[i];
+        }
+        out[i] = acc / models.len() as f32;
+    }
+    out
+}
+
+fn main() {
+    let mut b = Bencher::new("hotpaths");
+    let mut rng = SimRng::new(42);
+
+    // ---- aggregation: s models x P params (FEMNIST-sized and CIFAR-sized)
+    for (label, s, p) in [
+        ("aggregate/native/8x1.75M(femnist)", 8usize, 1_754_430usize),
+        ("aggregate/native/10x86k(cifar10)", 10, 86_314),
+    ] {
+        let models: Vec<Model> = (0..s)
+            .map(|_| (0..p).map(|_| rng.next_f32()).collect())
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        b.bench(label, || {
+            black_box(aggregate_native(black_box(&refs)));
+        });
+    }
+    {
+        let s = 8;
+        let p = 1_754_430;
+        let models: Vec<Model> = (0..s)
+            .map(|_| (0..p).map(|_| rng.next_f32()).collect())
+            .collect();
+        let refs: Vec<&Model> = models.iter().collect();
+        b.bench("aggregate/naive/8x1.75M(femnist)", || {
+            black_box(aggregate_naive(black_box(&refs)));
+        });
+        // XLA/Pallas path (needs artifacts; includes stack copy + PJRT).
+        if let Ok(rt) = XlaRuntime::load("artifacts") {
+            if let Ok(v) = rt.variant("femnist") {
+                let slices: Vec<&[f32]> = refs.iter().map(|m| m.as_slice()).collect();
+                b.bench("aggregate/xla-pallas/8x1.75M(femnist)", || {
+                    black_box(v.aggregate(black_box(&slices)).unwrap());
+                });
+            }
+        }
+    }
+
+    // ---- sampler ordering at population scales
+    for n in [100usize, 1_000, 10_000] {
+        let cands: Vec<NodeId> = (0..n as NodeId).collect();
+        let mut round = 0u64;
+        b.bench(&format!("sampler/candidate_order/n={n}"), || {
+            round += 1;
+            black_box(candidate_order(round, black_box(&cands)));
+        });
+    }
+
+    // ---- DES queue throughput: push+pop 10k events
+    b.bench("des/queue/10k-events", || {
+        let mut q = EventQueue::new();
+        for i in 0..10_000u64 {
+            q.schedule_at(SimTime::from_micros((i * 7919) % 100_000), i);
+        }
+        let mut n = 0;
+        while q.pop().is_some() {
+            n += 1;
+        }
+        black_box(n);
+    });
+
+    // ---- view merge + wire size at population 500 (celeba scale)
+    {
+        let mut a = View::default();
+        let mut c = View::default();
+        for node in 0..500u32 {
+            a.registry.update(node, 1, MembershipEvent::Joined);
+            a.activity.update(node, (node % 60) as u64);
+            c.registry.update(node, 2, MembershipEvent::Joined);
+            c.activity.update(node, (node % 90) as u64);
+        }
+        b.bench("view/merge/500-nodes", || {
+            let mut m = a.clone();
+            m.merge(black_box(&c));
+            black_box(m);
+        });
+        let sizes = SizeModel::default();
+        b.bench("view/wire_bytes/500-nodes", || {
+            black_box(black_box(&a).wire_bytes(&sizes));
+        });
+        b.bench("view/candidates/500-nodes", || {
+            black_box(black_box(&a).candidates(50, 20));
+        });
+    }
+
+    b.finish();
+}

@@ -1,0 +1,61 @@
+//! End-to-end bench regenerating the paper's Fig. 5 (scaled): how fast a
+//! newly joined node's membership propagates to every existing view.
+//!
+//! Run: `cargo bench --bench membership`
+//! (paper-scale replication: `repro exp fig5 --initial 90 --joiners 10`)
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::sim::{ChurnSchedule, SimTime};
+use modest_dl::util::bench::Bencher;
+
+fn main() {
+    println!("== Fig. 5 bench: join propagation (mock task, 30+4 nodes) ==");
+    let mut b = Bencher::new("membership");
+    let initial = 30u32;
+    let churn = ChurnSchedule::staggered_joins(
+        initial,
+        4,
+        SimTime::from_secs_f64(30.0),
+        SimTime::from_secs_f64(30.0),
+    );
+    let spec = SessionSpec {
+        dataset: "mock".into(),
+        algo: Algo::Modest,
+        nodes: initial as usize,
+        s: 10,
+        a: 5,
+        sf: 0.9,
+        max_time_s: 600.0,
+        eval_interval_s: 2.0,
+        ..Default::default()
+    };
+    let mut out = None;
+    b.bench_once("session/30-initial-4-joiners", || {
+        out = Some(spec.build_modest(None, churn.clone()).unwrap().run());
+    });
+    let (m, _) = out.unwrap();
+    println!();
+    println!("{:>6} {:>10} {:>18} {:>14}", "joiner", "join@", "full-propagation", "~rounds");
+    let round_time = m.mean_round_time_s().unwrap_or(1.0);
+    for t in &m.joins {
+        match t.full_propagation_s() {
+            Some(d) => println!(
+                "{:>6} {:>9.0}s {:>17.1}s {:>14.0}",
+                t.joiner,
+                t.joined_at_s,
+                d,
+                d / round_time
+            ),
+            None => println!("{:>6} {:>9.0}s {:>18}", t.joiner, t.joined_at_s, "(incomplete)"),
+        }
+    }
+    println!();
+    println!(
+        "paper: ~n/s rounds per refresh, full propagation ~56 rounds at n=100,s=10;"
+    );
+    println!(
+        "here n={} s=10 -> expect the same n/s scaling (mean round {round_time:.2}s).",
+        initial + 4
+    );
+    b.finish();
+}

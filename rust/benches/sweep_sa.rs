@@ -1,0 +1,57 @@
+//! End-to-end bench regenerating the paper's Fig. 4 (scaled): time and
+//! rounds until target accuracy over the (s, a) grid. Uses the mock task
+//! so the sweep finishes in seconds; the real-model sweep is
+//! `repro exp fig4`.
+//!
+//! Run: `cargo bench --bench sweep_sa`
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::sim::ChurnSchedule;
+use modest_dl::util::bench::Bencher;
+
+fn main() {
+    println!("== Fig. 4 bench: (s, a) sweep on the mock task, 24 nodes ==");
+    let mut b = Bencher::new("sweep_sa");
+    let target = 0.9;
+    println!(
+        "{:>3} {:>3} {:>14} {:>16} {:>10}",
+        "s", "a", "time-to-target", "rounds-to-target", "best"
+    );
+    for s in [1usize, 2, 4, 7] {
+        for a in [1usize, 3, 5] {
+            let spec = SessionSpec {
+                dataset: "mock".into(),
+                algo: Algo::Modest,
+                nodes: 24,
+                s,
+                a,
+                sf: 1.0,
+                max_rounds: 150,
+                max_time_s: 7200.0,
+                eval_interval_s: 5.0,
+                target_metric: Some(target),
+                ..Default::default()
+            };
+            let mut out = None;
+            b.bench_once(&format!("session/s={s}/a={a}"), || {
+                out = Some(
+                    spec.build_modest(None, ChurnSchedule::empty()).unwrap().run(),
+                );
+            });
+            let (m, _) = out.unwrap();
+            let tt = m.time_to_target(target, true);
+            println!(
+                "{:>3} {:>3} {:>14} {:>16} {:>10.4}",
+                s,
+                a,
+                tt.map(|(t, _)| format!("{t:.0}s")).unwrap_or_else(|| "-".into()),
+                tt.map(|(_, r)| r.to_string()).unwrap_or_else(|| "-".into()),
+                m.best_metric(true).unwrap_or(f64::NAN)
+            );
+        }
+    }
+    println!();
+    println!("expected shape: rounds-to-target falls with s (diminishing past s~4);");
+    println!("time-to-target rises with s (stragglers) and falls with a (fast path).");
+    b.finish();
+}

@@ -1,0 +1,41 @@
+//! FedAvg baseline — emulated exactly as the paper does (§4.3):
+//! "we use a = 1 and fix the aggregator node, i.e., nodes do not invoke the
+//! sampling function. We fix the node with the lowest median latency to
+//! other nodes to be the aggregator ... unlimited bandwidth capacity for
+//! the aggregator ... sf = 1."
+
+use crate::modest::ModestConfig;
+use crate::net::LatencyMatrix;
+use crate::sim::SimTime;
+
+/// Derive the FedAvg emulation config from a MoDeST config: same `s`,
+/// single fixed aggregator at the best-connected node, full success
+/// fraction, and no failure-detection machinery.
+pub fn fedavg_config(base: &ModestConfig, latency: &LatencyMatrix, n: usize) -> ModestConfig {
+    let server = latency.best_connected(n);
+    ModestConfig {
+        a: 1,
+        sf: 1.0,
+        fedavg_server: Some(server),
+        // Sampling is disabled; the ping timeout is irrelevant but kept
+        // sane for any residual timer.
+        dt: SimTime::from_secs_f64(2.0),
+        ..base.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::SimRng;
+
+    #[test]
+    fn picks_best_connected_server() {
+        let mut rng = SimRng::new(4);
+        let lat = LatencyMatrix::synthetic(&Default::default(), 30, &mut rng);
+        let cfg = fedavg_config(&ModestConfig::default(), &lat, 30);
+        assert_eq!(cfg.fedavg_server, Some(lat.best_connected(30)));
+        assert_eq!(cfg.a, 1);
+        assert_eq!(cfg.sf, 1.0);
+    }
+}

@@ -1,0 +1,16 @@
+//! Baseline algorithms the paper compares against (§2, §4.3).
+//!
+//! * **FedAvg** — emulated exactly as the paper does: the MoDeST stack with
+//!   a fixed single aggregator (the best-connected node), `sf = 1`, no
+//!   sampling pings, and unlimited server bandwidth. See [`fedavg`].
+//! * **D-SGD** — decentralized SGD over a one-peer exponential graph
+//!   (Ying et al.), the strongest DL topology the paper considers. See
+//!   [`dsgd`].
+
+pub mod dsgd;
+pub mod fedavg;
+pub mod topology;
+
+pub use dsgd::{DsgdConfig, DsgdSession};
+pub use fedavg::fedavg_config;
+pub use topology::OnePeerExpGraph;

@@ -1,0 +1,103 @@
+//! One-peer exponential graph topology (Ying et al. 2021, paper §4.3).
+//!
+//! Node `i` cycles round-robin through neighbours `i + 2^0, i + 2^1, ...,
+//! i + 2^(τ-1) (mod n)` with `τ = ceil(log2 n)`: each round every node sends
+//! to exactly one peer and receives from exactly one peer (the map
+//! `i -> i + 2^j` is a bijection mod n), which is what makes the topology's
+//! per-round communication cost exactly one model per node.
+
+use crate::{NodeId, Round};
+
+/// The one-peer exponential graph over `n` nodes.
+#[derive(Debug, Clone, Copy)]
+pub struct OnePeerExpGraph {
+    n: u32,
+    tau: u32,
+}
+
+impl OnePeerExpGraph {
+    pub fn new(n: u32) -> OnePeerExpGraph {
+        assert!(n >= 2, "need at least 2 nodes");
+        let tau = (32 - (n - 1).leading_zeros()).max(1); // ceil(log2 n)
+        OnePeerExpGraph { n, tau }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    /// Number of distinct neighbours each node cycles through (log2 n).
+    pub fn degree(&self) -> u32 {
+        self.tau
+    }
+
+    /// Whom node `i` sends its model to in `round` (1-based rounds).
+    pub fn out_neighbor(&self, i: NodeId, round: Round) -> NodeId {
+        let j = (round.wrapping_sub(1) % self.tau as u64) as u32;
+        let hop = 1u64 << j;
+        ((i as u64 + hop) % self.n as u64) as NodeId
+    }
+
+    /// Whom node `i` receives from in `round` (inverse of `out_neighbor`).
+    pub fn in_neighbor(&self, i: NodeId, round: Round) -> NodeId {
+        let j = (round.wrapping_sub(1) % self.tau as u64) as u32;
+        let hop = 1u64 << j;
+        (((i as u64 + self.n as u64) - (hop % self.n as u64)) % self.n as u64) as NodeId
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn degree_is_log2() {
+        assert_eq!(OnePeerExpGraph::new(2).degree(), 1);
+        assert_eq!(OnePeerExpGraph::new(16).degree(), 4);
+        assert_eq!(OnePeerExpGraph::new(17).degree(), 5);
+        assert_eq!(OnePeerExpGraph::new(100).degree(), 7);
+    }
+
+    #[test]
+    fn each_round_is_a_permutation() {
+        let g = OnePeerExpGraph::new(10);
+        for round in 1..=14u64 {
+            let mut seen = vec![false; 10];
+            for i in 0..10u32 {
+                let o = g.out_neighbor(i, round) as usize;
+                assert!(!seen[o], "round {round}: two senders hit {o}");
+                seen[o] = true;
+            }
+        }
+    }
+
+    #[test]
+    fn in_neighbor_inverts_out_neighbor() {
+        let g = OnePeerExpGraph::new(23);
+        for round in 1..=10u64 {
+            for i in 0..23u32 {
+                let o = g.out_neighbor(i, round);
+                assert_eq!(g.in_neighbor(o, round), i);
+            }
+        }
+    }
+
+    #[test]
+    fn cycles_through_all_hops() {
+        let g = OnePeerExpGraph::new(16);
+        let hops: Vec<NodeId> = (1..=4u64).map(|r| g.out_neighbor(0, r)).collect();
+        assert_eq!(hops, vec![1, 2, 4, 8]);
+        // round 5 wraps back to hop 1
+        assert_eq!(g.out_neighbor(0, 5), 1);
+    }
+
+    #[test]
+    fn never_self_loop_for_n_not_power_of_two_hop() {
+        let g = OnePeerExpGraph::new(7);
+        for round in 1..=20u64 {
+            for i in 0..7u32 {
+                assert_ne!(g.out_neighbor(i, round), i);
+            }
+        }
+    }
+}

@@ -1,0 +1,234 @@
+//! Synthetic classification task: Gaussian class clusters in feature space.
+//!
+//! Stands in for CIFAR10/CelebA/FEMNIST (DESIGN.md §3): each class is a
+//! Gaussian cluster around a random center on a scaled sphere; per-node
+//! shards are IID or label-Dirichlet skewed. The task is learnable by the
+//! equal-byte-size MLP variants but not trivially so (noise overlaps the
+//! clusters), giving convergence curves with the same FL-vs-DL shape the
+//! paper reports.
+
+use crate::sim::SimRng;
+
+use super::partition::Partition;
+
+/// Generated classification data with per-node shards and a global test set.
+#[derive(Debug, Clone)]
+pub struct ClassifData {
+    pub dim: usize,
+    pub classes: usize,
+    /// Flattened train features, row-major `[n_train, dim]`.
+    pub train_x: Vec<f32>,
+    pub train_y: Vec<i32>,
+    /// Flattened test features, row-major `[n_test, dim]`.
+    pub test_x: Vec<f32>,
+    pub test_y: Vec<i32>,
+    /// Per-node sample indices into the train pool.
+    pub shards: Vec<Vec<u32>>,
+}
+
+/// Controls cluster geometry; defaults give ~85-95% achievable accuracy.
+#[derive(Debug, Clone)]
+pub struct ClassifParams {
+    pub dim: usize,
+    pub classes: usize,
+    pub nodes: usize,
+    pub samples_per_node: usize,
+    pub test_samples: usize,
+    /// Distance of class centers from the origin.
+    pub center_scale: f32,
+    /// Per-feature noise sigma (relative to center scale 1).
+    pub noise: f32,
+    pub partition: Partition,
+}
+
+impl Default for ClassifParams {
+    fn default() -> Self {
+        ClassifParams {
+            dim: 128,
+            classes: 10,
+            nodes: 100,
+            samples_per_node: 100,
+            test_samples: 2048,
+            center_scale: 1.0,
+            noise: 1.4,
+            partition: Partition::Iid,
+        }
+    }
+}
+
+impl ClassifData {
+    pub fn generate(p: &ClassifParams, rng: &mut SimRng) -> ClassifData {
+        let mut centers = vec![0f32; p.classes * p.dim];
+        for c in 0..p.classes {
+            // Random direction scaled to `center_scale`.
+            let mut norm = 0f64;
+            let row = &mut centers[c * p.dim..(c + 1) * p.dim];
+            for v in row.iter_mut() {
+                *v = rng.next_gaussian() as f32;
+                norm += (*v as f64) * (*v as f64);
+            }
+            let norm = norm.sqrt().max(1e-9) as f32;
+            for v in row.iter_mut() {
+                *v *= p.center_scale * (p.dim as f32).sqrt() / norm;
+            }
+        }
+
+        let sample = |class: usize, rng: &mut SimRng, out_x: &mut Vec<f32>| {
+            let row = &centers[class * p.dim..(class + 1) * p.dim];
+            for &c in row {
+                out_x.push(c + p.noise * rng.next_gaussian() as f32);
+            }
+        };
+
+        // Per-node class distributions.
+        let node_dists: Vec<Vec<f64>> = (0..p.nodes)
+            .map(|_| match p.partition {
+                Partition::Iid => vec![1.0 / p.classes as f64; p.classes],
+                Partition::Dirichlet(alpha) => rng.next_dirichlet(alpha, p.classes),
+            })
+            .collect();
+
+        let n_train = p.nodes * p.samples_per_node;
+        let mut train_x = Vec::with_capacity(n_train * p.dim);
+        let mut train_y = Vec::with_capacity(n_train);
+        let mut shards = vec![Vec::with_capacity(p.samples_per_node); p.nodes];
+        for (node, dist) in node_dists.iter().enumerate() {
+            for _ in 0..p.samples_per_node {
+                let u = rng.next_f64();
+                let mut acc = 0.0;
+                let mut class = p.classes - 1;
+                for (c, &w) in dist.iter().enumerate() {
+                    acc += w;
+                    if u < acc {
+                        class = c;
+                        break;
+                    }
+                }
+                shards[node].push(train_y.len() as u32);
+                sample(class, rng, &mut train_x);
+                train_y.push(class as i32);
+            }
+        }
+
+        let mut test_x = Vec::with_capacity(p.test_samples * p.dim);
+        let mut test_y = Vec::with_capacity(p.test_samples);
+        for i in 0..p.test_samples {
+            let class = i % p.classes; // balanced test set
+            sample(class, rng, &mut test_x);
+            test_y.push(class as i32);
+        }
+
+        ClassifData {
+            dim: p.dim,
+            classes: p.classes,
+            train_x,
+            train_y,
+            test_x,
+            test_y,
+            shards,
+        }
+    }
+
+    pub fn n_train(&self) -> usize {
+        self.train_y.len()
+    }
+
+    pub fn n_test(&self) -> usize {
+        self.test_y.len()
+    }
+
+    /// Copy one train sample's features into `out`.
+    pub fn train_row(&self, idx: u32) -> &[f32] {
+        let i = idx as usize;
+        &self.train_x[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Empirical class distribution of one node's shard.
+    pub fn shard_class_hist(&self, node: usize) -> Vec<usize> {
+        let mut h = vec![0usize; self.classes];
+        for &i in &self.shards[node] {
+            h[self.train_y[i as usize] as usize] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(partition: Partition) -> ClassifData {
+        let mut rng = SimRng::new(1);
+        ClassifData::generate(
+            &ClassifParams {
+                nodes: 20,
+                samples_per_node: 50,
+                test_samples: 200,
+                classes: 10,
+                partition,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let d = gen(Partition::Iid);
+        assert_eq!(d.n_train(), 1000);
+        assert_eq!(d.train_x.len(), 1000 * d.dim);
+        assert_eq!(d.n_test(), 200);
+        assert_eq!(d.shards.len(), 20);
+        assert!(d.shards.iter().all(|s| s.len() == 50));
+    }
+
+    #[test]
+    fn labels_in_range() {
+        let d = gen(Partition::Iid);
+        assert!(d.train_y.iter().all(|&y| (0..10).contains(&y)));
+        assert!(d.test_y.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn iid_shards_are_balanced() {
+        let d = gen(Partition::Iid);
+        // Each node's most common class should hold well under half the shard.
+        let mut skews = Vec::new();
+        for node in 0..20 {
+            let h = d.shard_class_hist(node);
+            skews.push(*h.iter().max().unwrap() as f64 / 50.0);
+        }
+        let mean_skew = skews.iter().sum::<f64>() / skews.len() as f64;
+        assert!(mean_skew < 0.35, "IID shards too skewed: {mean_skew}");
+    }
+
+    #[test]
+    fn dirichlet_shards_are_skewed() {
+        let d = gen(Partition::Dirichlet(0.1));
+        let mut skews = Vec::new();
+        for node in 0..20 {
+            let h = d.shard_class_hist(node);
+            skews.push(*h.iter().max().unwrap() as f64 / 50.0);
+        }
+        let mean_skew = skews.iter().sum::<f64>() / skews.len() as f64;
+        assert!(mean_skew > 0.5, "Dirichlet(0.1) shards too uniform: {mean_skew}");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = gen(Partition::Iid);
+        let b = gen(Partition::Iid);
+        assert_eq!(a.train_y, b.train_y);
+        assert_eq!(a.train_x[..256], b.train_x[..256]);
+    }
+
+    #[test]
+    fn test_set_balanced() {
+        let d = gen(Partition::Iid);
+        let mut h = vec![0; 10];
+        for &y in &d.test_y {
+            h[y as usize] += 1;
+        }
+        assert!(h.iter().all(|&c| c == 20));
+    }
+}

@@ -1,0 +1,18 @@
+//! Synthetic federated datasets — the data substrate (DESIGN.md §3).
+//!
+//! The paper's datasets (CIFAR10, CelebA, FEMNIST, MovieLens-100K) are
+//! replaced by seeded synthetic tasks that exercise the identical code
+//! paths: private per-node shards, IID and label-Dirichlet non-IID
+//! partitions (the non-IIDness is what slows D-SGD in Fig. 3), a
+//! one-user-one-node ratings task for matrix factorization, and a Markov
+//! token stream for the transformer example.
+
+pub mod classif;
+pub mod partition;
+pub mod ratings;
+pub mod tokens;
+
+pub use classif::ClassifData;
+pub use partition::Partition;
+pub use ratings::RatingsData;
+pub use tokens::TokensData;

@@ -1,0 +1,167 @@
+//! Synthetic low-rank ratings task (MovieLens-100K substitute).
+//!
+//! Ground truth is a rank-`k` latent model plus user/item biases and noise,
+//! clipped to the 0.5–5 star range. Each *user* rates a random subset of
+//! items; the paper's one-user-one-node setup maps users round-robin onto
+//! nodes (identity map at full scale, several users per node in scaled
+//! runs — the model still has the full 610-user embedding table because
+//! the AOT'd parameter shapes are fixed).
+
+use crate::sim::SimRng;
+
+/// One (user, item, rating) triple.
+pub type RatingRow = (u32, u32, f32);
+
+#[derive(Debug, Clone)]
+pub struct RatingsParams {
+    pub users: usize,
+    pub items: usize,
+    pub nodes: usize,
+    pub latent_dim: usize,
+    pub ratings_per_user: usize,
+    pub test_per_user: usize,
+    pub noise: f32,
+}
+
+impl Default for RatingsParams {
+    fn default() -> Self {
+        RatingsParams {
+            users: 610,
+            items: 9724,
+            nodes: 610,
+            latent_dim: 10,
+            ratings_per_user: 140, // ~100k ratings over 610 users + test
+            test_per_user: 25,
+            noise: 0.3,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RatingsData {
+    pub users: usize,
+    pub items: usize,
+    pub train: Vec<RatingRow>,
+    pub test: Vec<RatingRow>,
+    /// Per-node indices into `train` (users mapped round-robin to nodes).
+    pub shards: Vec<Vec<u32>>,
+}
+
+impl RatingsData {
+    pub fn generate(p: &RatingsParams, rng: &mut SimRng) -> RatingsData {
+        let k = p.latent_dim;
+        let gauss_vec = |n: usize, scale: f32, rng: &mut SimRng| -> Vec<f32> {
+            (0..n).map(|_| scale * rng.next_gaussian() as f32).collect()
+        };
+        let u_lat = gauss_vec(p.users * k, 0.6, rng);
+        let i_lat = gauss_vec(p.items * k, 0.6, rng);
+        let u_bias = gauss_vec(p.users, 0.4, rng);
+        let i_bias = gauss_vec(p.items, 0.4, rng);
+
+        let rate = |u: usize, i: usize, rng: &mut SimRng| -> f32 {
+            let dot: f32 = (0..k).map(|d| u_lat[u * k + d] * i_lat[i * k + d]).sum();
+            let r = 3.0 + u_bias[u] + i_bias[i] + dot + p.noise * rng.next_gaussian() as f32;
+            r.clamp(0.5, 5.0)
+        };
+
+        let mut train = Vec::new();
+        let mut test = Vec::new();
+        let mut shards = vec![Vec::new(); p.nodes];
+        for u in 0..p.users {
+            let node = u % p.nodes;
+            let total = p.ratings_per_user + p.test_per_user;
+            let items = rng.sample_indices(p.items, total.min(p.items));
+            for (j, &i) in items.iter().enumerate() {
+                let r = rate(u, i, rng);
+                if j < p.ratings_per_user {
+                    shards[node].push(train.len() as u32);
+                    train.push((u as u32, i as u32, r));
+                } else {
+                    test.push((u as u32, i as u32, r));
+                }
+            }
+        }
+        RatingsData { users: p.users, items: p.items, train, test, shards }
+    }
+
+    /// Baseline MSE of predicting the global mean — training must beat this.
+    pub fn global_mean_mse(&self) -> f64 {
+        let mean: f64 =
+            self.test.iter().map(|&(_, _, r)| r as f64).sum::<f64>() / self.test.len() as f64;
+        self.test
+            .iter()
+            .map(|&(_, _, r)| (r as f64 - mean).powi(2))
+            .sum::<f64>()
+            / self.test.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> RatingsData {
+        let mut rng = SimRng::new(2);
+        RatingsData::generate(
+            &RatingsParams {
+                users: 60,
+                items: 500,
+                nodes: 30,
+                ratings_per_user: 40,
+                test_per_user: 10,
+                ..Default::default()
+            },
+            &mut rng,
+        )
+    }
+
+    #[test]
+    fn counts() {
+        let d = gen();
+        assert_eq!(d.train.len(), 60 * 40);
+        assert_eq!(d.test.len(), 60 * 10);
+        assert_eq!(d.shards.len(), 30);
+        // 2 users per node
+        assert!(d.shards.iter().all(|s| s.len() == 80));
+    }
+
+    #[test]
+    fn ratings_in_star_range() {
+        let d = gen();
+        assert!(d.train.iter().all(|&(_, _, r)| (0.5..=5.0).contains(&r)));
+    }
+
+    #[test]
+    fn indices_in_range() {
+        let d = gen();
+        assert!(d.train.iter().all(|&(u, i, _)| u < 60 && i < 500));
+    }
+
+    #[test]
+    fn shards_partition_train() {
+        let d = gen();
+        let mut seen: Vec<u32> = d.shards.iter().flatten().copied().collect();
+        seen.sort_unstable();
+        let expect: Vec<u32> = (0..d.train.len() as u32).collect();
+        assert_eq!(seen, expect);
+    }
+
+    #[test]
+    fn users_stay_on_their_node() {
+        let d = gen();
+        for (node, shard) in d.shards.iter().enumerate() {
+            for &idx in shard {
+                let (u, _, _) = d.train[idx as usize];
+                assert_eq!(u as usize % 30, node);
+            }
+        }
+    }
+
+    #[test]
+    fn structure_is_learnable() {
+        // Latent structure should give the test set variance well above the
+        // noise floor, so MF training has signal to extract.
+        let d = gen();
+        assert!(d.global_mean_mse() > 0.3, "{}", d.global_mean_mse());
+    }
+}

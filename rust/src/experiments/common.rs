@@ -1,0 +1,102 @@
+//! Shared experiment plumbing: run a (dataset, algo) session, collect
+//! metrics + traffic, write CSVs.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::config::{Algo, SessionSpec};
+use crate::metrics::SessionMetrics;
+use crate::net::TrafficLedger;
+use crate::runtime::XlaRuntime;
+use crate::sim::ChurnSchedule;
+
+/// Common experiment options (from the CLI).
+#[derive(Debug, Clone)]
+pub struct ExpOptions {
+    /// Node-count scale vs the paper (1.0 = full size).
+    pub scale: f64,
+    /// Virtual-time budget per session (seconds).
+    pub max_time_s: f64,
+    /// Round budget (0 = unlimited).
+    pub max_rounds: u64,
+    pub seed: u64,
+    pub artifacts_dir: String,
+    pub out_dir: PathBuf,
+    /// Use the mock task instead of XLA (fast smoke runs).
+    pub mock: bool,
+}
+
+impl Default for ExpOptions {
+    fn default() -> Self {
+        ExpOptions {
+            scale: 0.25,
+            max_time_s: 1200.0,
+            max_rounds: 0,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+            out_dir: PathBuf::from("results"),
+            mock: false,
+        }
+    }
+}
+
+impl ExpOptions {
+    pub fn spec(&self, dataset: &str, algo: Algo) -> SessionSpec {
+        SessionSpec {
+            dataset: if self.mock { "mock".into() } else { dataset.into() },
+            algo,
+            scale: self.scale,
+            max_time_s: self.max_time_s,
+            max_rounds: self.max_rounds,
+            seed: self.seed,
+            artifacts_dir: self.artifacts_dir.clone(),
+            ..Default::default()
+        }
+    }
+
+    pub fn load_runtime(&self) -> Result<Option<XlaRuntime>> {
+        if self.mock {
+            Ok(None)
+        } else {
+            Ok(Some(XlaRuntime::load(&self.artifacts_dir)?))
+        }
+    }
+}
+
+/// The result of one session run.
+pub struct RunOutput {
+    pub metrics: SessionMetrics,
+    pub traffic: TrafficLedger,
+    pub nodes: usize,
+    pub algo: Algo,
+    pub dataset: String,
+}
+
+/// Run one session for (dataset, algo) under shared options.
+pub fn run_session(
+    opts: &ExpOptions,
+    runtime: Option<&XlaRuntime>,
+    dataset: &str,
+    algo: Algo,
+    churn: ChurnSchedule,
+    tweak: impl FnOnce(&mut SessionSpec),
+) -> Result<RunOutput> {
+    let mut spec = opts.spec(dataset, algo);
+    tweak(&mut spec);
+    let nodes = spec.resolved_nodes()?;
+    let (metrics, traffic) = match algo {
+        Algo::Dsgd => spec.build_dsgd(runtime)?.run(),
+        _ => spec.build_modest(runtime, churn)?.run(),
+    };
+    Ok(RunOutput { metrics, traffic, nodes, algo, dataset: dataset.to_string() })
+}
+
+/// `algo` label as the paper prints it.
+pub fn algo_label(algo: Algo) -> &'static str {
+    match algo {
+        Algo::Modest => "MoDeST",
+        Algo::Fedavg => "FedAvg",
+        Algo::Dsgd => "D-SGD",
+    }
+}

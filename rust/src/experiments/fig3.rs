@@ -1,0 +1,71 @@
+//! Fig. 3 (and Fig. 1): convergence of FedAvg, D-SGD, and MoDeST on the
+//! four learning tasks. Writes one curve CSV per (dataset, algo) and prints
+//! the time-to-target + final-metric summary.
+
+use anyhow::Result;
+
+use crate::config::{preset, Algo};
+use crate::sim::ChurnSchedule;
+
+use super::common::{algo_label, run_session, ExpOptions, RunOutput};
+
+pub const ALL_DATASETS: [&str; 4] = ["cifar10", "celeba", "femnist", "movielens"];
+pub const ALL_ALGOS: [Algo; 3] = [Algo::Fedavg, Algo::Dsgd, Algo::Modest];
+
+/// Run the full grid (or a subset) and return the outputs.
+pub fn run(opts: &ExpOptions, datasets: &[&str], algos: &[Algo]) -> Result<Vec<RunOutput>> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let runtime = opts.load_runtime()?;
+    let mut outputs = Vec::new();
+    println!("== Fig. 3: convergence of FL / DL / MoDeST (scale {:.2}) ==", opts.scale);
+    println!(
+        "{:<10} {:<8} {:>6} {:>8} {:>10} {:>12} {:>12}",
+        "dataset", "algo", "nodes", "rounds", "best", "target", "t-to-target"
+    );
+    for &dataset in datasets {
+        let p = preset(dataset)?;
+        for &algo in algos {
+            let out = run_session(
+                opts,
+                runtime.as_ref(),
+                dataset,
+                algo,
+                ChurnSchedule::empty(),
+                |spec| {
+                    // Round budgets when the caller gave none: D-SGD trains
+                    // every node every round, so it gets a smaller cap —
+                    // its convergence lag is visible well before 120 rounds.
+                    if spec.max_rounds == 0 {
+                        spec.max_rounds = if algo == Algo::Dsgd { 120 } else { 200 };
+                    }
+                    spec.max_time_s = spec.max_time_s.max(7200.0);
+                    spec.target_metric = Some(preset(dataset).unwrap().target);
+                },
+            )?;
+            let higher = dataset != "movielens";
+            let best = out.metrics.best_metric(higher).unwrap_or(f64::NAN);
+            let ttt = out
+                .metrics
+                .time_to_target(p.target, higher)
+                .map(|(t, _)| format!("{:.0}s", t))
+                .unwrap_or_else(|| "-".into());
+            println!(
+                "{:<10} {:<8} {:>6} {:>8} {:>10.4} {:>12.3} {:>12}",
+                dataset,
+                algo_label(algo),
+                out.nodes,
+                out.metrics.final_round,
+                best,
+                p.target,
+                ttt
+            );
+            let csv = opts
+                .out_dir
+                .join(format!("fig3_{}_{}.csv", dataset, algo_label(algo).to_lowercase()));
+            out.metrics.write_curve_csv(&csv)?;
+            outputs.push(out);
+        }
+    }
+    println!("curves written to {}/fig3_*.csv", opts.out_dir.display());
+    Ok(outputs)
+}

@@ -1,0 +1,96 @@
+//! Fig. 4: time and rounds until the FEMNIST model reaches the target
+//! accuracy, swept over sample size `s` and aggregator count `a`.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::config::{preset, Algo};
+use crate::sim::ChurnSchedule;
+
+use super::common::{run_session, ExpOptions};
+
+/// One sweep point result.
+#[derive(Debug, Clone)]
+pub struct SweepPoint {
+    pub s: usize,
+    pub a: usize,
+    pub time_to_target_s: Option<f64>,
+    pub rounds_to_target: Option<u64>,
+    pub best_metric: f64,
+}
+
+pub fn run(
+    opts: &ExpOptions,
+    dataset: &str,
+    s_values: &[usize],
+    a_values: &[usize],
+    target: Option<f64>,
+) -> Result<Vec<SweepPoint>> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let runtime = opts.load_runtime()?;
+    let p = preset(dataset)?;
+    let target = target.unwrap_or(p.target);
+    let higher = dataset != "movielens";
+    let mut points = Vec::new();
+    println!("== Fig. 4: time/rounds to target {target} on {dataset} ==");
+    println!(
+        "{:>3} {:>3} {:>14} {:>16} {:>10}",
+        "s", "a", "time-to-target", "rounds-to-target", "best"
+    );
+    for &s in s_values {
+        for &a in a_values {
+            let out = run_session(
+                opts,
+                runtime.as_ref(),
+                dataset,
+                Algo::Modest,
+                ChurnSchedule::empty(),
+                |spec| {
+                    spec.s = s;
+                    spec.a = a;
+                    spec.target_metric = Some(target);
+                },
+            )?;
+            let tt = out.metrics.time_to_target(target, higher);
+            let point = SweepPoint {
+                s,
+                a,
+                time_to_target_s: tt.map(|(t, _)| t),
+                rounds_to_target: tt.map(|(_, r)| r),
+                best_metric: out.metrics.best_metric(higher).unwrap_or(f64::NAN),
+            };
+            println!(
+                "{:>3} {:>3} {:>14} {:>16} {:>10.4}",
+                s,
+                a,
+                point
+                    .time_to_target_s
+                    .map(|t| format!("{t:.0}s"))
+                    .unwrap_or_else(|| "-".into()),
+                point
+                    .rounds_to_target
+                    .map(|r| r.to_string())
+                    .unwrap_or_else(|| "-".into()),
+                point.best_metric
+            );
+            points.push(point);
+        }
+    }
+    let path = opts.out_dir.join(format!("fig4_{dataset}.csv"));
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "s,a,time_to_target_s,rounds_to_target,best_metric")?;
+    for pt in &points {
+        writeln!(
+            f,
+            "{},{},{},{},{}",
+            pt.s,
+            pt.a,
+            pt.time_to_target_s.map(|t| t.to_string()).unwrap_or_default(),
+            pt.rounds_to_target.map(|r| r.to_string()).unwrap_or_default(),
+            pt.best_metric
+        )?;
+    }
+    println!("sweep written to {}", path.display());
+    Ok(points)
+}

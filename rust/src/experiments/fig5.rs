@@ -1,0 +1,55 @@
+//! Fig. 5: membership propagation. 90 initial nodes; ten more join at
+//! one-minute intervals; we trace how many initial nodes still miss each
+//! joiner until every view includes it.
+
+use std::io::Write;
+
+use anyhow::Result;
+
+use crate::config::Algo;
+use crate::metrics::JoinTrace;
+use crate::sim::{ChurnSchedule, SimTime};
+
+use super::common::{run_session, ExpOptions};
+
+pub fn run(opts: &ExpOptions, initial: usize, joiners: u32) -> Result<Vec<JoinTrace>> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let runtime = opts.load_runtime()?;
+    let churn = ChurnSchedule::staggered_joins(
+        initial as u32,
+        joiners,
+        SimTime::from_secs_f64(60.0),
+        SimTime::from_secs_f64(60.0),
+    );
+    // Paper §4.6: CIFAR10 IID, s=10, a=5, sf=0.9, probing every few seconds.
+    let out = run_session(opts, runtime.as_ref(), "cifar10", Algo::Modest, churn, |spec| {
+        spec.nodes = initial;
+        spec.s = 10;
+        spec.a = 5;
+        spec.sf = 0.9;
+        spec.eval_interval_s = 5.0;
+    })?;
+
+    println!("== Fig. 5: membership propagation after staggered joins ==");
+    println!("{:>6} {:>10} {:>16}", "joiner", "join@", "full-propagation");
+    for t in &out.metrics.joins {
+        println!(
+            "{:>6} {:>9.0}s {:>16}",
+            t.joiner,
+            t.joined_at_s,
+            t.full_propagation_s()
+                .map(|d| format!("{d:.0}s"))
+                .unwrap_or_else(|| "(incomplete)".into())
+        );
+    }
+    let path = opts.out_dir.join("fig5_join_propagation.csv");
+    let mut f = std::fs::File::create(&path)?;
+    writeln!(f, "joiner,joined_at_s,time_s,missing")?;
+    for t in &out.metrics.joins {
+        for &(time_s, missing) in &t.missing {
+            writeln!(f, "{},{},{},{}", t.joiner, t.joined_at_s, time_s, missing)?;
+        }
+    }
+    println!("traces written to {}", path.display());
+    Ok(out.metrics.joins)
+}

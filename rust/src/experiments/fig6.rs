@@ -1,0 +1,83 @@
+//! Fig. 6: resilience to unresponsive nodes. Two scenarios over CIFAR10:
+//! "reliable" (only 20 of 100 nodes ever participate) and "crashing"
+//! (crash 5 nodes/minute from minute 5 until 80% are gone). Reports the
+//! accuracy curve and the sample-time series.
+
+use anyhow::Result;
+
+use crate::config::Algo;
+use crate::metrics::SessionMetrics;
+use crate::sim::{ChurnSchedule, SimTime};
+
+use super::common::{run_session, ExpOptions};
+
+pub struct Fig6Output {
+    pub reliable: SessionMetrics,
+    pub crashing: SessionMetrics,
+}
+
+pub fn run(opts: &ExpOptions, nodes: usize) -> Result<Fig6Output> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let runtime = opts.load_runtime()?;
+    let survivors = (nodes / 5).max(4); // 20% survive
+    let per_min = (nodes / 20).max(1); // 5/min at n=100
+
+    // Scenario A: only `survivors` nodes exist from the start ("reliable").
+    let reliable = run_session(
+        opts,
+        runtime.as_ref(),
+        "cifar10",
+        Algo::Modest,
+        ChurnSchedule::empty(),
+        |spec| {
+            spec.nodes = survivors;
+            spec.s = 10.min(survivors);
+            spec.a = 5.min(survivors);
+            spec.sf = 0.9;
+            spec.dt_s = 2.0;
+            spec.dk = 20;
+            spec.eval_interval_s = 10.0;
+        },
+    )?;
+
+    // Scenario B: all `nodes` start, then mass crash (paper §4.7).
+    let churn = ChurnSchedule::mass_crash(
+        nodes as u32,
+        survivors as u32,
+        per_min as u32,
+        SimTime::from_secs_f64(300.0),
+        SimTime::from_secs_f64(60.0),
+    );
+    let crashing = run_session(opts, runtime.as_ref(), "cifar10", Algo::Modest, churn, |spec| {
+        spec.nodes = nodes;
+        spec.s = 10.min(survivors);
+        spec.a = 5.min(survivors);
+        spec.sf = 0.9;
+        spec.dt_s = 2.0;
+        spec.dk = 20;
+        spec.eval_interval_s = 10.0;
+    })?;
+
+    println!("== Fig. 6: crash resilience (n={nodes}, survivors={survivors}) ==");
+    for (name, m) in [("reliable", &reliable.metrics), ("crashing", &crashing.metrics)] {
+        let best = m.best_metric(true).unwrap_or(f64::NAN);
+        let mean_sample: f64 = if m.samples.is_empty() {
+            f64::NAN
+        } else {
+            m.samples.iter().map(|s| s.duration_s).sum::<f64>() / m.samples.len() as f64
+        };
+        let max_sample = m
+            .samples
+            .iter()
+            .map(|s| s.duration_s)
+            .fold(0.0f64, f64::max);
+        println!(
+            "{name:<9} rounds={:<5} best-acc={best:.4} mean-sample={mean_sample:.3}s max-sample={max_sample:.3}s",
+            m.final_round
+        );
+        m.write_curve_csv(&opts.out_dir.join(format!("fig6_{name}_curve.csv")))?;
+        m.write_samples_csv(&opts.out_dir.join(format!("fig6_{name}_samples.csv")))?;
+    }
+    println!("curves + sample times written to {}/fig6_*.csv", opts.out_dir.display());
+    Ok(Fig6Output { reliable: reliable.metrics, crashing: crashing.metrics })
+}

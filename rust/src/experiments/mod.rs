@@ -1,0 +1,23 @@
+//! Experiment drivers — one per figure/table of the paper's evaluation.
+//!
+//! | id     | paper artifact                                   | driver |
+//! |--------|--------------------------------------------------|--------|
+//! | fig1   | Fig. 1: FL vs DL on FEMNIST (slice of fig3)      | [`fig3`] with `--datasets femnist` |
+//! | fig3   | Fig. 3a-d: convergence of FedAvg/D-SGD/MoDeST    | [`fig3`] |
+//! | table4 | Table 4 (+ Table 1): network usage + overhead    | [`table4`] |
+//! | fig4   | Fig. 4: time/rounds-to-accuracy vs `s`, `a`      | [`fig4`] |
+//! | fig5   | Fig. 5: membership propagation of joins          | [`fig5`] |
+//! | fig6   | Fig. 6: accuracy + sample time under 80% crashes | [`fig6`] |
+//!
+//! Every driver writes CSVs under `results/` and prints a paper-shaped
+//! summary to stdout. `--scale` shrinks node counts for CI-speed runs;
+//! EXPERIMENTS.md records which scale produced the recorded numbers.
+
+pub mod common;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod table4;
+
+pub use common::{run_session, ExpOptions, RunOutput};

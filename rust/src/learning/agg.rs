@@ -1,0 +1,92 @@
+//! Native model averaging — the L3 aggregation hot path.
+//!
+//! An aggregator averages up to `s` models of up to ~1.75M f32 each, every
+//! round. This implementation accumulates in f32 with the models as the
+//! outer loop and a plain slice add as the inner loop, which LLVM
+//! auto-vectorizes; `benches/hotpaths.rs` compares it against the
+//! XLA/Pallas path and a naive index-per-element loop (see EXPERIMENTS.md
+//! §Perf for numbers).
+
+use super::task::Model;
+
+/// Mean of `models` (all same length, at least one).
+pub fn aggregate_native(models: &[&Model]) -> Model {
+    assert!(!models.is_empty(), "aggregate of zero models");
+    let n = models[0].len();
+    let mut acc = models[0].clone();
+    for m in &models[1..] {
+        assert_eq!(m.len(), n, "model length mismatch");
+        // Slice-of-equal-length add: bounds checks hoisted, vectorized.
+        for (a, &b) in acc.iter_mut().zip(m.iter()) {
+            *a += b;
+        }
+    }
+    let inv = 1.0 / models.len() as f32;
+    for a in &mut acc {
+        *a *= inv;
+    }
+    acc
+}
+
+/// Weighted mean (FedAvg-style weighting by sample counts, available for
+/// extensions; the paper's MoDeST uses the unweighted mean).
+pub fn aggregate_weighted(models: &[&Model], weights: &[f32]) -> Model {
+    assert_eq!(models.len(), weights.len());
+    assert!(!models.is_empty());
+    let total: f32 = weights.iter().sum();
+    assert!(total > 0.0, "zero total weight");
+    let n = models[0].len();
+    let mut acc = vec![0f32; n];
+    for (m, &w) in models.iter().zip(weights) {
+        let scale = w / total;
+        for (a, &b) in acc.iter_mut().zip(m.iter()) {
+            *a += scale * b;
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_of_two() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        let b = vec![3.0f32, 2.0, 1.0];
+        assert_eq!(aggregate_native(&[&a, &b]), vec![2.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn single_model_identity() {
+        let a = vec![1.5f32; 100];
+        assert_eq!(aggregate_native(&[&a]), a);
+    }
+
+    #[test]
+    fn matches_weighted_with_equal_weights() {
+        let ms: Vec<Model> = (0..5)
+            .map(|i| (0..97).map(|j| (i * j) as f32 * 0.01).collect())
+            .collect();
+        let refs: Vec<&Model> = ms.iter().collect();
+        let a = aggregate_native(&refs);
+        let w = aggregate_weighted(&refs, &[1.0; 5]);
+        for (x, y) in a.iter().zip(&w) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn weighted_respects_weights() {
+        let a = vec![0.0f32, 0.0];
+        let b = vec![4.0f32, 8.0];
+        let m = aggregate_weighted(&[&a, &b], &[3.0, 1.0]);
+        assert_eq!(m, vec![1.0, 2.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero models")]
+    fn empty_panics() {
+        aggregate_native(&[]);
+    }
+}

@@ -1,0 +1,127 @@
+//! Per-node compute-time model: heterogeneous device speeds.
+//!
+//! The paper's Fig. 4 discussion attributes longer rounds at larger `s` to
+//! "slower nodes with higher individual training times" entering the
+//! sample; we model that with a per-node speed factor drawn log-normally
+//! around 1 (bounded), multiplying a base per-batch training time.
+
+use crate::sim::{SimRng, SimTime};
+use crate::NodeId;
+
+#[derive(Debug, Clone)]
+pub struct ComputeModel {
+    /// Base seconds per training batch on a speed-1 node.
+    pub base_batch_s: f64,
+    /// Per-node multiplicative speed factors (>= min_factor).
+    factors: Vec<f64>,
+    /// Seconds of fixed per-round overhead (model (de)serialization etc.).
+    pub round_overhead_s: f64,
+}
+
+impl ComputeModel {
+    /// Draw factors for `nodes` devices: lognormal(sigma) clamped to
+    /// [0.5, 4.0] — a slow phone is ~4x a fast one, matching the spread
+    /// the paper's cluster emulation produces.
+    pub fn heterogeneous(
+        nodes: usize,
+        base_batch_s: f64,
+        sigma: f64,
+        rng: &mut SimRng,
+    ) -> ComputeModel {
+        let factors = (0..nodes)
+            .map(|_| (sigma * rng.next_gaussian()).exp().clamp(0.5, 4.0))
+            .collect();
+        ComputeModel { base_batch_s, factors, round_overhead_s: 0.05 }
+    }
+
+    /// All nodes identical (tests, microbenches).
+    pub fn uniform(nodes: usize, base_batch_s: f64) -> ComputeModel {
+        ComputeModel {
+            base_batch_s,
+            factors: vec![1.0; nodes],
+            round_overhead_s: 0.05,
+        }
+    }
+
+    pub fn ensure_nodes(&mut self, nodes: usize, rng: &mut SimRng) {
+        while self.factors.len() < nodes {
+            self.factors.push((0.35 * rng.next_gaussian()).exp().clamp(0.5, 4.0));
+        }
+    }
+
+    pub fn factor(&self, node: NodeId) -> f64 {
+        self.factors[node as usize]
+    }
+
+    /// Virtual duration of `batches` local training batches on `node`.
+    pub fn train_time(&self, node: NodeId, batches: u32) -> SimTime {
+        SimTime::from_secs_f64(
+            self.round_overhead_s + self.base_batch_s * self.factor(node) * batches as f64,
+        )
+    }
+
+    /// Virtual duration of aggregating `k` models of `bytes` each
+    /// (memory-bandwidth bound, tiny next to training but not zero).
+    pub fn aggregate_time(&self, node: NodeId, k: usize, bytes: u64) -> SimTime {
+        // ~4 GB/s effective single-core streaming for read+accumulate.
+        let secs = (k as f64 * bytes as f64) / 4e9;
+        SimTime::from_secs_f64(secs * self.factor(node))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_factors_are_one() {
+        let m = ComputeModel::uniform(5, 0.02);
+        for n in 0..5 {
+            assert_eq!(m.factor(n), 1.0);
+        }
+        let t = m.train_time(0, 10);
+        assert!((t.as_secs_f64() - (0.05 + 0.2)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn heterogeneous_bounded_and_spread() {
+        let mut rng = SimRng::new(1);
+        let m = ComputeModel::heterogeneous(500, 0.02, 0.35, &mut rng);
+        let min = (0..500u32).map(|n| m.factor(n)).fold(f64::MAX, f64::min);
+        let max = (0..500u32).map(|n| m.factor(n)).fold(0.0, f64::max);
+        assert!(min >= 0.5 && max <= 4.0);
+        assert!(max / min > 1.5, "no heterogeneity: {min}..{max}");
+    }
+
+    #[test]
+    fn slower_nodes_take_longer() {
+        let mut rng = SimRng::new(2);
+        let m = ComputeModel::heterogeneous(100, 0.02, 0.35, &mut rng);
+        let (mut slow, mut fast) = (0u32, 0u32);
+        for n in 0..100u32 {
+            if m.factor(n) > m.factor(slow) {
+                slow = n;
+            }
+            if m.factor(n) < m.factor(fast) {
+                fast = n;
+            }
+        }
+        assert!(m.train_time(slow, 20) > m.train_time(fast, 20));
+    }
+
+    #[test]
+    fn aggregate_time_scales_with_models() {
+        let m = ComputeModel::uniform(2, 0.02);
+        let one = m.aggregate_time(0, 1, 1_000_000);
+        let ten = m.aggregate_time(0, 10, 1_000_000);
+        assert!(ten.as_secs_f64() > 5.0 * one.as_secs_f64());
+    }
+
+    #[test]
+    fn ensure_nodes_grows() {
+        let mut rng = SimRng::new(3);
+        let mut m = ComputeModel::uniform(2, 0.02);
+        m.ensure_nodes(10, &mut rng);
+        assert!(m.factor(9) >= 0.5);
+    }
+}

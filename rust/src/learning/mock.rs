@@ -1,0 +1,176 @@
+//! Closed-form mock task for protocol testing without PJRT.
+//!
+//! The model is a point in R^d; each node's "data" is a private optimum
+//! `w_node = w* + heterogeneity * delta_node`; a local epoch runs a few
+//! noisy gradient steps of the quadratic `||w - w_node||^2`. Averaging
+//! across nodes pulls toward `w*` exactly like FL/DL averaging does, so
+//! protocol-level behaviour (convergence ordering, variance between local
+//! models, effect of sampling) is faithfully miniaturized and has a
+//! closed-form check: metric = 1 / (1 + ||w - w*||^2) in (0, 1].
+
+use anyhow::Result;
+
+use crate::sim::SimRng;
+use crate::NodeId;
+
+use super::task::{EvalResult, Model, Task};
+
+#[derive(Debug, Clone)]
+pub struct MockTask {
+    dim: usize,
+    optimum: Vec<f32>,
+    node_delta: Vec<Vec<f32>>,
+    batches: u32,
+    lr: f32,
+    noise: f32,
+    /// How far node optima sit from the global one (non-IIDness knob).
+    pub heterogeneity: f32,
+}
+
+impl MockTask {
+    pub fn new(nodes: usize, dim: usize, heterogeneity: f32, seed: u64) -> MockTask {
+        let mut rng = SimRng::new(seed);
+        let optimum = (0..dim).map(|_| rng.next_gaussian() as f32).collect();
+        let mut node_delta: Vec<Vec<f32>> = (0..nodes)
+            .map(|_| (0..dim).map(|_| rng.next_gaussian() as f32).collect())
+            .collect();
+        // Center the deltas: the population mean of node optima IS the
+        // global optimum, exactly like label-skew non-IIDness where the
+        // union of shards is the global distribution. Full-participation
+        // averaging then converges to w*; sampled averaging fluctuates
+        // around it with variance ~ heterogeneity^2 * dim / s.
+        for d in 0..dim {
+            let mean: f32 =
+                node_delta.iter().map(|v| v[d]).sum::<f32>() / nodes.max(1) as f32;
+            for v in node_delta.iter_mut() {
+                v[d] -= mean;
+            }
+        }
+        MockTask {
+            dim,
+            optimum,
+            node_delta,
+            batches: 5,
+            lr: 0.3,
+            noise: 0.02,
+            heterogeneity,
+        }
+    }
+
+    pub fn ensure_nodes(&mut self, nodes: usize, seed: u64) {
+        let mut rng = SimRng::new(seed ^ 0x6d6f636b);
+        while self.node_delta.len() < nodes {
+            self.node_delta
+                .push((0..self.dim).map(|_| rng.next_gaussian() as f32).collect());
+        }
+    }
+
+    /// Squared distance to the global optimum (the mock's "loss").
+    pub fn sq_dist(&self, model: &Model) -> f64 {
+        model
+            .iter()
+            .zip(&self.optimum)
+            .map(|(a, b)| ((a - b) as f64).powi(2))
+            .sum()
+    }
+}
+
+impl Task for MockTask {
+    fn param_count(&self) -> usize {
+        self.dim
+    }
+
+    fn model_bytes(&self) -> u64 {
+        (self.dim * 4) as u64
+    }
+
+    fn init_model(&self) -> Model {
+        vec![0.0; self.dim]
+    }
+
+    fn local_update(
+        &mut self,
+        model: &Model,
+        node: NodeId,
+        seed: u64,
+    ) -> Result<(Model, f32, u32)> {
+        let delta = &self.node_delta[node as usize];
+        let mut rng = SimRng::new(seed);
+        let mut w = model.clone();
+        let mut last_loss = 0f32;
+        for _ in 0..self.batches {
+            last_loss = 0.0;
+            for i in 0..self.dim {
+                let target = self.optimum[i] + self.heterogeneity * delta[i];
+                let g = w[i] - target + self.noise * rng.next_gaussian() as f32;
+                last_loss += (w[i] - target) * (w[i] - target);
+                w[i] -= self.lr * g;
+            }
+            last_loss /= self.dim as f32;
+        }
+        Ok((w, last_loss, self.batches))
+    }
+
+    fn batches_per_epoch(&self, _node: NodeId) -> u32 {
+        self.batches
+    }
+
+    fn evaluate(&mut self, model: &Model) -> Result<EvalResult> {
+        let d = self.sq_dist(model);
+        Ok(EvalResult { metric: 1.0 / (1.0 + d), loss: d })
+    }
+
+    fn aggregate(&mut self, models: &[&Model]) -> Result<Model> {
+        Ok(super::agg::aggregate_native(models))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_update_approaches_node_optimum() {
+        let mut t = MockTask::new(4, 16, 0.5, 7);
+        let m = t.init_model();
+        let (m1, loss1, batches) = t.local_update(&m, 0, 1).unwrap();
+        let (_, loss2, _) = t.local_update(&m1, 0, 2).unwrap();
+        assert_eq!(batches, 5);
+        assert!(loss2 < loss1, "{loss2} !< {loss1}");
+    }
+
+    #[test]
+    fn averaging_rounds_converge_to_global_optimum() {
+        // Mini-FedAvg over the mock: metric should approach 1.
+        let mut t = MockTask::new(8, 16, 0.5, 7);
+        let mut global = t.init_model();
+        for round in 0..30 {
+            let locals: Vec<Model> = (0..8u32)
+                .map(|n| t.local_update(&global, n, round * 100 + n as u64).unwrap().0)
+                .collect();
+            let refs: Vec<&Model> = locals.iter().collect();
+            global = t.aggregate(&refs).unwrap();
+        }
+        let m = t.evaluate(&global).unwrap();
+        assert!(m.metric > 0.9, "metric {}", m.metric);
+    }
+
+    #[test]
+    fn heterogeneity_slows_single_node_training() {
+        // Training on one node only converges to ITS optimum, not w*.
+        let mut t = MockTask::new(4, 16, 2.0, 9);
+        let mut m = t.init_model();
+        for round in 0..30 {
+            m = t.local_update(&m, 0, round).unwrap().0;
+        }
+        let e = t.evaluate(&m).unwrap();
+        assert!(e.metric < 0.5, "one-node training should miss w*: {}", e.metric);
+    }
+
+    #[test]
+    fn eval_metric_in_unit_interval() {
+        let mut t = MockTask::new(2, 8, 0.1, 3);
+        let e = t.evaluate(&t.init_model()).unwrap();
+        assert!(e.metric > 0.0 && e.metric <= 1.0);
+    }
+}

@@ -1,0 +1,23 @@
+//! The learning abstraction the protocols run against.
+//!
+//! Sessions (MoDeST / FedAvg / D-SGD) never touch PJRT or datasets
+//! directly; they see a [`Task`]: init a model, run one local epoch on a
+//! node's shard, aggregate models, evaluate on the global test set. Two
+//! implementations exist:
+//!
+//! * [`xla_task::XlaTask`] — the production path over the AOT'd artifacts.
+//! * [`mock::MockTask`] — a closed-form quadratic task for protocol tests,
+//!   property tests and simulator-heavy experiments (Fig. 5 needs no real
+//!   learning), so `cargo test` stays fast and artifact-free.
+
+pub mod agg;
+pub mod compute;
+pub mod mock;
+pub mod task;
+pub mod xla_task;
+
+pub use agg::{aggregate_native, aggregate_weighted};
+pub use compute::ComputeModel;
+pub use mock::MockTask;
+pub use task::{EvalResult, Model, Task};
+pub use xla_task::{AggBackend, TaskData, XlaTask};

@@ -1,0 +1,69 @@
+//! The `Task` trait: what a protocol needs from a learning workload.
+
+use anyhow::Result;
+
+use crate::NodeId;
+
+/// A model is a flat f32 vector — the same interchange format the AOT'd
+/// executables use, so protocols move models around without copies or
+/// reshapes.
+pub type Model = Vec<f32>;
+
+/// Result of evaluating a model on the global test set.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    /// Task metric: accuracy in [0,1] for classification/LM, MSE for
+    /// recommendation (lower is better there — see `metric_is_accuracy`).
+    pub metric: f64,
+    /// Mean loss over the test set.
+    pub loss: f64,
+}
+
+/// A learning workload: model + private per-node shards + test set.
+pub trait Task {
+    /// Flat parameter count.
+    fn param_count(&self) -> usize;
+
+    /// Bytes of one serialized model (drives the traffic model).
+    fn model_bytes(&self) -> u64;
+
+    /// The shared initial model (paper Alg. 4: RANDOMMODEL(), same at
+    /// every node since hyperparameters are distributed out-of-band).
+    fn init_model(&self) -> Model;
+
+    /// One local epoch (paper: E=1, B=20) of SGD on `node`'s shard.
+    ///
+    /// `seed` must make batch order deterministic per (session, node,
+    /// round). Returns the updated model, mean train loss, and the number
+    /// of batches run (drives the compute-time model).
+    fn local_update(
+        &mut self,
+        model: &Model,
+        node: NodeId,
+        seed: u64,
+    ) -> Result<(Model, f32, u32)>;
+
+    /// Batches in one local epoch for `node` (for time estimates without
+    /// running the update).
+    fn batches_per_epoch(&self, node: NodeId) -> u32;
+
+    /// Evaluate on the global held-out test set.
+    fn evaluate(&mut self, model: &Model) -> Result<EvalResult>;
+
+    /// Average a set of models (Alg. 4 `AVG(Θ)`).
+    fn aggregate(&mut self, models: &[&Model]) -> Result<Model>;
+
+    /// `true` if `metric` is an accuracy (higher better), `false` for MSE.
+    fn metric_is_accuracy(&self) -> bool {
+        true
+    }
+
+    /// Human name of the metric for logs/CSV headers.
+    fn metric_name(&self) -> &'static str {
+        if self.metric_is_accuracy() {
+            "accuracy"
+        } else {
+            "mse"
+        }
+    }
+}

@@ -1,0 +1,239 @@
+//! The production `Task`: AOT'd XLA executables + synthetic shards.
+//!
+//! One `XlaTask` owns the compiled variant runtime, the generated dataset,
+//! and scratch state. Local updates run the paper's E=1 pass over the
+//! node's shard in B-sized batches through the `train` executable (which
+//! embeds the Pallas dense fwd/bwd and fused SGD kernels); evaluation
+//! streams the global test set through the `eval` executable.
+
+use anyhow::Result;
+
+use crate::data::{ClassifData, RatingsData, TokensData};
+use crate::runtime::{Batch, VariantRuntime, XlaRuntime};
+use crate::sim::SimRng;
+use crate::NodeId;
+
+use super::agg::aggregate_native;
+use super::task::{EvalResult, Model, Task};
+
+/// Which backend computes `AVG(Θ)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AggBackend {
+    /// Native rust mean (default: fastest on CPU, see §Perf).
+    #[default]
+    Native,
+    /// The AOT'd Pallas masked-mean kernel via PJRT.
+    Xla,
+}
+
+/// Dataset payload per task kind.
+pub enum TaskData {
+    Classif(ClassifData),
+    Ratings(RatingsData),
+    Tokens(TokensData),
+}
+
+pub struct XlaTask {
+    rt: VariantRuntime,
+    data: TaskData,
+    pub agg_backend: AggBackend,
+    /// Learning rate / momentum (from the manifest = paper Table 3).
+    lr: f32,
+    momentum: f32,
+}
+
+impl XlaTask {
+    /// Compile the variant and attach a generated dataset.
+    pub fn new(runtime: &XlaRuntime, variant: &str, data: TaskData) -> Result<XlaTask> {
+        let rt = runtime.variant(variant)?;
+        // Sanity: dataset kind must match the variant kind.
+        match (&data, rt.manifest.kind.as_str()) {
+            (TaskData::Classif(_), "classifier")
+            | (TaskData::Ratings(_), "matfact")
+            | (TaskData::Tokens(_), "lm") => {}
+            (_, kind) => anyhow::bail!("dataset does not match variant kind {kind}"),
+        }
+        let lr = rt.manifest.lr;
+        let momentum = rt.manifest.momentum;
+        Ok(XlaTask { rt, data, agg_backend: AggBackend::Native, lr, momentum })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::VariantManifest {
+        &self.rt.manifest
+    }
+
+    fn train_batch_size(&self) -> usize {
+        self.rt.manifest.train_batch
+    }
+
+    /// Node shard size in samples/sequences.
+    fn shard_len(&self, node: NodeId) -> usize {
+        match &self.data {
+            TaskData::Classif(d) => d.shards[node as usize].len(),
+            TaskData::Ratings(d) => d.shards[node as usize].len(),
+            TaskData::Tokens(d) => d.shard(node as usize).len(),
+        }
+    }
+
+    /// Assemble one train batch from shard positions (wrapping pad).
+    fn make_batch(&self, node: NodeId, order: &[u32], start: usize) -> Batch {
+        let b = self.train_batch_size();
+        let take = |k: usize| order[(start + k) % order.len()];
+        match &self.data {
+            TaskData::Classif(d) => {
+                let dim = d.dim;
+                let mut x = Vec::with_capacity(b * dim);
+                let mut y = Vec::with_capacity(b);
+                for k in 0..b {
+                    let idx = d.shards[node as usize][take(k) as usize];
+                    x.extend_from_slice(d.train_row(idx));
+                    y.push(d.train_y[idx as usize]);
+                }
+                Batch::F32I32 { x, y }
+            }
+            TaskData::Ratings(d) => {
+                let mut x = Vec::with_capacity(b * 2);
+                let mut y = Vec::with_capacity(b);
+                for k in 0..b {
+                    let idx = d.shards[node as usize][take(k) as usize];
+                    let (u, i, r) = d.train[idx as usize];
+                    x.push(u as i32);
+                    x.push(i as i32);
+                    y.push(r);
+                }
+                Batch::I32F32 { x, y }
+            }
+            TaskData::Tokens(d) => {
+                let shard = d.shard(node as usize);
+                let t = d.seq_len;
+                let mut x = Vec::with_capacity(b * t);
+                let mut y = Vec::with_capacity(b * t);
+                for k in 0..b {
+                    let seq_idx = shard.start + take(k) as usize;
+                    let seq = d.train_seq(seq_idx);
+                    x.extend_from_slice(&seq[..t]);
+                    y.extend_from_slice(&seq[1..t + 1]);
+                }
+                Batch::I32I32 { x, y }
+            }
+        }
+    }
+
+    /// Test batches (full multiples of eval_batch only, deterministic).
+    fn eval_batches(&self) -> Vec<(Batch, usize)> {
+        let b = self.rt.manifest.eval_batch;
+        let mut out = Vec::new();
+        match &self.data {
+            TaskData::Classif(d) => {
+                let n = (d.n_test() / b) * b;
+                for s in (0..n).step_by(b) {
+                    let x = d.test_x[s * d.dim..(s + b) * d.dim].to_vec();
+                    let y = d.test_y[s..s + b].to_vec();
+                    out.push((Batch::F32I32 { x, y }, b));
+                }
+            }
+            TaskData::Ratings(d) => {
+                let n = (d.test.len() / b) * b;
+                for s in (0..n).step_by(b) {
+                    let mut x = Vec::with_capacity(b * 2);
+                    let mut y = Vec::with_capacity(b);
+                    for &(u, i, r) in &d.test[s..s + b] {
+                        x.push(u as i32);
+                        x.push(i as i32);
+                        y.push(r);
+                    }
+                    out.push((Batch::I32F32 { x, y }, b));
+                }
+            }
+            TaskData::Tokens(d) => {
+                let n = (d.n_test_seqs() / b) * b;
+                let t = d.seq_len;
+                for s in (0..n).step_by(b) {
+                    let mut x = Vec::with_capacity(b * t);
+                    let mut y = Vec::with_capacity(b * t);
+                    for q in s..s + b {
+                        let seq = d.test_seq(q);
+                        x.extend_from_slice(&seq[..t]);
+                        y.extend_from_slice(&seq[1..t + 1]);
+                    }
+                    out.push((Batch::I32I32 { x, y }, b * t));
+                }
+            }
+        }
+        out
+    }
+}
+
+impl Task for XlaTask {
+    fn param_count(&self) -> usize {
+        self.rt.param_count()
+    }
+
+    fn model_bytes(&self) -> u64 {
+        self.rt.manifest.model_bytes
+    }
+
+    fn init_model(&self) -> Model {
+        self.rt.init_params()
+    }
+
+    fn local_update(
+        &mut self,
+        model: &Model,
+        node: NodeId,
+        seed: u64,
+    ) -> Result<(Model, f32, u32)> {
+        let shard_len = self.shard_len(node);
+        anyhow::ensure!(shard_len > 0, "node {node} has an empty shard");
+        let mut order: Vec<u32> = (0..shard_len as u32).collect();
+        let mut rng = SimRng::new(seed);
+        rng.shuffle(&mut order);
+
+        let batches = self.batches_per_epoch(node);
+        let b = self.train_batch_size();
+        let mut params = model.clone();
+        let mut velocity = vec![0f32; params.len()]; // fresh optimizer state per round
+        let mut loss_sum = 0f64;
+        for i in 0..batches {
+            let batch = self.make_batch(node, &order, i as usize * b);
+            let out = self.rt.train_step(&params, &velocity, &batch, self.lr, self.momentum)?;
+            params = out.params;
+            velocity = out.velocity;
+            loss_sum += out.loss as f64;
+        }
+        Ok((params, (loss_sum / batches as f64) as f32, batches))
+    }
+
+    fn batches_per_epoch(&self, node: NodeId) -> u32 {
+        let shard = self.shard_len(node).max(1);
+        shard.div_ceil(self.train_batch_size()) as u32
+    }
+
+    fn evaluate(&mut self, model: &Model) -> Result<EvalResult> {
+        let mut metric_sum = 0f64;
+        let mut loss_sum = 0f64;
+        let mut n = 0usize;
+        for (batch, count) in self.eval_batches() {
+            let out = self.rt.eval_batch(model, &batch)?;
+            metric_sum += out.metric_sum as f64;
+            loss_sum += out.loss_sum as f64;
+            n += count;
+        }
+        anyhow::ensure!(n > 0, "empty test set");
+        Ok(EvalResult { metric: metric_sum / n as f64, loss: loss_sum / n as f64 })
+    }
+
+    fn aggregate(&mut self, models: &[&Model]) -> Result<Model> {
+        match self.agg_backend {
+            AggBackend::Native => Ok(aggregate_native(models)),
+            AggBackend::Xla => {
+                let slices: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+                self.rt.aggregate(&slices)
+            }
+        }
+    }
+
+    fn metric_is_accuracy(&self) -> bool {
+        self.rt.manifest.kind != "matfact"
+    }
+}

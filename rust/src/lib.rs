@@ -1,0 +1,40 @@
+//! # modest-dl — MoDeST: decentralized learning with client sampling
+//!
+//! Production-quality reproduction of *"Decentralized Learning Made Practical
+//! with Client Sampling"* (MoDeST; de Vos, Dhasade, Kermarrec, Lavoie,
+//! Pouwelse, 2023) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the paper's coordination contribution:
+//!   decentralized sampling ([`modest::sampler`]), the membership registry
+//!   ([`modest::registry`]), activity tracking ([`modest::activity`]), and
+//!   the push-based train/aggregate protocol ([`modest::node`]); plus the
+//!   FedAvg / D-SGD baselines ([`baselines`]) and every substrate they need:
+//!   a deterministic discrete-event simulator ([`sim`]), a WAN network model
+//!   with per-node traffic accounting ([`net`]), synthetic federated
+//!   datasets ([`data`]), and metrics ([`metrics`]).
+//! * **Layer 2** — JAX train/eval/aggregate graphs per model variant,
+//!   AOT-lowered to HLO text at build time (`python/compile/`).
+//! * **Layer 1** — Pallas kernels for the dense layer (fwd+bwd), the fused
+//!   SGD update, and model averaging (`python/compile/kernels/`).
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so Python never runs on the round path. See DESIGN.md for
+//! the full system inventory and EXPERIMENTS.md for paper-vs-measured.
+
+pub mod baselines;
+pub mod config;
+pub mod data;
+pub mod experiments;
+pub mod learning;
+pub mod metrics;
+pub mod modest;
+pub mod net;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Node identifier: dense index into the session's node table.
+pub type NodeId = u32;
+
+/// Training round number (1-based, as in the paper's Algorithm 4).
+pub type Round = u64;

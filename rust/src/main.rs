@@ -1,0 +1,223 @@
+//! `repro` — the MoDeST launcher.
+//!
+//! ```text
+//! repro train --dataset cifar10 --algo modest --scale 0.25
+//! repro exp fig3 --datasets femnist --scale 0.2
+//! repro exp table4 --scale 0.2
+//! repro exp fig4 --s 1,2,4 --a 1,3
+//! repro exp fig5 --initial 90 --joiners 10
+//! repro exp fig6 --nodes 100
+//! repro info
+//! ```
+//!
+//! Common flags: `--scale`, `--max-time`, `--max-rounds`, `--seed`,
+//! `--artifacts`, `--out`, `--mock` (protocol-only runs without artifacts),
+//! `--config file.json` (a [`SessionSpec`] JSON body; CLI flags override).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::experiments::{self, ExpOptions};
+use modest_dl::net::traffic::fmt_bytes;
+use modest_dl::runtime::XlaRuntime;
+use modest_dl::sim::ChurnSchedule;
+use modest_dl::util::cli::Args;
+
+const USAGE: &str = "\
+repro — MoDeST: decentralized learning with client sampling
+
+USAGE:
+  repro train [--dataset D] [--algo modest|fedavg|dsgd] [--s N] [--a N]
+              [--sf F] [--nodes N] [--config spec.json] [common flags]
+  repro exp fig3   [--datasets cifar10,celeba,femnist,movielens] [common]
+  repro exp table4 [--datasets ...] [common]
+  repro exp fig4   [--dataset femnist] [--s 1,2,4,7] [--a 1,3,5]
+                   [--target F] [common]
+  repro exp fig5   [--initial 90] [--joiners 10] [common]
+  repro exp fig6   [--nodes 100] [common]
+  repro info [--artifacts DIR]
+
+COMMON FLAGS:
+  --scale F        node-count scale vs the paper (default 0.25)
+  --max-time S     virtual-time budget per session (default 1200)
+  --max-rounds N   round budget, 0 = unlimited (default 0)
+  --seed N         session seed (default 42)
+  --artifacts DIR  AOT artifact dir (default artifacts)
+  --out DIR        CSV output dir (default results)
+  --mock           use the mock task (no artifacts needed)
+";
+
+fn common(args: &Args) -> Result<ExpOptions> {
+    Ok(ExpOptions {
+        scale: args.get_f64("scale", 0.25)?,
+        max_time_s: args.get_f64("max-time", 1200.0)?,
+        max_rounds: args.get_u64("max-rounds", 0)?,
+        seed: args.get_u64("seed", 42)?,
+        artifacts_dir: args.get_str("artifacts", "artifacts"),
+        out_dir: PathBuf::from(args.get_str("out", "results")),
+        mock: args.get_bool("mock"),
+    })
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let opts = common(args)?;
+    let mut spec = match args.get_opt("config") {
+        Some(path) => SessionSpec::from_json(&std::fs::read_to_string(path)?)?,
+        None => SessionSpec::default(),
+    };
+    spec.dataset = if opts.mock {
+        "mock".into()
+    } else {
+        args.get_str("dataset", &spec.dataset.clone())
+    };
+    spec.algo = args.get_str("algo", "modest").parse()?;
+    spec.scale = opts.scale;
+    spec.max_time_s = opts.max_time_s;
+    spec.max_rounds = opts.max_rounds;
+    spec.seed = opts.seed;
+    spec.artifacts_dir = opts.artifacts_dir.clone();
+    let s = args.get_usize("s", 0)?;
+    if s > 0 {
+        spec.s = s;
+    }
+    let a = args.get_usize("a", 0)?;
+    if a > 0 {
+        spec.a = a;
+    }
+    spec.sf = args.get_f64("sf", spec.sf)?;
+    let nodes = args.get_usize("nodes", 0)?;
+    if nodes > 0 {
+        spec.nodes = nodes;
+    }
+    args.reject_unknown()?;
+
+    let runtime =
+        if opts.mock { None } else { Some(XlaRuntime::load(&opts.artifacts_dir)?) };
+    let n = spec.resolved_nodes()?;
+    println!(
+        "training {} with {:?} on {} nodes (s={}, a={}, sf={})",
+        spec.dataset,
+        spec.algo,
+        n,
+        spec.resolved_s()?,
+        spec.resolved_a()?,
+        spec.sf
+    );
+    let (metrics, traffic) = match spec.algo {
+        Algo::Dsgd => spec.build_dsgd(runtime.as_ref())?.run(),
+        _ => spec.build_modest(runtime.as_ref(), ChurnSchedule::empty())?.run(),
+    };
+    println!(
+        "finished: round {} after {:.0}s virtual, {} DES events",
+        metrics.final_round, metrics.duration_s, metrics.events
+    );
+    let tail: Vec<_> = metrics.curve.iter().rev().take(5).collect();
+    for p in tail.iter().rev() {
+        println!(
+            "  t={:>7.0}s round={:>5} metric={:.4} loss={:.4}",
+            p.time_s, p.round, p.metric, p.loss
+        );
+    }
+    let t = &metrics.traffic;
+    println!(
+        "traffic: total={} min={} max={} overhead={:.1}% conserved={}",
+        fmt_bytes(t.total),
+        fmt_bytes(t.min_node),
+        fmt_bytes(t.max_node),
+        100.0 * t.overhead_fraction,
+        traffic.is_conserved()
+    );
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let csv = opts.out_dir.join(format!("train_{}_{:?}.csv", spec.dataset, spec.algo));
+    metrics.write_curve_csv(&csv)?;
+    println!("curve written to {}", csv.display());
+    Ok(())
+}
+
+fn cmd_exp(which: &str, args: &Args) -> Result<()> {
+    let opts = common(args)?;
+    match which {
+        "fig1" | "fig3" => {
+            let default = if which == "fig1" {
+                "femnist".to_string()
+            } else {
+                "cifar10,celeba,femnist,movielens".to_string()
+            };
+            let ds = args.get_list("datasets", &default);
+            args.reject_unknown()?;
+            let refs: Vec<&str> = ds.iter().map(|s| s.as_str()).collect();
+            experiments::fig3::run(&opts, &refs, &experiments::fig3::ALL_ALGOS)?;
+        }
+        "table1" | "table4" => {
+            let default = if which == "table1" {
+                "femnist".to_string()
+            } else {
+                "cifar10,celeba,femnist,movielens".to_string()
+            };
+            let ds = args.get_list("datasets", &default);
+            args.reject_unknown()?;
+            let refs: Vec<&str> = ds.iter().map(|s| s.as_str()).collect();
+            experiments::table4::run(&opts, &refs)?;
+        }
+        "fig4" => {
+            let dataset = args.get_str("dataset", "femnist");
+            let sv = args.get_usize_list("s", "1,2,4,7")?;
+            let av = args.get_usize_list("a", "1,3,5")?;
+            let target = match args.get_opt("target") {
+                Some(t) => Some(t.parse::<f64>()?),
+                None => None,
+            };
+            args.reject_unknown()?;
+            experiments::fig4::run(&opts, &dataset, &sv, &av, target)?;
+        }
+        "fig5" => {
+            let initial = args.get_usize("initial", 90)?;
+            let joiners = args.get_u64("joiners", 10)? as u32;
+            args.reject_unknown()?;
+            experiments::fig5::run(&opts, initial, joiners)?;
+        }
+        "fig6" => {
+            let nodes = args.get_usize("nodes", 100)?;
+            args.reject_unknown()?;
+            experiments::fig6::run(&opts, nodes)?;
+        }
+        other => bail!("unknown experiment {other:?} (fig1|fig3|table1|table4|fig4|fig5|fig6)"),
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.positionals.first().map(|s| s.as_str()) {
+        Some("train") => cmd_train(&args),
+        Some("exp") => {
+            let which = args
+                .positionals
+                .get(1)
+                .ok_or_else(|| anyhow::anyhow!("exp needs a figure/table id\n{USAGE}"))?
+                .clone();
+            cmd_exp(&which, &args)
+        }
+        Some("info") => {
+            let dir = args.get_str("artifacts", "artifacts");
+            args.reject_unknown()?;
+            let rt = XlaRuntime::load(&dir)?;
+            let m = rt.manifest();
+            println!("artifact manifest (seed {}):", m.seed);
+            for (name, v) in &m.variants {
+                println!(
+                    "  {name:<12} kind={:<10} params={:>9} ({:>8} bytes) smax={} lr={} mu={} paper-nodes={}",
+                    v.kind, v.param_count, v.model_bytes, v.smax, v.lr, v.momentum, v.nodes
+                );
+            }
+            Ok(())
+        }
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}

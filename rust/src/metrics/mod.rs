@@ -1,0 +1,244 @@
+//! Session metrics: convergence curves, round/sample times, traffic
+//! summaries, and membership-propagation traces — everything the paper's
+//! figures and tables are built from.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::net::TrafficLedger;
+use crate::sim::SimTime;
+use crate::{NodeId, Round};
+
+/// One point on a convergence curve (Fig. 1/3/6 top).
+#[derive(Debug, Clone, Copy)]
+pub struct CurvePoint {
+    pub time_s: f64,
+    pub round: Round,
+    /// Accuracy in [0,1] or MSE depending on the task.
+    pub metric: f64,
+    pub loss: f64,
+    /// Std-dev across node models when evaluating D-SGD-style (else 0).
+    pub metric_std: f64,
+}
+
+/// One completed sampling operation (Fig. 6 bottom).
+#[derive(Debug, Clone, Copy)]
+pub struct SampleTiming {
+    pub completed_at_s: f64,
+    pub duration_s: f64,
+    pub round: Round,
+    pub retries: u32,
+}
+
+/// Membership propagation trace of one join event (Fig. 5): how many of the
+/// observer nodes still miss the joiner, sampled over time.
+#[derive(Debug, Clone)]
+pub struct JoinTrace {
+    pub joiner: NodeId,
+    pub joined_at_s: f64,
+    /// (time_s, number of observers that do not yet know the joiner)
+    pub missing: Vec<(f64, usize)>,
+}
+
+impl JoinTrace {
+    /// Time from join until every observer knew the node (None if never).
+    pub fn full_propagation_s(&self) -> Option<f64> {
+        self.missing
+            .iter()
+            .find(|&&(_, m)| m == 0)
+            .map(|&(t, _)| t - self.joined_at_s)
+    }
+}
+
+/// Network usage summary in the shape of the paper's Tables 1 and 4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TrafficSummary {
+    pub total: u64,
+    pub min_node: u64,
+    pub max_node: u64,
+    pub overhead: u64,
+    pub overhead_fraction: f64,
+    pub messages: u64,
+}
+
+impl TrafficSummary {
+    pub fn from_ledger(ledger: &TrafficLedger, nodes: usize) -> TrafficSummary {
+        let (min_node, max_node) = ledger.min_max_usage(nodes);
+        TrafficSummary {
+            total: ledger.total(),
+            min_node,
+            max_node,
+            overhead: ledger.overhead(),
+            overhead_fraction: ledger.overhead_fraction(),
+            messages: ledger.messages(),
+        }
+    }
+}
+
+/// Everything a session records.
+#[derive(Debug, Clone, Default)]
+pub struct SessionMetrics {
+    pub curve: Vec<CurvePoint>,
+    pub samples: Vec<SampleTiming>,
+    /// First dispatch time of each round (round, time_s).
+    pub round_starts: Vec<(Round, f64)>,
+    pub joins: Vec<JoinTrace>,
+    pub traffic: TrafficSummary,
+    /// Final round reached.
+    pub final_round: Round,
+    /// Virtual session duration.
+    pub duration_s: f64,
+    /// DES events processed (simulator throughput accounting).
+    pub events: u64,
+}
+
+impl SessionMetrics {
+    pub fn record_eval(
+        &mut self,
+        now: SimTime,
+        round: Round,
+        metric: f64,
+        loss: f64,
+        metric_std: f64,
+    ) {
+        self.curve.push(CurvePoint {
+            time_s: now.as_secs_f64(),
+            round,
+            metric,
+            loss,
+            metric_std,
+        });
+    }
+
+    pub fn record_sample(&mut self, now: SimTime, started: SimTime, round: Round, retries: u32) {
+        self.samples.push(SampleTiming {
+            completed_at_s: now.as_secs_f64(),
+            duration_s: (now.saturating_sub(started)).as_secs_f64(),
+            round,
+            retries,
+        });
+    }
+
+    pub fn record_round_start(&mut self, round: Round, now: SimTime) {
+        if self.round_starts.last().map(|&(r, _)| r) != Some(round) {
+            self.round_starts.push((round, now.as_secs_f64()));
+        }
+    }
+
+    /// First virtual time at which `metric` crossed `target` (accuracy) or
+    /// dropped below it (MSE), with the round it happened in.
+    pub fn time_to_target(&self, target: f64, higher_is_better: bool) -> Option<(f64, Round)> {
+        self.curve
+            .iter()
+            .find(|p| {
+                if higher_is_better {
+                    p.metric >= target
+                } else {
+                    p.metric <= target
+                }
+            })
+            .map(|p| (p.time_s, p.round))
+    }
+
+    /// Best metric reached.
+    pub fn best_metric(&self, higher_is_better: bool) -> Option<f64> {
+        let it = self.curve.iter().map(|p| p.metric);
+        if higher_is_better {
+            it.fold(None, |a: Option<f64>, x| Some(a.map_or(x, |a| a.max(x))))
+        } else {
+            it.fold(None, |a: Option<f64>, x| Some(a.map_or(x, |a| a.min(x))))
+        }
+    }
+
+    /// Mean round duration over a time window (Fig. 6 annotation).
+    pub fn mean_round_time_s(&self) -> Option<f64> {
+        if self.round_starts.len() < 2 {
+            return None;
+        }
+        let n = self.round_starts.len() - 1;
+        let span = self.round_starts[n].1 - self.round_starts[0].1;
+        Some(span / n as f64)
+    }
+
+    /// Dump the convergence curve as CSV.
+    pub fn write_curve_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "time_s,round,metric,loss,metric_std")?;
+        for p in &self.curve {
+            writeln!(
+                f,
+                "{:.3},{},{:.6},{:.6},{:.6}",
+                p.time_s, p.round, p.metric, p.loss, p.metric_std
+            )?;
+        }
+        Ok(())
+    }
+
+    /// Dump sample timings as CSV (Fig. 6 bottom).
+    pub fn write_samples_csv(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)?;
+        writeln!(f, "completed_at_s,duration_s,round,retries")?;
+        for s in &self.samples {
+            writeln!(
+                f,
+                "{:.3},{:.4},{},{}",
+                s.completed_at_s, s.duration_s, s.round, s.retries
+            )?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_to_target_accuracy() {
+        let mut m = SessionMetrics::default();
+        m.record_eval(SimTime::from_secs_f64(10.0), 1, 0.5, 1.0, 0.0);
+        m.record_eval(SimTime::from_secs_f64(20.0), 2, 0.85, 0.5, 0.0);
+        assert_eq!(m.time_to_target(0.8, true), Some((20.0, 2)));
+        assert_eq!(m.time_to_target(0.9, true), None);
+    }
+
+    #[test]
+    fn time_to_target_mse() {
+        let mut m = SessionMetrics::default();
+        m.record_eval(SimTime::from_secs_f64(5.0), 1, 2.0, 2.0, 0.0);
+        m.record_eval(SimTime::from_secs_f64(9.0), 2, 0.9, 0.9, 0.0);
+        assert_eq!(m.time_to_target(1.0, false), Some((9.0, 2)));
+    }
+
+    #[test]
+    fn round_start_dedup() {
+        let mut m = SessionMetrics::default();
+        m.record_round_start(1, SimTime::from_secs_f64(1.0));
+        m.record_round_start(1, SimTime::from_secs_f64(1.5));
+        m.record_round_start(2, SimTime::from_secs_f64(2.0));
+        assert_eq!(m.round_starts.len(), 2);
+        assert!((m.mean_round_time_s().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn join_trace_propagation() {
+        let t = JoinTrace {
+            joiner: 90,
+            joined_at_s: 60.0,
+            missing: vec![(60.0, 90), (120.0, 40), (300.0, 0)],
+        };
+        assert_eq!(t.full_propagation_s(), Some(240.0));
+    }
+
+    #[test]
+    fn best_metric_directions() {
+        let mut m = SessionMetrics::default();
+        m.record_eval(SimTime::ZERO, 1, 0.3, 3.0, 0.0);
+        m.record_eval(SimTime::ZERO, 2, 0.7, 1.0, 0.0);
+        m.record_eval(SimTime::ZERO, 3, 0.6, 1.5, 0.0);
+        assert_eq!(m.best_metric(true), Some(0.7));
+        assert_eq!(m.best_metric(false), Some(0.3));
+    }
+}

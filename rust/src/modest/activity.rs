@@ -1,0 +1,126 @@
+//! Alg. 3 — latest-activity records (`N_i`).
+//!
+//! A per-node map `j -> k̂_j` of the highest round each node was known
+//! active in, merged by max — a vector-clock-like monotone join. Estimates
+//! can lag the true round but never exceed it (the paper's logical-clock
+//! argument), which the proptest suite checks against a simulated oracle.
+
+use std::collections::BTreeMap;
+
+use crate::{NodeId, Round};
+
+/// `N_i` of Alg. 3.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ActivityClock {
+    records: BTreeMap<NodeId, Round>,
+}
+
+impl ActivityClock {
+    pub fn new() -> ActivityClock {
+        ActivityClock::default()
+    }
+
+    /// `UpdateActivity(j, k̂)`: max-merge one record.
+    pub fn update(&mut self, node: NodeId, round: Round) {
+        let e = self.records.entry(node).or_insert(0);
+        *e = (*e).max(round);
+    }
+
+    /// `MAX(N_i.VALUES)` — the node's estimate of the current round.
+    pub fn estimate(&self) -> Round {
+        self.records.values().copied().max().unwrap_or(0)
+    }
+
+    pub fn get(&self, node: NodeId) -> Option<Round> {
+        self.records.get(&node).copied()
+    }
+
+    /// Merge: pointwise max.
+    pub fn merge(&mut self, other: &ActivityClock) {
+        for (&n, &k) in &other.records {
+            self.update(n, k);
+        }
+    }
+
+    /// Was `node` active within the last `dk` rounds as of round `k`?
+    /// (Alg. 3 Candidates: `N_i.get(j) > k - Δk`.)
+    pub fn active_within(&self, node: NodeId, k: Round, dk: Round) -> bool {
+        match self.records.get(&node) {
+            Some(&r) => r + dk > k,
+            None => false,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, Round)> + '_ {
+        self.records.iter().map(|(&n, &k)| (n, k))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn update_is_monotone() {
+        let mut a = ActivityClock::new();
+        a.update(1, 5);
+        a.update(1, 3); // stale, ignored
+        assert_eq!(a.get(1), Some(5));
+        a.update(1, 9);
+        assert_eq!(a.get(1), Some(9));
+    }
+
+    #[test]
+    fn estimate_is_max() {
+        let mut a = ActivityClock::new();
+        assert_eq!(a.estimate(), 0);
+        a.update(1, 3);
+        a.update(2, 7);
+        a.update(3, 1);
+        assert_eq!(a.estimate(), 7);
+    }
+
+    #[test]
+    fn merge_is_pointwise_max() {
+        let mut a = ActivityClock::new();
+        a.update(1, 5);
+        a.update(2, 2);
+        let mut b = ActivityClock::new();
+        b.update(1, 3);
+        b.update(2, 8);
+        b.update(3, 1);
+        a.merge(&b);
+        assert_eq!(a.get(1), Some(5));
+        assert_eq!(a.get(2), Some(8));
+        assert_eq!(a.get(3), Some(1));
+    }
+
+    #[test]
+    fn window_semantics_match_alg3() {
+        // Alg. 3 line 19: candidate iff N_i.GET(j) > (k - Δk).
+        let mut a = ActivityClock::new();
+        a.update(1, 10);
+        assert!(a.active_within(1, 20, 20)); // 10 > 0
+        assert!(a.active_within(1, 29, 20)); // 10 > 9
+        assert!(!a.active_within(1, 30, 20)); // 10 > 10 is false
+        assert!(!a.active_within(2, 5, 20)); // unknown node
+    }
+
+    #[test]
+    fn fresh_joiner_with_round_zero_is_candidate_early() {
+        // A node with activity 0 (its own join record) must count as active
+        // while k < Δk — otherwise bootstrap would starve.
+        let mut a = ActivityClock::new();
+        a.update(4, 0);
+        assert!(a.active_within(4, 1, 20));
+        assert!(!a.active_within(4, 20, 20));
+    }
+}

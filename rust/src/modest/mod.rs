@@ -1,0 +1,28 @@
+//! MoDeST: Mostly-Consistent Decentralized Sampling Training.
+//!
+//! The paper's contribution, faithfully implemented as four pieces:
+//!
+//! * [`registry`] — Alg. 2: last-writer-wins joined/left registry ordered by
+//!   per-node persistent counters (a state-based CRDT).
+//! * [`activity`] — Alg. 3: latest-activity logical clock with max-merge and
+//!   the `Δk` candidate window.
+//! * [`view`] — registry + activity bundled, merged and piggybacked on model
+//!   transfers.
+//! * [`sampler`] — Alg. 1: the deterministic hash-sorted candidate order
+//!   (the ping/pong liveness orchestration lives in [`session`]).
+//! * [`node`] / [`session`] — Alg. 4: the push-based train/aggregate
+//!   protocol with `k_agg`/`k_train` cancellation, `sf` thresholds, and the
+//!   multi-aggregator fast path, driven over the discrete-event simulator.
+
+pub mod activity;
+pub mod node;
+pub mod registry;
+pub mod sampler;
+pub mod session;
+pub mod view;
+
+pub use activity::ActivityClock;
+pub use registry::{MembershipEvent, Registry};
+pub use sampler::candidate_order;
+pub use session::{ModestConfig, ModestSession};
+pub use view::View;

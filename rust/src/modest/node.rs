@@ -1,0 +1,397 @@
+//! Per-node protocol state (Alg. 4) — pure state transitions.
+//!
+//! `ModestNode` holds everything a MoDeST participant keeps between
+//! messages: its view, its membership counter, the two task-round cursors
+//! (`k_agg`, `k_train`), the accumulating model list `Θ`, the per-round
+//! pong lists `L[k]`, and any in-flight sampling operations. Methods here
+//! are pure state transitions returning what the caller (the event-driven
+//! [`super::session`]) must do next; no I/O happens in this module, which
+//! is what makes the protocol unit- and property-testable in isolation.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::learning::Model;
+use crate::sim::SimTime;
+use crate::{NodeId, Round};
+
+use super::view::View;
+
+/// Shared-ownership model payload (messages in flight hold references, not
+/// copies — the traffic ledger accounts for the bytes instead).
+pub type ModelRef = Arc<Model>;
+
+/// Wire messages of the MoDeST protocol.
+#[derive(Debug, Clone)]
+pub enum Msg {
+    /// Liveness probe (Alg. 1).
+    Ping { round: Round, from: NodeId },
+    /// Probe reply.
+    Pong { round: Round, from: NodeId },
+    /// Membership advertisement (Alg. 2).
+    Joined { node: NodeId, counter: u64 },
+    /// Graceful-leave advertisement (Alg. 2).
+    Left { node: NodeId, counter: u64 },
+    /// Participant -> aggregators of the next sample (Alg. 4).
+    Aggregate { round: Round, model: ModelRef, view: View },
+    /// Aggregator -> participants of its sample (Alg. 4).
+    Train { round: Round, model: ModelRef, view: View },
+}
+
+/// Why a sampling operation is running (continuation on completion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Purpose {
+    /// Trainer looking for the `a` aggregators of round `k+1`
+    /// (Alg. 4 line 35); payload = its updated model.
+    Aggregators,
+    /// Aggregator looking for the `s` participants of its round
+    /// (Alg. 4 line 19); payload = the aggregated model.
+    Participants,
+}
+
+/// One in-flight `Sample(k, need)` (Alg. 1) with its continuation payload.
+#[derive(Debug)]
+pub struct SampleOp {
+    pub id: u64,
+    pub round: Round,
+    pub need: usize,
+    pub purpose: Purpose,
+    pub payload: ModelRef,
+    /// Hash-sorted contact order (recomputed on retry).
+    pub order: Vec<NodeId>,
+    /// Next tail candidate to contact one-by-one.
+    pub next_tail: usize,
+    pub done: bool,
+    pub started: SimTime,
+    pub retries: u32,
+}
+
+/// What the session must do after feeding a message to the node.
+#[derive(Debug, PartialEq)]
+pub enum NodeAction {
+    /// Reply with a pong (Alg. 1 line 23).
+    SendPong { to: NodeId, round: Round },
+    /// `Θ` crossed the `sf·s` threshold for `round`: start sampling the
+    /// round's participants (Alg. 4 lines 17-19).
+    BeginParticipantSample { round: Round },
+    /// A train message was accepted: start the local update
+    /// (Alg. 4 lines 29-30). `seq` identifies the training attempt so a
+    /// later cancellation invalidates the completion event.
+    BeginTraining { round: Round, seq: u64 },
+    /// Nothing to do.
+    Nothing,
+}
+
+/// Per-node protocol state.
+pub struct ModestNode {
+    pub id: NodeId,
+    pub view: View,
+    /// Persistent membership counter `c_i` (Alg. 2).
+    pub counter: u64,
+    /// Last aggregation round `k_agg` (Alg. 4).
+    pub k_agg: Round,
+    /// Accumulated models `Θ` for round `k_agg`.
+    pub theta: Vec<ModelRef>,
+    /// Last round for which this node dispatched train messages, so a
+    /// second threshold crossing in the same round cannot double-send.
+    pub agg_dispatched: Round,
+    /// Last training round `k_train` (Alg. 4).
+    pub k_train: Round,
+    /// In-flight local training: (round, seq, received model).
+    pub training: Option<(Round, u64, ModelRef)>,
+    pub train_seq: u64,
+    /// `L[k]`: pong lists per round (Alg. 1), deduplicated, arrival order.
+    pub pongs: HashMap<Round, Vec<NodeId>>,
+    /// In-flight sampling operations.
+    pub ops: Vec<SampleOp>,
+    pub next_op: u64,
+    /// Virtual time this node last received a train/aggregate message —
+    /// drives the §3.5 auto-rejoin when it stops being sampled.
+    pub last_active: SimTime,
+}
+
+impl ModestNode {
+    pub fn new(id: NodeId) -> ModestNode {
+        ModestNode {
+            id,
+            view: View::default(),
+            counter: 0,
+            k_agg: 0,
+            theta: Vec::new(),
+            agg_dispatched: 0,
+            k_train: 0,
+            training: None,
+            train_seq: 0,
+            pongs: HashMap::new(),
+            ops: Vec::new(),
+            next_op: 0,
+            last_active: SimTime::ZERO,
+        }
+    }
+
+    /// Alg. 1 line 23: `upon ping(k, j): send pong(k, i)`.
+    pub fn on_ping(&mut self, round: Round, from: NodeId) -> NodeAction {
+        NodeAction::SendPong { to: from, round }
+    }
+
+    /// Alg. 1 line 25: `upon pong(k, j): L[k].add(j)`. Returns ids of ops
+    /// that just became completable.
+    pub fn on_pong(&mut self, round: Round, from: NodeId) -> Vec<u64> {
+        let list = self.pongs.entry(round).or_default();
+        if !list.contains(&from) {
+            list.push(from);
+        }
+        let n = list.len();
+        self.ops
+            .iter()
+            .filter(|op| !op.done && op.round == round && n >= op.need)
+            .map(|op| op.id)
+            .collect()
+    }
+
+    /// Alg. 2 `upon joined(j, c_j)` / `upon left(j, c_j)`.
+    pub fn on_membership(&mut self, node: NodeId, counter: u64, joined: bool) {
+        use super::registry::MembershipEvent::*;
+        self.view
+            .registry
+            .update(node, counter, if joined { Joined } else { Left });
+        // Estimate of the current round (Alg. 2 line 25).
+        let k_hat = self.view.activity.estimate();
+        self.view.activity.update(node, k_hat);
+    }
+
+    /// Alg. 4 `upon aggregate(k, θ_j, V_j)`. `s` and `sf` come from config.
+    pub fn on_aggregate(
+        &mut self,
+        round: Round,
+        model: ModelRef,
+        view: &View,
+        s: usize,
+        sf: f64,
+    ) -> NodeAction {
+        self.view.merge(view);
+        self.view.activity.update(self.id, round);
+        if round > self.k_agg {
+            self.k_agg = round;
+            self.theta.clear();
+            self.theta.push(model);
+        } else if round == self.k_agg {
+            self.theta.push(model);
+        } else {
+            return NodeAction::Nothing; // stale: a later round already ran
+        }
+        let threshold = ((sf * s as f64).ceil() as usize).max(1);
+        if self.theta.len() >= threshold && self.agg_dispatched < round {
+            self.agg_dispatched = round;
+            return NodeAction::BeginParticipantSample { round };
+        }
+        NodeAction::Nothing
+    }
+
+    /// Alg. 4 `upon train(k, θ_a, V_j)`.
+    pub fn on_train(&mut self, round: Round, model: ModelRef, view: &View) -> NodeAction {
+        self.view.merge(view);
+        self.view.activity.update(self.id, round);
+        if round > self.k_train {
+            self.k_train = round;
+            self.training = None; // CANCEL(θ̄): stale attempt invalidated
+        }
+        if round == self.k_train && self.training.is_none() {
+            self.train_seq += 1;
+            let seq = self.train_seq;
+            self.training = Some((round, seq, model));
+            return NodeAction::BeginTraining { round, seq };
+        }
+        NodeAction::Nothing
+    }
+
+    /// Is training attempt `seq` still valid (not canceled)?
+    pub fn training_valid(&self, seq: u64) -> Option<(Round, ModelRef)> {
+        match &self.training {
+            Some((round, s, model)) if *s == seq => Some((*round, model.clone())),
+            _ => None,
+        }
+    }
+
+    /// First `need` live nodes for an op (pong arrival order, Alg. 1
+    /// `L[k].HEAD(s)`).
+    pub fn live_for(&self, op: &SampleOp) -> Vec<NodeId> {
+        self.pongs
+            .get(&op.round)
+            .map(|l| l.iter().take(op.need).copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// Drop completed ops and stale pong lists to bound memory.
+    pub fn gc(&mut self) {
+        self.ops.retain(|op| !op.done);
+        let horizon = self.k_train.max(self.k_agg).saturating_sub(4);
+        self.pongs.retain(|&k, _| k >= horizon);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ModelRef {
+        Arc::new(vec![1.0f32])
+    }
+
+    #[test]
+    fn ping_triggers_pong() {
+        let mut n = ModestNode::new(3);
+        assert_eq!(
+            n.on_ping(7, 9),
+            NodeAction::SendPong { to: 9, round: 7 }
+        );
+    }
+
+    #[test]
+    fn pong_dedup_and_completion() {
+        let mut n = ModestNode::new(0);
+        n.ops.push(SampleOp {
+            id: 1,
+            round: 4,
+            need: 2,
+            purpose: Purpose::Aggregators,
+            payload: model(),
+            order: vec![1, 2, 3],
+            next_tail: 2,
+            done: false,
+            started: SimTime::ZERO,
+            retries: 0,
+        });
+        assert!(n.on_pong(4, 1).is_empty()); // 1 < need
+        assert!(n.on_pong(4, 1).is_empty()); // duplicate ignored
+        assert_eq!(n.on_pong(4, 2), vec![1]); // reaches need
+        assert_eq!(n.pongs[&4], vec![1, 2]);
+    }
+
+    #[test]
+    fn pong_other_round_does_not_complete() {
+        let mut n = ModestNode::new(0);
+        n.ops.push(SampleOp {
+            id: 1,
+            round: 4,
+            need: 1,
+            purpose: Purpose::Aggregators,
+            payload: model(),
+            order: vec![],
+            next_tail: 0,
+            done: false,
+            started: SimTime::ZERO,
+            retries: 0,
+        });
+        assert!(n.on_pong(5, 1).is_empty());
+    }
+
+    #[test]
+    fn aggregate_accumulates_and_fires_at_sf_threshold() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        // s=4, sf=0.75 -> threshold 3
+        assert_eq!(n.on_aggregate(2, model(), &v, 4, 0.75), NodeAction::Nothing);
+        assert_eq!(n.on_aggregate(2, model(), &v, 4, 0.75), NodeAction::Nothing);
+        assert_eq!(
+            n.on_aggregate(2, model(), &v, 4, 0.75),
+            NodeAction::BeginParticipantSample { round: 2 }
+        );
+        // a 4th model in the same round must NOT double-dispatch
+        assert_eq!(n.on_aggregate(2, model(), &v, 4, 0.75), NodeAction::Nothing);
+        assert_eq!(n.theta.len(), 4);
+    }
+
+    #[test]
+    fn higher_round_resets_theta() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        n.on_aggregate(2, model(), &v, 10, 1.0);
+        n.on_aggregate(2, model(), &v, 10, 1.0);
+        assert_eq!(n.theta.len(), 2);
+        n.on_aggregate(3, model(), &v, 10, 1.0);
+        assert_eq!(n.k_agg, 3);
+        assert_eq!(n.theta.len(), 1);
+    }
+
+    #[test]
+    fn stale_aggregate_ignored() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        n.on_aggregate(5, model(), &v, 1, 1.0); // dispatches round 5
+        assert_eq!(n.on_aggregate(4, model(), &v, 1, 1.0), NodeAction::Nothing);
+        assert_eq!(n.theta.len(), 1);
+    }
+
+    #[test]
+    fn train_starts_once_per_round() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        let a = n.on_train(1, model(), &v);
+        assert!(matches!(a, NodeAction::BeginTraining { round: 1, seq: 1 }));
+        // second aggregator's copy of the same round: fast path, no restart
+        assert_eq!(n.on_train(1, model(), &v), NodeAction::Nothing);
+    }
+
+    #[test]
+    fn newer_train_cancels_pending() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        n.on_train(1, model(), &v);
+        assert!(n.training_valid(1).is_some());
+        let a = n.on_train(3, model(), &v);
+        assert!(matches!(a, NodeAction::BeginTraining { round: 3, seq: 2 }));
+        assert!(n.training_valid(1).is_none(), "seq 1 must be canceled");
+        assert!(n.training_valid(2).is_some());
+        assert_eq!(n.k_train, 3);
+    }
+
+    #[test]
+    fn stale_train_ignored() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        n.on_train(5, model(), &v);
+        assert_eq!(n.on_train(4, model(), &v), NodeAction::Nothing);
+    }
+
+    #[test]
+    fn train_updates_own_activity() {
+        let mut n = ModestNode::new(9);
+        let v = View::default();
+        n.on_train(12, model(), &v);
+        assert_eq!(n.view.activity.get(9), Some(12));
+    }
+
+    #[test]
+    fn membership_uses_round_estimate() {
+        let mut n = ModestNode::new(0);
+        n.view.activity.update(0, 42); // we know round 42 happened
+        n.on_membership(5, 1, true);
+        assert!(n.view.registry.is_registered(5));
+        assert_eq!(n.view.activity.get(5), Some(42));
+    }
+
+    #[test]
+    fn gc_drops_done_ops_and_old_pongs() {
+        let mut n = ModestNode::new(0);
+        n.k_train = 20;
+        n.pongs.insert(3, vec![1]);
+        n.pongs.insert(19, vec![1]);
+        n.ops.push(SampleOp {
+            id: 1,
+            round: 20,
+            need: 1,
+            purpose: Purpose::Aggregators,
+            payload: model(),
+            order: vec![],
+            next_tail: 0,
+            done: true,
+            started: SimTime::ZERO,
+            retries: 0,
+        });
+        n.gc();
+        assert!(n.ops.is_empty());
+        assert!(!n.pongs.contains_key(&3));
+        assert!(n.pongs.contains_key(&19));
+    }
+}

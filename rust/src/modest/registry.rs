@@ -1,0 +1,166 @@
+//! Alg. 2 — the joined/left registry.
+//!
+//! Each node orders its own membership events with a persistent counter
+//! `c_i`; everyone else keeps only the *most recent* event per node
+//! (last-writer-wins by counter). Merging registries is therefore
+//! commutative, associative and idempotent — a state-based CRDT — which is
+//! what lets MoDeST skip consensus entirely. The proptest suite
+//! (`rust/tests/prop_invariants.rs`) checks the CRDT laws.
+
+use std::collections::BTreeMap;
+
+use crate::NodeId;
+
+/// The two membership event kinds of Alg. 2.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MembershipEvent {
+    Joined,
+    Left,
+}
+
+/// Registry: `node -> (counter, latest event)`; `E_i` and `C_i` of Alg. 2
+/// fused into one map.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Registry {
+    entries: BTreeMap<NodeId, (u64, MembershipEvent)>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// `UpdateRegistry(j, c_j, e)`: keep only strictly newer events.
+    ///
+    /// Equal counters keep the existing entry — counters are incremented
+    /// only by the node itself, so an equal counter implies the same event.
+    pub fn update(&mut self, node: NodeId, counter: u64, event: MembershipEvent) -> bool {
+        match self.entries.get(&node) {
+            Some(&(c, _)) if c >= counter => false,
+            _ => {
+                self.entries.insert(node, (counter, event));
+                true
+            }
+        }
+    }
+
+    /// `MergeRegistry(C_j, E_j)`.
+    pub fn merge(&mut self, other: &Registry) {
+        for (&node, &(c, e)) in &other.entries {
+            self.update(node, c, e);
+        }
+    }
+
+    /// `Registered()`: nodes whose latest event is `joined`.
+    pub fn registered(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.entries
+            .iter()
+            .filter(|(_, (_, e))| *e == MembershipEvent::Joined)
+            .map(|(&n, _)| n)
+    }
+
+    pub fn is_registered(&self, node: NodeId) -> bool {
+        matches!(self.entries.get(&node), Some((_, MembershipEvent::Joined)))
+    }
+
+    pub fn knows(&self, node: NodeId) -> bool {
+        self.entries.contains_key(&node)
+    }
+
+    pub fn get(&self, node: NodeId) -> Option<(u64, MembershipEvent)> {
+        self.entries.get(&node).copied()
+    }
+
+    /// Number of entries (drives the serialized view size).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (NodeId, u64, MembershipEvent)> + '_ {
+        self.entries.iter().map(|(&n, &(c, e))| (n, c, e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use MembershipEvent::*;
+
+    #[test]
+    fn newer_counter_wins() {
+        let mut r = Registry::new();
+        assert!(r.update(1, 1, Joined));
+        assert!(r.update(1, 2, Left));
+        assert!(!r.is_registered(1));
+        // stale joined must not resurrect
+        assert!(!r.update(1, 1, Joined));
+        assert!(!r.is_registered(1));
+    }
+
+    #[test]
+    fn equal_counter_is_noop() {
+        let mut r = Registry::new();
+        r.update(1, 3, Joined);
+        assert!(!r.update(1, 3, Left));
+        assert!(r.is_registered(1));
+    }
+
+    #[test]
+    fn registered_filters_left_nodes() {
+        let mut r = Registry::new();
+        r.update(1, 1, Joined);
+        r.update(2, 1, Joined);
+        r.update(2, 2, Left);
+        r.update(3, 5, Joined);
+        let reg: Vec<NodeId> = r.registered().collect();
+        assert_eq!(reg, vec![1, 3]);
+    }
+
+    #[test]
+    fn merge_takes_newest_per_node() {
+        let mut a = Registry::new();
+        a.update(1, 1, Joined);
+        a.update(2, 4, Left);
+        let mut b = Registry::new();
+        b.update(1, 2, Left);
+        b.update(2, 3, Joined);
+        b.update(3, 1, Joined);
+        a.merge(&b);
+        assert_eq!(a.get(1), Some((2, Left)));
+        assert_eq!(a.get(2), Some((4, Left)));
+        assert_eq!(a.get(3), Some((1, Joined)));
+    }
+
+    #[test]
+    fn merge_is_idempotent_and_commutative() {
+        let mut a = Registry::new();
+        a.update(1, 1, Joined);
+        a.update(2, 2, Left);
+        let mut b = Registry::new();
+        b.update(2, 3, Joined);
+        b.update(4, 1, Joined);
+
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba);
+
+        let mut abb = ab.clone();
+        abb.merge(&b);
+        assert_eq!(ab, abb);
+    }
+
+    #[test]
+    fn rejoin_after_leave() {
+        let mut r = Registry::new();
+        r.update(7, 1, Joined);
+        r.update(7, 2, Left);
+        r.update(7, 3, Joined);
+        assert!(r.is_registered(7));
+    }
+}

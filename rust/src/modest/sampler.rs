@@ -1,0 +1,122 @@
+//! Alg. 1 — the deterministic sampling order.
+//!
+//! Every node hashes `(candidate_id ++ round)` and sorts; because the hash
+//! is keyed by the round, the contact order is re-randomized every round,
+//! and because it is a pure function of (id, round), any two nodes with the
+//! same candidate set derive the *same* order — the heart of
+//! mostly-consistent sampling. The first `a` entries of the order are the
+//! round's aggregators (paper §3.6).
+//!
+//! The ping/pong liveness loop around this order is event-driven and lives
+//! in [`super::session`].
+
+use crate::{NodeId, Round};
+
+/// Stable 64-bit hash of `(node, round)` — splitmix64 over the packed pair.
+///
+/// The paper concatenates the id and round strings and sorts
+/// lexicographically; any keyed hash with per-round reshuffling satisfies
+/// the algorithm's requirements, and a 64-bit integer hash gives the same
+/// mostly-consistent property without string churn.
+pub fn sample_hash(node: NodeId, round: Round) -> u64 {
+    let mut z = (node as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ round.rotate_left(32);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// The hash-sorted candidate contact order for round `k` (Alg. 1 line 6).
+/// Ties (astronomically unlikely) break by node id for determinism.
+pub fn candidate_order(round: Round, candidates: &[NodeId]) -> Vec<NodeId> {
+    let mut keyed: Vec<(u64, NodeId)> = candidates
+        .iter()
+        .map(|&j| (sample_hash(j, round), j))
+        .collect();
+    keyed.sort_unstable();
+    keyed.into_iter().map(|(_, j)| j).collect()
+}
+
+/// The aggregators of round `k` given a candidate set: first `a` of the
+/// order (paper §3.6). Used by tests and by the bootstrap (round 1).
+pub fn expected_aggregators(round: Round, candidates: &[NodeId], a: usize) -> Vec<NodeId> {
+    let mut order = candidate_order(round, candidates);
+    order.truncate(a);
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn order_is_deterministic() {
+        let c: Vec<NodeId> = (0..100).collect();
+        assert_eq!(candidate_order(5, &c), candidate_order(5, &c));
+    }
+
+    #[test]
+    fn order_is_a_permutation() {
+        let c: Vec<NodeId> = (0..50).collect();
+        let mut o = candidate_order(3, &c);
+        o.sort_unstable();
+        assert_eq!(o, c);
+    }
+
+    #[test]
+    fn order_changes_every_round() {
+        let c: Vec<NodeId> = (0..64).collect();
+        let o1 = candidate_order(1, &c);
+        let o2 = candidate_order(2, &c);
+        assert_ne!(o1, o2);
+    }
+
+    #[test]
+    fn order_independent_of_input_permutation() {
+        // Different nodes may hold their candidate lists in different
+        // orders; the derived contact order must not care.
+        let mut c: Vec<NodeId> = (0..40).collect();
+        let o1 = candidate_order(9, &c);
+        c.reverse();
+        let o2 = candidate_order(9, &c);
+        assert_eq!(o1, o2);
+    }
+
+    #[test]
+    fn mostly_consistent_under_small_view_divergence() {
+        // Two views differing in one node must agree on all other relative
+        // positions: the samples overlap in >= s-1 members.
+        let full: Vec<NodeId> = (0..100).collect();
+        let missing: Vec<NodeId> = (0..100).filter(|&j| j != 42).collect();
+        for round in 1..20u64 {
+            let s = 10;
+            let a: Vec<NodeId> = candidate_order(round, &full).into_iter().take(s).collect();
+            let b: Vec<NodeId> = candidate_order(round, &missing).into_iter().take(s).collect();
+            let overlap = a.iter().filter(|x| b.contains(x)).count();
+            assert!(overlap >= s - 1, "round {round}: overlap {overlap}");
+        }
+    }
+
+    #[test]
+    fn selection_is_roughly_uniform() {
+        // Over many rounds, each node should lead the order ~ uniformly.
+        let c: Vec<NodeId> = (0..20).collect();
+        let mut counts = [0usize; 20];
+        for round in 0..4000u64 {
+            counts[candidate_order(round, &c)[0] as usize] += 1;
+        }
+        let expect = 4000 / 20;
+        for (j, &n) in counts.iter().enumerate() {
+            assert!(
+                n > expect / 2 && n < expect * 2,
+                "node {j} selected {n} times (expect ~{expect})"
+            );
+        }
+    }
+
+    #[test]
+    fn aggregators_prefix_of_order() {
+        let c: Vec<NodeId> = (0..30).collect();
+        let order = candidate_order(7, &c);
+        assert_eq!(expected_aggregators(7, &c, 3), order[..3].to_vec());
+    }
+}

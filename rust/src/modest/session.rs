@@ -1,0 +1,860 @@
+//! The MoDeST session: Alg. 1–4 driven over the discrete-event simulator.
+//!
+//! One `ModestSession` owns the node table, the virtual network (latency +
+//! traffic ledger), the learning [`Task`], a churn script, and the event
+//! queue. `run()` executes the session to its time/round budget and returns
+//! [`SessionMetrics`].
+//!
+//! Faithfulness notes:
+//! * Sampling (Alg. 1) pings the first `need` candidates in parallel, then
+//!   walks the tail one-by-one, each wait bounded by `Δt`; exhausted
+//!   candidate lists retry after `Δt` with a freshly recomputed order
+//!   ("network may be asynchronous, retry").
+//! * Views travel only on `train`/`aggregate` messages (§3.6).
+//! * The multi-aggregator fast path falls out of `k_train` dedup: the first
+//!   aggregator's `train` starts local training, later copies are ignored.
+//! * FedAvg emulation (§4.3) is available via [`ModestConfig::fedavg_mode`]:
+//!   aggregator fixed to one node, no sampling pings for it.
+
+use std::sync::Arc;
+
+
+use crate::learning::{ComputeModel, Model, Task};
+use crate::metrics::{JoinTrace, SessionMetrics, TrafficSummary};
+use crate::net::{LatencyMatrix, MsgKind, SizeModel, TrafficLedger};
+use crate::sim::{ChurnKind, ChurnSchedule, EventQueue, SimRng, SimTime};
+use crate::{NodeId, Round};
+
+use super::node::{ModelRef, ModestNode, Msg, NodeAction, Purpose, SampleOp};
+use super::registry::MembershipEvent;
+use super::sampler::candidate_order;
+
+/// MoDeST parameters (paper Table 2) plus session plumbing.
+#[derive(Debug, Clone)]
+pub struct ModestConfig {
+    /// Sample size `s` (trainers per round).
+    pub s: usize,
+    /// Aggregators per round `a` (choose z+1 for z expected failures).
+    pub a: usize,
+    /// Success fraction `sf` of models required to aggregate.
+    pub sf: f64,
+    /// Ping timeout `Δt`.
+    pub dt: SimTime,
+    /// Activity window `Δk` in rounds.
+    pub dk: Round,
+    /// Stop after this much virtual time.
+    pub max_time: SimTime,
+    /// Stop once this round has been dispatched (0 = unlimited).
+    pub max_rounds: Round,
+    /// Evaluate the latest global model this often.
+    pub eval_interval: SimTime,
+    /// Stop early when the metric crosses this target (accuracy >=, mse <=).
+    pub target_metric: Option<f64>,
+    /// RNG seed for everything in the session.
+    pub seed: u64,
+    /// Uplink/downlink bandwidth in bits/s applied to transfers.
+    pub bandwidth_bps: f64,
+    /// FedAvg emulation (§4.3): fix this node as the only aggregator, skip
+    /// sampling pings toward it, give it infinite bandwidth.
+    pub fedavg_server: Option<NodeId>,
+}
+
+impl Default for ModestConfig {
+    fn default() -> Self {
+        ModestConfig {
+            s: 10,
+            a: 3,
+            sf: 0.9,
+            dt: SimTime::from_secs_f64(2.0),
+            dk: 20,
+            max_time: SimTime::from_secs_f64(1800.0),
+            max_rounds: 0,
+            eval_interval: SimTime::from_secs_f64(20.0),
+            target_metric: None,
+            seed: 42,
+            bandwidth_bps: 50e6,
+            fedavg_server: None,
+        }
+    }
+}
+
+/// Internal DES events.
+enum Event {
+    Deliver { to: NodeId, msg: Msg },
+    SampleTimer { node: NodeId, op: u64 },
+    TrainDone { node: NodeId, seq: u64 },
+    Churn(usize),
+    Probe,
+}
+
+/// Liveness status of a simulated node process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Status {
+    Alive,
+    /// Crashed or left: drops all messages and timers.
+    Dead,
+    /// Scripted to join later; does not exist yet.
+    NotJoined,
+}
+
+pub struct ModestSession {
+    cfg: ModestConfig,
+    queue: EventQueue<Event>,
+    nodes: Vec<ModestNode>,
+    status: Vec<Status>,
+    task: Box<dyn Task>,
+    compute: ComputeModel,
+    latency: LatencyMatrix,
+    sizes: SizeModel,
+    traffic: TrafficLedger,
+    churn: ChurnSchedule,
+    rng: SimRng,
+    /// Latest aggregated model dispatched by any aggregator.
+    latest_global: Model,
+    latest_round: Round,
+    metrics: SessionMetrics,
+    /// Ids of the initial population (observers for join traces).
+    initial_nodes: usize,
+    join_watch: Vec<(NodeId, f64)>,
+    done: bool,
+}
+
+impl ModestSession {
+    /// Build a session over `n_initial` pre-registered nodes (everyone knows
+    /// everyone, activity 0) plus whatever the churn script adds later.
+    pub fn new(
+        cfg: ModestConfig,
+        n_initial: usize,
+        task: Box<dyn Task>,
+        compute: ComputeModel,
+        latency: LatencyMatrix,
+        churn: ChurnSchedule,
+    ) -> ModestSession {
+        let mut rng = SimRng::new(cfg.seed ^ 0x6d6f6465_73740001);
+        let max_node = churn
+            .events()
+            .iter()
+            .map(|e| e.node as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(n_initial);
+        let mut nodes: Vec<ModestNode> = (0..max_node as NodeId).map(ModestNode::new).collect();
+        let mut status = vec![Status::NotJoined; max_node];
+
+        // Initial population: registered with counter 1, activity 0.
+        for node in nodes.iter_mut().take(n_initial) {
+            node.counter = 1;
+        }
+        for i in 0..n_initial {
+            status[i] = Status::Alive;
+            for j in 0..n_initial {
+                nodes[i]
+                    .view
+                    .registry
+                    .update(j as NodeId, 1, MembershipEvent::Joined);
+                nodes[i].view.activity.update(j as NodeId, 0);
+            }
+        }
+
+        let latest_global = task.init_model();
+        let mut compute = compute;
+        compute.ensure_nodes(max_node, &mut rng);
+
+        ModestSession {
+            cfg,
+            queue: EventQueue::new(),
+            nodes,
+            status,
+            task,
+            compute,
+            latency,
+            sizes: SizeModel::default(),
+            traffic: TrafficLedger::new(max_node),
+            churn,
+            rng,
+            latest_global,
+            latest_round: 0,
+            metrics: SessionMetrics::default(),
+            initial_nodes: n_initial,
+            join_watch: Vec::new(),
+            done: false,
+        }
+    }
+
+    pub fn metrics(&self) -> &SessionMetrics {
+        &self.metrics
+    }
+
+    pub fn traffic(&self) -> &TrafficLedger {
+        &self.traffic
+    }
+
+    pub fn latest_global(&self) -> (&Model, Round) {
+        (&self.latest_global, self.latest_round)
+    }
+
+    // ---------------------------------------------------------------- wiring
+
+    fn is_alive(&self, n: NodeId) -> bool {
+        self.status[n as usize] == Status::Alive
+    }
+
+    /// Account + schedule a message. Self-sends are loopback: no traffic,
+    /// no latency.
+    fn send(&mut self, from: NodeId, to: NodeId, msg: Msg) {
+        if from == to {
+            self.queue.schedule_in(SimTime::ZERO, Event::Deliver { to, msg });
+            return;
+        }
+        let (parts, bytes): (Vec<(MsgKind, u64)>, u64) = match &msg {
+            Msg::Ping { .. } | Msg::Pong { .. } => {
+                let b = self.sizes.ping_bytes();
+                (vec![(MsgKind::Control, b)], b)
+            }
+            Msg::Joined { .. } | Msg::Left { .. } => {
+                let b = self.sizes.membership_bytes();
+                (vec![(MsgKind::Membership, b)], b)
+            }
+            Msg::Train { view, .. } | Msg::Aggregate { view, .. } => {
+                let model_b = self.task.model_bytes();
+                let view_b = view.wire_bytes(&self.sizes);
+                let total = self.sizes.model_transfer_bytes(model_b, 0) + view_b;
+                (
+                    vec![
+                        (MsgKind::ModelPayload, model_b),
+                        (MsgKind::ViewPayload, total - model_b),
+                    ],
+                    total,
+                )
+            }
+        };
+        self.traffic.record_parts(from, to, &parts);
+        // FedAvg server gets unlimited bandwidth (paper §4.3).
+        let unlimited = self.cfg.fedavg_server == Some(from) || self.cfg.fedavg_server == Some(to);
+        let bw = if unlimited { f64::INFINITY } else { self.cfg.bandwidth_bps };
+        let transfer = SimTime::from_secs_f64((bytes as f64 * 8.0 / bw).min(3600.0));
+        let delay = self.latency.one_way(from, to) + transfer;
+        self.queue.schedule_in(delay, Event::Deliver { to, msg });
+    }
+
+    fn local_seed(&self, node: NodeId, round: Round) -> u64 {
+        self.cfg
+            .seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add((node as u64) << 32)
+            .wrapping_add(round)
+    }
+
+    // ------------------------------------------------------------- sampling
+
+    /// Start `Sample(round, need)` at `node` with the given continuation.
+    fn start_sample(&mut self, node: NodeId, round: Round, need: usize, purpose: Purpose, payload: ModelRef) {
+        // FedAvg emulation: the sample is fixed — aggregator = the server;
+        // participants chosen uniformly by the server without pings.
+        if let Some(server) = self.cfg.fedavg_server {
+            let targets: Vec<NodeId> = match purpose {
+                Purpose::Aggregators => vec![server],
+                Purpose::Participants => {
+                    let alive: Vec<NodeId> = (0..self.nodes.len() as NodeId)
+                        .filter(|&j| self.is_alive(j) && Some(j) != self.cfg.fedavg_server)
+                        .collect();
+                    let k = need.min(alive.len());
+                    let mut rng = SimRng::new(self.local_seed(node, round) ^ 0xfeda);
+                    rng.sample_indices(alive.len(), k)
+                        .into_iter()
+                        .map(|i| alive[i])
+                        .collect()
+                }
+            };
+            self.dispatch_payload(node, round, purpose, payload, &targets, SimTime::ZERO, 0);
+            return;
+        }
+
+        let op_id = {
+            let n = &mut self.nodes[node as usize];
+            n.next_op += 1;
+            let candidates = n.view.candidates(round, self.cfg.dk);
+            let order = candidate_order(round, &candidates);
+            let op = SampleOp {
+                id: n.next_op,
+                round,
+                need,
+                purpose,
+                payload,
+                order,
+                next_tail: 0,
+                done: false,
+                started: self.queue.now(),
+                retries: 0,
+            };
+            n.ops.push(op);
+            n.next_op
+        };
+        self.pump_sample(node, op_id, true);
+    }
+
+    /// Advance a sampling op: initial parallel pings or the sequential tail.
+    fn pump_sample(&mut self, node: NodeId, op_id: u64, initial: bool) {
+        // Completion may already be possible from earlier pongs this round.
+        if self.try_complete(node, op_id) {
+            return;
+        }
+        let mut pings: Vec<NodeId> = Vec::new();
+        let round;
+        {
+            let n = &mut self.nodes[node as usize];
+            let Some(pos) = n.ops.iter().position(|o| o.id == op_id && !o.done) else {
+                return;
+            };
+            round = n.ops[pos].round;
+            let (need, next_tail, order_len) = {
+                let op = &n.ops[pos];
+                (op.need, op.next_tail, op.order.len())
+            };
+            if initial {
+                // Alg. 1: ping the first `need` in parallel.
+                let op = &mut n.ops[pos];
+                let first = need.min(order_len);
+                pings.extend_from_slice(&op.order[..first]);
+                op.next_tail = first;
+            } else if next_tail < order_len {
+                // Sequential tail: one more candidate.
+                let op = &mut n.ops[pos];
+                pings.push(op.order[next_tail]);
+                op.next_tail += 1;
+            } else {
+                // Exhausted: retry with a recomputed order (the view may
+                // have changed; the network may have been asynchronous).
+                let candidates = n.view.candidates(round, self.cfg.dk);
+                let op = &mut n.ops[pos];
+                op.retries += 1;
+                op.order = candidate_order(round, &candidates);
+                let first = need.min(op.order.len());
+                pings.extend_from_slice(&op.order[..first]);
+                op.next_tail = first;
+            }
+        }
+        for j in pings {
+            self.send(node, j, Msg::Ping { round, from: node });
+        }
+        self.queue
+            .schedule_in(self.cfg.dt, Event::SampleTimer { node, op: op_id });
+    }
+
+    /// If the op has enough pongs, dispatch its continuation. Returns true
+    /// if completed.
+    fn try_complete(&mut self, node: NodeId, op_id: u64) -> bool {
+        let (round, purpose, payload, targets, started, retries) = {
+            let n = &mut self.nodes[node as usize];
+            let Some(idx) = n.ops.iter().position(|o| o.id == op_id && !o.done) else {
+                return true; // already done/garbage-collected
+            };
+            let enough = {
+                let op = &n.ops[idx];
+                n.pongs.get(&op.round).map_or(0, |l| l.len()) >= op.need
+            };
+            if !enough {
+                return false;
+            }
+            let live = n.live_for(&n.ops[idx]);
+            let op = &mut n.ops[idx];
+            op.done = true;
+            (op.round, op.purpose, op.payload.clone(), live, op.started, op.retries)
+        };
+        self.metrics
+            .record_sample(self.queue.now(), started, round, retries);
+        self.dispatch_payload(node, round, purpose, payload, &targets, started, retries);
+        self.nodes[node as usize].gc();
+        true
+    }
+
+    /// Send the continuation messages of a completed sample.
+    fn dispatch_payload(
+        &mut self,
+        node: NodeId,
+        round: Round,
+        purpose: Purpose,
+        payload: ModelRef,
+        targets: &[NodeId],
+        _started: SimTime,
+        _retries: u32,
+    ) {
+        match purpose {
+            Purpose::Aggregators => {
+                // Trainer pushes its updated model to A^{round}.
+                let view = self.nodes[node as usize].view.clone();
+                for &j in targets {
+                    self.send(
+                        node,
+                        j,
+                        Msg::Aggregate { round, model: payload.clone(), view: view.clone() },
+                    );
+                }
+            }
+            Purpose::Participants => {
+                // Aggregator averages Θ and pushes to S^{round}.
+                let avg = {
+                    let n = &self.nodes[node as usize];
+                    let models: Vec<&Model> = n.theta.iter().map(|m| m.as_ref()).collect();
+                    if models.is_empty() {
+                        return;
+                    }
+                    Arc::new(self.task.aggregate(&models).expect("aggregate"))
+                };
+                self.nodes[node as usize].theta.clear();
+                // Track the freshest global model for evaluation.
+                if round > self.latest_round {
+                    self.latest_round = round;
+                    self.latest_global = (*avg).clone();
+                    self.metrics.record_round_start(round, self.queue.now());
+                }
+                let view = self.nodes[node as usize].view.clone();
+                for &j in targets {
+                    self.send(node, j, Msg::Train { round, model: avg.clone(), view: view.clone() });
+                }
+                let _ = payload; // participants' payload slot unused (avg built here)
+            }
+        }
+    }
+
+    // ------------------------------------------------------------- handlers
+
+    fn handle_deliver(&mut self, to: NodeId, msg: Msg) {
+        if !self.is_alive(to) {
+            return; // dropped at a dead/not-yet-joined node
+        }
+        match msg {
+            Msg::Ping { round, from } => {
+                let act = self.nodes[to as usize].on_ping(round, from);
+                if let NodeAction::SendPong { to: peer, round } = act {
+                    self.send(to, peer, Msg::Pong { round, from: to });
+                }
+            }
+            Msg::Pong { round, from } => {
+                let completable = self.nodes[to as usize].on_pong(round, from);
+                for op in completable {
+                    self.try_complete(to, op);
+                }
+            }
+            Msg::Joined { node, counter } => {
+                self.nodes[to as usize].on_membership(node, counter, true);
+            }
+            Msg::Left { node, counter } => {
+                self.nodes[to as usize].on_membership(node, counter, false);
+            }
+            Msg::Aggregate { round, model, view } => {
+                self.nodes[to as usize].last_active = self.queue.now();
+                let act = self.nodes[to as usize].on_aggregate(
+                    round,
+                    model,
+                    &view,
+                    self.cfg.s,
+                    self.cfg.sf,
+                );
+                if let NodeAction::BeginParticipantSample { round } = act {
+                    // Virtual cost of the averaging itself.
+                    let k = self.nodes[to as usize].theta.len();
+                    let _cost = self
+                        .compute
+                        .aggregate_time(to, k, self.task.model_bytes());
+                    // Aggregator samples the round's participants (Alg. 4 l.19).
+                    let dummy = Arc::new(Vec::new());
+                    self.start_sample(to, round, self.cfg.s, Purpose::Participants, dummy);
+                }
+            }
+            Msg::Train { round, model, view } => {
+                self.nodes[to as usize].last_active = self.queue.now();
+                let act = self.nodes[to as usize].on_train(round, model, &view);
+                if let NodeAction::BeginTraining { round, seq } = act {
+                    if self.cfg.max_rounds > 0 && round > self.cfg.max_rounds {
+                        self.done = true;
+                        return;
+                    }
+                    let batches = self.task.batches_per_epoch(to);
+                    let dur = self.compute.train_time(to, batches);
+                    self.queue.schedule_in(dur, Event::TrainDone { node: to, seq });
+                }
+            }
+        }
+    }
+
+    fn handle_train_done(&mut self, node: NodeId, seq: u64) {
+        if !self.is_alive(node) {
+            return;
+        }
+        let Some((round, input)) = self.nodes[node as usize].training_valid(seq) else {
+            return; // canceled by a newer round
+        };
+        let seed = self.local_seed(node, round);
+        let (updated, _loss, _batches) = self
+            .task
+            .local_update(&input, node, seed)
+            .expect("local_update");
+        self.nodes[node as usize].training = None;
+        // Push to the aggregators of round+1 (Alg. 4 lines 33-37).
+        self.start_sample(
+            node,
+            round + 1,
+            self.cfg.a,
+            Purpose::Aggregators,
+            Arc::new(updated),
+        );
+    }
+
+    fn handle_churn(&mut self, idx: usize) {
+        let ev = self.churn.events()[idx];
+        match ev.kind {
+            ChurnKind::Join | ChurnKind::Recover => {
+                let i = ev.node as usize;
+                self.status[i] = Status::Alive;
+                let node = &mut self.nodes[i];
+                node.counter += 1;
+                let c = node.counter;
+                node.view
+                    .registry
+                    .update(ev.node, c, MembershipEvent::Joined);
+                node.view.activity.update(ev.node, 0);
+                // Advertise to s random alive peers (bootstrap set P).
+                let peers: Vec<NodeId> = (0..self.nodes.len() as NodeId)
+                    .filter(|&j| j != ev.node && self.is_alive(j))
+                    .collect();
+                let k = self.cfg.s.min(peers.len());
+                let picks = self.rng.sample_indices(peers.len(), k);
+                for p in picks {
+                    self.send(ev.node, peers[p], Msg::Joined { node: ev.node, counter: c });
+                }
+                self.join_watch.push((ev.node, self.queue.now().as_secs_f64()));
+                self.metrics.joins.push(JoinTrace {
+                    joiner: ev.node,
+                    joined_at_s: self.queue.now().as_secs_f64(),
+                    missing: Vec::new(),
+                });
+            }
+            ChurnKind::Leave => {
+                let i = ev.node as usize;
+                if self.status[i] != Status::Alive {
+                    return;
+                }
+                let node = &mut self.nodes[i];
+                node.counter += 1;
+                let c = node.counter;
+                node.view.registry.update(ev.node, c, MembershipEvent::Left);
+                let peers: Vec<NodeId> = (0..self.nodes.len() as NodeId)
+                    .filter(|&j| j != ev.node && self.is_alive(j))
+                    .collect();
+                let k = self.cfg.s.min(peers.len());
+                let picks = self.rng.sample_indices(peers.len(), k);
+                for p in picks {
+                    self.send(ev.node, peers[p], Msg::Left { node: ev.node, counter: c });
+                }
+                self.status[i] = Status::Dead;
+            }
+            ChurnKind::Crash => {
+                self.status[ev.node as usize] = Status::Dead;
+            }
+        }
+    }
+
+    /// §3.5 auto-rejoin: a reliable node that has not been activated for
+    /// more than `Δk * Δt̄` (average round time) re-advertises itself, so a
+    /// falsely-suspected node re-enters the candidate set.
+    fn auto_rejoin(&mut self) {
+        if self.cfg.fedavg_server.is_some() {
+            return; // FL emulation has no membership protocol
+        }
+        let round_time = self.metrics.mean_round_time_s().unwrap_or(10.0).max(1.0);
+        let horizon = SimTime::from_secs_f64(self.cfg.dk as f64 * round_time);
+        let now = self.queue.now();
+        let mut rejoiners = Vec::new();
+        for i in 0..self.nodes.len() {
+            if self.status[i] != Status::Alive {
+                continue;
+            }
+            let idle = now.saturating_sub(self.nodes[i].last_active);
+            if idle > horizon {
+                rejoiners.push(i as NodeId);
+            }
+        }
+        for node in rejoiners {
+            let (c, peers) = {
+                let n = &mut self.nodes[node as usize];
+                n.counter += 1;
+                let c = n.counter;
+                n.view.registry.update(node, c, MembershipEvent::Joined);
+                n.last_active = now; // throttle: try again after another horizon
+                let peers: Vec<NodeId> = (0..self.nodes.len() as NodeId)
+                    .filter(|&j| j != node && self.is_alive(j))
+                    .collect();
+                (c, peers)
+            };
+            let k = self.cfg.s.min(peers.len());
+            for p in self.rng.sample_indices(peers.len(), k) {
+                self.send(node, peers[p], Msg::Joined { node, counter: c });
+            }
+        }
+    }
+
+    fn handle_probe(&mut self) {
+        self.auto_rejoin();
+        // Join-propagation traces (Fig. 5): count initial-population nodes
+        // that still don't know each watched joiner.
+        let now_s = self.queue.now().as_secs_f64();
+        for w in 0..self.join_watch.len() {
+            let (joiner, _) = self.join_watch[w];
+            let missing = (0..self.initial_nodes)
+                .filter(|&i| {
+                    self.status[i] == Status::Alive
+                        && !self.nodes[i].view.registry.knows(joiner)
+                })
+                .count();
+            if let Some(trace) = self.metrics.joins.iter_mut().find(|t| t.joiner == joiner) {
+                trace.missing.push((now_s, missing));
+            }
+        }
+        // Convergence curve on the freshest global model.
+        let eval = self
+            .task
+            .evaluate(&self.latest_global)
+            .expect("evaluate");
+        self.metrics.record_eval(
+            self.queue.now(),
+            self.latest_round,
+            eval.metric,
+            eval.loss,
+            0.0,
+        );
+        if let Some(target) = self.cfg.target_metric {
+            let hit = if self.task.metric_is_accuracy() {
+                eval.metric >= target
+            } else {
+                eval.metric <= target
+            };
+            if hit {
+                self.done = true;
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------ run
+
+    /// Bootstrap round 1 (Alg. 4 lines 6-8): every node in S^1 starts
+    /// training the initial model.
+    fn bootstrap(&mut self) {
+        let init = Arc::new(self.task.init_model());
+        // All initial nodes share the same view, so S^1 is consistent.
+        let candidates: Vec<NodeId> = (0..self.initial_nodes as NodeId).collect();
+        let order = candidate_order(1, &candidates);
+        let view = self.nodes[0].view.clone();
+        for &i in order.iter().take(self.cfg.s.min(order.len())) {
+            self.queue.schedule_in(
+                SimTime::ZERO,
+                Event::Deliver {
+                    to: i,
+                    msg: Msg::Train { round: 1, model: init.clone(), view: view.clone() },
+                },
+            );
+        }
+        self.metrics.record_round_start(1, SimTime::ZERO);
+    }
+
+    /// Run to completion; returns the collected metrics.
+    pub fn run(mut self) -> (SessionMetrics, TrafficLedger) {
+        // Schedule churn + probes.
+        for (i, ev) in self.churn.events().iter().enumerate() {
+            self.queue.schedule_at(ev.at, Event::Churn(i));
+        }
+        let mut t = self.cfg.eval_interval;
+        while t <= self.cfg.max_time {
+            self.queue.schedule_at(t, Event::Probe);
+            t = t + self.cfg.eval_interval;
+        }
+        self.bootstrap();
+        // Baseline evaluation of the initial model at t=0.
+        self.handle_probe();
+
+        while let Some((now, ev)) = self.queue.pop() {
+            if now > self.cfg.max_time || self.done {
+                break;
+            }
+            match ev {
+                Event::Deliver { to, msg } => self.handle_deliver(to, msg),
+                Event::SampleTimer { node, op } => {
+                    if self.is_alive(node) {
+                        self.pump_sample(node, op, false);
+                    }
+                }
+                Event::TrainDone { node, seq } => self.handle_train_done(node, seq),
+                Event::Churn(i) => self.handle_churn(i),
+                Event::Probe => self.handle_probe(),
+            }
+        }
+
+        // Always record a terminal evaluation point so short sessions still
+        // produce a curve.
+        self.handle_probe();
+        self.metrics.final_round = self.latest_round;
+        self.metrics.duration_s = self.queue.now().as_secs_f64();
+        self.metrics.events = self.queue.events_processed();
+        self.metrics.traffic = TrafficSummary::from_ledger(&self.traffic, self.nodes.len());
+        (self.metrics, self.traffic)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::learning::MockTask;
+    use crate::net::LatencyParams;
+
+    fn quick_session(n: usize, cfg: ModestConfig) -> ModestSession {
+        let mut rng = SimRng::new(cfg.seed);
+        let task = MockTask::new(n, 16, 0.5, cfg.seed);
+        let latency =
+            LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+        let compute = ComputeModel::uniform(n, 0.05);
+        ModestSession::new(cfg, n, Box::new(task), compute, latency, ChurnSchedule::empty())
+    }
+
+    #[test]
+    fn session_makes_rounds_and_converges() {
+        let cfg = ModestConfig {
+            s: 4,
+            a: 2,
+            sf: 1.0,
+            max_time: SimTime::from_secs_f64(600.0),
+            max_rounds: 60,
+            eval_interval: SimTime::from_secs_f64(5.0),
+            ..Default::default()
+        };
+        let (m, traffic) = quick_session(16, cfg).run();
+        assert!(m.final_round >= 20, "only reached round {}", m.final_round);
+        let best = m.best_metric(true).unwrap();
+        assert!(best > 0.8, "metric {best}");
+        assert!(traffic.is_conserved());
+        assert!(traffic.total() > 0);
+    }
+
+    #[test]
+    fn rounds_advance_monotonically() {
+        let cfg = ModestConfig {
+            s: 3,
+            a: 1,
+            sf: 1.0,
+            max_time: SimTime::from_secs_f64(300.0),
+            max_rounds: 30,
+            ..Default::default()
+        };
+        let (m, _) = quick_session(10, cfg).run();
+        let rounds: Vec<Round> = m.round_starts.iter().map(|&(r, _)| r).collect();
+        let mut sorted = rounds.clone();
+        sorted.sort_unstable();
+        assert_eq!(rounds, sorted);
+        assert!(rounds.len() >= 10);
+    }
+
+    #[test]
+    fn sample_durations_bounded_when_all_alive() {
+        let cfg = ModestConfig {
+            s: 4,
+            a: 2,
+            sf: 1.0,
+            max_time: SimTime::from_secs_f64(200.0),
+            max_rounds: 20,
+            ..Default::default()
+        };
+        let (m, _) = quick_session(12, cfg).run();
+        assert!(!m.samples.is_empty());
+        // With everyone alive, sampling = one parallel ping wave: its
+        // duration is bounded by one RTT, far below the 2s timeout.
+        for s in &m.samples {
+            assert!(s.duration_s < 2.0, "sample took {}s", s.duration_s);
+            assert_eq!(s.retries, 0);
+        }
+    }
+
+    #[test]
+    fn fedavg_mode_concentrates_traffic_on_server() {
+        let cfg = ModestConfig {
+            s: 4,
+            a: 1,
+            sf: 1.0,
+            fedavg_server: Some(0),
+            max_time: SimTime::from_secs_f64(300.0),
+            max_rounds: 25,
+            ..Default::default()
+        };
+        let (m, traffic) = quick_session(12, cfg).run();
+        assert!(m.final_round >= 10);
+        let server = traffic.node_usage(0);
+        let max_other = (1..12).map(|i| traffic.node_usage(i)).max().unwrap();
+        assert!(server > 2 * max_other, "server {server} vs {max_other}");
+    }
+
+    #[test]
+    fn crash_resilient_progress() {
+        // Crash 4 of 12 nodes mid-run; rounds must continue.
+        let churn = ChurnSchedule::mass_crash(
+            12,
+            8,
+            2,
+            SimTime::from_secs_f64(30.0),
+            SimTime::from_secs_f64(10.0),
+        );
+        let cfg = ModestConfig {
+            s: 4,
+            a: 3,
+            sf: 0.5,
+            max_time: SimTime::from_secs_f64(600.0),
+            max_rounds: 0,
+            ..Default::default()
+        };
+        let mut rng = SimRng::new(7);
+        let task = MockTask::new(12, 16, 0.5, 7);
+        let latency =
+            LatencyMatrix::synthetic(&LatencyParams::default(), 12, &mut rng.fork("lat"));
+        let compute = ComputeModel::uniform(12, 0.05);
+        let session =
+            ModestSession::new(cfg, 12, Box::new(task), compute, latency, churn);
+        let (m, _) = session.run();
+        // Progress after the crash window (crashes end at t=60).
+        let late_rounds = m
+            .round_starts
+            .iter()
+            .filter(|&&(_, t)| t > 120.0)
+            .count();
+        assert!(late_rounds > 5, "no progress after crashes: {late_rounds}");
+    }
+
+    #[test]
+    fn join_via_churn_eventually_known() {
+        let churn = ChurnSchedule::staggered_joins(
+            8,
+            2,
+            SimTime::from_secs_f64(20.0),
+            SimTime::from_secs_f64(20.0),
+        );
+        let cfg = ModestConfig {
+            s: 3,
+            a: 2,
+            sf: 1.0,
+            max_time: SimTime::from_secs_f64(400.0),
+            eval_interval: SimTime::from_secs_f64(5.0),
+            ..Default::default()
+        };
+        let mut rng = SimRng::new(9);
+        let task = MockTask::new(10, 16, 0.5, 9);
+        let latency =
+            LatencyMatrix::synthetic(&LatencyParams::default(), 10, &mut rng.fork("lat"));
+        let compute = ComputeModel::uniform(10, 0.05);
+        let session = ModestSession::new(cfg, 8, Box::new(task), compute, latency, churn);
+        let (m, _) = session.run();
+        assert_eq!(m.joins.len(), 2);
+        for t in &m.joins {
+            assert!(
+                t.full_propagation_s().is_some(),
+                "join of {} never fully propagated",
+                t.joiner
+            );
+        }
+    }
+}

@@ -1,0 +1,81 @@
+//! The network *view*: registry + activity, piggybacked on model transfers.
+
+use crate::net::SizeModel;
+use crate::{NodeId, Round};
+
+use super::activity::ActivityClock;
+use super::registry::Registry;
+
+/// `V_i = (C_i, E_i, N_i)` — what Alg. 4 piggybacks on train/aggregate.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct View {
+    pub registry: Registry,
+    pub activity: ActivityClock,
+}
+
+impl View {
+    /// `MergeView(V_j)`.
+    pub fn merge(&mut self, other: &View) {
+        self.registry.merge(&other.registry);
+        self.activity.merge(&other.activity);
+    }
+
+    /// `Candidates(k)`: registered AND active within `Δk` rounds, sorted by
+    /// id (deterministic input to the sampler's hash ordering).
+    pub fn candidates(&self, k: Round, dk: Round) -> Vec<NodeId> {
+        self.registry
+            .registered()
+            .filter(|&j| self.activity.active_within(j, k, dk))
+            .collect()
+    }
+
+    /// Serialized size of this view in the wire-size model.
+    pub fn wire_bytes(&self, sizes: &SizeModel) -> u64 {
+        sizes.registry_entry * self.registry.len() as u64
+            + sizes.activity_entry * self.activity.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::modest::registry::MembershipEvent::*;
+
+    fn view_with(nodes: &[(NodeId, u64, bool, Round)]) -> View {
+        let mut v = View::default();
+        for &(n, c, joined, act) in nodes {
+            v.registry.update(n, c, if joined { Joined } else { Left });
+            v.activity.update(n, act);
+        }
+        v
+    }
+
+    #[test]
+    fn candidates_require_registered_and_active() {
+        let v = view_with(&[
+            (1, 1, true, 95),  // in
+            (2, 1, true, 50),  // too old
+            (3, 2, false, 99), // left
+            (4, 1, true, 100), // in
+        ]);
+        assert_eq!(v.candidates(100, 20), vec![1, 4]);
+    }
+
+    #[test]
+    fn merge_combines_both_parts() {
+        let mut a = view_with(&[(1, 1, true, 5)]);
+        let b = view_with(&[(1, 2, false, 9), (2, 1, true, 3)]);
+        a.merge(&b);
+        assert!(!a.registry.is_registered(1));
+        assert_eq!(a.activity.get(1), Some(9));
+        assert_eq!(a.candidates(4, 20), vec![2]);
+    }
+
+    #[test]
+    fn wire_bytes_scale_with_entries() {
+        let sizes = SizeModel::default();
+        let small = view_with(&[(1, 1, true, 0)]);
+        let big = view_with(&[(1, 1, true, 0), (2, 1, true, 0), (3, 1, true, 0)]);
+        assert!(big.wire_bytes(&sizes) == 3 * small.wire_bytes(&sizes));
+    }
+}

@@ -1,0 +1,211 @@
+//! Synthetic geo latency matrix (WonderNetwork-style substitute).
+//!
+//! Cities are placed uniformly on a sphere; one-way latency between cities
+//! is great-circle distance at fiber propagation speed (~2/3 c) with a route
+//! inflation factor, plus a per-pair jitter and a fixed last-mile cost.
+//! Nodes are assigned to cities round-robin exactly as the paper does.
+
+use crate::sim::{SimRng, SimTime};
+use crate::NodeId;
+
+/// Parameters of the synthetic geography.
+#[derive(Debug, Clone)]
+pub struct LatencyParams {
+    /// Number of distinct cities (the paper ends with 227 usable ones).
+    pub cities: usize,
+    /// Fixed per-hop cost added to every one-way latency (last mile), secs.
+    pub base_s: f64,
+    /// Route inflation over great-circle distance (cables aren't geodesics).
+    pub inflation: f64,
+    /// Relative jitter amplitude applied per city pair (0.1 = ±10%).
+    pub jitter: f64,
+}
+
+impl Default for LatencyParams {
+    fn default() -> Self {
+        LatencyParams {
+            cities: 227,
+            base_s: 0.004,
+            inflation: 1.6,
+            jitter: 0.15,
+        }
+    }
+}
+
+const EARTH_RADIUS_KM: f64 = 6371.0;
+/// Propagation speed in fiber, km/s (~0.66 c).
+const FIBER_KM_S: f64 = 199_000.0;
+
+/// Dense symmetric one-way latency matrix over cities + node->city map.
+#[derive(Debug, Clone)]
+pub struct LatencyMatrix {
+    cities: usize,
+    /// Row-major one-way latency in seconds between cities.
+    lat: Vec<f64>,
+    /// City index for each node (round-robin).
+    node_city: Vec<usize>,
+}
+
+impl LatencyMatrix {
+    /// Build the synthetic geography from a seeded RNG.
+    pub fn synthetic(params: &LatencyParams, nodes: usize, rng: &mut SimRng) -> Self {
+        let c = params.cities.max(1);
+        // Uniform points on the sphere.
+        let pts: Vec<[f64; 3]> = (0..c)
+            .map(|_| {
+                let z = 2.0 * rng.next_f64() - 1.0;
+                let phi = 2.0 * std::f64::consts::PI * rng.next_f64();
+                let r = (1.0 - z * z).sqrt();
+                [r * phi.cos(), r * phi.sin(), z]
+            })
+            .collect();
+        let mut lat = vec![0.0; c * c];
+        for i in 0..c {
+            for j in (i + 1)..c {
+                let dot: f64 = (0..3).map(|k| pts[i][k] * pts[j][k]).sum();
+                let ang = dot.clamp(-1.0, 1.0).acos();
+                let dist_km = ang * EARTH_RADIUS_KM;
+                let prop = dist_km * params.inflation / FIBER_KM_S;
+                let jit = 1.0 + params.jitter * (2.0 * rng.next_f64() - 1.0);
+                let one_way = (params.base_s + prop) * jit;
+                lat[i * c + j] = one_way;
+                lat[j * c + i] = one_way;
+            }
+            // same-city latency: just the base cost
+            lat[i * c + i] = params.base_s;
+        }
+        let node_city = (0..nodes).map(|n| n % c).collect();
+        LatencyMatrix { cities: c, lat, node_city }
+    }
+
+    /// Uniform constant latency (useful in tests and microbenches).
+    pub fn uniform(nodes: usize, one_way: SimTime) -> Self {
+        let s = one_way.as_secs_f64();
+        LatencyMatrix {
+            cities: 1,
+            lat: vec![s],
+            node_city: vec![0; nodes],
+        }
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.node_city.len()
+    }
+
+    /// One-way latency between two nodes.
+    pub fn one_way(&self, a: NodeId, b: NodeId) -> SimTime {
+        let ca = self.node_city[a as usize];
+        let cb = self.node_city[b as usize];
+        SimTime::from_secs_f64(self.lat[ca * self.cities + cb])
+    }
+
+    /// Round-trip time between two nodes.
+    pub fn rtt(&self, a: NodeId, b: NodeId) -> SimTime {
+        SimTime(self.one_way(a, b).0 * 2)
+    }
+
+    /// Maximum pairwise one-way latency over the first `n` nodes.
+    pub fn max_one_way(&self, n: usize) -> SimTime {
+        let mut max = 0u64;
+        for a in 0..n.min(self.nodes()) {
+            for b in 0..n.min(self.nodes()) {
+                max = max.max(self.one_way(a as NodeId, b as NodeId).0);
+            }
+        }
+        SimTime(max)
+    }
+
+    /// Median one-way latency from `a` to all other nodes (the paper fixes
+    /// the FL server at the node with the lowest median latency).
+    pub fn median_from(&self, a: NodeId, n: usize) -> SimTime {
+        let mut v: Vec<u64> = (0..n)
+            .filter(|&b| b as NodeId != a)
+            .map(|b| self.one_way(a, b as NodeId).0)
+            .collect();
+        if v.is_empty() {
+            return SimTime::ZERO;
+        }
+        v.sort_unstable();
+        SimTime(v[v.len() / 2])
+    }
+
+    /// Node among the first `n` with the lowest median latency to the rest.
+    pub fn best_connected(&self, n: usize) -> NodeId {
+        (0..n as NodeId)
+            .min_by_key(|&a| self.median_from(a, n).0)
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matrix(nodes: usize) -> LatencyMatrix {
+        let mut rng = SimRng::new(42);
+        LatencyMatrix::synthetic(&LatencyParams::default(), nodes, &mut rng)
+    }
+
+    #[test]
+    fn symmetric_and_positive() {
+        let m = matrix(50);
+        for a in 0..50u32 {
+            for b in 0..50u32 {
+                assert_eq!(m.one_way(a, b), m.one_way(b, a));
+                assert!(m.one_way(a, b) > SimTime::ZERO);
+            }
+        }
+    }
+
+    #[test]
+    fn realistic_wan_range() {
+        // One-way latencies should fall in a plausible WAN envelope:
+        // base 4ms .. ~250ms (half the worst RTT the paper's Δt=2s bounds).
+        let m = matrix(200);
+        let max = m.max_one_way(200);
+        assert!(max.as_secs_f64() < 0.5, "max one-way {max}");
+        assert!(max.as_secs_f64() > 0.02, "geography too flat: {max}");
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = matrix(30);
+        let b = matrix(30);
+        for i in 0..30u32 {
+            assert_eq!(a.one_way(0, i), b.one_way(0, i));
+        }
+    }
+
+    #[test]
+    fn rtt_doubles_one_way() {
+        let m = matrix(10);
+        assert_eq!(m.rtt(1, 2).0, m.one_way(1, 2).0 * 2);
+    }
+
+    #[test]
+    fn round_robin_city_assignment() {
+        let mut rng = SimRng::new(1);
+        let m = LatencyMatrix::synthetic(
+            &LatencyParams { cities: 10, ..Default::default() },
+            25,
+            &mut rng,
+        );
+        // nodes 0 and 10 share a city -> identical latency vectors
+        assert_eq!(m.one_way(0, 5), m.one_way(10, 5));
+    }
+
+    #[test]
+    fn best_connected_is_stable_and_valid() {
+        let m = matrix(40);
+        let b = m.best_connected(40);
+        assert!(b < 40);
+        assert_eq!(b, m.best_connected(40));
+    }
+
+    #[test]
+    fn uniform_matrix() {
+        let m = LatencyMatrix::uniform(5, SimTime::from_millis(10));
+        assert_eq!(m.one_way(0, 4), SimTime::from_millis(10));
+        assert_eq!(m.rtt(1, 2), SimTime::from_millis(20));
+    }
+}

@@ -1,0 +1,112 @@
+//! Wire-size model for every protocol message.
+//!
+//! Table 4 of the paper reports *bytes*, so the simulator needs a faithful
+//! size model rather than real serialization. Sizes follow the paper's
+//! implementation: IPv8-style authenticated UDP headers, TFTP-style bulk
+//! transfer for models, and views piggybacked on model transfers
+//! (registry entry = id + counter + event flag; activity entry = id +
+//! round estimate).
+
+/// Classification of traffic for the overhead accounting in Table 4
+/// (bottom): everything that is not raw model payload is "MoDeST overhead".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MsgKind {
+    /// Model payload bytes inside `train`/`aggregate` transfers.
+    ModelPayload,
+    /// Piggybacked view bytes inside `train`/`aggregate` transfers.
+    ViewPayload,
+    /// Ping/pong liveness probes (Alg. 1).
+    Control,
+    /// Membership advertisements: joined/left (Alg. 2).
+    Membership,
+}
+
+/// Byte-size model for protocol messages.
+#[derive(Debug, Clone)]
+pub struct SizeModel {
+    /// Per-packet header: IPv8 auth (sig + pubkey) + UDP/IP.
+    pub header: u64,
+    /// Bytes per registry entry in a serialized view: node id (8) +
+    /// counter (8) + event flag (1).
+    pub registry_entry: u64,
+    /// Bytes per activity entry: node id (8) + round estimate (8).
+    pub activity_entry: u64,
+    /// Ping/pong payload (round + sender + nonce).
+    pub ping: u64,
+}
+
+impl Default for SizeModel {
+    fn default() -> Self {
+        SizeModel {
+            header: 108, // 28 UDP/IP + 64 sig + 16 misc (IPv8-style)
+            registry_entry: 17,
+            activity_entry: 16,
+            ping: 24,
+        }
+    }
+}
+
+impl SizeModel {
+    /// Size of a serialized view over `n` known nodes (registry + activity).
+    pub fn view_bytes(&self, n: usize) -> u64 {
+        (self.registry_entry + self.activity_entry) * n as u64
+    }
+
+    /// Total size of a model transfer (train/aggregate) carrying a view.
+    /// TFTP-style chunking adds one header per 8 KiB block.
+    pub fn model_transfer_bytes(&self, model_bytes: u64, view_nodes: usize) -> u64 {
+        let payload = model_bytes + self.view_bytes(view_nodes);
+        let blocks = payload.div_ceil(8192).max(1);
+        payload + blocks * self.header
+    }
+
+    /// Size of a ping or pong packet.
+    pub fn ping_bytes(&self) -> u64 {
+        self.header + self.ping
+    }
+
+    /// Size of a joined/left advertisement.
+    pub fn membership_bytes(&self) -> u64 {
+        self.header + self.registry_entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn view_scales_with_population() {
+        let m = SizeModel::default();
+        assert_eq!(m.view_bytes(0), 0);
+        assert_eq!(m.view_bytes(100), 3300);
+        assert!(m.view_bytes(500) > m.view_bytes(100));
+    }
+
+    #[test]
+    fn model_transfer_dominated_by_model() {
+        let m = SizeModel::default();
+        // FEMNIST-sized model (6.7 MB), 355-node view: overhead must be
+        // well under 1% of the transfer, matching Table 4's 0.4%.
+        let model = 6_700_000u64;
+        let total = m.model_transfer_bytes(model, 355);
+        let overhead = total - model;
+        assert!((overhead as f64) / (total as f64) < 0.02, "{overhead}");
+    }
+
+    #[test]
+    fn chunking_headers_counted() {
+        let m = SizeModel::default();
+        let small = m.model_transfer_bytes(100, 0);
+        assert_eq!(small, 100 + m.header);
+        let big = m.model_transfer_bytes(16384, 0);
+        assert_eq!(big, 16384 + 2 * m.header);
+    }
+
+    #[test]
+    fn control_sizes_are_small() {
+        let m = SizeModel::default();
+        assert!(m.ping_bytes() < 200);
+        assert!(m.membership_bytes() < 200);
+    }
+}

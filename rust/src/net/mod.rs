@@ -1,0 +1,17 @@
+//! WAN network substrate: latency matrix, transfer-time model, and per-node
+//! traffic accounting.
+//!
+//! The paper delays application-layer traffic with RTTs measured between 227
+//! WonderNetwork cities and assigns nodes to cities round-robin (§4.2). We
+//! reproduce the structure with a seeded synthetic geography (cities on a
+//! sphere, great-circle propagation delay at fiber speed + jitter) so the
+//! matrix is reproducible from the session seed — see DESIGN.md §3 for the
+//! substitution argument.
+
+pub mod latency;
+pub mod message;
+pub mod traffic;
+
+pub use latency::{LatencyMatrix, LatencyParams};
+pub use message::{MsgKind, SizeModel};
+pub use traffic::TrafficLedger;

@@ -1,0 +1,190 @@
+//! Per-node traffic accounting — the substrate behind Tables 1 and 4.
+//!
+//! Every byte a session sends is recorded twice (outgoing at the sender,
+//! incoming at the receiver — the paper's "network usage" is in+out), and
+//! classified by [`MsgKind`] so the MoDeST-overhead row of Table 4 can be
+//! computed as `total - model payload`.
+
+use super::message::MsgKind;
+use crate::NodeId;
+
+/// Mutable traffic ledger for one session.
+#[derive(Debug, Clone)]
+pub struct TrafficLedger {
+    sent: Vec<u64>,
+    received: Vec<u64>,
+    by_kind: [u64; 4],
+    messages: u64,
+}
+
+fn kind_idx(kind: MsgKind) -> usize {
+    match kind {
+        MsgKind::ModelPayload => 0,
+        MsgKind::ViewPayload => 1,
+        MsgKind::Control => 2,
+        MsgKind::Membership => 3,
+    }
+}
+
+impl TrafficLedger {
+    pub fn new(nodes: usize) -> Self {
+        TrafficLedger {
+            sent: vec![0; nodes],
+            received: vec![0; nodes],
+            by_kind: [0; 4],
+            messages: 0,
+        }
+    }
+
+    /// Grow the ledger when nodes join beyond the initial population.
+    pub fn ensure_nodes(&mut self, nodes: usize) {
+        if nodes > self.sent.len() {
+            self.sent.resize(nodes, 0);
+            self.received.resize(nodes, 0);
+        }
+    }
+
+    /// Record one message of `bytes` split across `parts` kind classes.
+    pub fn record_parts(&mut self, from: NodeId, to: NodeId, parts: &[(MsgKind, u64)]) {
+        let total: u64 = parts.iter().map(|(_, b)| b).sum();
+        self.ensure_nodes((from.max(to) + 1) as usize);
+        self.sent[from as usize] += total;
+        self.received[to as usize] += total;
+        for &(kind, bytes) in parts {
+            self.by_kind[kind_idx(kind)] += bytes;
+        }
+        self.messages += 1;
+    }
+
+    /// Record a single-kind message.
+    pub fn record(&mut self, from: NodeId, to: NodeId, kind: MsgKind, bytes: u64) {
+        self.record_parts(from, to, &[(kind, bytes)]);
+    }
+
+    pub fn messages(&self) -> u64 {
+        self.messages
+    }
+
+    /// In+out bytes for one node (the paper's per-node network usage).
+    pub fn node_usage(&self, node: NodeId) -> u64 {
+        self.sent[node as usize] + self.received[node as usize]
+    }
+
+    /// Total bytes transferred (each message counted once).
+    pub fn total(&self) -> u64 {
+        self.sent.iter().sum()
+    }
+
+    /// Bytes attributed to one traffic class.
+    pub fn kind_total(&self, kind: MsgKind) -> u64 {
+        self.by_kind[kind_idx(kind)]
+    }
+
+    /// Everything beyond raw model payload (Table 4 bottom: "overhead").
+    pub fn overhead(&self) -> u64 {
+        self.total() - self.kind_total(MsgKind::ModelPayload)
+    }
+
+    /// Overhead as a fraction of total traffic.
+    pub fn overhead_fraction(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            0.0
+        } else {
+            self.overhead() as f64 / t as f64
+        }
+    }
+
+    /// (min, max) in+out usage across nodes that touched any traffic,
+    /// restricted to the first `n` nodes. Nodes with zero traffic are
+    /// excluded from the min, matching how the paper reports "Min." over
+    /// participating nodes.
+    pub fn min_max_usage(&self, n: usize) -> (u64, u64) {
+        let mut min = u64::MAX;
+        let mut max = 0;
+        for i in 0..n.min(self.sent.len()) {
+            let u = self.sent[i] + self.received[i];
+            if u > 0 {
+                min = min.min(u);
+                max = max.max(u);
+            }
+        }
+        if min == u64::MAX {
+            min = 0;
+        }
+        (min, max)
+    }
+
+    /// Conservation check: every sent byte was received exactly once.
+    pub fn is_conserved(&self) -> bool {
+        self.sent.iter().sum::<u64>() == self.received.iter().sum::<u64>()
+    }
+}
+
+/// Pretty-print bytes the way the paper's tables do (GB/MB/KB).
+pub fn fmt_bytes(b: u64) -> String {
+    let f = b as f64;
+    if f >= 1e9 {
+        format!("{:.1} GB", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.1} MB", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.1} KB", f / 1e3)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_both_sides() {
+        let mut t = TrafficLedger::new(3);
+        t.record(0, 1, MsgKind::ModelPayload, 1000);
+        assert_eq!(t.node_usage(0), 1000);
+        assert_eq!(t.node_usage(1), 1000);
+        assert_eq!(t.node_usage(2), 0);
+        assert_eq!(t.total(), 1000);
+        assert!(t.is_conserved());
+    }
+
+    #[test]
+    fn overhead_excludes_model_payload() {
+        let mut t = TrafficLedger::new(2);
+        t.record_parts(
+            0,
+            1,
+            &[(MsgKind::ModelPayload, 900), (MsgKind::ViewPayload, 100)],
+        );
+        t.record(1, 0, MsgKind::Control, 50);
+        assert_eq!(t.total(), 1050);
+        assert_eq!(t.overhead(), 150);
+        assert!((t.overhead_fraction() - 150.0 / 1050.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn min_max_skips_idle_nodes() {
+        let mut t = TrafficLedger::new(4);
+        t.record(0, 1, MsgKind::ModelPayload, 100);
+        t.record(0, 2, MsgKind::ModelPayload, 300);
+        let (min, max) = t.min_max_usage(4);
+        assert_eq!(min, 100); // node 1
+        assert_eq!(max, 400); // node 0 sent 400
+    }
+
+    #[test]
+    fn grows_for_joining_nodes() {
+        let mut t = TrafficLedger::new(2);
+        t.record(0, 9, MsgKind::Membership, 10);
+        assert_eq!(t.node_usage(9), 10);
+    }
+
+    #[test]
+    fn fmt_matches_paper_style() {
+        assert_eq!(fmt_bytes(1_004_100_000_000 / 1000), "1.0 GB");
+        assert_eq!(fmt_bytes(7_600_000), "7.6 MB");
+        assert_eq!(fmt_bytes(512), "512 B");
+    }
+}

@@ -1,0 +1,266 @@
+//! The PJRT execution engine: compile once, execute many.
+//!
+//! One [`XlaRuntime`] owns the PJRT CPU client; each [`VariantRuntime`]
+//! holds the three compiled executables (train / eval / avg) plus the
+//! initial flat model. All simulated nodes share the executables — a node's
+//! state is only its `Vec<f32>` parameter vector, so hundreds of simulated
+//! nodes cost hundreds of models, not hundreds of compilations.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+use xla::{
+    HloModuleProto, Literal, PjRtBuffer, PjRtClient, PjRtDevice, PjRtLoadedExecutable,
+    XlaComputation,
+};
+
+use super::manifest::{IoSpec, Manifest, VariantManifest};
+
+/// A training/eval batch in the variant's input dtype.
+#[derive(Debug, Clone)]
+pub enum Batch {
+    /// f32 features + i32 labels (classifiers).
+    F32I32 { x: Vec<f32>, y: Vec<i32> },
+    /// i32 indices/tokens + f32 targets (matrix factorization).
+    I32F32 { x: Vec<i32>, y: Vec<f32> },
+    /// i32 tokens + i32 targets (language model).
+    I32I32 { x: Vec<i32>, y: Vec<i32> },
+}
+
+impl Batch {
+    /// Upload x/y as device buffers with the manifest shapes.
+    ///
+    /// Executions go through `execute_b` with rust-owned input buffers: the
+    /// crate's literal-taking `execute` leaks every input buffer it creates
+    /// (they are `release()`d in the C shim and never deleted — ~14 MB per
+    /// FEMNIST step; §Perf L3 iteration 1).
+    fn buffers(
+        &self,
+        client: &PjRtClient,
+        dev: &PjRtDevice,
+        xs: &IoSpec,
+        ys: &IoSpec,
+    ) -> Result<(PjRtBuffer, PjRtBuffer)> {
+        let e = |e: xla::Error| anyhow::anyhow!("upload batch: {e:?}");
+        let (xb, yb) = match self {
+            Batch::F32I32 { x, y } => (
+                client.buffer_from_host_buffer::<f32>(x, &xs.shape, Some(dev)).map_err(e)?,
+                client.buffer_from_host_buffer::<i32>(y, &ys.shape, Some(dev)).map_err(e)?,
+            ),
+            Batch::I32F32 { x, y } => (
+                client.buffer_from_host_buffer::<i32>(x, &xs.shape, Some(dev)).map_err(e)?,
+                client.buffer_from_host_buffer::<f32>(y, &ys.shape, Some(dev)).map_err(e)?,
+            ),
+            Batch::I32I32 { x, y } => (
+                client.buffer_from_host_buffer::<i32>(x, &xs.shape, Some(dev)).map_err(e)?,
+                client.buffer_from_host_buffer::<i32>(y, &ys.shape, Some(dev)).map_err(e)?,
+            ),
+        };
+        Ok((xb, yb))
+    }
+
+    pub fn x_len(&self) -> usize {
+        match self {
+            Batch::F32I32 { x, .. } => x.len(),
+            Batch::I32F32 { x, .. } => x.len(),
+            Batch::I32I32 { x, .. } => x.len(),
+        }
+    }
+}
+
+/// Output of one train step.
+#[derive(Debug)]
+pub struct TrainOut {
+    pub params: Vec<f32>,
+    pub velocity: Vec<f32>,
+    pub loss: f32,
+}
+
+/// Output of one eval call: metric sum (correct count or squared error) and
+/// loss sum over the batch.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOut {
+    pub metric_sum: f32,
+    pub loss_sum: f32,
+}
+
+/// Compiled executables + metadata for one model variant.
+pub struct VariantRuntime {
+    pub manifest: VariantManifest,
+    client: PjRtClient,
+    train_exe: PjRtLoadedExecutable,
+    eval_exe: PjRtLoadedExecutable,
+    avg_exe: PjRtLoadedExecutable,
+    init: Vec<f32>,
+}
+
+impl VariantRuntime {
+    /// The AOT'd initial flat model (shared starting point, Alg. 4 line 8).
+    pub fn init_params(&self) -> Vec<f32> {
+        self.init.clone()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.manifest.param_count
+    }
+
+    fn device(&self) -> Result<PjRtDevice> {
+        self.client
+            .addressable_devices()
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("no addressable PJRT device"))
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize], dev: &PjRtDevice) -> Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, Some(dev))
+            .map_err(|e| anyhow::anyhow!("upload f32: {e:?}"))
+    }
+
+    /// Execute with rust-owned input buffers (leak-free path, see
+    /// [`Batch::buffers`]) and download the tuple result.
+    fn run(&self, exe: &PjRtLoadedExecutable, bufs: &[&PjRtBuffer]) -> Result<Vec<Literal>> {
+        let out = exe
+            .execute_b(bufs)
+            .map_err(|e| anyhow::anyhow!("execute: {e:?}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("download: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow::anyhow!("untuple: {e:?}"))
+    }
+
+    /// One SGD/momentum step on one batch:
+    /// `(params', vel', loss) = train(params, vel, x, y, lr, mu)`.
+    pub fn train_step(
+        &self,
+        params: &[f32],
+        velocity: &[f32],
+        batch: &Batch,
+        lr: f32,
+        mu: f32,
+    ) -> Result<TrainOut> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.param_count, "params len");
+        anyhow::ensure!(velocity.len() == m.param_count, "velocity len");
+        let dev = self.device()?;
+        let pb = self.upload_f32(params, &[m.param_count], &dev)?;
+        let vb = self.upload_f32(velocity, &[m.param_count], &dev)?;
+        let (xb, yb) = batch.buffers(&self.client, &dev, &m.train_x, &m.train_y)?;
+        let lrb = self.upload_f32(&[lr], &[], &dev)?;
+        let mub = self.upload_f32(&[mu], &[], &dev)?;
+        let mut outs = self.run(&self.train_exe, &[&pb, &vb, &xb, &yb, &lrb, &mub])?;
+        anyhow::ensure!(outs.len() == 3, "train tuple arity {}", outs.len());
+        let loss = outs.pop().unwrap().to_vec::<f32>()?[0];
+        let velocity = outs.pop().unwrap().to_vec::<f32>()?;
+        let params = outs.pop().unwrap().to_vec::<f32>()?;
+        Ok(TrainOut { params, velocity, loss })
+    }
+
+    /// Evaluate on one test batch: returns (metric_sum, loss_sum).
+    pub fn eval_batch(&self, params: &[f32], batch: &Batch) -> Result<EvalOut> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.param_count, "params len");
+        let dev = self.device()?;
+        let pb = self.upload_f32(params, &[m.param_count], &dev)?;
+        let (xb, yb) = batch.buffers(&self.client, &dev, &m.eval_x, &m.eval_y)?;
+        let outs = self.run(&self.eval_exe, &[&pb, &xb, &yb])?;
+        anyhow::ensure!(outs.len() == 2, "eval tuple arity {}", outs.len());
+        Ok(EvalOut {
+            metric_sum: outs[0].to_vec::<f32>()?[0],
+            loss_sum: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Aggregate up to `smax` models through the Pallas masked-mean kernel.
+    ///
+    /// This is the XLA-backed aggregation path; the coordinator also has a
+    /// native path (`learning::aggregate_native`) — the two are benched
+    /// against each other (`rust/benches/hotpaths.rs`).
+    pub fn aggregate(&self, models: &[&[f32]]) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        anyhow::ensure!(!models.is_empty(), "aggregate of zero models");
+        anyhow::ensure!(
+            models.len() <= m.smax,
+            "{} models > smax {}",
+            models.len(),
+            m.smax
+        );
+        let p = m.param_count;
+        let mut stack = vec![0f32; m.smax * p];
+        let mut mask = vec![0f32; m.smax];
+        for (i, model) in models.iter().enumerate() {
+            anyhow::ensure!(model.len() == p, "model {i} len");
+            stack[i * p..(i + 1) * p].copy_from_slice(model);
+            mask[i] = 1.0;
+        }
+        let dev = self.device()?;
+        let sb = self.upload_f32(&stack, &[m.smax, p], &dev)?;
+        let mb = self.upload_f32(&mask, &[m.smax], &dev)?;
+        let cb = self.upload_f32(&[models.len() as f32], &[], &dev)?;
+        let outs = self.run(&self.avg_exe, &[&sb, &mb, &cb])?;
+        anyhow::ensure!(outs.len() == 1, "avg tuple arity {}", outs.len());
+        Ok(outs[0].to_vec::<f32>()?)
+    }
+}
+
+/// Owns the PJRT client and the artifact directory.
+pub struct XlaRuntime {
+    client: PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Load `artifacts/` (the default) or any directory with a manifest.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = PjRtClient::cpu().map_err(|e| anyhow::anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(XlaRuntime { client, dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    fn compile(&self, file: &str) -> Result<PjRtLoadedExecutable> {
+        let path = self.dir.join(file);
+        let proto = HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {path:?}: {e:?}"))
+    }
+
+    /// Compile the three executables for one variant.
+    pub fn variant(&self, name: &str) -> Result<VariantRuntime> {
+        let vm = self.manifest.variant(name)?.clone();
+        let train_exe = self.compile(&vm.files.train)?;
+        let eval_exe = self.compile(&vm.files.eval)?;
+        let avg_exe = self.compile(&vm.files.avg)?;
+        let init_bytes = std::fs::read(self.dir.join(&vm.files.init))
+            .context("reading init params")?;
+        anyhow::ensure!(
+            init_bytes.len() == vm.param_count * 4,
+            "init size {} != 4*{}",
+            init_bytes.len(),
+            vm.param_count
+        );
+        let init: Vec<f32> = init_bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        Ok(VariantRuntime {
+            manifest: vm,
+            client: self.client.clone(),
+            train_exe,
+            eval_exe,
+            avg_exe,
+            init,
+        })
+    }
+}

@@ -1,0 +1,190 @@
+//! `artifacts/manifest.json` schema — written by `python/compile/aot.py`,
+//! parsed with the in-tree JSON module (the build is offline: no serde).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Json;
+
+/// Shape + dtype of one executable input.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl IoSpec {
+    fn from_json(v: &Json) -> Result<IoSpec> {
+        let shape = v
+            .field("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        Ok(IoSpec { shape, dtype: v.field("dtype")?.as_str()?.to_string() })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dims_i64(&self) -> Vec<i64> {
+        self.shape.iter().map(|&d| d as i64).collect()
+    }
+}
+
+/// Artifact file names per executable kind.
+#[derive(Debug, Clone)]
+pub struct VariantFiles {
+    pub train: String,
+    pub eval: String,
+    pub avg: String,
+    pub init: String,
+}
+
+/// Everything the rust loader needs to know about one model variant.
+#[derive(Debug, Clone)]
+pub struct VariantManifest {
+    pub name: String,
+    pub kind: String, // classifier | matfact | lm
+    pub param_count: usize,
+    pub model_bytes: u64,
+    pub smax: usize,
+    pub lr: f32,
+    pub momentum: f32,
+    /// Paper Table 3 network size for this task.
+    pub nodes: u32,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub train_x: IoSpec,
+    pub train_y: IoSpec,
+    pub eval_x: IoSpec,
+    pub eval_y: IoSpec,
+    pub files: VariantFiles,
+    pub init_sha256: String,
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl VariantManifest {
+    fn from_json(v: &Json) -> Result<VariantManifest> {
+        let files = v.field("files")?;
+        let meta = match v.get("meta") {
+            Some(Json::Obj(pairs)) => {
+                pairs.iter().map(|(k, x)| (k.clone(), x.clone())).collect()
+            }
+            _ => BTreeMap::new(),
+        };
+        Ok(VariantManifest {
+            name: v.field("name")?.as_str()?.to_string(),
+            kind: v.field("kind")?.as_str()?.to_string(),
+            param_count: v.field("param_count")?.as_usize()?,
+            model_bytes: v.field("model_bytes")?.as_u64()?,
+            smax: v.field("smax")?.as_usize()?,
+            lr: v.field("lr")?.as_f64()? as f32,
+            momentum: v.field("momentum")?.as_f64()? as f32,
+            nodes: v.field("nodes")?.as_u64()? as u32,
+            train_batch: v.field("train_batch")?.as_usize()?,
+            eval_batch: v.field("eval_batch")?.as_usize()?,
+            train_x: IoSpec::from_json(v.field("train_x")?)?,
+            train_y: IoSpec::from_json(v.field("train_y")?)?,
+            eval_x: IoSpec::from_json(v.field("eval_x")?)?,
+            eval_y: IoSpec::from_json(v.field("eval_y")?)?,
+            files: VariantFiles {
+                train: files.field("train")?.as_str()?.to_string(),
+                eval: files.field("eval")?.as_str()?.to_string(),
+                avg: files.field("avg")?.as_str()?.to_string(),
+                init: files.field("init")?.as_str()?.to_string(),
+            },
+            init_sha256: v.field("init_sha256")?.as_str()?.to_string(),
+            meta,
+        })
+    }
+
+    /// Integer metadata field (classes, vocab, users, ...).
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta.get(key).and_then(|v| v.as_usize().ok())
+    }
+}
+
+/// Top-level manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub seed: u64,
+    pub variants: BTreeMap<String, VariantManifest>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for (name, body) in v.field("variants")?.as_obj()? {
+            variants.insert(
+                name.clone(),
+                VariantManifest::from_json(body)
+                    .with_context(|| format!("variant {name:?}"))?,
+            );
+        }
+        Ok(Manifest { seed: v.field("seed")?.as_u64()?, variants })
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantManifest> {
+        self.variants.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown variant {name:?}; available: {:?}",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINIMAL: &str = r#"{
+        "seed": 42,
+        "variants": {
+            "toy": {
+                "name": "toy", "kind": "classifier",
+                "param_count": 10, "model_bytes": 40, "smax": 4,
+                "lr": 0.01, "momentum": 0.0, "nodes": 8,
+                "train_batch": 2, "eval_batch": 4,
+                "train_x": {"shape": [2, 3], "dtype": "f32"},
+                "train_y": {"shape": [2], "dtype": "i32"},
+                "eval_x": {"shape": [4, 3], "dtype": "f32"},
+                "eval_y": {"shape": [4], "dtype": "i32"},
+                "files": {"train": "t", "eval": "e", "avg": "a", "init": "i"},
+                "init_sha256": "00",
+                "meta": {"classes": 5}
+            }
+        }
+    }"#;
+
+    #[test]
+    fn parses_a_minimal_manifest() {
+        let m = Manifest::parse(MINIMAL).unwrap();
+        let v = m.variant("toy").unwrap();
+        assert_eq!(v.param_count, 10);
+        assert_eq!(v.train_x.elements(), 6);
+        assert_eq!(v.train_x.dims_i64(), vec![2, 3]);
+        assert_eq!(v.meta_usize("classes"), Some(5));
+        assert!((v.lr - 0.01).abs() < 1e-9);
+        assert!(m.variant("nope").is_err());
+    }
+
+    #[test]
+    fn missing_field_is_error_with_context() {
+        let bad = MINIMAL.replace("\"param_count\": 10,", "");
+        let err = Manifest::parse(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("param_count"), "{err:#}");
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT'd HLO-text artifacts and execute them from rust.
+//!
+//! This is the only bridge between Layer 3 and the JAX/Pallas layers. At
+//! build time `python/compile/aot.py` lowers each model variant to HLO
+//! *text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit-id protos, the
+//! text parser reassigns ids); here we parse, compile once per variant on
+//! the PJRT CPU client, and execute with flat `Vec<f32>` models. Python is
+//! never on the round path.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Batch, EvalOut, TrainOut, VariantRuntime, XlaRuntime};
+pub use manifest::{IoSpec, Manifest, VariantManifest};

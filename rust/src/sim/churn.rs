@@ -1,0 +1,170 @@
+//! Churn schedules: scripted joins, graceful leaves, and crashes.
+//!
+//! The paper's §4.6 experiment joins one node per minute for ten minutes;
+//! §4.7 crashes five nodes per minute until 80% are gone. Both are instances
+//! of a [`ChurnSchedule`] — a time-ordered list of scripted membership
+//! events the session injects into the simulation.
+
+use super::time::SimTime;
+use crate::NodeId;
+
+/// What happens to the node at the scheduled instant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    /// Node joins (Alg. 2 `request join`): advertises to `s` random peers.
+    Join,
+    /// Node gracefully leaves: advertises `left` before going silent.
+    Leave,
+    /// Node crashes: becomes silently unresponsive (no advertisement).
+    Crash,
+    /// Node recovers from a crash and re-joins.
+    Recover,
+}
+
+/// One scripted membership change.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ChurnEvent {
+    pub at: SimTime,
+    pub node: NodeId,
+    pub kind: ChurnKind,
+}
+
+/// A time-sorted script of churn events.
+#[derive(Debug, Clone, Default)]
+pub struct ChurnSchedule {
+    events: Vec<ChurnEvent>,
+}
+
+impl ChurnSchedule {
+    pub fn new(mut events: Vec<ChurnEvent>) -> Self {
+        events.sort_by_key(|e| e.at);
+        ChurnSchedule { events }
+    }
+
+    pub fn empty() -> Self {
+        ChurnSchedule::default()
+    }
+
+    pub fn events(&self) -> &[ChurnEvent] {
+        &self.events
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Paper §4.6: `joiners` nodes join one-by-one at `interval`, starting at
+    /// `start`. Node ids are `first..first+joiners`.
+    pub fn staggered_joins(first: NodeId, joiners: u32, start: SimTime, interval: SimTime) -> Self {
+        let events = (0..joiners)
+            .map(|i| ChurnEvent {
+                at: SimTime(start.0 + interval.0 * i as u64),
+                node: first + i,
+                kind: ChurnKind::Join,
+            })
+            .collect();
+        ChurnSchedule::new(events)
+    }
+
+    /// Paper §4.7: starting at `start`, crash `per_step` nodes every
+    /// `interval` until only `survivors` remain out of `total`. The crash
+    /// order is by descending node id, so the lowest ids survive (matching
+    /// the "20 reliable nodes" framing).
+    pub fn mass_crash(
+        total: u32,
+        survivors: u32,
+        per_step: u32,
+        start: SimTime,
+        interval: SimTime,
+    ) -> Self {
+        assert!(survivors <= total);
+        let mut events = Vec::new();
+        let mut next = total;
+        let mut step = 0u64;
+        while next > survivors {
+            for _ in 0..per_step {
+                if next == survivors {
+                    break;
+                }
+                next -= 1;
+                events.push(ChurnEvent {
+                    at: SimTime(start.0 + interval.0 * step),
+                    node: next,
+                    kind: ChurnKind::Crash,
+                });
+            }
+            step += 1;
+        }
+        ChurnSchedule::new(events)
+    }
+
+    /// Merge two schedules, keeping global time order.
+    pub fn merged(self, other: ChurnSchedule) -> ChurnSchedule {
+        let mut all = self.events;
+        all.extend(other.events);
+        ChurnSchedule::new(all)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn staggered_joins_match_paper_setup() {
+        // §4.6: 90 initial nodes, 10 joiners at 1-minute intervals.
+        let s = ChurnSchedule::staggered_joins(
+            90,
+            10,
+            SimTime::from_secs_f64(60.0),
+            SimTime::from_secs_f64(60.0),
+        );
+        assert_eq!(s.events().len(), 10);
+        assert_eq!(s.events()[0].node, 90);
+        assert_eq!(s.events()[0].at, SimTime::from_secs_f64(60.0));
+        assert_eq!(s.events()[9].node, 99);
+        assert_eq!(s.events()[9].at, SimTime::from_secs_f64(600.0));
+        assert!(s.events().iter().all(|e| e.kind == ChurnKind::Join));
+    }
+
+    #[test]
+    fn mass_crash_matches_paper_setup() {
+        // §4.7: 100 nodes, crash 5/min from minute 5 until 20 remain.
+        let s = ChurnSchedule::mass_crash(
+            100,
+            20,
+            5,
+            SimTime::from_secs_f64(300.0),
+            SimTime::from_secs_f64(60.0),
+        );
+        assert_eq!(s.events().len(), 80);
+        // 16 steps of 5 crashes.
+        assert_eq!(s.events()[0].at, SimTime::from_secs_f64(300.0));
+        assert_eq!(
+            s.events().last().unwrap().at,
+            SimTime::from_secs_f64(300.0 + 15.0 * 60.0)
+        );
+        // survivors 0..20 never crash
+        assert!(s.events().iter().all(|e| e.node >= 20));
+    }
+
+    #[test]
+    fn schedule_is_time_sorted() {
+        let s = ChurnSchedule::new(vec![
+            ChurnEvent { at: SimTime::from_millis(30), node: 1, kind: ChurnKind::Crash },
+            ChurnEvent { at: SimTime::from_millis(10), node: 2, kind: ChurnKind::Join },
+        ]);
+        assert!(s.events()[0].at < s.events()[1].at);
+    }
+
+    #[test]
+    fn merged_preserves_order() {
+        let a = ChurnSchedule::staggered_joins(0, 3, SimTime::ZERO, SimTime::from_millis(100));
+        let b = ChurnSchedule::mass_crash(10, 9, 1, SimTime::from_millis(50), SimTime::from_millis(100));
+        let m = a.merged(b);
+        let times: Vec<u64> = m.events().iter().map(|e| e.at.0).collect();
+        let mut sorted = times.clone();
+        sorted.sort_unstable();
+        assert_eq!(times, sorted);
+    }
+}

@@ -1,0 +1,16 @@
+//! Deterministic discrete-event simulation substrate.
+//!
+//! The paper evaluates MoDeST by *simulating the passing of time* on top of
+//! a customized asyncio event loop (§4.2); this module is the rust
+//! equivalent: a virtual clock, a monotone event queue with deterministic
+//! tie-breaking, a seeded RNG, and churn (join/crash) schedule generators.
+
+pub mod churn;
+pub mod engine;
+pub mod rng;
+pub mod time;
+
+pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
+pub use engine::{EventQueue, ScheduledEvent};
+pub use rng::SimRng;
+pub use time::SimTime;

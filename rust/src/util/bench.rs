@@ -1,0 +1,197 @@
+//! A small criterion-style benchmark harness (the image has no criterion).
+//!
+//! Usage inside a `harness = false` bench target:
+//! ```no_run
+//! use modest_dl::util::bench::Bencher;
+//! let mut b = Bencher::new("hotpaths");
+//! b.bench("aggregate/8x1M", || { /* work */ });
+//! b.finish();
+//! ```
+//!
+//! Each benchmark warms up, then runs timed batches until a time budget is
+//! hit, reporting mean / p50 / p95 per iteration and iterations/s in a
+//! table. `BENCH_FAST=1` shrinks budgets for CI smoke runs.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's aggregated result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iterations: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() > 0.0 {
+            1.0 / self.mean.as_secs_f64()
+        } else {
+            f64::INFINITY
+        }
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Collects and prints benchmark results for one bench binary.
+pub struct Bencher {
+    group: String,
+    warmup: Duration,
+    budget: Duration,
+    results: Vec<BenchResult>,
+}
+
+impl Bencher {
+    pub fn new(group: &str) -> Bencher {
+        let fast = std::env::var("BENCH_FAST").is_ok();
+        Bencher {
+            group: group.to_string(),
+            warmup: if fast { Duration::from_millis(20) } else { Duration::from_millis(300) },
+            budget: if fast { Duration::from_millis(100) } else { Duration::from_secs(2) },
+            results: Vec::new(),
+        }
+    }
+
+    /// Override budgets (e.g. long end-to-end benches).
+    pub fn with_budget(mut self, warmup: Duration, budget: Duration) -> Bencher {
+        self.warmup = warmup;
+        self.budget = budget;
+        self
+    }
+
+    /// Time `f`; `f` should do one unit of work per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if samples.len() >= 100_000 {
+                break;
+            }
+        }
+        samples.sort_unstable();
+        let n = samples.len().max(1) as u64;
+        let total: Duration = samples.iter().sum();
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: n,
+            mean: total / n as u32,
+            p50: samples.get(samples.len() / 2).copied().unwrap_or_default(),
+            p95: samples
+                .get(samples.len() * 95 / 100)
+                .copied()
+                .unwrap_or_default(),
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>10}  p50 {:>10}  p95 {:>10}  ({:.1}/s)",
+            format!("{}/{}", self.group, result.name),
+            result.iterations,
+            fmt_dur(result.mean),
+            fmt_dur(result.p50),
+            fmt_dur(result.p95),
+            result.per_sec()
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Run a one-shot measurement (for long end-to-end scenarios): time a
+    /// single invocation, printed in the same table format.
+    pub fn bench_once<F: FnOnce()>(&mut self, name: &str, f: F) -> &BenchResult {
+        let t0 = Instant::now();
+        f();
+        let d = t0.elapsed();
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: 1,
+            mean: d,
+            p50: d,
+            p95: d,
+        };
+        println!(
+            "{:<44} {:>10} iters  mean {:>10}  p50 {:>10}  p95 {:>10}",
+            format!("{}/{}", self.group, result.name),
+            1,
+            fmt_dur(d),
+            fmt_dur(d),
+            fmt_dur(d)
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print the summary footer.
+    pub fn finish(self) {
+        println!(
+            "{}: {} benchmarks complete",
+            self.group,
+            self.results.len()
+        );
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bencher::new("test");
+        let r = b
+            .bench("noop-ish", || {
+                black_box((0..100).sum::<u64>());
+            })
+            .clone();
+        assert!(r.iterations > 10);
+        assert!(r.p50 <= r.p95);
+        assert!(r.mean.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_once_records_single_run() {
+        let mut b = Bencher::new("test");
+        let r = b.bench_once("single", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(r.iterations, 1);
+        assert!(r.mean >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(15)).ends_with("µs"));
+        assert!(fmt_dur(Duration::from_millis(20)).ends_with("ms"));
+        assert!(fmt_dur(Duration::from_secs(3)).ends_with('s'));
+    }
+}

@@ -1,0 +1,170 @@
+//! Minimal declarative CLI parsing for the launcher.
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional subcommands. Unknown flags are hard errors (catches typos in
+//! experiment scripts early).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: subcommand path + flag map.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional words before any flag (e.g. `["exp", "fig3"]`).
+    pub positionals: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were consumed by a `get_*` call (for unknown-flag checks).
+    seen: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(name.to_string(), v);
+                } else {
+                    // boolean flag
+                    out.flags.insert(name.to_string(), "true".to_string());
+                }
+            } else if out.flags.is_empty() {
+                out.positionals.push(arg);
+            } else {
+                bail!("positional argument {arg:?} after flags");
+            }
+        }
+        Ok(out)
+    }
+
+    fn mark(&self, key: &str) {
+        self.seen.borrow_mut().push(key.to_string());
+    }
+
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get_opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.flags.get(key).cloned()
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        self.mark(key);
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|e| anyhow::anyhow!("--{key} {v:?}: {e}")),
+        }
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        Ok(self.get_u64(key, default as u64)? as usize)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        self.mark(key);
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// Comma-separated list flag.
+    pub fn get_list(&self, key: &str, default: &str) -> Vec<String> {
+        self.get_str(key, default)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    }
+
+    pub fn get_usize_list(&self, key: &str, default: &str) -> Result<Vec<usize>> {
+        self.get_list(key, default)
+            .iter()
+            .map(|s| s.parse::<usize>().map_err(|e| anyhow::anyhow!("--{key} item {s:?}: {e}")))
+            .collect()
+    }
+
+    /// Error on any flag never consumed by a getter (typo protection).
+    /// Call after all getters ran.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        for k in self.flags.keys() {
+            if !seen.iter().any(|s| s == k) {
+                bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommands_and_flags() {
+        let a = args("exp fig3 --scale 0.5 --datasets cifar10,femnist --mock");
+        assert_eq!(a.positionals, vec!["exp", "fig3"]);
+        assert_eq!(a.get_f64("scale", 1.0).unwrap(), 0.5);
+        assert_eq!(a.get_list("datasets", ""), vec!["cifar10", "femnist"]);
+        assert!(a.get_bool("mock"));
+        assert!(!a.get_bool("absent"));
+        a.reject_unknown().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = args("train --s=7 --sf=0.9");
+        assert_eq!(a.get_usize("s", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("sf", 1.0).unwrap(), 0.9);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = args("train");
+        assert_eq!(a.get_str("dataset", "cifar10"), "cifar10");
+        assert_eq!(a.get_u64("seed", 42).unwrap(), 42);
+        assert_eq!(a.get_opt("config"), None);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = args("train --styp 3");
+        let _ = a.get_usize("s", 0);
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = args("x --n abc");
+        assert!(a.get_u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn usize_list() {
+        let a = args("x --s 1,2,4,7");
+        assert_eq!(a.get_usize_list("s", "").unwrap(), vec![1, 2, 4, 7]);
+    }
+}

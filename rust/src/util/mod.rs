@@ -1,0 +1,17 @@
+//! In-tree substrates for an offline build.
+//!
+//! The build environment ships only the `xla` crate closure and `anyhow`,
+//! so the utilities a production coordinator would normally pull from
+//! crates.io are implemented here, each with its own test suite:
+//!
+//! * [`json`]  — a strict recursive-descent JSON parser + writer (used for
+//!   the artifact manifest and session config files).
+//! * [`cli`]   — declarative flag/subcommand parsing for the launcher.
+//! * [`bench`] — a criterion-style micro/macro benchmark harness with
+//!   warmup, adaptive iteration counts, and mean/p50/p95 reporting.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+pub use json::Json;

@@ -1,0 +1,129 @@
+//! Protocol-behaviour integration tests: the paper's qualitative claims,
+//! checked end-to-end on the mock task (fast, artifact-free).
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::sim::ChurnSchedule;
+
+fn spec(algo: Algo, s: usize, a: usize, sf: f64) -> SessionSpec {
+    SessionSpec {
+        dataset: "mock".into(),
+        algo,
+        nodes: 20,
+        s,
+        a,
+        sf,
+        max_time_s: 600.0,
+        max_rounds: 50,
+        eval_interval_s: 5.0,
+        ..Default::default()
+    }
+}
+
+fn run(spec: &SessionSpec) -> (modest_dl::metrics::SessionMetrics, modest_dl::net::TrafficLedger) {
+    match spec.algo {
+        Algo::Dsgd => spec.build_dsgd(None).unwrap().run(),
+        _ => spec.build_modest(None, ChurnSchedule::empty()).unwrap().run(),
+    }
+}
+
+#[test]
+fn modest_converges_like_fedavg_better_than_dsgd() {
+    // The headline Fig. 3 ordering on the mock task.
+    let (m_md, _) = run(&spec(Algo::Modest, 6, 3, 1.0));
+    let (m_fl, _) = run(&spec(Algo::Fedavg, 6, 1, 1.0));
+    let (m_dl, _) = run(&spec(Algo::Dsgd, 0, 0, 1.0));
+    let best = |m: &modest_dl::metrics::SessionMetrics| m.best_metric(true).unwrap_or(0.0);
+    assert!(
+        best(&m_md) > 0.85 * best(&m_fl),
+        "MoDeST {} far below FedAvg {}",
+        best(&m_md),
+        best(&m_fl)
+    );
+    assert!(
+        best(&m_md) > best(&m_dl),
+        "MoDeST {} !> D-SGD {}",
+        best(&m_md),
+        best(&m_dl)
+    );
+}
+
+#[test]
+fn more_aggregators_do_not_change_rounds_needed() {
+    // §4.5: rounds-to-accuracy is indifferent to `a` when sf = 1 (same
+    // aggregated model from every aggregator).
+    let (m_a1, _) = run(&spec(Algo::Modest, 6, 1, 1.0));
+    let (m_a4, _) = run(&spec(Algo::Modest, 6, 4, 1.0));
+    let target = 0.85;
+    let r1 = m_a1.time_to_target(target, true).map(|(_, r)| r);
+    let r4 = m_a4.time_to_target(target, true).map(|(_, r)| r);
+    if let (Some(r1), Some(r4)) = (r1, r4) {
+        let lo = r1.min(r4) as f64;
+        let hi = r1.max(r4) as f64;
+        assert!(hi / lo < 1.8, "rounds diverge too much: {r1} vs {r4}");
+    }
+}
+
+#[test]
+fn larger_sample_lowers_rounds_to_target() {
+    // Fig. 4 right panel: rounds-to-target decreases with s.
+    let (m_s2, _) = run(&spec(Algo::Modest, 2, 2, 1.0));
+    let (m_s10, _) = run(&spec(Algo::Modest, 10, 2, 1.0));
+    let target = 0.8;
+    let r2 = m_s2.time_to_target(target, true).map(|(_, r)| r).unwrap_or(u64::MAX);
+    let r10 = m_s10.time_to_target(target, true).map(|(_, r)| r).unwrap_or(u64::MAX);
+    assert!(r10 <= r2, "s=10 needed {r10} rounds, s=2 needed {r2}");
+}
+
+#[test]
+fn sf_below_one_tolerates_failures() {
+    // With sf < 1 and extra aggregators, a crash wave must not stall the
+    // session (paper §3.2 fault-tolerance design).
+    let churn = modest_dl::sim::ChurnSchedule::mass_crash(
+        20,
+        14,
+        2,
+        modest_dl::sim::SimTime::from_secs_f64(50.0),
+        modest_dl::sim::SimTime::from_secs_f64(25.0),
+    );
+    let mut sp = spec(Algo::Modest, 6, 3, 0.67);
+    sp.max_rounds = 0;
+    sp.max_time_s = 500.0;
+    let (m, _) = sp.build_modest(None, churn).unwrap().run();
+    let last_round_start = m.round_starts.last().map(|&(_, t)| t).unwrap_or(0.0);
+    assert!(
+        last_round_start > 200.0,
+        "stalled at t={last_round_start} (final round {})",
+        m.final_round
+    );
+}
+
+#[test]
+fn view_overhead_is_counted_but_small() {
+    let (m, _) = run(&spec(Algo::Modest, 6, 3, 1.0));
+    let t = &m.traffic;
+    assert!(t.overhead > 0, "views/pings must produce overhead");
+    // Mock model is tiny (32 f32), so overhead fraction is large here; the
+    // invariant is just that accounting splits the classes.
+    assert!(t.overhead < t.total);
+}
+
+#[test]
+fn round_times_are_plausible() {
+    let (m, _) = run(&spec(Algo::Modest, 6, 3, 1.0));
+    let mean = m.mean_round_time_s().expect("round times");
+    // A round = ping wave + model push + training (0.05s/batch x 5) +
+    // aggregation: it cannot be faster than training alone, nor slower
+    // than a few timeouts.
+    assert!(mean > 0.3, "mean round {mean}s too fast");
+    assert!(mean < 20.0, "mean round {mean}s too slow");
+}
+
+#[test]
+fn fedavg_single_aggregator_is_the_latency_hub() {
+    let (_, t) = run(&spec(Algo::Fedavg, 6, 1, 1.0));
+    // The best-connected node carries ~50% of total traffic (Table 4's
+    // "Max. vs Total" observation).
+    let (_, max) = t.min_max_usage(20);
+    let frac = max as f64 / t.total().max(1) as f64;
+    assert!(frac > 0.35, "server carries only {frac:.2} of traffic");
+}

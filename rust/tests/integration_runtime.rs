@@ -1,0 +1,189 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run (they are skipped with a clear
+//! message otherwise, so `cargo test` works on a fresh checkout too).
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::learning::{Task, TaskData, XlaTask};
+use modest_dl::runtime::{Batch, XlaRuntime};
+use modest_dl::sim::{ChurnSchedule, SimRng};
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::load("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping runtime integration test (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_all_five_variants() {
+    let Some(rt) = runtime() else { return };
+    let names: Vec<&String> = rt.manifest().variants.keys().collect();
+    for expect in ["cifar10", "celeba", "femnist", "movielens", "transformer"] {
+        assert!(names.iter().any(|n| n.as_str() == expect), "{names:?}");
+    }
+}
+
+#[test]
+fn train_step_executes_and_decreases_loss() {
+    let Some(rt) = runtime() else { return };
+    let v = rt.variant("celeba").expect("compile celeba");
+    let m = &v.manifest;
+    let mut rng = SimRng::new(7);
+    let b = m.train_batch;
+    let dim = m.train_x.shape[1];
+    let x: Vec<f32> = (0..b * dim).map(|_| rng.next_gaussian() as f32).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.gen_range(2) as i32).collect();
+    let batch = Batch::F32I32 { x, y };
+
+    let mut params = v.init_params();
+    let mut vel = vec![0f32; params.len()];
+    let mut first = None;
+    let mut last = 0f32;
+    for _ in 0..6 {
+        let out = v.train_step(&params, &vel, &batch, m.lr, m.momentum).unwrap();
+        params = out.params;
+        vel = out.velocity;
+        last = out.loss;
+        first.get_or_insert(out.loss);
+    }
+    let first = first.unwrap();
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert!(params.iter().all(|p| p.is_finite()));
+}
+
+#[test]
+fn eval_metric_sums_are_bounded() {
+    let Some(rt) = runtime() else { return };
+    let v = rt.variant("celeba").expect("compile");
+    let m = &v.manifest;
+    let mut rng = SimRng::new(8);
+    let b = m.eval_batch;
+    let dim = m.eval_x.shape[1];
+    let x: Vec<f32> = (0..b * dim).map(|_| rng.next_gaussian() as f32).collect();
+    let y: Vec<i32> = (0..b).map(|_| rng.gen_range(2) as i32).collect();
+    let out = v.eval_batch(&v.init_params(), &Batch::F32I32 { x, y }).unwrap();
+    assert!(out.metric_sum >= 0.0 && out.metric_sum <= b as f32);
+    assert!(out.loss_sum.is_finite());
+}
+
+#[test]
+fn xla_aggregate_matches_native_mean() {
+    let Some(rt) = runtime() else { return };
+    let v = rt.variant("celeba").expect("compile");
+    let mut rng = SimRng::new(9);
+    let p = v.param_count();
+    let models: Vec<Vec<f32>> = (0..3)
+        .map(|_| (0..p).map(|_| rng.next_gaussian() as f32).collect())
+        .collect();
+    let refs: Vec<&[f32]> = models.iter().map(|m| m.as_slice()).collect();
+    let got = v.aggregate(&refs).unwrap();
+    let model_refs: Vec<&Vec<f32>> = models.iter().collect();
+    let want = modest_dl::learning::aggregate_native(&model_refs);
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!((g - w).abs() < 1e-5, "idx {i}: {g} vs {w}");
+    }
+}
+
+#[test]
+fn init_params_match_manifest_hash_length() {
+    let Some(rt) = runtime() else { return };
+    for name in ["cifar10", "celeba"] {
+        let v = rt.variant(name).unwrap();
+        assert_eq!(v.init_params().len(), v.manifest.param_count);
+    }
+}
+
+#[test]
+fn xla_task_local_update_runs_one_epoch() {
+    let Some(rt) = runtime() else { return };
+    let spec = SessionSpec {
+        dataset: "celeba".into(),
+        nodes: 10,
+        ..Default::default()
+    };
+    let mut task = spec.build_task(Some(&rt)).unwrap();
+    let model = task.init_model();
+    let (updated, loss, batches) = task.local_update(&model, 3, 42).unwrap();
+    assert_eq!(updated.len(), model.len());
+    assert!(loss.is_finite());
+    // 60 samples per node, batch 20 -> 3 batches.
+    assert_eq!(batches, 3);
+    assert_ne!(updated, model);
+
+    // Deterministic per (node, seed).
+    let (again, _, _) = task.local_update(&model, 3, 42).unwrap();
+    assert_eq!(updated, again);
+    let (other, _, _) = task.local_update(&model, 3, 43).unwrap();
+    assert_ne!(updated, other);
+}
+
+#[test]
+fn xla_task_evaluate_improves_with_training() {
+    let Some(rt) = runtime() else { return };
+    let spec = SessionSpec { dataset: "celeba".into(), nodes: 10, ..Default::default() };
+    let mut task = spec.build_task(Some(&rt)).unwrap();
+    let mut model = task.init_model();
+    let before = task.evaluate(&model).unwrap();
+    for round in 0..6 {
+        // mini-FedAvg over 4 nodes
+        let mut locals = Vec::new();
+        for node in 0..4u32 {
+            locals.push(task.local_update(&model, node, round * 10 + node as u64).unwrap().0);
+        }
+        let refs: Vec<&Vec<f32>> = locals.iter().collect();
+        model = task.aggregate(&refs).unwrap();
+    }
+    let after = task.evaluate(&model).unwrap();
+    assert!(
+        after.metric > before.metric,
+        "accuracy {} -> {} did not improve",
+        before.metric,
+        after.metric
+    );
+    assert!(after.loss < before.loss);
+}
+
+#[test]
+fn full_modest_session_on_real_celeba_artifacts() {
+    let Some(rt) = runtime() else { return };
+    let spec = SessionSpec {
+        dataset: "celeba".into(),
+        algo: Algo::Modest,
+        nodes: 12,
+        s: 4,
+        a: 2,
+        sf: 1.0,
+        max_time_s: 400.0,
+        max_rounds: 12,
+        eval_interval_s: 10.0,
+        ..Default::default()
+    };
+    let session = spec.build_modest(Some(&rt), ChurnSchedule::empty()).unwrap();
+    let (m, traffic) = session.run();
+    assert!(m.final_round >= 8, "only reached round {}", m.final_round);
+    assert!(traffic.is_conserved());
+    let first = m.curve.first().unwrap().metric;
+    let best = m.best_metric(true).unwrap();
+    assert!(best > first, "no learning progress: {first} -> {best}");
+}
+
+#[test]
+fn xla_task_kind_mismatch_rejected() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = SimRng::new(1);
+    let data = modest_dl::data::TokensData::generate(
+        &modest_dl::data::tokens::TokensParams {
+            nodes: 2,
+            seqs_per_node: 2,
+            test_seqs: 2,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    assert!(XlaTask::new(&rt, "celeba", TaskData::Tokens(data)).is_err());
+}

@@ -1,0 +1,158 @@
+//! Integration tests over the simulation substrates (no artifacts needed):
+//! DES + network + traffic + churn wired together through full sessions on
+//! the mock task.
+
+use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::sim::{ChurnSchedule, SimTime};
+
+fn mock_spec(algo: Algo) -> SessionSpec {
+    SessionSpec {
+        dataset: "mock".into(),
+        algo,
+        nodes: 16,
+        s: 4,
+        a: 2,
+        sf: 1.0,
+        max_time_s: 400.0,
+        max_rounds: 40,
+        eval_interval_s: 5.0,
+        hetero_sigma: 0.35,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn modest_session_is_deterministic_given_seed() {
+    let run = || {
+        let spec = mock_spec(Algo::Modest);
+        let (m, t) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+        (
+            m.final_round,
+            m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect::<Vec<_>>(),
+            t.total(),
+        )
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a, b, "same seed must replay identically");
+}
+
+#[test]
+fn different_seeds_give_different_traffic_patterns() {
+    let mut spec = mock_spec(Algo::Modest);
+    let (_, t1) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    spec.seed = 1234;
+    let (_, t2) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    assert_ne!(t1.total(), t2.total());
+}
+
+#[test]
+fn traffic_conservation_across_all_algorithms() {
+    for algo in [Algo::Modest, Algo::Fedavg, Algo::Dsgd] {
+        let spec = mock_spec(algo);
+        let (_, t) = match algo {
+            Algo::Dsgd => spec.build_dsgd(None).unwrap().run(),
+            _ => spec.build_modest(None, ChurnSchedule::empty()).unwrap().run(),
+        };
+        assert!(t.is_conserved(), "{algo:?} lost bytes");
+        assert!(t.total() > 0, "{algo:?} sent nothing");
+    }
+}
+
+#[test]
+fn fedavg_server_dominates_traffic_modest_balances() {
+    let (_, t_fl) = mock_spec(Algo::Fedavg)
+        .build_modest(None, ChurnSchedule::empty())
+        .unwrap()
+        .run();
+    let (_, t_md) = mock_spec(Algo::Modest)
+        .build_modest(None, ChurnSchedule::empty())
+        .unwrap()
+        .run();
+    let (min_fl, max_fl) = t_fl.min_max_usage(16);
+    let (min_md, max_md) = t_md.min_max_usage(16);
+    let spread_fl = max_fl as f64 / min_fl.max(1) as f64;
+    let spread_md = max_md as f64 / min_md.max(1) as f64;
+    // The paper's §4.4 claim: MoDeST load-balances far better than FL.
+    assert!(
+        spread_md < spread_fl,
+        "MoDeST spread {spread_md:.1} !< FedAvg spread {spread_fl:.1}"
+    );
+}
+
+#[test]
+fn dsgd_total_traffic_exceeds_modest() {
+    // D-SGD involves every node every round: at equal round counts its
+    // total traffic must exceed MoDeST's sampled rounds (Table 4 shape).
+    let mut spec_md = mock_spec(Algo::Modest);
+    spec_md.max_rounds = 20;
+    spec_md.max_time_s = 2000.0;
+    let (m_md, t_md) = spec_md.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    let mut spec_dl = mock_spec(Algo::Dsgd);
+    spec_dl.max_rounds = 20;
+    spec_dl.max_time_s = 2000.0;
+    let (m_dl, t_dl) = spec_dl.build_dsgd(None).unwrap().run();
+    assert!(m_md.final_round >= 18 && m_dl.final_round >= 18);
+    assert!(
+        t_dl.kind_total(modest_dl::net::MsgKind::ModelPayload)
+            > t_md.kind_total(modest_dl::net::MsgKind::ModelPayload),
+        "DL model traffic {} !> MoDeST {}",
+        t_dl.kind_total(modest_dl::net::MsgKind::ModelPayload),
+        t_md.kind_total(modest_dl::net::MsgKind::ModelPayload)
+    );
+}
+
+#[test]
+fn mass_crash_session_keeps_making_progress() {
+    let churn = ChurnSchedule::mass_crash(
+        16,
+        6,
+        2,
+        SimTime::from_secs_f64(60.0),
+        SimTime::from_secs_f64(20.0),
+    );
+    let mut spec = mock_spec(Algo::Modest);
+    spec.a = 3;
+    spec.sf = 0.5;
+    spec.max_rounds = 0;
+    spec.max_time_s = 600.0;
+    let (m, _) = spec.build_modest(None, churn).unwrap().run();
+    let after_crashes = m.round_starts.iter().filter(|&&(_, t)| t > 200.0).count();
+    assert!(after_crashes > 3, "no rounds after the crash wave");
+}
+
+#[test]
+fn staggered_joins_propagate_to_all_initial_nodes() {
+    let churn = ChurnSchedule::staggered_joins(
+        12,
+        3,
+        SimTime::from_secs_f64(30.0),
+        SimTime::from_secs_f64(30.0),
+    );
+    let mut spec = mock_spec(Algo::Modest);
+    spec.nodes = 12;
+    spec.max_rounds = 0;
+    spec.max_time_s = 500.0;
+    let (m, _) = spec.build_modest(None, churn).unwrap().run();
+    assert_eq!(m.joins.len(), 3);
+    for j in &m.joins {
+        let prop = j.full_propagation_s();
+        assert!(prop.is_some(), "join of node {} never propagated", j.joiner);
+        assert!(prop.unwrap() > 0.0);
+    }
+}
+
+#[test]
+fn curve_csv_roundtrip() {
+    let spec = mock_spec(Algo::Modest);
+    let (m, _) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    let dir = std::env::temp_dir().join(format!("modest_test_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("curve.csv");
+    m.write_curve_csv(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines[0], "time_s,round,metric,loss,metric_std");
+    assert_eq!(lines.len() - 1, m.curve.len());
+    std::fs::remove_dir_all(&dir).ok();
+}

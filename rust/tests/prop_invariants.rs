@@ -1,0 +1,302 @@
+//! Property-based tests on coordinator invariants.
+//!
+//! The image is offline (no proptest crate), so properties are checked over
+//! hundreds of seeded random cases drawn from the project's own `SimRng` —
+//! same spirit: random structure generation + invariant assertion, fully
+//! deterministic per seed.
+
+use modest_dl::modest::registry::MembershipEvent;
+use modest_dl::modest::sampler::{candidate_order, sample_hash};
+use modest_dl::modest::{ActivityClock, Registry, View};
+use modest_dl::sim::{EventQueue, SimRng, SimTime};
+use modest_dl::NodeId;
+
+const CASES: u64 = 300;
+
+fn random_registry(rng: &mut SimRng, nodes: u64, ops: usize) -> Registry {
+    let mut r = Registry::new();
+    for _ in 0..ops {
+        let node = rng.gen_range(nodes) as NodeId;
+        let counter = rng.gen_range(10) + 1;
+        // Protocol invariant (Alg. 2): the counter is incremented only by
+        // the node itself, so a given (node, counter) pair corresponds to
+        // exactly ONE event network-wide. Derive it deterministically —
+        // generating conflicting events for equal counters would test a
+        // state no execution can produce.
+        let ev = if sample_hash(node, counter) & 1 == 0 {
+            MembershipEvent::Joined
+        } else {
+            MembershipEvent::Left
+        };
+        r.update(node, counter, ev);
+    }
+    r
+}
+
+fn random_activity(rng: &mut SimRng, nodes: u64, ops: usize) -> ActivityClock {
+    let mut a = ActivityClock::new();
+    for _ in 0..ops {
+        a.update(rng.gen_range(nodes) as NodeId, rng.gen_range(50));
+    }
+    a
+}
+
+// ---------------------------------------------------------------- registry
+
+#[test]
+fn prop_registry_merge_commutative() {
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed);
+        let a = random_registry(&mut rng, 20, 15);
+        let b = random_registry(&mut rng, 20, 15);
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_registry_merge_associative() {
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0xa550);
+        let a = random_registry(&mut rng, 16, 12);
+        let b = random_registry(&mut rng, 16, 12);
+        let c = random_registry(&mut rng, 16, 12);
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_registry_merge_idempotent() {
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0x1de5);
+        let a = random_registry(&mut rng, 16, 20);
+        let b = random_registry(&mut rng, 16, 20);
+        let mut once = a.clone();
+        once.merge(&b);
+        let mut twice = once.clone();
+        twice.merge(&b);
+        assert_eq!(once, twice, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_registry_counter_monotone() {
+    // After any update sequence, the stored counter per node is the max
+    // counter ever accepted.
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0xc0de);
+        let mut r = Registry::new();
+        let mut max_seen: std::collections::BTreeMap<NodeId, u64> = Default::default();
+        for _ in 0..30 {
+            let node = rng.gen_range(8) as NodeId;
+            let counter = rng.gen_range(20) + 1;
+            r.update(node, counter, MembershipEvent::Joined);
+            let e = max_seen.entry(node).or_insert(0);
+            *e = (*e).max(counter);
+        }
+        for (&node, &cmax) in &max_seen {
+            assert_eq!(r.get(node).unwrap().0, cmax, "seed {seed}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------- activity
+
+#[test]
+fn prop_activity_merge_is_pointwise_max() {
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0xac71);
+        let a = random_activity(&mut rng, 16, 25);
+        let b = random_activity(&mut rng, 16, 25);
+        let mut m = a.clone();
+        m.merge(&b);
+        for node in 0..16u32 {
+            let expect = match (a.get(node), b.get(node)) {
+                (Some(x), Some(y)) => Some(x.max(y)),
+                (Some(x), None) => Some(x),
+                (None, Some(y)) => Some(y),
+                (None, None) => None,
+            };
+            assert_eq!(m.get(node), expect, "seed {seed} node {node}");
+        }
+    }
+}
+
+#[test]
+fn prop_activity_estimate_never_exceeds_true_round() {
+    // Simulate a network where the true round advances and estimates are
+    // gossiped: no node's estimate may exceed the true round (logical-clock
+    // property from §3.5).
+    for seed in 0..50 {
+        let mut rng = SimRng::new(seed ^ 0xe571);
+        let n = 10usize;
+        let mut clocks: Vec<ActivityClock> = (0..n).map(|_| ActivityClock::new()).collect();
+        let mut true_round = 0u64;
+        for _ in 0..200 {
+            match rng.gen_range(3) {
+                0 => {
+                    // a node participates in a new round
+                    true_round += 1;
+                    let i = rng.gen_range(n as u64) as usize;
+                    clocks[i].update(i as NodeId, true_round);
+                }
+                1 => {
+                    // gossip merge between two nodes
+                    let i = rng.gen_range(n as u64) as usize;
+                    let j = rng.gen_range(n as u64) as usize;
+                    let cj = clocks[j].clone();
+                    clocks[i].merge(&cj);
+                }
+                _ => {
+                    // a node records an estimate for another node
+                    let i = rng.gen_range(n as u64) as usize;
+                    let j = rng.gen_range(n as u64) as NodeId;
+                    let est = clocks[i].estimate();
+                    clocks[i].update(j, est);
+                }
+            }
+            for c in &clocks {
+                assert!(c.estimate() <= true_round, "seed {seed}");
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------------- sampler
+
+#[test]
+fn prop_sampler_deterministic_and_permutation() {
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0x5a3b);
+        let n = 1 + rng.gen_range(60) as usize;
+        let round = rng.gen_range(1000);
+        let cands: Vec<NodeId> = (0..n as NodeId).collect();
+        let o1 = candidate_order(round, &cands);
+        let o2 = candidate_order(round, &cands);
+        assert_eq!(o1, o2);
+        let mut sorted = o1.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, cands, "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_sampler_mostly_consistent() {
+    // Views differing in z nodes yield samples overlapping in >= s - z.
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0x3c3c);
+        let n = 30 + rng.gen_range(70) as usize;
+        let s = 5 + rng.gen_range(10) as usize;
+        let z = 1 + rng.gen_range(3) as usize;
+        let round = rng.gen_range(500);
+        let full: Vec<NodeId> = (0..n as NodeId).collect();
+        let mut missing = full.clone();
+        for _ in 0..z {
+            let idx = rng.gen_range(missing.len() as u64) as usize;
+            missing.remove(idx);
+        }
+        let sa: Vec<NodeId> = candidate_order(round, &full).into_iter().take(s).collect();
+        let sb: Vec<NodeId> = candidate_order(round, &missing).into_iter().take(s).collect();
+        let overlap = sa.iter().filter(|x| sb.contains(x)).count();
+        assert!(overlap + z >= s, "seed {seed}: overlap {overlap}, z {z}, s {s}");
+    }
+}
+
+#[test]
+fn prop_sample_hash_no_trivial_collisions() {
+    // Across a realistic population x round grid, collisions should be
+    // essentially absent (64-bit hash).
+    let mut seen = std::collections::HashSet::new();
+    for node in 0..500u32 {
+        for round in 0..50u64 {
+            seen.insert(sample_hash(node, round));
+        }
+    }
+    assert_eq!(seen.len(), 500 * 50);
+}
+
+// --------------------------------------------------------------------- DES
+
+#[test]
+fn prop_event_queue_total_order() {
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0xde5);
+        let mut q = EventQueue::new();
+        for i in 0..100u64 {
+            q.schedule_at(SimTime::from_micros(rng.gen_range(1000)), i);
+        }
+        let mut last = SimTime::ZERO;
+        let mut count = 0;
+        while let Some((t, _)) = q.pop() {
+            assert!(t >= last, "seed {seed}");
+            last = t;
+            count += 1;
+        }
+        assert_eq!(count, 100);
+    }
+}
+
+// -------------------------------------------------------------------- view
+
+#[test]
+fn prop_view_candidates_sound_and_complete() {
+    // Every candidate is registered and recently active; every registered
+    // + recently-active node is a candidate.
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0x71e3);
+        let mut v = View::default();
+        let n = 24u32;
+        for node in 0..n {
+            if rng.next_f64() < 0.8 {
+                v.registry.update(node, 1, MembershipEvent::Joined);
+            } else {
+                v.registry.update(node, 1, MembershipEvent::Left);
+            }
+            if rng.next_f64() < 0.9 {
+                v.activity.update(node, rng.gen_range(40));
+            }
+        }
+        let k = 30u64;
+        let dk = 20u64;
+        let cands = v.candidates(k, dk);
+        for node in 0..n {
+            let expect = v.registry.is_registered(node)
+                && v.activity.get(node).map(|r| r + dk > k).unwrap_or(false);
+            assert_eq!(cands.contains(&node), expect, "seed {seed} node {node}");
+        }
+    }
+}
+
+#[test]
+fn prop_view_merge_preserves_knowledge() {
+    // Merging views never loses a known node.
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0x9e99);
+        let mut a = View::default();
+        let mut b = View::default();
+        for node in 0..16u32 {
+            if rng.next_f64() < 0.5 {
+                a.registry.update(node, 1, MembershipEvent::Joined);
+            }
+            if rng.next_f64() < 0.5 {
+                b.registry.update(node, 1, MembershipEvent::Joined);
+            }
+        }
+        let known_before: Vec<NodeId> =
+            (0..16u32).filter(|&n| a.registry.knows(n) || b.registry.knows(n)).collect();
+        a.merge(&b);
+        for n in known_before {
+            assert!(a.registry.knows(n), "seed {seed} lost node {n}");
+        }
+    }
+}
