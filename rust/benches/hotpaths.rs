@@ -13,6 +13,7 @@ use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::candidate_order;
 use modest_dl::modest::View;
 use modest_dl::net::SizeModel;
+#[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
 use modest_dl::sim::{EventQueue, SimRng, SimTime};
 use modest_dl::util::bench::{black_box, Bencher};
@@ -60,13 +61,17 @@ fn main() {
         b.bench("aggregate/naive/8x1.75M(femnist)", || {
             black_box(aggregate_naive(black_box(&refs)));
         });
-        // XLA/Pallas path (needs artifacts; includes stack copy + PJRT).
-        if let Ok(rt) = XlaRuntime::load("artifacts") {
-            if let Ok(v) = rt.variant("femnist") {
-                let slices: Vec<&[f32]> = refs.iter().map(|m| m.as_slice()).collect();
-                b.bench("aggregate/xla-pallas/8x1.75M(femnist)", || {
-                    black_box(v.aggregate(black_box(&slices)).unwrap());
-                });
+        // XLA/Pallas path (needs the `xla` feature + artifacts; includes
+        // stack copy + PJRT).
+        #[cfg(feature = "xla")]
+        {
+            if let Ok(rt) = XlaRuntime::load("artifacts") {
+                if let Ok(v) = rt.variant("femnist") {
+                    let slices: Vec<&[f32]> = refs.iter().map(|m| m.as_slice()).collect();
+                    b.bench("aggregate/xla-pallas/8x1.75M(femnist)", || {
+                        black_box(v.aggregate(black_box(&slices)).unwrap());
+                    });
+                }
             }
         }
     }

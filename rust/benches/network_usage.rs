@@ -71,5 +71,40 @@ fn main() {
         total(Algo::Dsgd) as f64 / total(Algo::Fedavg) as f64,
         total(Algo::Dsgd) as f64 / total(Algo::Modest) as f64,
     );
+
+    // ---- heterogeneous capacity: thin uplinks must stretch rounds (the
+    // fabric serializes each node's concurrent sends on its uplink).
+    println!();
+    println!("== fabric: uniform vs heterogeneous per-node capacity (MoDeST) ==");
+    let mut round_times = Vec::new();
+    for (label, mbps, sigma) in [("uniform-1mbps", 1.0, 0.0), ("lognormal-sigma1", 1.0, 1.0)] {
+        let spec = SessionSpec {
+            dataset: "mock".into(),
+            algo: Algo::Modest,
+            nodes: 40,
+            s: 6,
+            a: 2,
+            sf: 1.0,
+            max_rounds: 80,
+            max_time_s: 7200.0,
+            bandwidth_mbps: mbps,
+            bandwidth_sigma: sigma,
+            ..Default::default()
+        };
+        let mut out = None;
+        b.bench_once(&format!("fabric/{label}"), || {
+            out = Some(spec.build_modest(None, ChurnSchedule::empty()).unwrap().run());
+        });
+        let (m, _) = out.unwrap();
+        let rt = m.mean_round_time_s().unwrap_or(f64::NAN);
+        println!("{label:<18} rounds={:<4} mean-round={rt:.3}s", m.final_round);
+        round_times.push(rt);
+    }
+    if round_times.len() == 2 {
+        println!(
+            "slowdown from capacity heterogeneity: {:.2}x (thin-uplink nodes gate their rounds)",
+            round_times[1] / round_times[0]
+        );
+    }
     b.finish();
 }

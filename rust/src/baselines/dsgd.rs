@@ -1,23 +1,28 @@
 //! D-SGD baseline (§2, §4.3): every node trains every round and averages
 //! with its one-peer exponential-graph neighbour.
 //!
-//! Event-driven over the same DES/network substrates as MoDeST: a node's
-//! round `r` is (train locally) ∥ (receive neighbour model of round `r`),
-//! then average the two and advance — the pairwise barrier of the one-peer
-//! topology, with no global synchronization. Per the paper we do not charge
-//! the cost of establishing/maintaining the topology.
+//! Implemented as a [`Protocol`] over the shared [`SimHarness`] — the same
+//! DES kernel and [`NetworkFabric`] MoDeST runs on: a node's round `r` is
+//! (train locally) ∥ (receive neighbour model of round `r`), then average
+//! the two and advance — the pairwise barrier of the one-peer topology,
+//! with no global synchronization. Per the paper we do not charge the cost
+//! of establishing/maintaining the topology.
 
 use std::collections::HashMap;
 use std::sync::Arc;
 
+use anyhow::Result;
+
 use crate::learning::{ComputeModel, Model, Task};
-use crate::metrics::{SessionMetrics, TrafficSummary};
-use crate::net::{LatencyMatrix, MsgKind, SizeModel, TrafficLedger};
-use crate::sim::{EventQueue, SimRng, SimTime};
+use crate::metrics::SessionMetrics;
+use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
+use crate::sim::{Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness, SimTime};
 use crate::{NodeId, Round};
 
 use super::topology::OnePeerExpGraph;
 
+/// D-SGD parameters. Bandwidth is no longer here: per-node capacities
+/// belong to the [`NetworkFabric`].
 #[derive(Debug, Clone)]
 pub struct DsgdConfig {
     pub max_time: SimTime,
@@ -31,7 +36,6 @@ pub struct DsgdConfig {
     pub eval_avg_model: bool,
     pub target_metric: Option<f64>,
     pub seed: u64,
-    pub bandwidth_bps: f64,
 }
 
 impl Default for DsgdConfig {
@@ -44,15 +48,27 @@ impl Default for DsgdConfig {
             eval_avg_model: false,
             target_metric: None,
             seed: 42,
-            bandwidth_bps: 50e6,
         }
     }
 }
 
-enum Event {
-    TrainDone { node: NodeId, round: Round },
-    Deliver { to: NodeId, round: Round, model: Arc<Model> },
-    Probe,
+impl DsgdConfig {
+    /// The harness plumbing derived from this config.
+    pub fn harness_config(&self) -> HarnessConfig {
+        HarnessConfig {
+            max_time: self.max_time,
+            max_rounds: self.max_rounds,
+            eval_interval: self.eval_interval,
+            target_metric: self.target_metric,
+            seed: self.seed,
+        }
+    }
+}
+
+/// The single D-SGD wire message: a neighbour's trained model for a round.
+pub struct DsgdMsg {
+    pub round: Round,
+    pub model: Arc<Model>,
 }
 
 struct DsgdNode {
@@ -64,52 +80,15 @@ struct DsgdNode {
     inbox: HashMap<Round, Arc<Model>>,
 }
 
-pub struct DsgdSession {
+/// The D-SGD state machine (drives through [`SimHarness`]).
+pub struct DsgdProtocol {
     cfg: DsgdConfig,
     graph: OnePeerExpGraph,
-    queue: EventQueue<Event>,
     nodes: Vec<DsgdNode>,
-    task: Box<dyn Task>,
-    compute: ComputeModel,
-    latency: LatencyMatrix,
     sizes: SizeModel,
-    traffic: TrafficLedger,
-    metrics: SessionMetrics,
-    done: bool,
 }
 
-impl DsgdSession {
-    pub fn new(
-        cfg: DsgdConfig,
-        n: usize,
-        task: Box<dyn Task>,
-        compute: ComputeModel,
-        latency: LatencyMatrix,
-    ) -> DsgdSession {
-        let init = task.init_model();
-        let nodes = (0..n)
-            .map(|_| DsgdNode {
-                round: 1,
-                model: init.clone(),
-                trained: None,
-                inbox: HashMap::new(),
-            })
-            .collect();
-        DsgdSession {
-            cfg,
-            graph: OnePeerExpGraph::new(n as u32),
-            queue: EventQueue::new(),
-            nodes,
-            task,
-            compute,
-            latency,
-            sizes: SizeModel::default(),
-            traffic: TrafficLedger::new(n),
-            metrics: SessionMetrics::default(),
-            done: false,
-        }
-    }
-
+impl DsgdProtocol {
     fn seed_for(&self, node: NodeId, round: Round) -> u64 {
         self.cfg
             .seed
@@ -118,25 +97,36 @@ impl DsgdSession {
             .wrapping_add(round)
     }
 
-    fn start_training(&mut self, node: NodeId) {
-        let batches = self.task.batches_per_epoch(node);
-        let dur = self.compute.train_time(node, batches);
+    fn start_training(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId) {
+        let batches = ctx.task.batches_per_epoch(node);
+        let dur = ctx.compute.train_time(node, batches);
         let round = self.nodes[node as usize].round;
-        self.queue.schedule_in(dur, Event::TrainDone { node, round });
+        // The round number doubles as the training sequence id: a node
+        // trains exactly once per round.
+        ctx.schedule_train_done(dur, node, round);
     }
 
-    fn send_model(&mut self, from: NodeId, to: NodeId, round: Round, model: Arc<Model>) {
-        let bytes = self.sizes.model_transfer_bytes(self.task.model_bytes(), 0);
-        self.traffic
-            .record_parts(from, to, &[(MsgKind::ModelPayload, self.task.model_bytes()), (MsgKind::Control, bytes - self.task.model_bytes())]);
-        let transfer = SimTime::from_secs_f64(bytes as f64 * 8.0 / self.cfg.bandwidth_bps);
-        let delay = self.latency.one_way(from, to) + transfer;
-        self.queue.schedule_in(delay, Event::Deliver { to, round, model });
+    fn send_model(
+        &self,
+        ctx: &mut Ctx<'_, DsgdMsg>,
+        from: NodeId,
+        to: NodeId,
+        round: Round,
+        model: Arc<Model>,
+    ) {
+        let model_b = ctx.task.model_bytes();
+        let total = self.sizes.model_transfer_bytes(model_b, 0);
+        ctx.send(
+            from,
+            to,
+            &[(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)],
+            DsgdMsg { round, model },
+        );
     }
 
     /// If node finished training and has its neighbour's model, average and
     /// move to the next round.
-    fn try_advance(&mut self, node: NodeId) {
+    fn try_advance(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId) {
         let round = self.nodes[node as usize].round;
         let ready = {
             let n = &self.nodes[node as usize];
@@ -149,7 +139,7 @@ impl DsgdSession {
             let n = &mut self.nodes[node as usize];
             (n.trained.take().unwrap(), n.inbox.remove(&round).unwrap())
         };
-        let avg = self
+        let avg = ctx
             .task
             .aggregate(&[&own, incoming.as_ref()])
             .expect("aggregate");
@@ -161,43 +151,53 @@ impl DsgdSession {
             n.inbox.retain(|&k, _| k >= round);
         }
         if node == 0 {
-            self.metrics.record_round_start(round + 1, self.queue.now());
+            ctx.record_round_start(round + 1);
         }
-        if self.cfg.max_rounds > 0 && round + 1 > self.cfg.max_rounds {
-            self.done = true;
+        if ctx.round_budget_exceeded(round + 1) {
+            ctx.finish();
             return;
         }
-        self.start_training(node);
+        self.start_training(ctx, node);
+    }
+}
+
+impl Protocol for DsgdProtocol {
+    type Msg = DsgdMsg;
+
+    fn bootstrap(&mut self, ctx: &mut Ctx<'_, DsgdMsg>) {
+        ctx.record_round_start(1);
+        for node in 0..self.nodes.len() as NodeId {
+            self.start_training(ctx, node);
+        }
     }
 
-    fn handle_train_done(&mut self, node: NodeId, round: Round) {
+    fn on_deliver(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, to: NodeId, msg: DsgdMsg) {
+        self.nodes[to as usize].inbox.insert(msg.round, msg.model);
+        self.try_advance(ctx, to);
+    }
+
+    fn on_train_done(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId, seq: u64) {
+        let round = seq;
         if self.nodes[node as usize].round != round {
             return; // stale
         }
         let seed = self.seed_for(node, round);
         let model = self.nodes[node as usize].model.clone();
-        let (updated, _loss, _b) = self
-            .task
-            .local_update(&model, node, seed)
-            .expect("local_update");
+        let (updated, _loss, _b) =
+            ctx.task.local_update(&model, node, seed).expect("local_update");
         let out = self.graph.out_neighbor(node, round);
         let arc = Arc::new(updated.clone());
         self.nodes[node as usize].trained = Some(updated);
-        self.send_model(node, out, round, arc);
-        self.try_advance(node);
+        self.send_model(ctx, node, out, round, arc);
+        self.try_advance(ctx, node);
     }
 
-    fn handle_deliver(&mut self, to: NodeId, round: Round, model: Arc<Model>) {
-        self.nodes[to as usize].inbox.insert(round, model);
-        self.try_advance(to);
-    }
-
-    fn handle_probe(&mut self) {
+    fn evaluate(&mut self, task: &mut dyn Task) -> Result<EvalPoint> {
         let n = self.nodes.len();
         let (metric, loss, std) = if self.cfg.eval_avg_model {
             let models: Vec<&Model> = self.nodes.iter().map(|x| &x.model).collect();
-            let avg = self.task.aggregate(&models).expect("aggregate");
-            let e = self.task.evaluate(&avg).expect("evaluate");
+            let avg = task.aggregate(&models)?;
+            let e = task.evaluate(&avg)?;
             (e.metric, e.loss, 0.0)
         } else {
             // Evaluate an even subsample of node models; report mean±std
@@ -208,7 +208,7 @@ impl DsgdSession {
             for j in 0..k {
                 let idx = j * n / k;
                 let model = self.nodes[idx].model.clone();
-                let e = self.task.evaluate(&model).expect("evaluate");
+                let e = task.evaluate(&model)?;
                 metrics.push(e.metric);
                 losses.push(e.loss);
             }
@@ -217,51 +217,60 @@ impl DsgdSession {
             let loss = losses.iter().sum::<f64>() / k as f64;
             (mean, loss, var.sqrt())
         };
-        let round = self.nodes.iter().map(|x| x.round).min().unwrap_or(0);
-        self.metrics
-            .record_eval(self.queue.now(), round, metric, loss, std);
-        if let Some(target) = self.cfg.target_metric {
-            let hit = if self.task.metric_is_accuracy() {
-                metric >= target
-            } else {
-                metric <= target
-            };
-            if hit {
-                self.done = true;
-            }
+        let round = self.final_round();
+        Ok(EvalPoint { round, metric, loss, metric_std: std })
+    }
+
+    fn final_round(&self) -> Round {
+        self.nodes.iter().map(|x| x.round).min().unwrap_or(0)
+    }
+}
+
+/// Assembly facade: builds a [`DsgdProtocol`] and its [`SimHarness`].
+pub struct DsgdSession {
+    harness: SimHarness<DsgdProtocol>,
+}
+
+impl DsgdSession {
+    pub fn new(
+        cfg: DsgdConfig,
+        n: usize,
+        task: Box<dyn Task>,
+        compute: ComputeModel,
+        fabric: NetworkFabric,
+    ) -> DsgdSession {
+        let init = task.init_model();
+        let nodes = (0..n)
+            .map(|_| DsgdNode {
+                round: 1,
+                model: init.clone(),
+                trained: None,
+                inbox: HashMap::new(),
+            })
+            .collect();
+        let hcfg = cfg.harness_config();
+        let protocol = DsgdProtocol {
+            cfg,
+            graph: OnePeerExpGraph::new(n as u32),
+            nodes,
+            sizes: SizeModel::default(),
+        };
+        DsgdSession {
+            harness: SimHarness::new(
+                hcfg,
+                protocol,
+                n,
+                n,
+                task,
+                compute,
+                fabric,
+                crate::sim::ChurnSchedule::empty(),
+            ),
         }
     }
 
-    pub fn run(mut self) -> (SessionMetrics, TrafficLedger) {
-        let _ = SimRng::new(self.cfg.seed); // reserved for future stochastic exts
-        let mut t = self.cfg.eval_interval;
-        while t <= self.cfg.max_time {
-            self.queue.schedule_at(t, Event::Probe);
-            t = t + self.cfg.eval_interval;
-        }
-        self.metrics.record_round_start(1, SimTime::ZERO);
-        for node in 0..self.nodes.len() as NodeId {
-            self.start_training(node);
-        }
-        // Baseline evaluation of the initial model at t=0.
-        self.handle_probe();
-        while let Some((now, ev)) = self.queue.pop() {
-            if now > self.cfg.max_time || self.done {
-                break;
-            }
-            match ev {
-                Event::TrainDone { node, round } => self.handle_train_done(node, round),
-                Event::Deliver { to, round, model } => self.handle_deliver(to, round, model),
-                Event::Probe => self.handle_probe(),
-            }
-        }
-        // Terminal evaluation so short sessions still produce a curve.
-        self.handle_probe();
-        self.metrics.final_round = self.nodes.iter().map(|n| n.round).min().unwrap_or(0);
-        self.metrics.duration_s = self.queue.now().as_secs_f64();
-        self.metrics.events = self.queue.events_processed();
-        self.metrics.traffic = TrafficSummary::from_ledger(&self.traffic, self.nodes.len());
-        (self.metrics, self.traffic)
+    pub fn run(self) -> (SessionMetrics, TrafficLedger) {
+        self.harness.run()
     }
 }
 
@@ -269,15 +278,17 @@ impl DsgdSession {
 mod tests {
     use super::*;
     use crate::learning::MockTask;
-    use crate::net::LatencyParams;
+    use crate::net::{BandwidthConfig, LatencyMatrix, LatencyParams};
+    use crate::sim::SimRng;
 
     fn session(n: usize, cfg: DsgdConfig) -> DsgdSession {
         let mut rng = SimRng::new(cfg.seed);
         let task = MockTask::new(n, 16, 0.5, cfg.seed);
-        let latency =
-            LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+        let latency = LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+        let fabric =
+            NetworkFabric::new(latency, &BandwidthConfig::uniform_mbps(50.0), n, &mut rng.fork("bw"));
         let compute = ComputeModel::uniform(n, 0.05);
-        DsgdSession::new(cfg, n, Box::new(task), compute, latency)
+        DsgdSession::new(cfg, n, Box::new(task), compute, fabric)
     }
 
     #[test]

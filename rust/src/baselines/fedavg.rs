@@ -10,7 +10,9 @@ use crate::sim::SimTime;
 
 /// Derive the FedAvg emulation config from a MoDeST config: same `s`,
 /// single fixed aggregator at the best-connected node, full success
-/// fraction, and no failure-detection machinery.
+/// fraction, and no failure-detection machinery. The server's unlimited
+/// bandwidth is applied by `ModestSession::new` as a per-node capacity
+/// override on the `NetworkFabric`.
 pub fn fedavg_config(base: &ModestConfig, latency: &LatencyMatrix, n: usize) -> ModestConfig {
     let server = latency.best_connected(n);
     ModestConfig {

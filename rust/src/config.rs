@@ -1,22 +1,29 @@
 //! Session configuration: dataset presets (paper Table 3), algorithm
-//! selection, scaling, and the builders that assemble a runnable session
-//! from config + artifacts.
+//! selection, scaling, network shaping, and the builders that assemble a
+//! runnable session from config + artifacts.
 //!
 //! Every experiment driver and example goes through this module, so a
 //! session is fully described by a [`SessionSpec`] (loadable from a JSON
 //! config file via the launcher, parsed by the in-tree [`crate::util::json`]
-//! module).
+//! module). The spec builds the [`NetworkFabric`] (latency + per-node
+//! uplink/downlink capacities) every protocol charges its transfers
+//! against; `bandwidth_sigma > 0` samples heterogeneous capacities
+//! lognormally around `bandwidth_mbps`.
 
 use anyhow::Result;
 
 use crate::baselines::{fedavg_config, DsgdConfig, DsgdSession};
+#[cfg(feature = "xla")]
 use crate::data::{
-    classif::ClassifParams, ratings::RatingsParams, tokens::TokensParams, ClassifData, Partition,
+    classif::ClassifParams, ratings::RatingsParams, tokens::TokensParams, ClassifData,
     RatingsData, TokensData,
 };
-use crate::learning::{ComputeModel, MockTask, Task, TaskData, XlaTask};
+use crate::data::Partition;
+#[cfg(feature = "xla")]
+use crate::learning::{TaskData, XlaTask};
+use crate::learning::{ComputeModel, MockTask, Task};
 use crate::modest::{ModestConfig, ModestSession};
-use crate::net::{LatencyMatrix, LatencyParams};
+use crate::net::{BandwidthConfig, LatencyMatrix, LatencyParams, NetworkFabric};
 use crate::runtime::XlaRuntime;
 use crate::sim::{ChurnSchedule, SimRng, SimTime};
 use crate::util::Json;
@@ -140,7 +147,11 @@ pub struct SessionSpec {
     pub eval_interval_s: f64,
     pub target_metric: Option<f64>,
     pub seed: u64,
+    /// Median per-node capacity (symmetric) in Mbit/s.
     pub bandwidth_mbps: f64,
+    /// Capacity heterogeneity (lognormal sigma around `bandwidth_mbps`;
+    /// 0 = every node identical).
+    pub bandwidth_sigma: f64,
     /// Base per-batch train time (s) on a speed-1 node.
     pub base_batch_s: f64,
     /// Compute heterogeneity (lognormal sigma; 0 = uniform).
@@ -166,6 +177,7 @@ impl Default for SessionSpec {
             target_metric: None,
             seed: 42,
             bandwidth_mbps: 50.0,
+            bandwidth_sigma: 0.0,
             base_batch_s: 0.05,
             hetero_sigma: 0.35,
             artifacts_dir: "artifacts".into(),
@@ -199,6 +211,7 @@ impl SessionSpec {
                 }
                 "seed" => spec.seed = val.as_u64()?,
                 "bandwidth_mbps" => spec.bandwidth_mbps = val.as_f64()?,
+                "bandwidth_sigma" => spec.bandwidth_sigma = val.as_f64()?,
                 "base_batch_s" => spec.base_batch_s = val.as_f64()?,
                 "hetero_sigma" => spec.hetero_sigma = val.as_f64()?,
                 "artifacts_dir" => spec.artifacts_dir = val.as_str()?.to_string(),
@@ -238,7 +251,6 @@ impl SessionSpec {
             eval_interval: SimTime::from_secs_f64(self.eval_interval_s),
             target_metric: self.target_metric,
             seed: self.seed,
-            bandwidth_bps: self.bandwidth_mbps * 1e6,
             fedavg_server: None,
         })
     }
@@ -254,7 +266,6 @@ impl SessionSpec {
             eval_avg_model: self.dataset == "movielens",
             target_metric: self.target_metric,
             seed: self.seed,
-            bandwidth_bps: self.bandwidth_mbps * 1e6,
         }
     }
 
@@ -271,13 +282,38 @@ impl SessionSpec {
         runtime: Option<&XlaRuntime>,
         n: usize,
     ) -> Result<Box<dyn Task>> {
-        let p = preset(&self.dataset)?;
-        let mut rng = SimRng::new(self.seed).fork("data");
         if self.dataset == "mock" {
             return Ok(Box::new(MockTask::new(n.max(64), 32, 0.8, self.seed)));
         }
-        let runtime =
-            runtime.ok_or_else(|| anyhow::anyhow!("dataset {} needs artifacts", self.dataset))?;
+        self.build_artifact_task(runtime, n)
+    }
+
+    /// Artifact-backed datasets need the PJRT engine: without the `xla`
+    /// feature this is a clear runtime error instead of a build break.
+    #[cfg(not(feature = "xla"))]
+    fn build_artifact_task(
+        &self,
+        _runtime: Option<&XlaRuntime>,
+        _n: usize,
+    ) -> Result<Box<dyn Task>> {
+        anyhow::bail!(
+            "dataset {:?} needs AOT artifacts; uncomment the `xla` dependency \
+             in rust/Cargo.toml and rebuild with `--features xla`, or run with \
+             the mock dataset",
+            self.dataset
+        )
+    }
+
+    #[cfg(feature = "xla")]
+    fn build_artifact_task(
+        &self,
+        runtime: Option<&XlaRuntime>,
+        n: usize,
+    ) -> Result<Box<dyn Task>> {
+        let p = preset(&self.dataset)?;
+        let mut rng = SimRng::new(self.seed).fork("data");
+        let runtime = runtime
+            .ok_or_else(|| anyhow::anyhow!("dataset {} needs artifacts", self.dataset))?;
         let manifest = runtime.manifest().variant(p.variant)?.clone();
         let data = match manifest.kind.as_str() {
             "classifier" => {
@@ -336,6 +372,26 @@ impl SessionSpec {
         LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng)
     }
 
+    /// The per-node capacity distribution this spec describes.
+    pub fn bandwidth_config(&self) -> BandwidthConfig {
+        if self.bandwidth_sigma > 0.0 {
+            BandwidthConfig::LogNormal {
+                median_bps: self.bandwidth_mbps * 1e6,
+                sigma: self.bandwidth_sigma,
+            }
+        } else {
+            BandwidthConfig::Uniform { bps: self.bandwidth_mbps * 1e6 }
+        }
+    }
+
+    /// Assemble the network fabric: synthetic geography + per-node
+    /// capacities, both seeded from the session seed.
+    pub fn build_fabric(&self, n: usize) -> NetworkFabric {
+        let latency = self.build_latency(n);
+        let mut rng = SimRng::new(self.seed).fork("bandwidth");
+        NetworkFabric::new(latency, &self.bandwidth_config(), n, &mut rng)
+    }
+
     pub fn build_compute(&self, n: usize) -> ComputeModel {
         let mut rng = SimRng::new(self.seed).fork("compute");
         if self.hetero_sigma > 0.0 {
@@ -353,28 +409,28 @@ impl SessionSpec {
     ) -> Result<ModestSession> {
         let n = self.resolved_nodes()?;
         // Churn scripts may introduce node ids beyond the initial
-        // population; the dataset/latency/compute substrates must cover
+        // population; the dataset/fabric/compute substrates must cover
         // them too.
         let max_n = n.max(
             churn.events().iter().map(|e| e.node as usize + 1).max().unwrap_or(0),
         );
         let task = self.build_task_for(runtime, max_n)?;
-        let latency = self.build_latency(max_n);
+        let fabric = self.build_fabric(max_n);
         let compute = self.build_compute(max_n);
         let mut cfg = self.modest_config()?;
         if self.algo == Algo::Fedavg {
-            cfg = fedavg_config(&cfg, &latency, n);
+            cfg = fedavg_config(&cfg, fabric.latency(), n);
         }
-        Ok(ModestSession::new(cfg, n, task, compute, latency, churn))
+        Ok(ModestSession::new(cfg, n, task, compute, fabric, churn))
     }
 
     /// Assemble a D-SGD session.
     pub fn build_dsgd(&self, runtime: Option<&XlaRuntime>) -> Result<DsgdSession> {
         let n = self.resolved_nodes()?;
         let task = self.build_task(runtime)?;
-        let latency = self.build_latency(n);
+        let fabric = self.build_fabric(n);
         let compute = self.build_compute(n);
-        Ok(DsgdSession::new(self.dsgd_config(), n, task, compute, latency))
+        Ok(DsgdSession::new(self.dsgd_config(), n, task, compute, fabric))
     }
 }
 
@@ -442,5 +498,41 @@ mod tests {
     #[test]
     fn spec_rejects_unknown_keys() {
         assert!(SessionSpec::from_json(r#"{"datset": "x"}"#).is_err());
+    }
+
+    #[test]
+    fn bandwidth_spec_builds_hetero_fabric() {
+        let spec = SessionSpec {
+            dataset: "mock".into(),
+            nodes: 16,
+            bandwidth_mbps: 10.0,
+            bandwidth_sigma: 0.6,
+            ..Default::default()
+        };
+        let fabric = spec.build_fabric(16);
+        let min = (0..16u32).map(|n| fabric.up_bps(n)).fold(f64::MAX, f64::min);
+        let max = (0..16u32).map(|n| fabric.up_bps(n)).fold(0.0f64, f64::max);
+        assert!(max > min, "no heterogeneity: {min}..{max}");
+        // sigma = 0 gives a flat fabric
+        let flat = SessionSpec {
+            dataset: "mock".into(),
+            nodes: 16,
+            ..Default::default()
+        }
+        .build_fabric(16);
+        for n in 0..16u32 {
+            assert_eq!(flat.up_bps(n), 50e6);
+            assert_eq!(flat.down_bps(n), 50e6);
+        }
+    }
+
+    #[test]
+    fn bandwidth_sigma_parses_from_json() {
+        let spec = SessionSpec::from_json(
+            r#"{"dataset": "mock", "bandwidth_mbps": 25.0, "bandwidth_sigma": 0.4}"#,
+        )
+        .unwrap();
+        assert!((spec.bandwidth_mbps - 25.0).abs() < 1e-12);
+        assert!((spec.bandwidth_sigma - 0.4).abs() < 1e-12);
     }
 }

@@ -21,6 +21,10 @@ pub struct ExpOptions {
     /// Round budget (0 = unlimited).
     pub max_rounds: u64,
     pub seed: u64,
+    /// Median per-node capacity in Mbit/s (builds the network fabric).
+    pub bandwidth_mbps: f64,
+    /// Per-node capacity heterogeneity (lognormal sigma, 0 = uniform).
+    pub bandwidth_sigma: f64,
     pub artifacts_dir: String,
     pub out_dir: PathBuf,
     /// Use the mock task instead of XLA (fast smoke runs).
@@ -34,6 +38,8 @@ impl Default for ExpOptions {
             max_time_s: 1200.0,
             max_rounds: 0,
             seed: 42,
+            bandwidth_mbps: 50.0,
+            bandwidth_sigma: 0.0,
             artifacts_dir: "artifacts".into(),
             out_dir: PathBuf::from("results"),
             mock: false,
@@ -50,6 +56,8 @@ impl ExpOptions {
             max_time_s: self.max_time_s,
             max_rounds: self.max_rounds,
             seed: self.seed,
+            bandwidth_mbps: self.bandwidth_mbps,
+            bandwidth_sigma: self.bandwidth_sigma,
             artifacts_dir: self.artifacts_dir.clone(),
             ..Default::default()
         }

@@ -14,10 +14,12 @@ pub mod agg;
 pub mod compute;
 pub mod mock;
 pub mod task;
+#[cfg(feature = "xla")]
 pub mod xla_task;
 
 pub use agg::{aggregate_native, aggregate_weighted};
 pub use compute::ComputeModel;
 pub use mock::MockTask;
 pub use task::{EvalResult, Model, Task};
+#[cfg(feature = "xla")]
 pub use xla_task::{AggBackend, TaskData, XlaTask};

@@ -8,18 +8,22 @@
 //!   decentralized sampling ([`modest::sampler`]), the membership registry
 //!   ([`modest::registry`]), activity tracking ([`modest::activity`]), and
 //!   the push-based train/aggregate protocol ([`modest::node`]); plus the
-//!   FedAvg / D-SGD baselines ([`baselines`]) and every substrate they need:
-//!   a deterministic discrete-event simulator ([`sim`]), a WAN network model
-//!   with per-node traffic accounting ([`net`]), synthetic federated
-//!   datasets ([`data`]), and metrics ([`metrics`]).
+//!   FedAvg / D-SGD baselines ([`baselines`]). All protocols implement
+//!   [`sim::Protocol`] and run on one shared substrate: the deterministic
+//!   DES harness ([`sim::SimHarness`]) and the contended WAN fabric with
+//!   per-node uplink/downlink capacities ([`net::NetworkFabric`]), plus
+//!   synthetic federated datasets ([`data`]) and metrics ([`metrics`]).
 //! * **Layer 2** — JAX train/eval/aggregate graphs per model variant,
 //!   AOT-lowered to HLO text at build time (`python/compile/`).
 //! * **Layer 1** — Pallas kernels for the dense layer (fwd+bwd), the fused
 //!   SGD update, and model averaging (`python/compile/kernels/`).
 //!
 //! The [`runtime`] module loads the AOT artifacts through the PJRT C API
-//! (`xla` crate) so Python never runs on the round path. See DESIGN.md for
-//! the full system inventory and EXPERIMENTS.md for paper-vs-measured.
+//! when built with the off-by-default `xla` feature; without it a stub
+//! keeps all signatures compiling and the mock task drives every protocol
+//! test. Python is never on the round path. See rust/README.md for the
+//! layer diagram, DESIGN.md for the system inventory, and EXPERIMENTS.md
+//! for paper-vs-measured.
 
 pub mod baselines;
 pub mod config;

@@ -44,6 +44,8 @@ COMMON FLAGS:
   --max-time S     virtual-time budget per session (default 1200)
   --max-rounds N   round budget, 0 = unlimited (default 0)
   --seed N         session seed (default 42)
+  --bw-mbps F      median per-node capacity in Mbit/s (default 50)
+  --bw-sigma F     capacity heterogeneity, lognormal sigma (default 0)
   --artifacts DIR  AOT artifact dir (default artifacts)
   --out DIR        CSV output dir (default results)
   --mock           use the mock task (no artifacts needed)
@@ -55,6 +57,8 @@ fn common(args: &Args) -> Result<ExpOptions> {
         max_time_s: args.get_f64("max-time", 1200.0)?,
         max_rounds: args.get_u64("max-rounds", 0)?,
         seed: args.get_u64("seed", 42)?,
+        bandwidth_mbps: args.get_f64("bw-mbps", 50.0)?,
+        bandwidth_sigma: args.get_f64("bw-sigma", 0.0)?,
         artifacts_dir: args.get_str("artifacts", "artifacts"),
         out_dir: PathBuf::from(args.get_str("out", "results")),
         mock: args.get_bool("mock"),
@@ -77,6 +81,14 @@ fn cmd_train(args: &Args) -> Result<()> {
     spec.max_time_s = opts.max_time_s;
     spec.max_rounds = opts.max_rounds;
     spec.seed = opts.seed;
+    // Only explicit flags override bandwidth — a --config file's
+    // bandwidth_mbps/bandwidth_sigma must survive when the flags are absent.
+    if args.get_opt("bw-mbps").is_some() {
+        spec.bandwidth_mbps = opts.bandwidth_mbps;
+    }
+    if args.get_opt("bw-sigma").is_some() {
+        spec.bandwidth_sigma = opts.bandwidth_sigma;
+    }
     spec.artifacts_dir = opts.artifacts_dir.clone();
     let s = args.get_usize("s", 0)?;
     if s > 0 {

@@ -24,5 +24,5 @@ pub mod view;
 pub use activity::ActivityClock;
 pub use registry::{MembershipEvent, Registry};
 pub use sampler::candidate_order;
-pub use session::{ModestConfig, ModestSession};
+pub use session::{ModestConfig, ModestProtocol, ModestSession};
 pub use view::View;

@@ -1,9 +1,12 @@
-//! The MoDeST session: Alg. 1–4 driven over the discrete-event simulator.
+//! The MoDeST session: Alg. 1–4 as a [`Protocol`] over the shared
+//! [`SimHarness`].
 //!
-//! One `ModestSession` owns the node table, the virtual network (latency +
-//! traffic ledger), the learning [`Task`], a churn script, and the event
-//! queue. `run()` executes the session to its time/round budget and returns
-//! [`SessionMetrics`].
+//! [`ModestProtocol`] holds only protocol state (the node table, the latest
+//! aggregated model, join-propagation watches) and reacts to harness events
+//! through [`Ctx`]; the event queue, liveness table, churn application,
+//! probe/eval loop, stop conditions, and network fabric all live in the
+//! harness. [`ModestSession`] is the assembly facade the builders and tests
+//! use.
 //!
 //! Faithfulness notes:
 //! * Sampling (Alg. 1) pings the first `need` candidates in parallel, then
@@ -13,23 +16,30 @@
 //! * Views travel only on `train`/`aggregate` messages (§3.6).
 //! * The multi-aggregator fast path falls out of `k_train` dedup: the first
 //!   aggregator's `train` starts local training, later copies are ignored.
-//! * FedAvg emulation (§4.3) is available via [`ModestConfig::fedavg_mode`]:
-//!   aggregator fixed to one node, no sampling pings for it.
+//! * FedAvg emulation (§4.3) is available via `fedavg_server`: aggregator
+//!   fixed to one node, no sampling pings for it, and the *fabric* grants
+//!   that node unlimited capacity (a per-node override, not a protocol
+//!   special case).
 
 use std::sync::Arc;
 
+use anyhow::Result;
 
 use crate::learning::{ComputeModel, Model, Task};
-use crate::metrics::{JoinTrace, SessionMetrics, TrafficSummary};
-use crate::net::{LatencyMatrix, MsgKind, SizeModel, TrafficLedger};
-use crate::sim::{ChurnKind, ChurnSchedule, EventQueue, SimRng, SimTime};
+use crate::metrics::{JoinTrace, SessionMetrics};
+use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
+use crate::sim::{
+    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness,
+    SimRng, SimTime,
+};
 use crate::{NodeId, Round};
 
 use super::node::{ModelRef, ModestNode, Msg, NodeAction, Purpose, SampleOp};
 use super::registry::MembershipEvent;
 use super::sampler::candidate_order;
 
-/// MoDeST parameters (paper Table 2) plus session plumbing.
+/// MoDeST parameters (paper Table 2) plus session plumbing. Bandwidth is no
+/// longer here: per-node capacities belong to the [`NetworkFabric`].
 #[derive(Debug, Clone)]
 pub struct ModestConfig {
     /// Sample size `s` (trainers per round).
@@ -52,10 +62,9 @@ pub struct ModestConfig {
     pub target_metric: Option<f64>,
     /// RNG seed for everything in the session.
     pub seed: u64,
-    /// Uplink/downlink bandwidth in bits/s applied to transfers.
-    pub bandwidth_bps: f64,
     /// FedAvg emulation (§4.3): fix this node as the only aggregator, skip
-    /// sampling pings toward it, give it infinite bandwidth.
+    /// sampling pings toward it; the session grants it unlimited fabric
+    /// capacity.
     pub fedavg_server: Option<NodeId>,
 }
 
@@ -72,171 +81,38 @@ impl Default for ModestConfig {
             eval_interval: SimTime::from_secs_f64(20.0),
             target_metric: None,
             seed: 42,
-            bandwidth_bps: 50e6,
             fedavg_server: None,
         }
     }
 }
 
-/// Internal DES events.
-enum Event {
-    Deliver { to: NodeId, msg: Msg },
-    SampleTimer { node: NodeId, op: u64 },
-    TrainDone { node: NodeId, seq: u64 },
-    Churn(usize),
-    Probe,
+impl ModestConfig {
+    /// The harness plumbing derived from this config.
+    pub fn harness_config(&self) -> HarnessConfig {
+        HarnessConfig {
+            max_time: self.max_time,
+            max_rounds: self.max_rounds,
+            eval_interval: self.eval_interval,
+            target_metric: self.target_metric,
+            seed: self.seed,
+        }
+    }
 }
 
-/// Liveness status of a simulated node process.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Status {
-    Alive,
-    /// Crashed or left: drops all messages and timers.
-    Dead,
-    /// Scripted to join later; does not exist yet.
-    NotJoined,
-}
-
-pub struct ModestSession {
+/// The MoDeST protocol state machine (drives through [`SimHarness`]).
+pub struct ModestProtocol {
     cfg: ModestConfig,
-    queue: EventQueue<Event>,
     nodes: Vec<ModestNode>,
-    status: Vec<Status>,
-    task: Box<dyn Task>,
-    compute: ComputeModel,
-    latency: LatencyMatrix,
     sizes: SizeModel,
-    traffic: TrafficLedger,
-    churn: ChurnSchedule,
-    rng: SimRng,
     /// Latest aggregated model dispatched by any aggregator.
     latest_global: Model,
     latest_round: Round,
-    metrics: SessionMetrics,
-    /// Ids of the initial population (observers for join traces).
+    /// Size of the initial population (observers for join traces).
     initial_nodes: usize,
     join_watch: Vec<(NodeId, f64)>,
-    done: bool,
 }
 
-impl ModestSession {
-    /// Build a session over `n_initial` pre-registered nodes (everyone knows
-    /// everyone, activity 0) plus whatever the churn script adds later.
-    pub fn new(
-        cfg: ModestConfig,
-        n_initial: usize,
-        task: Box<dyn Task>,
-        compute: ComputeModel,
-        latency: LatencyMatrix,
-        churn: ChurnSchedule,
-    ) -> ModestSession {
-        let mut rng = SimRng::new(cfg.seed ^ 0x6d6f6465_73740001);
-        let max_node = churn
-            .events()
-            .iter()
-            .map(|e| e.node as usize + 1)
-            .max()
-            .unwrap_or(0)
-            .max(n_initial);
-        let mut nodes: Vec<ModestNode> = (0..max_node as NodeId).map(ModestNode::new).collect();
-        let mut status = vec![Status::NotJoined; max_node];
-
-        // Initial population: registered with counter 1, activity 0.
-        for node in nodes.iter_mut().take(n_initial) {
-            node.counter = 1;
-        }
-        for i in 0..n_initial {
-            status[i] = Status::Alive;
-            for j in 0..n_initial {
-                nodes[i]
-                    .view
-                    .registry
-                    .update(j as NodeId, 1, MembershipEvent::Joined);
-                nodes[i].view.activity.update(j as NodeId, 0);
-            }
-        }
-
-        let latest_global = task.init_model();
-        let mut compute = compute;
-        compute.ensure_nodes(max_node, &mut rng);
-
-        ModestSession {
-            cfg,
-            queue: EventQueue::new(),
-            nodes,
-            status,
-            task,
-            compute,
-            latency,
-            sizes: SizeModel::default(),
-            traffic: TrafficLedger::new(max_node),
-            churn,
-            rng,
-            latest_global,
-            latest_round: 0,
-            metrics: SessionMetrics::default(),
-            initial_nodes: n_initial,
-            join_watch: Vec::new(),
-            done: false,
-        }
-    }
-
-    pub fn metrics(&self) -> &SessionMetrics {
-        &self.metrics
-    }
-
-    pub fn traffic(&self) -> &TrafficLedger {
-        &self.traffic
-    }
-
-    pub fn latest_global(&self) -> (&Model, Round) {
-        (&self.latest_global, self.latest_round)
-    }
-
-    // ---------------------------------------------------------------- wiring
-
-    fn is_alive(&self, n: NodeId) -> bool {
-        self.status[n as usize] == Status::Alive
-    }
-
-    /// Account + schedule a message. Self-sends are loopback: no traffic,
-    /// no latency.
-    fn send(&mut self, from: NodeId, to: NodeId, msg: Msg) {
-        if from == to {
-            self.queue.schedule_in(SimTime::ZERO, Event::Deliver { to, msg });
-            return;
-        }
-        let (parts, bytes): (Vec<(MsgKind, u64)>, u64) = match &msg {
-            Msg::Ping { .. } | Msg::Pong { .. } => {
-                let b = self.sizes.ping_bytes();
-                (vec![(MsgKind::Control, b)], b)
-            }
-            Msg::Joined { .. } | Msg::Left { .. } => {
-                let b = self.sizes.membership_bytes();
-                (vec![(MsgKind::Membership, b)], b)
-            }
-            Msg::Train { view, .. } | Msg::Aggregate { view, .. } => {
-                let model_b = self.task.model_bytes();
-                let view_b = view.wire_bytes(&self.sizes);
-                let total = self.sizes.model_transfer_bytes(model_b, 0) + view_b;
-                (
-                    vec![
-                        (MsgKind::ModelPayload, model_b),
-                        (MsgKind::ViewPayload, total - model_b),
-                    ],
-                    total,
-                )
-            }
-        };
-        self.traffic.record_parts(from, to, &parts);
-        // FedAvg server gets unlimited bandwidth (paper §4.3).
-        let unlimited = self.cfg.fedavg_server == Some(from) || self.cfg.fedavg_server == Some(to);
-        let bw = if unlimited { f64::INFINITY } else { self.cfg.bandwidth_bps };
-        let transfer = SimTime::from_secs_f64((bytes as f64 * 8.0 / bw).min(3600.0));
-        let delay = self.latency.one_way(from, to) + transfer;
-        self.queue.schedule_in(delay, Event::Deliver { to, msg });
-    }
-
+impl ModestProtocol {
     fn local_seed(&self, node: NodeId, round: Round) -> u64 {
         self.cfg
             .seed
@@ -245,10 +121,45 @@ impl ModestSession {
             .wrapping_add(round)
     }
 
+    /// Compute the wire parts for `msg` and hand it to the fabric via `ctx`
+    /// (self-sends are loopback: no traffic, no latency).
+    fn send(&self, ctx: &mut Ctx<'_, Msg>, from: NodeId, to: NodeId, msg: Msg) {
+        if from == to {
+            ctx.deliver_local(to, msg);
+            return;
+        }
+        let parts: Vec<(MsgKind, u64)> = match &msg {
+            Msg::Ping { .. } | Msg::Pong { .. } => {
+                vec![(MsgKind::Control, self.sizes.ping_bytes())]
+            }
+            Msg::Joined { .. } | Msg::Left { .. } => {
+                vec![(MsgKind::Membership, self.sizes.membership_bytes())]
+            }
+            Msg::Train { view, .. } | Msg::Aggregate { view, .. } => {
+                let model_b = ctx.task.model_bytes();
+                let view_b = view.wire_bytes(&self.sizes);
+                let total = self.sizes.model_transfer_bytes(model_b, 0) + view_b;
+                vec![
+                    (MsgKind::ModelPayload, model_b),
+                    (MsgKind::ViewPayload, total - model_b),
+                ]
+            }
+        };
+        ctx.send(from, to, &parts, msg);
+    }
+
     // ------------------------------------------------------------- sampling
 
     /// Start `Sample(round, need)` at `node` with the given continuation.
-    fn start_sample(&mut self, node: NodeId, round: Round, need: usize, purpose: Purpose, payload: ModelRef) {
+    fn start_sample(
+        &mut self,
+        ctx: &mut Ctx<'_, Msg>,
+        node: NodeId,
+        round: Round,
+        need: usize,
+        purpose: Purpose,
+        payload: ModelRef,
+    ) {
         // FedAvg emulation: the sample is fixed — aggregator = the server;
         // participants chosen uniformly by the server without pings.
         if let Some(server) = self.cfg.fedavg_server {
@@ -256,7 +167,7 @@ impl ModestSession {
                 Purpose::Aggregators => vec![server],
                 Purpose::Participants => {
                     let alive: Vec<NodeId> = (0..self.nodes.len() as NodeId)
-                        .filter(|&j| self.is_alive(j) && Some(j) != self.cfg.fedavg_server)
+                        .filter(|&j| ctx.is_alive(j) && Some(j) != self.cfg.fedavg_server)
                         .collect();
                     let k = need.min(alive.len());
                     let mut rng = SimRng::new(self.local_seed(node, round) ^ 0xfeda);
@@ -266,7 +177,7 @@ impl ModestSession {
                         .collect()
                 }
             };
-            self.dispatch_payload(node, round, purpose, payload, &targets, SimTime::ZERO, 0);
+            self.dispatch_payload(ctx, node, round, purpose, payload, &targets);
             return;
         }
 
@@ -284,19 +195,19 @@ impl ModestSession {
                 order,
                 next_tail: 0,
                 done: false,
-                started: self.queue.now(),
+                started: ctx.now(),
                 retries: 0,
             };
             n.ops.push(op);
             n.next_op
         };
-        self.pump_sample(node, op_id, true);
+        self.pump_sample(ctx, node, op_id, true);
     }
 
     /// Advance a sampling op: initial parallel pings or the sequential tail.
-    fn pump_sample(&mut self, node: NodeId, op_id: u64, initial: bool) {
+    fn pump_sample(&mut self, ctx: &mut Ctx<'_, Msg>, node: NodeId, op_id: u64, initial: bool) {
         // Completion may already be possible from earlier pongs this round.
-        if self.try_complete(node, op_id) {
+        if self.try_complete(ctx, node, op_id) {
             return;
         }
         let mut pings: Vec<NodeId> = Vec::new();
@@ -335,15 +246,14 @@ impl ModestSession {
             }
         }
         for j in pings {
-            self.send(node, j, Msg::Ping { round, from: node });
+            self.send(ctx, node, j, Msg::Ping { round, from: node });
         }
-        self.queue
-            .schedule_in(self.cfg.dt, Event::SampleTimer { node, op: op_id });
+        ctx.schedule_timer(self.cfg.dt, node, op_id);
     }
 
     /// If the op has enough pongs, dispatch its continuation. Returns true
     /// if completed.
-    fn try_complete(&mut self, node: NodeId, op_id: u64) -> bool {
+    fn try_complete(&mut self, ctx: &mut Ctx<'_, Msg>, node: NodeId, op_id: u64) -> bool {
         let (round, purpose, payload, targets, started, retries) = {
             let n = &mut self.nodes[node as usize];
             let Some(idx) = n.ops.iter().position(|o| o.id == op_id && !o.done) else {
@@ -361,9 +271,8 @@ impl ModestSession {
             op.done = true;
             (op.round, op.purpose, op.payload.clone(), live, op.started, op.retries)
         };
-        self.metrics
-            .record_sample(self.queue.now(), started, round, retries);
-        self.dispatch_payload(node, round, purpose, payload, &targets, started, retries);
+        ctx.record_sample(started, round, retries);
+        self.dispatch_payload(ctx, node, round, purpose, payload, &targets);
         self.nodes[node as usize].gc();
         true
     }
@@ -371,13 +280,12 @@ impl ModestSession {
     /// Send the continuation messages of a completed sample.
     fn dispatch_payload(
         &mut self,
+        ctx: &mut Ctx<'_, Msg>,
         node: NodeId,
         round: Round,
         purpose: Purpose,
         payload: ModelRef,
         targets: &[NodeId],
-        _started: SimTime,
-        _retries: u32,
     ) {
         match purpose {
             Purpose::Aggregators => {
@@ -385,6 +293,7 @@ impl ModestSession {
                 let view = self.nodes[node as usize].view.clone();
                 for &j in targets {
                     self.send(
+                        ctx,
                         node,
                         j,
                         Msg::Aggregate { round, model: payload.clone(), view: view.clone() },
@@ -399,41 +308,97 @@ impl ModestSession {
                     if models.is_empty() {
                         return;
                     }
-                    Arc::new(self.task.aggregate(&models).expect("aggregate"))
+                    Arc::new(ctx.task.aggregate(&models).expect("aggregate"))
                 };
                 self.nodes[node as usize].theta.clear();
                 // Track the freshest global model for evaluation.
                 if round > self.latest_round {
                     self.latest_round = round;
                     self.latest_global = (*avg).clone();
-                    self.metrics.record_round_start(round, self.queue.now());
+                    ctx.record_round_start(round);
                 }
                 let view = self.nodes[node as usize].view.clone();
                 for &j in targets {
-                    self.send(node, j, Msg::Train { round, model: avg.clone(), view: view.clone() });
+                    self.send(
+                        ctx,
+                        node,
+                        j,
+                        Msg::Train { round, model: avg.clone(), view: view.clone() },
+                    );
                 }
                 let _ = payload; // participants' payload slot unused (avg built here)
             }
         }
     }
 
-    // ------------------------------------------------------------- handlers
-
-    fn handle_deliver(&mut self, to: NodeId, msg: Msg) {
-        if !self.is_alive(to) {
-            return; // dropped at a dead/not-yet-joined node
+    /// §3.5 auto-rejoin: a reliable node that has not been activated for
+    /// more than `Δk * Δt̄` (average round time) re-advertises itself, so a
+    /// falsely-suspected node re-enters the candidate set.
+    fn auto_rejoin(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        if self.cfg.fedavg_server.is_some() {
+            return; // FL emulation has no membership protocol
         }
+        let round_time = ctx.metrics.mean_round_time_s().unwrap_or(10.0).max(1.0);
+        let horizon = SimTime::from_secs_f64(self.cfg.dk as f64 * round_time);
+        let now = ctx.now();
+        let mut rejoiners = Vec::new();
+        for i in 0..self.nodes.len() {
+            if !ctx.is_alive(i as NodeId) {
+                continue;
+            }
+            let idle = now.saturating_sub(self.nodes[i].last_active);
+            if idle > horizon {
+                rejoiners.push(i as NodeId);
+            }
+        }
+        for node in rejoiners {
+            let c = {
+                let n = &mut self.nodes[node as usize];
+                n.counter += 1;
+                let c = n.counter;
+                n.view.registry.update(node, c, MembershipEvent::Joined);
+                n.last_active = now; // throttle: try again after another horizon
+                c
+            };
+            let peers = ctx.alive_peers(node);
+            let k = self.cfg.s.min(peers.len());
+            let picks = ctx.rng.sample_indices(peers.len(), k);
+            for p in picks {
+                self.send(ctx, node, peers[p], Msg::Joined { node, counter: c });
+            }
+        }
+    }
+}
+
+impl Protocol for ModestProtocol {
+    type Msg = Msg;
+
+    /// Bootstrap round 1 (Alg. 4 lines 6-8): every node in S^1 starts
+    /// training the initial model.
+    fn bootstrap(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        let init = Arc::new(ctx.task.init_model());
+        // All initial nodes share the same view, so S^1 is consistent.
+        let candidates: Vec<NodeId> = (0..self.initial_nodes as NodeId).collect();
+        let order = candidate_order(1, &candidates);
+        let view = self.nodes[0].view.clone();
+        for &i in order.iter().take(self.cfg.s.min(order.len())) {
+            ctx.deliver_local(i, Msg::Train { round: 1, model: init.clone(), view: view.clone() });
+        }
+        ctx.record_round_start(1);
+    }
+
+    fn on_deliver(&mut self, ctx: &mut Ctx<'_, Msg>, to: NodeId, msg: Msg) {
         match msg {
             Msg::Ping { round, from } => {
                 let act = self.nodes[to as usize].on_ping(round, from);
                 if let NodeAction::SendPong { to: peer, round } = act {
-                    self.send(to, peer, Msg::Pong { round, from: to });
+                    self.send(ctx, to, peer, Msg::Pong { round, from: to });
                 }
             }
             Msg::Pong { round, from } => {
                 let completable = self.nodes[to as usize].on_pong(round, from);
                 for op in completable {
-                    self.try_complete(to, op);
+                    self.try_complete(ctx, to, op);
                 }
             }
             Msg::Joined { node, counter } => {
@@ -443,7 +408,7 @@ impl ModestSession {
                 self.nodes[to as usize].on_membership(node, counter, false);
             }
             Msg::Aggregate { round, model, view } => {
-                self.nodes[to as usize].last_active = self.queue.now();
+                self.nodes[to as usize].last_active = ctx.now();
                 let act = self.nodes[to as usize].on_aggregate(
                     round,
                     model,
@@ -454,249 +419,198 @@ impl ModestSession {
                 if let NodeAction::BeginParticipantSample { round } = act {
                     // Virtual cost of the averaging itself.
                     let k = self.nodes[to as usize].theta.len();
-                    let _cost = self
-                        .compute
-                        .aggregate_time(to, k, self.task.model_bytes());
+                    let _cost = ctx.compute.aggregate_time(to, k, ctx.task.model_bytes());
                     // Aggregator samples the round's participants (Alg. 4 l.19).
                     let dummy = Arc::new(Vec::new());
-                    self.start_sample(to, round, self.cfg.s, Purpose::Participants, dummy);
+                    self.start_sample(ctx, to, round, self.cfg.s, Purpose::Participants, dummy);
                 }
             }
             Msg::Train { round, model, view } => {
-                self.nodes[to as usize].last_active = self.queue.now();
+                self.nodes[to as usize].last_active = ctx.now();
                 let act = self.nodes[to as usize].on_train(round, model, &view);
                 if let NodeAction::BeginTraining { round, seq } = act {
-                    if self.cfg.max_rounds > 0 && round > self.cfg.max_rounds {
-                        self.done = true;
+                    if ctx.round_budget_exceeded(round) {
+                        ctx.finish();
                         return;
                     }
-                    let batches = self.task.batches_per_epoch(to);
-                    let dur = self.compute.train_time(to, batches);
-                    self.queue.schedule_in(dur, Event::TrainDone { node: to, seq });
+                    let batches = ctx.task.batches_per_epoch(to);
+                    let dur = ctx.compute.train_time(to, batches);
+                    ctx.schedule_train_done(dur, to, seq);
                 }
             }
         }
     }
 
-    fn handle_train_done(&mut self, node: NodeId, seq: u64) {
-        if !self.is_alive(node) {
-            return;
-        }
+    fn on_timer(&mut self, ctx: &mut Ctx<'_, Msg>, node: NodeId, id: u64) {
+        self.pump_sample(ctx, node, id, false);
+    }
+
+    fn on_train_done(&mut self, ctx: &mut Ctx<'_, Msg>, node: NodeId, seq: u64) {
         let Some((round, input)) = self.nodes[node as usize].training_valid(seq) else {
             return; // canceled by a newer round
         };
         let seed = self.local_seed(node, round);
-        let (updated, _loss, _batches) = self
-            .task
-            .local_update(&input, node, seed)
-            .expect("local_update");
+        let (updated, _loss, _batches) =
+            ctx.task.local_update(&input, node, seed).expect("local_update");
         self.nodes[node as usize].training = None;
         // Push to the aggregators of round+1 (Alg. 4 lines 33-37).
-        self.start_sample(
-            node,
-            round + 1,
-            self.cfg.a,
-            Purpose::Aggregators,
-            Arc::new(updated),
-        );
+        self.start_sample(ctx, node, round + 1, self.cfg.a, Purpose::Aggregators, Arc::new(updated));
     }
 
-    fn handle_churn(&mut self, idx: usize) {
-        let ev = self.churn.events()[idx];
+    fn on_churn(&mut self, ctx: &mut Ctx<'_, Msg>, ev: ChurnEvent) {
         match ev.kind {
             ChurnKind::Join | ChurnKind::Recover => {
-                let i = ev.node as usize;
-                self.status[i] = Status::Alive;
-                let node = &mut self.nodes[i];
-                node.counter += 1;
-                let c = node.counter;
-                node.view
-                    .registry
-                    .update(ev.node, c, MembershipEvent::Joined);
-                node.view.activity.update(ev.node, 0);
+                let c = {
+                    let node = &mut self.nodes[ev.node as usize];
+                    node.counter += 1;
+                    let c = node.counter;
+                    node.view.registry.update(ev.node, c, MembershipEvent::Joined);
+                    node.view.activity.update(ev.node, 0);
+                    c
+                };
                 // Advertise to s random alive peers (bootstrap set P).
-                let peers: Vec<NodeId> = (0..self.nodes.len() as NodeId)
-                    .filter(|&j| j != ev.node && self.is_alive(j))
-                    .collect();
+                let peers = ctx.alive_peers(ev.node);
                 let k = self.cfg.s.min(peers.len());
-                let picks = self.rng.sample_indices(peers.len(), k);
+                let picks = ctx.rng.sample_indices(peers.len(), k);
                 for p in picks {
-                    self.send(ev.node, peers[p], Msg::Joined { node: ev.node, counter: c });
+                    self.send(ctx, ev.node, peers[p], Msg::Joined { node: ev.node, counter: c });
                 }
-                self.join_watch.push((ev.node, self.queue.now().as_secs_f64()));
-                self.metrics.joins.push(JoinTrace {
+                let now_s = ctx.now().as_secs_f64();
+                self.join_watch.push((ev.node, now_s));
+                ctx.metrics.joins.push(JoinTrace {
                     joiner: ev.node,
-                    joined_at_s: self.queue.now().as_secs_f64(),
+                    joined_at_s: now_s,
                     missing: Vec::new(),
                 });
             }
             ChurnKind::Leave => {
-                let i = ev.node as usize;
-                if self.status[i] != Status::Alive {
-                    return;
-                }
-                let node = &mut self.nodes[i];
-                node.counter += 1;
-                let c = node.counter;
-                node.view.registry.update(ev.node, c, MembershipEvent::Left);
-                let peers: Vec<NodeId> = (0..self.nodes.len() as NodeId)
-                    .filter(|&j| j != ev.node && self.is_alive(j))
-                    .collect();
+                let c = {
+                    let node = &mut self.nodes[ev.node as usize];
+                    node.counter += 1;
+                    let c = node.counter;
+                    node.view.registry.update(ev.node, c, MembershipEvent::Left);
+                    c
+                };
+                let peers = ctx.alive_peers(ev.node);
                 let k = self.cfg.s.min(peers.len());
-                let picks = self.rng.sample_indices(peers.len(), k);
+                let picks = ctx.rng.sample_indices(peers.len(), k);
                 for p in picks {
-                    self.send(ev.node, peers[p], Msg::Left { node: ev.node, counter: c });
+                    self.send(ctx, ev.node, peers[p], Msg::Left { node: ev.node, counter: c });
                 }
-                self.status[i] = Status::Dead;
             }
-            ChurnKind::Crash => {
-                self.status[ev.node as usize] = Status::Dead;
-            }
+            ChurnKind::Crash => {}
         }
     }
 
-    /// §3.5 auto-rejoin: a reliable node that has not been activated for
-    /// more than `Δk * Δt̄` (average round time) re-advertises itself, so a
-    /// falsely-suspected node re-enters the candidate set.
-    fn auto_rejoin(&mut self) {
-        if self.cfg.fedavg_server.is_some() {
-            return; // FL emulation has no membership protocol
-        }
-        let round_time = self.metrics.mean_round_time_s().unwrap_or(10.0).max(1.0);
-        let horizon = SimTime::from_secs_f64(self.cfg.dk as f64 * round_time);
-        let now = self.queue.now();
-        let mut rejoiners = Vec::new();
-        for i in 0..self.nodes.len() {
-            if self.status[i] != Status::Alive {
-                continue;
-            }
-            let idle = now.saturating_sub(self.nodes[i].last_active);
-            if idle > horizon {
-                rejoiners.push(i as NodeId);
-            }
-        }
-        for node in rejoiners {
-            let (c, peers) = {
-                let n = &mut self.nodes[node as usize];
-                n.counter += 1;
-                let c = n.counter;
-                n.view.registry.update(node, c, MembershipEvent::Joined);
-                n.last_active = now; // throttle: try again after another horizon
-                let peers: Vec<NodeId> = (0..self.nodes.len() as NodeId)
-                    .filter(|&j| j != node && self.is_alive(j))
-                    .collect();
-                (c, peers)
-            };
-            let k = self.cfg.s.min(peers.len());
-            for p in self.rng.sample_indices(peers.len(), k) {
-                self.send(node, peers[p], Msg::Joined { node, counter: c });
-            }
-        }
-    }
-
-    fn handle_probe(&mut self) {
-        self.auto_rejoin();
+    fn on_probe(&mut self, ctx: &mut Ctx<'_, Msg>) {
+        self.auto_rejoin(ctx);
         // Join-propagation traces (Fig. 5): count initial-population nodes
         // that still don't know each watched joiner.
-        let now_s = self.queue.now().as_secs_f64();
+        let now_s = ctx.now().as_secs_f64();
         for w in 0..self.join_watch.len() {
             let (joiner, _) = self.join_watch[w];
             let missing = (0..self.initial_nodes)
                 .filter(|&i| {
-                    self.status[i] == Status::Alive
-                        && !self.nodes[i].view.registry.knows(joiner)
+                    ctx.is_alive(i as NodeId) && !self.nodes[i].view.registry.knows(joiner)
                 })
                 .count();
-            if let Some(trace) = self.metrics.joins.iter_mut().find(|t| t.joiner == joiner) {
+            if let Some(trace) = ctx.metrics.joins.iter_mut().find(|t| t.joiner == joiner) {
                 trace.missing.push((now_s, missing));
             }
         }
-        // Convergence curve on the freshest global model.
-        let eval = self
-            .task
-            .evaluate(&self.latest_global)
-            .expect("evaluate");
-        self.metrics.record_eval(
-            self.queue.now(),
-            self.latest_round,
-            eval.metric,
-            eval.loss,
-            0.0,
-        );
-        if let Some(target) = self.cfg.target_metric {
-            let hit = if self.task.metric_is_accuracy() {
-                eval.metric >= target
-            } else {
-                eval.metric <= target
-            };
-            if hit {
-                self.done = true;
+    }
+
+    fn evaluate(&mut self, task: &mut dyn Task) -> Result<EvalPoint> {
+        let e = task.evaluate(&self.latest_global)?;
+        Ok(EvalPoint {
+            round: self.latest_round,
+            metric: e.metric,
+            loss: e.loss,
+            metric_std: 0.0,
+        })
+    }
+
+    fn final_round(&self) -> Round {
+        self.latest_round
+    }
+}
+
+/// Assembly facade: builds a [`ModestProtocol`] and its [`SimHarness`].
+pub struct ModestSession {
+    harness: SimHarness<ModestProtocol>,
+}
+
+impl ModestSession {
+    /// Build a session over `n_initial` pre-registered nodes (everyone knows
+    /// everyone, activity 0) plus whatever the churn script adds later, on
+    /// the given fabric.
+    pub fn new(
+        cfg: ModestConfig,
+        n_initial: usize,
+        task: Box<dyn Task>,
+        compute: ComputeModel,
+        mut fabric: NetworkFabric,
+        churn: ChurnSchedule,
+    ) -> ModestSession {
+        let mut rng = SimRng::new(cfg.seed ^ 0x6d6f6465_73740001);
+        let max_node = churn
+            .events()
+            .iter()
+            .map(|e| e.node as usize + 1)
+            .max()
+            .unwrap_or(0)
+            .max(n_initial);
+        let mut nodes: Vec<ModestNode> = (0..max_node as NodeId).map(ModestNode::new).collect();
+
+        // Initial population: registered with counter 1, activity 0.
+        for node in nodes.iter_mut().take(n_initial) {
+            node.counter = 1;
+        }
+        for i in 0..n_initial {
+            for j in 0..n_initial {
+                nodes[i]
+                    .view
+                    .registry
+                    .update(j as NodeId, 1, MembershipEvent::Joined);
+                nodes[i].view.activity.update(j as NodeId, 0);
             }
+        }
+
+        let latest_global = task.init_model();
+        let mut compute = compute;
+        compute.ensure_nodes(max_node, &mut rng);
+        fabric.ensure_nodes(max_node);
+        if let Some(server) = cfg.fedavg_server {
+            // Paper §4.3: unlimited bandwidth capacity for the aggregator.
+            fabric.set_unlimited(server);
+        }
+
+        let hcfg = cfg.harness_config();
+        let protocol = ModestProtocol {
+            cfg,
+            nodes,
+            sizes: SizeModel::default(),
+            latest_global,
+            latest_round: 0,
+            initial_nodes: n_initial,
+            join_watch: Vec::new(),
+        };
+        ModestSession {
+            harness: SimHarness::new(
+                hcfg, protocol, max_node, n_initial, task, compute, fabric, churn,
+            ),
         }
     }
 
-    // ------------------------------------------------------------------ run
-
-    /// Bootstrap round 1 (Alg. 4 lines 6-8): every node in S^1 starts
-    /// training the initial model.
-    fn bootstrap(&mut self) {
-        let init = Arc::new(self.task.init_model());
-        // All initial nodes share the same view, so S^1 is consistent.
-        let candidates: Vec<NodeId> = (0..self.initial_nodes as NodeId).collect();
-        let order = candidate_order(1, &candidates);
-        let view = self.nodes[0].view.clone();
-        for &i in order.iter().take(self.cfg.s.min(order.len())) {
-            self.queue.schedule_in(
-                SimTime::ZERO,
-                Event::Deliver {
-                    to: i,
-                    msg: Msg::Train { round: 1, model: init.clone(), view: view.clone() },
-                },
-            );
-        }
-        self.metrics.record_round_start(1, SimTime::ZERO);
+    /// The freshest aggregated model and its round.
+    pub fn latest_global(&self) -> (&Model, Round) {
+        let p = self.harness.protocol();
+        (&p.latest_global, p.latest_round)
     }
 
     /// Run to completion; returns the collected metrics.
-    pub fn run(mut self) -> (SessionMetrics, TrafficLedger) {
-        // Schedule churn + probes.
-        for (i, ev) in self.churn.events().iter().enumerate() {
-            self.queue.schedule_at(ev.at, Event::Churn(i));
-        }
-        let mut t = self.cfg.eval_interval;
-        while t <= self.cfg.max_time {
-            self.queue.schedule_at(t, Event::Probe);
-            t = t + self.cfg.eval_interval;
-        }
-        self.bootstrap();
-        // Baseline evaluation of the initial model at t=0.
-        self.handle_probe();
-
-        while let Some((now, ev)) = self.queue.pop() {
-            if now > self.cfg.max_time || self.done {
-                break;
-            }
-            match ev {
-                Event::Deliver { to, msg } => self.handle_deliver(to, msg),
-                Event::SampleTimer { node, op } => {
-                    if self.is_alive(node) {
-                        self.pump_sample(node, op, false);
-                    }
-                }
-                Event::TrainDone { node, seq } => self.handle_train_done(node, seq),
-                Event::Churn(i) => self.handle_churn(i),
-                Event::Probe => self.handle_probe(),
-            }
-        }
-
-        // Always record a terminal evaluation point so short sessions still
-        // produce a curve.
-        self.handle_probe();
-        self.metrics.final_round = self.latest_round;
-        self.metrics.duration_s = self.queue.now().as_secs_f64();
-        self.metrics.events = self.queue.events_processed();
-        self.metrics.traffic = TrafficSummary::from_ledger(&self.traffic, self.nodes.len());
-        (self.metrics, self.traffic)
+    pub fn run(self) -> (SessionMetrics, TrafficLedger) {
+        self.harness.run()
     }
 }
 
@@ -704,15 +618,19 @@ impl ModestSession {
 mod tests {
     use super::*;
     use crate::learning::MockTask;
-    use crate::net::LatencyParams;
+    use crate::net::{BandwidthConfig, LatencyMatrix, LatencyParams};
+
+    fn quick_fabric(n: usize, seed: u64) -> NetworkFabric {
+        let mut rng = SimRng::new(seed);
+        let latency = LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+        NetworkFabric::new(latency, &BandwidthConfig::uniform_mbps(50.0), n, &mut rng.fork("bw"))
+    }
 
     fn quick_session(n: usize, cfg: ModestConfig) -> ModestSession {
-        let mut rng = SimRng::new(cfg.seed);
         let task = MockTask::new(n, 16, 0.5, cfg.seed);
-        let latency =
-            LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
         let compute = ComputeModel::uniform(n, 0.05);
-        ModestSession::new(cfg, n, Box::new(task), compute, latency, ChurnSchedule::empty())
+        let fabric = quick_fabric(n, cfg.seed);
+        ModestSession::new(cfg, n, Box::new(task), compute, fabric, ChurnSchedule::empty())
     }
 
     #[test]
@@ -808,20 +726,13 @@ mod tests {
             max_rounds: 0,
             ..Default::default()
         };
-        let mut rng = SimRng::new(7);
         let task = MockTask::new(12, 16, 0.5, 7);
-        let latency =
-            LatencyMatrix::synthetic(&LatencyParams::default(), 12, &mut rng.fork("lat"));
         let compute = ComputeModel::uniform(12, 0.05);
-        let session =
-            ModestSession::new(cfg, 12, Box::new(task), compute, latency, churn);
+        let fabric = quick_fabric(12, 7);
+        let session = ModestSession::new(cfg, 12, Box::new(task), compute, fabric, churn);
         let (m, _) = session.run();
         // Progress after the crash window (crashes end at t=60).
-        let late_rounds = m
-            .round_starts
-            .iter()
-            .filter(|&&(_, t)| t > 120.0)
-            .count();
+        let late_rounds = m.round_starts.iter().filter(|&&(_, t)| t > 120.0).count();
         assert!(late_rounds > 5, "no progress after crashes: {late_rounds}");
     }
 
@@ -841,12 +752,10 @@ mod tests {
             eval_interval: SimTime::from_secs_f64(5.0),
             ..Default::default()
         };
-        let mut rng = SimRng::new(9);
         let task = MockTask::new(10, 16, 0.5, 9);
-        let latency =
-            LatencyMatrix::synthetic(&LatencyParams::default(), 10, &mut rng.fork("lat"));
         let compute = ComputeModel::uniform(10, 0.05);
-        let session = ModestSession::new(cfg, 8, Box::new(task), compute, latency, churn);
+        let fabric = quick_fabric(10, 9);
+        let session = ModestSession::new(cfg, 8, Box::new(task), compute, fabric, churn);
         let (m, _) = session.run();
         assert_eq!(m.joins.len(), 2);
         for t in &m.joins {

@@ -1,0 +1,488 @@
+//! The network fabric: latency + per-node capacity + FIFO link contention.
+//!
+//! The paper's headline time-to-accuracy numbers come from simulating
+//! *heterogeneous* networks: pairwise WAN latency **and per-node network
+//! capacity** from realistic traces (§4.2). This module composes the
+//! [`LatencyMatrix`], the [`TrafficLedger`], and per-node uplink/downlink
+//! capacities into one [`NetworkFabric`] every protocol session charges its
+//! transfers against.
+//!
+//! Transfers are scheduled through FIFO per-link queues: a node's concurrent
+//! sends serialize on its uplink (and a node's concurrent receives on its
+//! downlink) instead of each being charged the full capacity independently.
+//! This is what makes thin/slow nodes actually inflate round duration — an
+//! aggregator pushing `s` models back-to-back pays `s` transfer times on its
+//! uplink, exactly as a real socket would.
+//!
+//! Capacity model per transfer of `B` bytes from `i` to `j` (pipelined
+//! store-and-forward: each link is occupied at its own rate, the slower
+//! side is the bottleneck, a symmetric-capacity pair charges the transfer
+//! once):
+//!
+//! ```text
+//! up_tx      = 8·B / up(i)                      (sender-uplink occupancy)
+//! down_tx    = 8·B / down(j)                    (receiver-downlink occupancy)
+//! up_start   = max(now, up_free(i))             (FIFO on i's uplink)
+//! up_end     = up_start + up_tx;  up_free(i) = up_end
+//! down_start = max(up_start + latency(i,j), down_free(j))
+//! down_end   = down_start + down_tx;  down_free(j) = down_end
+//! deliver    = max(down_end, up_end + latency(i,j))
+//! ```
+//!
+//! Each link queue advances only by its *own* occupancy (`down_free` by
+//! `down_end`, not by `deliver`), so a slow sender's upload delays its own
+//! delivery but never head-of-line-blocks the receiver's other, faster
+//! incoming transfers.
+//!
+//! Successive occupancy windows on one link never overlap (see
+//! `prop_invariants.rs`), and an unlimited-capacity endpoint (the FedAvg
+//! server override) contributes zero occupancy on its own side while the
+//! finite peer still pays.
+
+use super::latency::LatencyMatrix;
+use super::message::MsgKind;
+use super::traffic::TrafficLedger;
+use crate::sim::{SimRng, SimTime};
+use crate::NodeId;
+
+/// Cap a single transfer's link occupancy (guards degenerate configs, same
+/// bound the pre-fabric sessions used).
+const MAX_TRANSFER_SECS: f64 = 3600.0;
+
+/// One capacity tier of a trace-style bandwidth distribution.
+#[derive(Debug, Clone)]
+pub struct BandwidthClass {
+    /// Relative weight of this tier (need not sum to 1).
+    pub weight: f64,
+    pub up_bps: f64,
+    pub down_bps: f64,
+}
+
+/// How per-node uplink/downlink capacities are assigned.
+///
+/// Replaces the old global scalar `bandwidth_bps`: capacities are per node,
+/// possibly asymmetric, and sampled deterministically from the session seed.
+#[derive(Debug, Clone)]
+pub enum BandwidthConfig {
+    /// Every node gets the same symmetric capacity (the pre-fabric
+    /// behaviour, minus the contention model).
+    Uniform { bps: f64 },
+    /// Symmetric capacities sampled lognormally around `median_bps`
+    /// (factor clamped to [0.1, 10] like the compute-speed model).
+    LogNormal { median_bps: f64, sigma: f64 },
+    /// Weighted capacity tiers — the shape of FCC/speedtest-style traces
+    /// (e.g. fiber / cable / DSL / mobile).
+    Classes(Vec<BandwidthClass>),
+    /// Explicit per-node capacities (trace playback). Nodes beyond the
+    /// vectors reuse the last entry.
+    PerNode { up_bps: Vec<f64>, down_bps: Vec<f64> },
+}
+
+impl BandwidthConfig {
+    pub fn uniform_mbps(mbps: f64) -> BandwidthConfig {
+        BandwidthConfig::Uniform { bps: mbps * 1e6 }
+    }
+
+    /// Capacity of node `idx` under this config, drawing from `rng` where
+    /// the config is stochastic. Callers must invoke this once per node in
+    /// index order for reproducibility.
+    fn sample_one(&self, idx: usize, rng: &mut SimRng) -> (f64, f64) {
+        match self {
+            BandwidthConfig::Uniform { bps } => (*bps, *bps),
+            BandwidthConfig::LogNormal { median_bps, sigma } => {
+                let f = (sigma * rng.next_gaussian()).exp().clamp(0.1, 10.0);
+                let bps = median_bps * f;
+                (bps, bps)
+            }
+            BandwidthConfig::Classes(classes) => {
+                assert!(!classes.is_empty(), "empty bandwidth class list");
+                let total: f64 = classes.iter().map(|c| c.weight).sum();
+                let mut pick = rng.next_f64() * total;
+                for c in classes {
+                    pick -= c.weight;
+                    if pick <= 0.0 {
+                        return (c.up_bps, c.down_bps);
+                    }
+                }
+                let last = classes.last().unwrap();
+                (last.up_bps, last.down_bps)
+            }
+            BandwidthConfig::PerNode { up_bps, down_bps } => {
+                assert!(
+                    !up_bps.is_empty() && !down_bps.is_empty(),
+                    "empty per-node bandwidth vectors"
+                );
+                let up = *up_bps.get(idx).unwrap_or(up_bps.last().unwrap());
+                let down = *down_bps.get(idx).unwrap_or(down_bps.last().unwrap());
+                (up, down)
+            }
+        }
+    }
+}
+
+/// The scheduling outcome of one transfer: when each link was occupied and
+/// when the receiver got the last byte.
+#[derive(Debug, Clone, Copy)]
+pub struct TransferPlan {
+    pub up_start: SimTime,
+    pub up_end: SimTime,
+    pub down_start: SimTime,
+    pub down_end: SimTime,
+    pub delivered: SimTime,
+}
+
+/// Latency matrix + per-node capacities + FIFO link queues + traffic ledger.
+pub struct NetworkFabric {
+    latency: LatencyMatrix,
+    ledger: TrafficLedger,
+    cfg: BandwidthConfig,
+    up_bps: Vec<f64>,
+    down_bps: Vec<f64>,
+    up_free: Vec<SimTime>,
+    down_free: Vec<SimTime>,
+    /// Bytes charged against link capacity (invariant: equals ledger total).
+    charged: u64,
+    /// RNG stream for capacities of nodes joining after construction.
+    growth_rng: SimRng,
+}
+
+impl NetworkFabric {
+    /// Assign capacities to `nodes` nodes from `bw`, deterministically from
+    /// `rng` (fork a labelled stream from the session seed).
+    pub fn new(
+        latency: LatencyMatrix,
+        bw: &BandwidthConfig,
+        nodes: usize,
+        rng: &mut SimRng,
+    ) -> NetworkFabric {
+        let growth_rng = rng.fork("fabric-growth");
+        let mut up_bps = Vec::with_capacity(nodes);
+        let mut down_bps = Vec::with_capacity(nodes);
+        for i in 0..nodes {
+            let (u, d) = bw.sample_one(i, rng);
+            up_bps.push(u);
+            down_bps.push(d);
+        }
+        NetworkFabric {
+            latency,
+            ledger: TrafficLedger::new(nodes),
+            cfg: bw.clone(),
+            up_bps,
+            down_bps,
+            up_free: vec![SimTime::ZERO; nodes],
+            down_free: vec![SimTime::ZERO; nodes],
+            charged: 0,
+            growth_rng,
+        }
+    }
+
+    /// Uniform-capacity convenience constructor (tests, benches).
+    pub fn uniform(latency: LatencyMatrix, bps: f64, nodes: usize) -> NetworkFabric {
+        let mut rng = SimRng::new(0);
+        NetworkFabric::new(latency, &BandwidthConfig::Uniform { bps }, nodes, &mut rng)
+    }
+
+    pub fn nodes(&self) -> usize {
+        self.up_bps.len()
+    }
+
+    pub fn up_bps(&self, node: NodeId) -> f64 {
+        self.up_bps[node as usize]
+    }
+
+    pub fn down_bps(&self, node: NodeId) -> f64 {
+        self.down_bps[node as usize]
+    }
+
+    /// Per-node capacity override: unlimited up/down. This is how the
+    /// FedAvg emulation grants its server "unlimited bandwidth capacity"
+    /// (paper §4.3) — an override, not a protocol special case.
+    pub fn set_unlimited(&mut self, node: NodeId) {
+        self.ensure_nodes(node as usize + 1);
+        self.up_bps[node as usize] = f64::INFINITY;
+        self.down_bps[node as usize] = f64::INFINITY;
+    }
+
+    /// Grow capacity tables (and the ledger) when churn introduces nodes
+    /// beyond the initial population. Steady-state cost is one comparison.
+    pub fn ensure_nodes(&mut self, nodes: usize) {
+        if nodes <= self.up_bps.len() {
+            return;
+        }
+        while self.up_bps.len() < nodes {
+            let idx = self.up_bps.len();
+            let (u, d) = self.cfg.sample_one(idx, &mut self.growth_rng);
+            self.up_bps.push(u);
+            self.down_bps.push(d);
+            self.up_free.push(SimTime::ZERO);
+            self.down_free.push(SimTime::ZERO);
+        }
+        self.ledger.ensure_nodes(nodes);
+    }
+
+    pub fn latency(&self) -> &LatencyMatrix {
+        &self.latency
+    }
+
+    pub fn one_way(&self, a: NodeId, b: NodeId) -> SimTime {
+        self.latency.one_way(a, b)
+    }
+
+    pub fn ledger(&self) -> &TrafficLedger {
+        &self.ledger
+    }
+
+    pub fn into_ledger(self) -> TrafficLedger {
+        self.ledger
+    }
+
+    /// Total bytes scheduled through link capacity so far.
+    pub fn charged_bytes(&self) -> u64 {
+        self.charged
+    }
+
+    fn tx_time(bytes: u64, bps: f64) -> SimTime {
+        if !bps.is_finite() {
+            return SimTime::ZERO; // unlimited capacity: zero occupancy
+        }
+        if bps <= 0.0 {
+            // A dead link in a trace is the slowest node, not a teleporter.
+            return SimTime::from_secs_f64(MAX_TRANSFER_SECS);
+        }
+        SimTime::from_secs_f64(((bytes as f64 * 8.0) / bps).min(MAX_TRANSFER_SECS))
+    }
+
+    /// Schedule `bytes` from `from` to `to` starting no earlier than `now`,
+    /// advancing both FIFO link queues. An unlimited-capacity side (the
+    /// FedAvg server override) has zero occupancy: it neither waits on nor
+    /// advances its queue, so its transfers overlap freely. Pure capacity
+    /// accounting — the ledger is only touched by
+    /// [`NetworkFabric::transfer`].
+    pub fn plan(&mut self, now: SimTime, from: NodeId, to: NodeId, bytes: u64) -> TransferPlan {
+        self.ensure_nodes(from.max(to) as usize + 1);
+        let (f, t) = (from as usize, to as usize);
+        let up_limited = self.up_bps[f].is_finite();
+        let down_limited = self.down_bps[t].is_finite();
+        let up_tx = Self::tx_time(bytes, self.up_bps[f]);
+        let down_tx = Self::tx_time(bytes, self.down_bps[t]);
+        let up_start = if up_limited { now.max(self.up_free[f]) } else { now };
+        let up_end = up_start + up_tx;
+        if up_limited {
+            self.up_free[f] = up_end;
+        }
+        let lat = self.latency.one_way(from, to);
+        let arrival = up_start + lat;
+        let down_start = if down_limited { arrival.max(self.down_free[t]) } else { arrival };
+        let down_end = down_start + down_tx;
+        let delivered = down_end.max(up_end + lat);
+        if down_limited {
+            // Advance the downlink only by its own occupancy: a slow
+            // sender's upload must not head-of-line-block other receives.
+            self.down_free[t] = down_end;
+        }
+        self.charged += bytes;
+        TransferPlan { up_start, up_end, down_start, down_end, delivered }
+    }
+
+    /// Account `parts` in the ledger and schedule the transfer; returns the
+    /// absolute virtual time of delivery.
+    pub fn transfer(
+        &mut self,
+        now: SimTime,
+        from: NodeId,
+        to: NodeId,
+        parts: &[(MsgKind, u64)],
+    ) -> SimTime {
+        let bytes: u64 = parts.iter().map(|(_, b)| b).sum();
+        // plan() grows fabric + ledger tables; record_parts then only pays
+        // a cheap length check.
+        let plan = self.plan(now, from, to, bytes);
+        self.ledger.record_parts(from, to, parts);
+        plan.delivered
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_fabric(nodes: usize, bps: f64) -> NetworkFabric {
+        let latency = LatencyMatrix::uniform(nodes, SimTime::from_millis(10));
+        NetworkFabric::uniform(latency, bps, nodes)
+    }
+
+    #[test]
+    fn single_transfer_is_latency_plus_tx() {
+        let mut f = flat_fabric(4, 1e6); // 1 Mbit/s
+        // 12_500 bytes = 100_000 bits -> 0.1 s at 1 Mbit/s.
+        let p = f.plan(SimTime::ZERO, 0, 1, 12_500);
+        assert_eq!(p.up_start, SimTime::ZERO);
+        assert_eq!(p.up_end, SimTime::from_millis(100));
+        assert_eq!(p.delivered, SimTime::from_millis(110));
+    }
+
+    #[test]
+    fn concurrent_sends_serialize_on_uplink() {
+        let mut f = flat_fabric(4, 1e6);
+        let a = f.plan(SimTime::ZERO, 0, 1, 12_500);
+        let b = f.plan(SimTime::ZERO, 0, 2, 12_500);
+        // Second transfer queues behind the first on node 0's uplink.
+        assert_eq!(b.up_start, a.up_end);
+        assert_eq!(b.delivered, SimTime::from_millis(210));
+    }
+
+    #[test]
+    fn concurrent_receives_serialize_on_downlink() {
+        let mut f = flat_fabric(4, 1e6);
+        let a = f.plan(SimTime::ZERO, 1, 0, 12_500);
+        let b = f.plan(SimTime::ZERO, 2, 0, 12_500);
+        assert_eq!(a.delivered, SimTime::from_millis(110));
+        // b's downlink window starts only after a's ends.
+        assert_eq!(b.delivered, SimTime::from_millis(210));
+    }
+
+    #[test]
+    fn bottleneck_is_min_of_up_and_down() {
+        let latency = LatencyMatrix::uniform(2, SimTime::ZERO);
+        let bw = BandwidthConfig::PerNode {
+            up_bps: vec![8e6, 1e6],
+            down_bps: vec![1e6, 2e6],
+        };
+        let mut rng = SimRng::new(1);
+        let mut f = NetworkFabric::new(latency, &bw, 2, &mut rng);
+        // 0 -> 1: min(up0=8M, down1=2M) = 2M -> 1 MB takes 4 s.
+        let p = f.plan(SimTime::ZERO, 0, 1, 1_000_000);
+        assert_eq!(p.delivered, SimTime::from_secs_f64(4.0));
+    }
+
+    #[test]
+    fn slow_sender_does_not_block_other_receives() {
+        // Receiver 0 has a fast downlink; sender 1 a 10x-thinner uplink.
+        let latency = LatencyMatrix::uniform(3, SimTime::ZERO);
+        let bw = BandwidthConfig::PerNode {
+            up_bps: vec![1e6, 1e5, 1e6],
+            down_bps: vec![1e6; 3],
+        };
+        let mut rng = SimRng::new(5);
+        let mut f = NetworkFabric::new(latency, &bw, 3, &mut rng);
+        // Thin sender 1 starts a 1 Mbit upload: its uplink is busy 10 s,
+        // but the receiver's downlink is only occupied 1 s.
+        let a = f.plan(SimTime::ZERO, 1, 0, 125_000);
+        assert_eq!(a.delivered, SimTime::from_secs_f64(10.0));
+        assert_eq!(a.down_end, SimTime::from_secs_f64(1.0));
+        // A fast sender arrives at ~2 s — not queued behind the slow
+        // sender's whole upload.
+        let b = f.plan(SimTime::from_secs_f64(0.5), 2, 0, 125_000);
+        assert_eq!(b.delivered, SimTime::from_secs_f64(2.0));
+    }
+
+    #[test]
+    fn zero_capacity_stalls_instead_of_teleporting() {
+        // A 0 bps trace entry (dead link) pays the max-transfer cap; it
+        // must not be mistaken for unlimited capacity.
+        let latency = LatencyMatrix::uniform(2, SimTime::ZERO);
+        let bw = BandwidthConfig::PerNode { up_bps: vec![0.0, 1e6], down_bps: vec![1e6, 1e6] };
+        let mut rng = SimRng::new(1);
+        let mut f = NetworkFabric::new(latency, &bw, 2, &mut rng);
+        let p = f.plan(SimTime::ZERO, 0, 1, 100);
+        assert_eq!(p.delivered, SimTime::from_secs_f64(3600.0));
+    }
+
+    #[test]
+    fn unlimited_override_removes_tx_time() {
+        let mut f = flat_fabric(3, 1e3); // pathologically thin
+        f.set_unlimited(0);
+        f.set_unlimited(1);
+        let p = f.plan(SimTime::ZERO, 0, 1, 10_000_000);
+        assert_eq!(p.delivered, SimTime::from_millis(10)); // latency only
+    }
+
+    #[test]
+    fn unlimited_receiver_does_not_serialize_receives() {
+        // A slow client mid-upload must not head-of-line-block a fast
+        // client's upload to an unlimited-capacity server (§4.3 FedAvg).
+        let mut f = flat_fabric(3, 1e6);
+        f.set_unlimited(0);
+        let a = f.plan(SimTime::ZERO, 1, 0, 12_500); // 100ms uplink tx
+        let b = f.plan(SimTime::from_millis(1), 2, 0, 12_500);
+        assert_eq!(a.delivered, SimTime::from_millis(110));
+        // b overlaps a at the server instead of queueing behind it.
+        assert_eq!(b.delivered, SimTime::from_millis(111));
+    }
+
+    #[test]
+    fn unlimited_sender_does_not_serialize_sends() {
+        let mut f = flat_fabric(4, 1e6);
+        f.set_unlimited(0);
+        let a = f.plan(SimTime::ZERO, 0, 1, 12_500);
+        let b = f.plan(SimTime::ZERO, 0, 2, 12_500);
+        // Both pushes are gated only by each receiver's downlink.
+        assert_eq!(a.delivered, SimTime::from_millis(110));
+        assert_eq!(b.delivered, SimTime::from_millis(110));
+    }
+
+    #[test]
+    fn transfer_records_ledger_and_charges_equally() {
+        let mut f = flat_fabric(3, 1e6);
+        f.transfer(SimTime::ZERO, 0, 1, &[(MsgKind::ModelPayload, 900), (MsgKind::Control, 100)]);
+        f.transfer(SimTime::ZERO, 1, 2, &[(MsgKind::Control, 50)]);
+        assert_eq!(f.ledger().total(), 1050);
+        assert_eq!(f.charged_bytes(), 1050);
+        assert!(f.ledger().is_conserved());
+    }
+
+    #[test]
+    fn ensure_nodes_samples_capacity_for_joiners() {
+        let latency = LatencyMatrix::uniform(8, SimTime::ZERO);
+        let bw = BandwidthConfig::LogNormal { median_bps: 10e6, sigma: 0.5 };
+        let mut rng = SimRng::new(7);
+        let mut f = NetworkFabric::new(latency, &bw, 2, &mut rng);
+        f.ensure_nodes(6);
+        assert_eq!(f.nodes(), 6);
+        for n in 0..6u32 {
+            assert!(f.up_bps(n) >= 1e6 && f.up_bps(n) <= 100e6, "{}", f.up_bps(n));
+        }
+    }
+
+    #[test]
+    fn lognormal_spreads_capacities() {
+        let latency = LatencyMatrix::uniform(64, SimTime::ZERO);
+        let bw = BandwidthConfig::LogNormal { median_bps: 10e6, sigma: 0.6 };
+        let mut rng = SimRng::new(3);
+        let f = NetworkFabric::new(latency, &bw, 64, &mut rng);
+        let min = (0..64u32).map(|n| f.up_bps(n)).fold(f64::MAX, f64::min);
+        let max = (0..64u32).map(|n| f.up_bps(n)).fold(0.0f64, f64::max);
+        assert!(max / min > 2.0, "no spread: {min}..{max}");
+    }
+
+    #[test]
+    fn classes_pick_among_tiers() {
+        let latency = LatencyMatrix::uniform(32, SimTime::ZERO);
+        let bw = BandwidthConfig::Classes(vec![
+            BandwidthClass { weight: 1.0, up_bps: 5e6, down_bps: 20e6 },
+            BandwidthClass { weight: 1.0, up_bps: 50e6, down_bps: 100e6 },
+        ]);
+        let mut rng = SimRng::new(11);
+        let f = NetworkFabric::new(latency, &bw, 32, &mut rng);
+        let slow = (0..32u32).filter(|&n| f.up_bps(n) == 5e6).count();
+        let fast = (0..32u32).filter(|&n| f.up_bps(n) == 50e6).count();
+        assert_eq!(slow + fast, 32);
+        assert!(slow > 0 && fast > 0, "{slow} slow / {fast} fast");
+    }
+
+    #[test]
+    fn deterministic_given_rng_seed() {
+        let bw = BandwidthConfig::LogNormal { median_bps: 10e6, sigma: 0.4 };
+        let build = || {
+            let latency = LatencyMatrix::uniform(16, SimTime::ZERO);
+            let mut rng = SimRng::new(42);
+            NetworkFabric::new(latency, &bw, 16, &mut rng)
+        };
+        let a = build();
+        let b = build();
+        for n in 0..16u32 {
+            assert_eq!(a.up_bps(n), b.up_bps(n));
+            assert_eq!(a.down_bps(n), b.down_bps(n));
+        }
+    }
+}

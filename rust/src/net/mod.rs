@@ -1,17 +1,21 @@
-//! WAN network substrate: latency matrix, transfer-time model, and per-node
-//! traffic accounting.
+//! WAN network substrate: latency matrix, contended per-node bandwidth,
+//! transfer scheduling, and per-node traffic accounting.
 //!
 //! The paper delays application-layer traffic with RTTs measured between 227
-//! WonderNetwork cities and assigns nodes to cities round-robin (§4.2). We
-//! reproduce the structure with a seeded synthetic geography (cities on a
-//! sphere, great-circle propagation delay at fiber speed + jitter) so the
-//! matrix is reproducible from the session seed — see DESIGN.md §3 for the
-//! substitution argument.
+//! WonderNetwork cities, assigns nodes to cities round-robin, and charges
+//! transfers against per-node network capacities from realistic traces
+//! (§4.2). We reproduce the structure with a seeded synthetic geography
+//! ([`latency`]), a per-node uplink/downlink capacity model with FIFO link
+//! contention ([`fabric`]), a wire-size model ([`message`]), and per-node
+//! traffic accounting ([`traffic`]) — all reproducible from the session
+//! seed. See DESIGN.md §3 for the substitution argument.
 
+pub mod fabric;
 pub mod latency;
 pub mod message;
 pub mod traffic;
 
+pub use fabric::{BandwidthClass, BandwidthConfig, NetworkFabric, TransferPlan};
 pub use latency::{LatencyMatrix, LatencyParams};
 pub use message::{MsgKind, SizeModel};
 pub use traffic::TrafficLedger;

@@ -45,7 +45,14 @@ impl TrafficLedger {
     }
 
     /// Record one message of `bytes` split across `parts` kind classes.
+    ///
+    /// An empty `parts` slice is a no-op: nothing was transferred, so no
+    /// message is counted (callers composing part lists dynamically may
+    /// legitimately end up with none).
     pub fn record_parts(&mut self, from: NodeId, to: NodeId, parts: &[(MsgKind, u64)]) {
+        if parts.is_empty() {
+            return;
+        }
         let total: u64 = parts.iter().map(|(_, b)| b).sum();
         self.ensure_nodes((from.max(to) + 1) as usize);
         self.sent[from as usize] += total;
@@ -179,6 +186,44 @@ mod tests {
         let mut t = TrafficLedger::new(2);
         t.record(0, 9, MsgKind::Membership, 10);
         assert_eq!(t.node_usage(9), 10);
+    }
+
+    #[test]
+    fn empty_parts_is_a_noop() {
+        let mut t = TrafficLedger::new(2);
+        t.record_parts(0, 1, &[]);
+        assert_eq!(t.messages(), 0);
+        assert_eq!(t.total(), 0);
+        assert_eq!(t.node_usage(0), 0);
+        assert!(t.is_conserved());
+    }
+
+    #[test]
+    fn ensure_nodes_grows_and_is_idempotent() {
+        let mut t = TrafficLedger::new(2);
+        t.ensure_nodes(5);
+        assert_eq!(t.node_usage(4), 0);
+        t.record(4, 1, MsgKind::Control, 7);
+        // Shrinking requests are ignored; existing counters survive growth.
+        t.ensure_nodes(3);
+        t.ensure_nodes(8);
+        assert_eq!(t.node_usage(4), 7);
+        assert_eq!(t.node_usage(7), 0);
+        assert!(t.is_conserved());
+    }
+
+    #[test]
+    fn late_join_growth_via_record() {
+        // A node that joins mid-session and immediately sends: both sides
+        // of the ledger must grow together (mirrors churn-scripted joins).
+        let mut t = TrafficLedger::new(3);
+        t.record(7, 0, MsgKind::Membership, 25);
+        t.record(1, 7, MsgKind::ModelPayload, 500);
+        assert_eq!(t.node_usage(7), 525);
+        assert_eq!(t.total(), 525);
+        assert!(t.is_conserved());
+        let (min, max) = t.min_max_usage(8);
+        assert!(min > 0 && max >= min);
     }
 
     #[test]

@@ -6,9 +6,23 @@
 //! text parser reassigns ids); here we parse, compile once per variant on
 //! the PJRT CPU client, and execute with flat `Vec<f32>` models. Python is
 //! never on the round path.
+//!
+//! The PJRT engine is gated behind the off-by-default `xla` cargo feature
+//! so the simulator, protocols, and experiments build without native deps.
+//! Without the feature, [`stub::XlaRuntime`] keeps every signature
+//! compiling and fails with a clear error at load time; the manifest
+//! parser ([`manifest`]) is pure rust and always available.
 
-pub mod engine;
 pub mod manifest;
 
+#[cfg(feature = "xla")]
+pub mod engine;
+#[cfg(feature = "xla")]
 pub use engine::{Batch, EvalOut, TrainOut, VariantRuntime, XlaRuntime};
+
+#[cfg(not(feature = "xla"))]
+mod stub;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaRuntime;
+
 pub use manifest::{IoSpec, Manifest, VariantManifest};

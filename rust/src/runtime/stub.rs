@@ -1,0 +1,34 @@
+//! Stub runtime for builds without the `xla` feature.
+//!
+//! Keeps every `Option<&XlaRuntime>`-shaped signature across the config,
+//! experiment, bench, and example layers compiling; loading always fails
+//! with an actionable error, so artifact-backed datasets are rejected at
+//! runtime while the mock task and the whole simulator remain usable.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::manifest::Manifest;
+
+/// Placeholder for the PJRT runtime (enable the `xla` feature for the real
+/// one).
+pub struct XlaRuntime {
+    manifest: Manifest,
+}
+
+impl XlaRuntime {
+    /// Always fails: this build has no PJRT engine.
+    pub fn load(dir: impl AsRef<Path>) -> Result<XlaRuntime> {
+        anyhow::bail!(
+            "cannot load artifacts from {:?}: modest-dl was built without the \
+             `xla` feature (rebuild with `--features xla` and the `xla` PJRT \
+             dependency enabled in Cargo.toml, or run with --mock)",
+            dir.as_ref()
+        )
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+}

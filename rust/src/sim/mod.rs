@@ -3,14 +3,18 @@
 //! The paper evaluates MoDeST by *simulating the passing of time* on top of
 //! a customized asyncio event loop (§4.2); this module is the rust
 //! equivalent: a virtual clock, a monotone event queue with deterministic
-//! tie-breaking, a seeded RNG, and churn (join/crash) schedule generators.
+//! tie-breaking, a seeded RNG, churn (join/crash) schedule generators, and
+//! — tying them together — the generic [`harness::SimHarness`] that drives
+//! any [`harness::Protocol`] over the shared substrate.
 
 pub mod churn;
 pub mod engine;
+pub mod harness;
 pub mod rng;
 pub mod time;
 
 pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 pub use engine::{EventQueue, ScheduledEvent};
+pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness, Status};
 pub use rng::SimRng;
 pub use time::SimTime;

@@ -1,0 +1,153 @@
+//! Integration tests for the network fabric + harness refactor: uniform
+//! capacity reproduces the seed behaviour, heterogeneous/thin uplinks
+//! measurably stretch rounds, and full sessions stay deterministic and
+//! byte-conserving on the shared `SimHarness`.
+
+use modest_dl::baselines::{DsgdConfig, DsgdSession};
+use modest_dl::learning::{ComputeModel, MockTask};
+use modest_dl::modest::{ModestConfig, ModestSession};
+use modest_dl::net::{BandwidthConfig, LatencyMatrix, LatencyParams, NetworkFabric};
+use modest_dl::sim::{ChurnSchedule, SimRng, SimTime};
+
+const SEED: u64 = 42;
+
+fn fabric_with(n: usize, bw: &BandwidthConfig) -> NetworkFabric {
+    let mut rng = SimRng::new(SEED);
+    let latency = LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+    NetworkFabric::new(latency, bw, n, &mut rng.fork("bw"))
+}
+
+fn modest_session(n: usize, bw: &BandwidthConfig) -> ModestSession {
+    let cfg = ModestConfig {
+        s: 4,
+        a: 2,
+        sf: 1.0,
+        max_time: SimTime::from_secs_f64(400.0),
+        max_rounds: 40,
+        eval_interval: SimTime::from_secs_f64(5.0),
+        seed: SEED,
+        ..Default::default()
+    };
+    let task = MockTask::new(n, 16, 0.5, SEED);
+    let compute = ComputeModel::uniform(n, 0.05);
+    ModestSession::new(cfg, n, Box::new(task), compute, fabric_with(n, bw), ChurnSchedule::empty())
+}
+
+fn dsgd_session(n: usize, bw: &BandwidthConfig) -> DsgdSession {
+    let cfg = DsgdConfig {
+        max_time: SimTime::from_secs_f64(400.0),
+        max_rounds: 30,
+        eval_interval: SimTime::from_secs_f64(5.0),
+        seed: SEED,
+        ..Default::default()
+    };
+    let task = MockTask::new(n, 16, 0.5, SEED);
+    let compute = ComputeModel::uniform(n, 0.05);
+    DsgdSession::new(cfg, n, Box::new(task), compute, fabric_with(n, bw))
+}
+
+/// Acceptance: a fast uniform fabric vs one with 10x-thinner uplinks —
+/// the thin uplinks must measurably lengthen round duration, because the
+/// fabric serializes each aggregator's `s` model pushes on its uplink.
+#[test]
+fn thin_uplinks_lengthen_rounds() {
+    // Capacities low enough that model transfers are on the round's
+    // critical path for the mock task (~900-byte train/aggregate messages).
+    let fast = BandwidthConfig::Uniform { bps: 400_000.0 };
+    // Same downlinks, uplinks 10x thinner.
+    let thin = BandwidthConfig::PerNode {
+        up_bps: vec![40_000.0; 16],
+        down_bps: vec![400_000.0; 16],
+    };
+    let (m_fast, _) = modest_session(16, &fast).run();
+    let (m_thin, _) = modest_session(16, &thin).run();
+    let rt_fast = m_fast.mean_round_time_s().expect("fast rounds");
+    let rt_thin = m_thin.mean_round_time_s().expect("thin rounds");
+    assert!(
+        rt_thin > 1.15 * rt_fast,
+        "10x-thinner uplinks did not stretch rounds: fast {rt_fast:.3}s vs thin {rt_thin:.3}s"
+    );
+}
+
+/// Acceptance: the uniform default capacity reproduces the seed session's
+/// qualitative metrics (rounds made, convergence, byte conservation).
+#[test]
+fn uniform_fabric_reproduces_seed_equivalent_metrics() {
+    let bw = BandwidthConfig::uniform_mbps(50.0);
+    let (m, traffic) = modest_session(16, &bw).run();
+    assert!(m.final_round >= 20, "only reached round {}", m.final_round);
+    assert!(m.best_metric(true).unwrap() > 0.8, "best {:?}", m.best_metric(true));
+    assert!(traffic.is_conserved());
+    assert!(traffic.total() > 0);
+    // At 50 Mbit/s the mock task's transfers are microseconds: contention
+    // must not distort sampling (seed invariant: one ping wave << Δt).
+    for s in &m.samples {
+        assert!(s.duration_s < 2.0, "sample took {}s", s.duration_s);
+    }
+
+    let (m_dl, t_dl) = dsgd_session(8, &bw).run();
+    assert!(m_dl.final_round >= 25, "dsgd round {}", m_dl.final_round);
+    assert!(t_dl.is_conserved());
+}
+
+/// Two `SimHarness` runs with the same seed produce identical
+/// `SessionMetrics` — for both MoDeST and D-SGD, on a heterogeneous fabric.
+#[test]
+fn harness_runs_are_deterministic_for_both_protocols() {
+    let bw = BandwidthConfig::LogNormal { median_bps: 5e6, sigma: 0.5 };
+
+    let fingerprint_md = || {
+        let (m, t) = modest_session(12, &bw).run();
+        (
+            m.final_round,
+            m.events,
+            m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect::<Vec<_>>(),
+            m.round_starts.clone(),
+            m.samples.len(),
+            t.total(),
+            t.messages(),
+        )
+    };
+    assert_eq!(fingerprint_md(), fingerprint_md(), "MoDeST not deterministic");
+
+    let fingerprint_dl = || {
+        let (m, t) = dsgd_session(8, &bw).run();
+        (
+            m.final_round,
+            m.events,
+            m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect::<Vec<_>>(),
+            m.round_starts.clone(),
+            t.total(),
+            t.messages(),
+        )
+    };
+    assert_eq!(fingerprint_dl(), fingerprint_dl(), "D-SGD not deterministic");
+}
+
+/// The FedAvg emulation's server override survives the fabric refactor:
+/// traffic still concentrates on the server, and thin *client* uplinks do
+/// not deadlock the star topology.
+#[test]
+fn fedavg_server_override_on_thin_fabric() {
+    let n = 12;
+    let cfg = ModestConfig {
+        s: 4,
+        a: 1,
+        sf: 1.0,
+        fedavg_server: Some(0),
+        max_time: SimTime::from_secs_f64(400.0),
+        max_rounds: 20,
+        seed: SEED,
+        ..Default::default()
+    };
+    let task = MockTask::new(n, 16, 0.5, SEED);
+    let compute = ComputeModel::uniform(n, 0.05);
+    let bw = BandwidthConfig::Uniform { bps: 200_000.0 };
+    let session =
+        ModestSession::new(cfg, n, Box::new(task), compute, fabric_with(n, &bw), ChurnSchedule::empty());
+    let (m, traffic) = session.run();
+    assert!(m.final_round >= 8, "round {}", m.final_round);
+    let server = traffic.node_usage(0);
+    let max_other = (1..n as u32).map(|i| traffic.node_usage(i)).max().unwrap();
+    assert!(server > 2 * max_other, "server {server} vs {max_other}");
+}

@@ -1,7 +1,9 @@
 //! Integration tests over the real PJRT runtime + AOT artifacts.
 //!
-//! These need `make artifacts` to have run (they are skipped with a clear
-//! message otherwise, so `cargo test` works on a fresh checkout too).
+//! These need the `xla` cargo feature plus `make artifacts` to have run
+//! (they are skipped with a clear message otherwise, so `cargo test` works
+//! on a fresh checkout too).
+#![cfg(feature = "xla")]
 
 use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::learning::{Task, TaskData, XlaTask};

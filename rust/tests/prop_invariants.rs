@@ -8,6 +8,7 @@
 use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::{candidate_order, sample_hash};
 use modest_dl::modest::{ActivityClock, Registry, View};
+use modest_dl::net::{BandwidthConfig, LatencyMatrix, MsgKind, NetworkFabric};
 use modest_dl::sim::{EventQueue, SimRng, SimTime};
 use modest_dl::NodeId;
 
@@ -243,6 +244,107 @@ fn prop_event_queue_total_order() {
             count += 1;
         }
         assert_eq!(count, 100);
+    }
+}
+
+// ------------------------------------------------------------------ fabric
+
+fn random_fabric(rng: &mut SimRng, nodes: usize) -> NetworkFabric {
+    let bw = match rng.gen_range(3) {
+        0 => BandwidthConfig::Uniform { bps: 1e4 + rng.next_f64() * 1e6 },
+        1 => BandwidthConfig::LogNormal {
+            median_bps: 1e5 + rng.next_f64() * 1e6,
+            sigma: 0.2 + rng.next_f64(),
+        },
+        _ => BandwidthConfig::PerNode {
+            up_bps: (0..nodes).map(|_| 1e4 + rng.next_f64() * 1e6).collect(),
+            down_bps: (0..nodes).map(|_| 1e4 + rng.next_f64() * 1e6).collect(),
+        },
+    };
+    let latency = LatencyMatrix::uniform(nodes, SimTime::from_millis(rng.gen_range(50) + 1));
+    NetworkFabric::new(latency, &bw, nodes, rng)
+}
+
+#[test]
+fn prop_fabric_uplink_fifo_never_overlaps() {
+    // Random transfer schedules: the uplink occupancy windows of any one
+    // sender must be non-overlapping and in schedule order, and delivery
+    // on any one downlink must be serialized too.
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0xfab1);
+        let nodes = 3 + rng.gen_range(8) as usize;
+        let mut fabric = random_fabric(&mut rng, nodes);
+        let mut now = SimTime::ZERO;
+        // Every occupancy window per link, for the overlap checks.
+        let mut windows: Vec<Vec<(SimTime, SimTime)>> = vec![Vec::new(); nodes];
+        let mut deliver_windows: Vec<Vec<(SimTime, SimTime)>> = vec![Vec::new(); nodes];
+        for _ in 0..60 {
+            now += SimTime::from_micros(rng.gen_range(200_000));
+            let from = rng.gen_range(nodes as u64) as NodeId;
+            let mut to = rng.gen_range(nodes as u64) as NodeId;
+            if to == from {
+                to = (to + 1) % nodes as NodeId;
+            }
+            let bytes = 100 + rng.gen_range(1_000_000);
+            let plan = fabric.plan(now, from, to, bytes);
+            assert!(plan.up_start >= now, "seed {seed}");
+            assert!(plan.up_end >= plan.up_start, "seed {seed}");
+            assert!(plan.down_end >= plan.down_start, "seed {seed}");
+            assert!(plan.delivered >= plan.down_end, "seed {seed}");
+            assert!(plan.delivered >= plan.up_end, "seed {seed}");
+            // Uplink FIFO: the new window starts at/after every prior end.
+            for &(_, prev_end) in &windows[from as usize] {
+                assert!(
+                    plan.up_start >= prev_end,
+                    "seed {seed}: uplink windows overlap ({prev_end:?} vs {:?})",
+                    plan.up_start
+                );
+            }
+            windows[from as usize].push((plan.up_start, plan.up_end));
+            // Downlink FIFO: occupancy windows [down_start, down_end] on
+            // one downlink never overlap.
+            for &(_, prev_end) in &deliver_windows[to as usize] {
+                assert!(
+                    plan.down_start >= prev_end,
+                    "seed {seed}: downlink windows overlap"
+                );
+            }
+            deliver_windows[to as usize].push((plan.down_start, plan.down_end));
+        }
+    }
+}
+
+#[test]
+fn prop_fabric_charged_bytes_equal_ledger_bytes() {
+    // Every byte scheduled through link capacity must appear in the ledger
+    // exactly once (and be conserved between senders and receivers).
+    for seed in 0..CASES {
+        let mut rng = SimRng::new(seed ^ 0xfab2);
+        let nodes = 2 + rng.gen_range(6) as usize;
+        let mut fabric = random_fabric(&mut rng, nodes);
+        let mut expected = 0u64;
+        let mut now = SimTime::ZERO;
+        for _ in 0..40 {
+            now += SimTime::from_micros(rng.gen_range(100_000));
+            let from = rng.gen_range(nodes as u64) as NodeId;
+            let mut to = rng.gen_range(nodes as u64) as NodeId;
+            if to == from {
+                to = (to + 1) % nodes as NodeId;
+            }
+            let model = rng.gen_range(100_000) + 1;
+            let control = rng.gen_range(500);
+            let parts: Vec<(MsgKind, u64)> = if control == 0 {
+                vec![(MsgKind::ModelPayload, model)]
+            } else {
+                vec![(MsgKind::ModelPayload, model), (MsgKind::Control, control)]
+            };
+            expected += model + control;
+            fabric.transfer(now, from, to, &parts);
+        }
+        assert_eq!(fabric.charged_bytes(), expected, "seed {seed}");
+        let ledger = fabric.ledger();
+        assert_eq!(ledger.total(), expected, "seed {seed}");
+        assert!(ledger.is_conserved(), "seed {seed}");
     }
 }
 
