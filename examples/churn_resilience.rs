@@ -12,26 +12,22 @@
 
 use anyhow::Result;
 
-use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::runtime::XlaRuntime;
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::{ChurnSchedule, SimTime};
 
 fn main() -> Result<()> {
     let initial = 40u32;
     let joiners = 4u32;
-    let spec = SessionSpec {
-        dataset: "cifar10".into(),
-        algo: Algo::Modest,
-        nodes: initial as usize,
-        s: 10,
-        a: 5,
-        sf: 0.8,
-        dt_s: 2.0,
-        dk: 10,
-        max_time_s: 900.0,
-        eval_interval_s: 10.0,
-        ..Default::default()
-    };
+    let mut spec = ScenarioSpec::new("cifar10", "modest");
+    spec.population.nodes = initial as usize;
+    spec.protocol.s = 10;
+    spec.protocol.a = 5;
+    spec.protocol.sf = 0.8;
+    spec.protocol.dt_s = 2.0;
+    spec.protocol.dk = 10;
+    spec.run.max_time_s = 900.0;
+    spec.run.eval_interval_s = 10.0;
 
     // Joins at minute 1..4, mass crash from minute 6 until half are gone.
     let churn = ChurnSchedule::staggered_joins(
@@ -48,15 +44,14 @@ fn main() -> Result<()> {
         SimTime::from_secs_f64(30.0),
     ));
 
-    let runtime = XlaRuntime::load(&spec.artifacts_dir)?;
-    let session = spec.build_modest(Some(&runtime), churn)?;
+    let runtime = XlaRuntime::load(&spec.workload.artifacts_dir)?;
     println!(
         "running: {} initial nodes, {} joiners, then crash to {} survivors",
         initial,
         joiners,
         (initial + joiners) / 2
     );
-    let (metrics, _) = session.run();
+    let (metrics, _) = run_scenario(&spec, Some(&runtime), churn)?;
 
     println!("\njoin propagation (paper Fig. 5 behaviour):");
     for j in &metrics.joins {

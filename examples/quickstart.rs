@@ -4,44 +4,39 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 //!
-//! Builds a 20-node network over the synthetic latency matrix, runs the
-//! MoDeST protocol (s=10 trainers, a=3 aggregators per round) on the
-//! CelebA-sized classifier, and prints the convergence curve plus the
-//! per-node traffic summary.
+//! Describes a 20-node network as a [`ScenarioSpec`], runs the MoDeST
+//! protocol (s=10 trainers, a=3 aggregators per round) on the CelebA-sized
+//! classifier through the scenario registry, and prints the convergence
+//! curve plus the per-node traffic summary.
 
 use anyhow::Result;
 
-use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::net::traffic::fmt_bytes;
 use modest_dl::runtime::XlaRuntime;
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 
 fn main() -> Result<()> {
-    let spec = SessionSpec {
-        dataset: "celeba".into(),
-        algo: Algo::Modest,
-        nodes: 20,
-        s: 10,
-        a: 3,
-        sf: 1.0,
-        max_rounds: 30,
-        max_time_s: 600.0,
-        eval_interval_s: 5.0,
-        ..Default::default()
-    };
+    let mut spec = ScenarioSpec::new("celeba", "modest");
+    spec.population.nodes = 20;
+    spec.protocol.s = 10;
+    spec.protocol.a = 3;
+    spec.protocol.sf = 1.0;
+    spec.run.max_rounds = 30;
+    spec.run.max_time_s = 600.0;
+    spec.run.eval_interval_s = 5.0;
 
     println!("loading AOT artifacts (run `make artifacts` first)...");
-    let runtime = XlaRuntime::load(&spec.artifacts_dir)?;
-    let session = spec.build_modest(Some(&runtime), ChurnSchedule::empty())?;
+    let runtime = XlaRuntime::load(&spec.workload.artifacts_dir)?;
 
     println!(
         "running MoDeST: n={} s={} a={} sf={}",
         spec.resolved_nodes()?,
-        spec.s,
-        spec.a,
-        spec.sf
+        spec.protocol.s,
+        spec.protocol.a,
+        spec.protocol.sf
     );
-    let (metrics, traffic) = session.run();
+    let (metrics, traffic) = run_scenario(&spec, Some(&runtime), ChurnSchedule::empty())?;
 
     println!("\nconvergence curve (virtual time):");
     for p in &metrics.curve {

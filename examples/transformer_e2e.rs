@@ -23,9 +23,9 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::net::traffic::fmt_bytes;
 use modest_dl::runtime::XlaRuntime;
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 
 fn main() -> Result<()> {
@@ -34,22 +34,18 @@ fn main() -> Result<()> {
         .map(|s| s.parse().expect("rounds must be an integer"))
         .unwrap_or(200);
 
-    let spec = SessionSpec {
-        dataset: "transformer".into(),
-        algo: Algo::Modest,
-        nodes: 32,
-        s: 8,
-        a: 2,
-        sf: 1.0,
-        max_rounds: rounds,
-        max_time_s: 86_400.0,
-        eval_interval_s: 30.0,
-        ..Default::default()
-    };
+    let mut spec = ScenarioSpec::new("transformer", "modest");
+    spec.population.nodes = 32;
+    spec.protocol.s = 8;
+    spec.protocol.a = 2;
+    spec.protocol.sf = 1.0;
+    spec.run.max_rounds = rounds;
+    spec.run.max_time_s = 86_400.0;
+    spec.run.eval_interval_s = 30.0;
 
     println!("loading artifacts + compiling transformer executables...");
     let t0 = Instant::now();
-    let runtime = XlaRuntime::load(&spec.artifacts_dir)?;
+    let runtime = XlaRuntime::load(&spec.workload.artifacts_dir)?;
     let vm = runtime.manifest().variant("transformer")?;
     println!(
         "  {} params ({}), vocab={}, layers={}, compiled in {:.1}s",
@@ -60,13 +56,12 @@ fn main() -> Result<()> {
         t0.elapsed().as_secs_f64()
     );
 
-    let session = spec.build_modest(Some(&runtime), ChurnSchedule::empty())?;
     println!(
         "training for {rounds} rounds across {} nodes (s={}, a={})...",
-        spec.nodes, spec.s, spec.a
+        spec.population.nodes, spec.protocol.s, spec.protocol.a
     );
     let wall = Instant::now();
-    let (metrics, _) = session.run();
+    let (metrics, _) = run_scenario(&spec, Some(&runtime), ChurnSchedule::empty())?;
     let wall_s = wall.elapsed().as_secs_f64();
 
     println!("\nloss curve (token-level NLL on held-out sequences):");

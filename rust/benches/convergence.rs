@@ -1,14 +1,14 @@
 //! End-to-end bench regenerating the paper's Fig. 3 / Fig. 1 rows (scaled).
 //!
 //! Runs FedAvg, D-SGD and MoDeST on the CIFAR10-sized task (real artifacts
-//! when available, mock otherwise) and prints the time-to-target /
-//! best-metric rows the figure is built from, plus the wallclock cost of
-//! each simulated session.
+//! when available, mock otherwise) through the scenario registry and
+//! prints the time-to-target / best-metric rows the figure is built from,
+//! plus the wallclock cost of each simulated session.
 //!
 //! Run: `cargo bench --bench convergence`
 //! (larger replication: `repro exp fig3 --scale 1.0`)
 
-use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::scenario::{ProtocolRegistry, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 use modest_dl::util::bench::Bencher;
 
@@ -20,45 +20,42 @@ fn main() {
     } else {
         None
     };
+    let registry = ProtocolRegistry::builtins();
     println!("== Fig. 3 bench (dataset: {dataset}) ==");
     let mut b = Bencher::new("convergence");
     let mut rows = Vec::new();
-    for algo in [Algo::Fedavg, Algo::Dsgd, Algo::Modest] {
-        let spec = SessionSpec {
-            dataset: dataset.into(),
-            algo,
-            nodes: 24,
-            s: 8,
-            a: 3,
-            sf: 1.0,
-            max_rounds: if algo == Algo::Dsgd { 60 } else { 120 },
-            max_time_s: 7200.0,
-            eval_interval_s: 10.0,
-            ..Default::default()
-        };
+    // (protocol, bench round budget): every-node-per-round protocols get
+    // half the rounds to keep the bench quick.
+    for (protocol, rounds) in [("fedavg", 120), ("dsgd", 60), ("modest", 120)] {
+        let label = registry.label(protocol).unwrap();
+        let mut spec = ScenarioSpec::new(dataset, protocol);
+        spec.population.nodes = 24;
+        spec.protocol.s = 8;
+        spec.protocol.a = 3;
+        spec.protocol.sf = 1.0;
+        spec.run.max_rounds = rounds;
+        spec.run.max_time_s = 7200.0;
+        spec.run.eval_interval_s = 10.0;
         let mut result = None;
-        b.bench_once(&format!("session/{algo:?}"), || {
-            let out = match algo {
-                Algo::Dsgd => spec.build_dsgd(runtime.as_ref()).unwrap().run(),
-                _ => spec
-                    .build_modest(runtime.as_ref(), ChurnSchedule::empty())
-                    .unwrap()
-                    .run(),
-            };
+        b.bench_once(&format!("session/{label}"), || {
+            let out = registry
+                .build(&spec, runtime.as_ref(), ChurnSchedule::empty())
+                .unwrap()
+                .run();
             result = Some(out);
         });
         let (m, _) = result.unwrap();
-        rows.push((algo, m));
+        rows.push((label, m));
     }
     println!();
     println!(
         "{:<8} {:>7} {:>10} {:>14} {:>12}",
-        "algo", "rounds", "best", "t-to-0.75", "virtual-dur"
+        "protocol", "rounds", "best", "t-to-0.75", "virtual-dur"
     );
-    for (algo, m) in &rows {
+    for (label, m) in &rows {
         println!(
             "{:<8} {:>7} {:>10.4} {:>14} {:>11.0}s",
-            format!("{algo:?}"),
+            label,
             m.final_round,
             m.best_metric(true).unwrap_or(f64::NAN),
             m.time_to_target(0.75, true)

@@ -4,7 +4,7 @@
 //! Run: `cargo bench --bench membership`
 //! (paper-scale replication: `repro exp fig5 --initial 90 --joiners 10`)
 
-use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::{ChurnSchedule, SimTime};
 use modest_dl::util::bench::Bencher;
 
@@ -18,20 +18,16 @@ fn main() {
         SimTime::from_secs_f64(30.0),
         SimTime::from_secs_f64(30.0),
     );
-    let spec = SessionSpec {
-        dataset: "mock".into(),
-        algo: Algo::Modest,
-        nodes: initial as usize,
-        s: 10,
-        a: 5,
-        sf: 0.9,
-        max_time_s: 600.0,
-        eval_interval_s: 2.0,
-        ..Default::default()
-    };
+    let mut spec = ScenarioSpec::new("mock", "modest");
+    spec.population.nodes = initial as usize;
+    spec.protocol.s = 10;
+    spec.protocol.a = 5;
+    spec.protocol.sf = 0.9;
+    spec.run.max_time_s = 600.0;
+    spec.run.eval_interval_s = 2.0;
     let mut out = None;
     b.bench_once("session/30-initial-4-joiners", || {
-        out = Some(spec.build_modest(None, churn.clone()).unwrap().run());
+        out = Some(run_scenario(&spec, None, churn.clone()).unwrap());
     });
     let (m, _) = out.unwrap();
     println!();

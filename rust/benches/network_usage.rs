@@ -5,71 +5,68 @@
 //! Run: `cargo bench --bench network_usage`
 //! (full grid: `repro exp table4 --scale 1.0`)
 
-use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::net::traffic::fmt_bytes;
+use modest_dl::scenario::{ProtocolRegistry, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 use modest_dl::util::bench::Bencher;
 
 fn main() {
     let runtime = modest_dl::runtime::XlaRuntime::load("artifacts").ok();
     let dataset = if runtime.is_some() { "celeba" } else { "mock" };
+    let registry = ProtocolRegistry::builtins();
     println!("== Table 4 bench (dataset: {dataset}, 40 nodes, 80 rounds) ==");
     let mut b = Bencher::new("network_usage");
     let mut rows = Vec::new();
-    for algo in [Algo::Dsgd, Algo::Fedavg, Algo::Modest] {
-        let spec = SessionSpec {
-            dataset: dataset.into(),
-            algo,
-            nodes: 40,
-            // Keep s(a+1) well under n: MoDeST's advantage over D-SGD is
-            // the n-vs-s(a+1) per-round transfer count (EXPERIMENTS.md
-            // scale note) — s=6, a=2 gives 18 transfers/round vs 40.
-            s: 6,
-            a: 2,
-            sf: 1.0,
-            max_rounds: 80,
-            max_time_s: 7200.0,
-            ..Default::default()
-        };
+    for protocol in ["dsgd", "fedavg", "modest"] {
+        let label = registry.label(protocol).unwrap();
+        let mut spec = ScenarioSpec::new(dataset, protocol);
+        spec.population.nodes = 40;
+        // Keep s(a+1) well under n: MoDeST's advantage over D-SGD is
+        // the n-vs-s(a+1) per-round transfer count (EXPERIMENTS.md
+        // scale note) — s=6, a=2 gives 18 transfers/round vs 40.
+        spec.protocol.s = 6;
+        spec.protocol.a = 2;
+        spec.protocol.sf = 1.0;
+        spec.run.max_rounds = 80;
+        spec.run.max_time_s = 7200.0;
         let mut out = None;
-        b.bench_once(&format!("session/{algo:?}"), || {
-            out = Some(match algo {
-                Algo::Dsgd => spec.build_dsgd(runtime.as_ref()).unwrap().run(),
-                _ => spec
-                    .build_modest(runtime.as_ref(), ChurnSchedule::empty())
+        b.bench_once(&format!("session/{label}"), || {
+            out = Some(
+                registry
+                    .build(&spec, runtime.as_ref(), ChurnSchedule::empty())
                     .unwrap()
                     .run(),
-            });
+            );
         });
-        rows.push((algo, out.unwrap().0));
+        rows.push((label, out.unwrap().0));
     }
     println!();
     println!(
         "{:<8} {:>12} {:>12} {:>12} {:>10}",
         "method", "total", "min", "max", "overhead"
     );
-    for (algo, m) in &rows {
+    for (label, m) in &rows {
         let t = &m.traffic;
         println!(
             "{:<8} {:>12} {:>12} {:>12} {:>9.1}%",
-            format!("{algo:?}"),
+            label,
             fmt_bytes(t.total),
             fmt_bytes(t.min_node),
             fmt_bytes(t.max_node),
             100.0 * t.overhead_fraction
         );
     }
-    let total = |a: Algo| {
+    let total = |label: &str| {
         rows.iter()
-            .find(|(x, _)| *x == a)
+            .find(|(x, _)| *x == label)
             .map(|(_, m)| m.traffic.total.max(1))
             .unwrap()
     };
     println!();
     println!(
         "ratios: D-SGD/FedAvg = {:.1}x, D-SGD/MoDeST = {:.1}x (paper: 13-71x, 3-14x)",
-        total(Algo::Dsgd) as f64 / total(Algo::Fedavg) as f64,
-        total(Algo::Dsgd) as f64 / total(Algo::Modest) as f64,
+        total("D-SGD") as f64 / total("FedAvg") as f64,
+        total("D-SGD") as f64 / total("MoDeST") as f64,
     );
 
     // ---- heterogeneous capacity: thin uplinks must stretch rounds (the
@@ -78,22 +75,23 @@ fn main() {
     println!("== fabric: uniform vs heterogeneous per-node capacity (MoDeST) ==");
     let mut round_times = Vec::new();
     for (label, mbps, sigma) in [("uniform-1mbps", 1.0, 0.0), ("lognormal-sigma1", 1.0, 1.0)] {
-        let spec = SessionSpec {
-            dataset: "mock".into(),
-            algo: Algo::Modest,
-            nodes: 40,
-            s: 6,
-            a: 2,
-            sf: 1.0,
-            max_rounds: 80,
-            max_time_s: 7200.0,
-            bandwidth_mbps: mbps,
-            bandwidth_sigma: sigma,
-            ..Default::default()
-        };
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.population.nodes = 40;
+        spec.protocol.s = 6;
+        spec.protocol.a = 2;
+        spec.protocol.sf = 1.0;
+        spec.run.max_rounds = 80;
+        spec.run.max_time_s = 7200.0;
+        spec.network.bandwidth_mbps = mbps;
+        spec.network.bandwidth_sigma = sigma;
         let mut out = None;
         b.bench_once(&format!("fabric/{label}"), || {
-            out = Some(spec.build_modest(None, ChurnSchedule::empty()).unwrap().run());
+            out = Some(
+                registry
+                    .build(&spec, None, ChurnSchedule::empty())
+                    .unwrap()
+                    .run(),
+            );
         });
         let (m, _) = out.unwrap();
         let rt = m.mean_round_time_s().unwrap_or(f64::NAN);

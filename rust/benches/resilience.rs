@@ -4,7 +4,7 @@
 //! Run: `cargo bench --bench resilience`
 //! (paper-scale replication: `repro exp fig6 --nodes 100`)
 
-use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::{ChurnSchedule, SimTime};
 use modest_dl::util::bench::Bencher;
 
@@ -21,22 +21,18 @@ fn main() {
         SimTime::from_secs_f64(crash_start),
         SimTime::from_secs_f64(15.0),
     );
-    let spec = SessionSpec {
-        dataset: "mock".into(),
-        algo: Algo::Modest,
-        nodes: nodes as usize,
-        s: 8,
-        a: 5,
-        sf: 0.75,
-        dt_s: 2.0,
-        dk: 10,
-        max_time_s: 600.0,
-        eval_interval_s: 5.0,
-        ..Default::default()
-    };
+    let mut spec = ScenarioSpec::new("mock", "modest");
+    spec.population.nodes = nodes as usize;
+    spec.protocol.s = 8;
+    spec.protocol.a = 5;
+    spec.protocol.sf = 0.75;
+    spec.protocol.dt_s = 2.0;
+    spec.protocol.dk = 10;
+    spec.run.max_time_s = 600.0;
+    spec.run.eval_interval_s = 5.0;
     let mut out = None;
     b.bench_once("session/crash-80pct", || {
-        out = Some(spec.build_modest(None, churn.clone()).unwrap().run());
+        out = Some(run_scenario(&spec, None, churn.clone()).unwrap());
     });
     let (m, _) = out.unwrap();
 

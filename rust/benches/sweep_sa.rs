@@ -5,7 +5,7 @@
 //!
 //! Run: `cargo bench --bench sweep_sa`
 
-use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 use modest_dl::util::bench::Bencher;
 
@@ -19,24 +19,18 @@ fn main() {
     );
     for s in [1usize, 2, 4, 7] {
         for a in [1usize, 3, 5] {
-            let spec = SessionSpec {
-                dataset: "mock".into(),
-                algo: Algo::Modest,
-                nodes: 24,
-                s,
-                a,
-                sf: 1.0,
-                max_rounds: 150,
-                max_time_s: 7200.0,
-                eval_interval_s: 5.0,
-                target_metric: Some(target),
-                ..Default::default()
-            };
+            let mut spec = ScenarioSpec::new("mock", "modest");
+            spec.population.nodes = 24;
+            spec.protocol.s = s;
+            spec.protocol.a = a;
+            spec.protocol.sf = 1.0;
+            spec.run.max_rounds = 150;
+            spec.run.max_time_s = 7200.0;
+            spec.run.eval_interval_s = 5.0;
+            spec.run.target_metric = Some(target);
             let mut out = None;
             b.bench_once(&format!("session/s={s}/a={a}"), || {
-                out = Some(
-                    spec.build_modest(None, ChurnSchedule::empty()).unwrap().run(),
-                );
+                out = Some(run_scenario(&spec, None, ChurnSchedule::empty()).unwrap());
             });
             let (m, _) = out.unwrap();
             let tt = m.time_to_target(target, true);

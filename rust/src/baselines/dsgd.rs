@@ -16,7 +16,9 @@ use anyhow::Result;
 use crate::learning::{ComputeModel, Model, Task};
 use crate::metrics::SessionMetrics;
 use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
-use crate::sim::{Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness, SimTime};
+use crate::runtime::XlaRuntime;
+use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
+use crate::sim::{ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness, SimTime};
 use crate::{NodeId, Round};
 
 use super::topology::OnePeerExpGraph;
@@ -271,6 +273,64 @@ impl DsgdSession {
 
     pub fn run(self) -> (SessionMetrics, TrafficLedger) {
         self.harness.run()
+    }
+}
+
+impl Session for DsgdSession {
+    fn run(self: Box<Self>) -> (SessionMetrics, TrafficLedger) {
+        DsgdSession::run(*self)
+    }
+}
+
+/// Derive the D-SGD protocol config from a scenario spec.
+pub fn dsgd_config(spec: &ScenarioSpec) -> DsgdConfig {
+    DsgdConfig {
+        max_time: SimTime::from_secs_f64(spec.run.max_time_s),
+        max_rounds: spec.run.max_rounds,
+        eval_interval: SimTime::from_secs_f64(spec.run.eval_interval_s),
+        // Evaluating individual node models is the D-SGD probe cost;
+        // 4 models keeps big-model probes affordable.
+        eval_nodes: 4,
+        eval_avg_model: spec.workload.dataset == "movielens",
+        target_metric: spec.run.target_metric,
+        seed: spec.run.seed,
+    }
+}
+
+/// Registry factory for D-SGD.
+pub struct DsgdBuilder;
+
+impl SessionBuilder for DsgdBuilder {
+    fn meta(&self) -> ProtocolMeta {
+        ProtocolMeta {
+            name: "dsgd",
+            label: "D-SGD",
+            aliases: &["d-sgd", "dl"],
+            summary: "decentralized SGD over a one-peer exponential graph: \
+                      every node trains and averages pairwise every round",
+            // D-SGD trains every node every round, so figure drivers cap it
+            // lower — its convergence lag is visible well before 120 rounds.
+            default_round_budget: 120,
+            default_params: &[],
+        }
+    }
+
+    fn build(
+        &self,
+        spec: &ScenarioSpec,
+        runtime: Option<&XlaRuntime>,
+        churn: ChurnSchedule,
+    ) -> Result<Box<dyn Session>> {
+        anyhow::ensure!(
+            churn.events().is_empty(),
+            "d-sgd does not support churn scripts (its pairwise barrier \
+             assumes a fixed population)"
+        );
+        let n = spec.resolved_nodes()?;
+        let task = spec.build_task(runtime)?;
+        let fabric = spec.build_fabric(n)?;
+        let compute = spec.build_compute(n);
+        Ok(Box::new(DsgdSession::new(dsgd_config(spec), n, task, compute, fabric)))
     }
 }
 

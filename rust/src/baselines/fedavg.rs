@@ -4,9 +4,13 @@
 //! other nodes to be the aggregator ... unlimited bandwidth capacity for
 //! the aggregator ... sf = 1."
 
+use anyhow::Result;
+
 use crate::modest::ModestConfig;
 use crate::net::LatencyMatrix;
-use crate::sim::SimTime;
+use crate::runtime::XlaRuntime;
+use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
+use crate::sim::{ChurnSchedule, SimTime};
 
 /// Derive the FedAvg emulation config from a MoDeST config: same `s`,
 /// single fixed aggregator at the best-connected node, full success
@@ -23,6 +27,33 @@ pub fn fedavg_config(base: &ModestConfig, latency: &LatencyMatrix, n: usize) -> 
         // sane for any residual timer.
         dt: SimTime::from_secs_f64(2.0),
         ..base.clone()
+    }
+}
+
+/// Registry factory for the FedAvg emulation: the MoDeST stack under the
+/// degenerate §4.3 config (shared assembly in [`crate::modest::builder`]).
+pub struct FedavgBuilder;
+
+impl SessionBuilder for FedavgBuilder {
+    fn meta(&self) -> ProtocolMeta {
+        ProtocolMeta {
+            name: "fedavg",
+            label: "FedAvg",
+            aliases: &["fl"],
+            summary: "federated-learning emulation (§4.3): one fixed \
+                      best-connected aggregator with unlimited capacity, sf = 1",
+            default_round_budget: 200,
+            default_params: &[],
+        }
+    }
+
+    fn build(
+        &self,
+        spec: &ScenarioSpec,
+        runtime: Option<&XlaRuntime>,
+        churn: ChurnSchedule,
+    ) -> Result<Box<dyn Session>> {
+        Ok(Box::new(crate::modest::assemble_modest(spec, runtime, churn, true)?))
     }
 }
 

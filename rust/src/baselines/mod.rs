@@ -11,6 +11,6 @@ pub mod dsgd;
 pub mod fedavg;
 pub mod topology;
 
-pub use dsgd::{DsgdConfig, DsgdProtocol, DsgdSession};
-pub use fedavg::fedavg_config;
+pub use dsgd::{dsgd_config, DsgdBuilder, DsgdConfig, DsgdProtocol, DsgdSession};
+pub use fedavg::{fedavg_config, FedavgBuilder};
 pub use topology::OnePeerExpGraph;

@@ -1,52 +1,14 @@
-//! Session configuration: dataset presets (paper Table 3), algorithm
-//! selection, scaling, network shaping, and the builders that assemble a
-//! runnable session from config + artifacts.
+//! Dataset presets (paper Table 3).
 //!
-//! Every experiment driver and example goes through this module, so a
-//! session is fully described by a [`SessionSpec`] (loadable from a JSON
-//! config file via the launcher, parsed by the in-tree [`crate::util::json`]
-//! module). The spec builds the [`NetworkFabric`] (latency + per-node
-//! uplink/downlink capacities) every protocol charges its transfers
-//! against; `bandwidth_sigma > 0` samples heterogeneous capacities
-//! lognormally around `bandwidth_mbps`.
+//! Everything else that used to live here — the `Algo` enum, the flat
+//! `SessionSpec`, and the per-algorithm builders — moved to the layered
+//! Scenario API in [`crate::scenario`]: sessions are described by a
+//! [`crate::scenario::ScenarioSpec`] and assembled through the
+//! [`crate::scenario::ProtocolRegistry`].
 
 use anyhow::Result;
 
-use crate::baselines::{fedavg_config, DsgdConfig, DsgdSession};
-#[cfg(feature = "xla")]
-use crate::data::{
-    classif::ClassifParams, ratings::RatingsParams, tokens::TokensParams, ClassifData,
-    RatingsData, TokensData,
-};
 use crate::data::Partition;
-#[cfg(feature = "xla")]
-use crate::learning::{TaskData, XlaTask};
-use crate::learning::{ComputeModel, MockTask, Task};
-use crate::modest::{ModestConfig, ModestSession};
-use crate::net::{BandwidthConfig, LatencyMatrix, LatencyParams, NetworkFabric};
-use crate::runtime::XlaRuntime;
-use crate::sim::{ChurnSchedule, SimRng, SimTime};
-use crate::util::Json;
-
-/// Which algorithm runs the session.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Algo {
-    Modest,
-    Fedavg,
-    Dsgd,
-}
-
-impl std::str::FromStr for Algo {
-    type Err = anyhow::Error;
-    fn from_str(s: &str) -> Result<Algo> {
-        match s.to_ascii_lowercase().as_str() {
-            "modest" => Ok(Algo::Modest),
-            "fedavg" | "fl" => Ok(Algo::Fedavg),
-            "dsgd" | "d-sgd" | "dl" => Ok(Algo::Dsgd),
-            other => anyhow::bail!("unknown algorithm {other:?} (modest|fedavg|dsgd)"),
-        }
-    }
-}
 
 /// Paper-aligned per-dataset defaults.
 #[derive(Debug, Clone)]
@@ -127,313 +89,6 @@ pub fn preset(dataset: &str) -> Result<DatasetPreset> {
     })
 }
 
-/// Full session specification.
-#[derive(Debug, Clone)]
-pub struct SessionSpec {
-    pub dataset: String,
-    pub algo: Algo,
-    /// 0 = paper node count (times `scale`).
-    pub nodes: usize,
-    /// Scale factor on the node count for CI-speed runs.
-    pub scale: f64,
-    /// 0 = preset.
-    pub s: usize,
-    pub a: usize,
-    pub sf: f64,
-    pub dt_s: f64,
-    pub dk: u64,
-    pub max_time_s: f64,
-    pub max_rounds: u64,
-    pub eval_interval_s: f64,
-    pub target_metric: Option<f64>,
-    pub seed: u64,
-    /// Median per-node capacity (symmetric) in Mbit/s.
-    pub bandwidth_mbps: f64,
-    /// Capacity heterogeneity (lognormal sigma around `bandwidth_mbps`;
-    /// 0 = every node identical).
-    pub bandwidth_sigma: f64,
-    /// Base per-batch train time (s) on a speed-1 node.
-    pub base_batch_s: f64,
-    /// Compute heterogeneity (lognormal sigma; 0 = uniform).
-    pub hetero_sigma: f64,
-    pub artifacts_dir: String,
-}
-
-impl Default for SessionSpec {
-    fn default() -> Self {
-        SessionSpec {
-            dataset: "cifar10".into(),
-            algo: Algo::Modest,
-            nodes: 0,
-            scale: 1.0,
-            s: 0,
-            a: 0,
-            sf: 1.0,
-            dt_s: 2.0,
-            dk: 20,
-            max_time_s: 1800.0,
-            max_rounds: 0,
-            eval_interval_s: 20.0,
-            target_metric: None,
-            seed: 42,
-            bandwidth_mbps: 50.0,
-            bandwidth_sigma: 0.0,
-            base_batch_s: 0.05,
-            hetero_sigma: 0.35,
-            artifacts_dir: "artifacts".into(),
-        }
-    }
-}
-
-impl SessionSpec {
-    /// Load from a JSON config file body: unknown keys are rejected, all
-    /// keys are optional and override the defaults.
-    pub fn from_json(text: &str) -> Result<SessionSpec> {
-        let v = Json::parse(text)?;
-        let mut spec = SessionSpec::default();
-        for (key, val) in v.as_obj()? {
-            match key.as_str() {
-                "dataset" => spec.dataset = val.as_str()?.to_string(),
-                "algo" => spec.algo = val.as_str()?.parse()?,
-                "nodes" => spec.nodes = val.as_usize()?,
-                "scale" => spec.scale = val.as_f64()?,
-                "s" => spec.s = val.as_usize()?,
-                "a" => spec.a = val.as_usize()?,
-                "sf" => spec.sf = val.as_f64()?,
-                "dt_s" => spec.dt_s = val.as_f64()?,
-                "dk" => spec.dk = val.as_u64()?,
-                "max_time_s" => spec.max_time_s = val.as_f64()?,
-                "max_rounds" => spec.max_rounds = val.as_u64()?,
-                "eval_interval_s" => spec.eval_interval_s = val.as_f64()?,
-                "target_metric" => {
-                    spec.target_metric =
-                        if *val == Json::Null { None } else { Some(val.as_f64()?) }
-                }
-                "seed" => spec.seed = val.as_u64()?,
-                "bandwidth_mbps" => spec.bandwidth_mbps = val.as_f64()?,
-                "bandwidth_sigma" => spec.bandwidth_sigma = val.as_f64()?,
-                "base_batch_s" => spec.base_batch_s = val.as_f64()?,
-                "hetero_sigma" => spec.hetero_sigma = val.as_f64()?,
-                "artifacts_dir" => spec.artifacts_dir = val.as_str()?.to_string(),
-                other => anyhow::bail!("unknown config key {other:?}"),
-            }
-        }
-        Ok(spec)
-    }
-
-    pub fn resolved_nodes(&self) -> Result<usize> {
-        let p = preset(&self.dataset)?;
-        let n = if self.nodes > 0 {
-            self.nodes
-        } else {
-            ((p.nodes as f64 * self.scale).round() as usize).max(8)
-        };
-        Ok(n)
-    }
-
-    pub fn resolved_s(&self) -> Result<usize> {
-        Ok(if self.s > 0 { self.s } else { preset(&self.dataset)?.s })
-    }
-
-    pub fn resolved_a(&self) -> Result<usize> {
-        Ok(if self.a > 0 { self.a } else { preset(&self.dataset)?.a })
-    }
-
-    pub fn modest_config(&self) -> Result<ModestConfig> {
-        Ok(ModestConfig {
-            s: self.resolved_s()?,
-            a: self.resolved_a()?,
-            sf: self.sf,
-            dt: SimTime::from_secs_f64(self.dt_s),
-            dk: self.dk,
-            max_time: SimTime::from_secs_f64(self.max_time_s),
-            max_rounds: self.max_rounds,
-            eval_interval: SimTime::from_secs_f64(self.eval_interval_s),
-            target_metric: self.target_metric,
-            seed: self.seed,
-            fedavg_server: None,
-        })
-    }
-
-    pub fn dsgd_config(&self) -> DsgdConfig {
-        DsgdConfig {
-            max_time: SimTime::from_secs_f64(self.max_time_s),
-            max_rounds: self.max_rounds,
-            eval_interval: SimTime::from_secs_f64(self.eval_interval_s),
-            // Evaluating individual node models is the D-SGD probe cost;
-            // 4 models keeps big-model probes affordable.
-            eval_nodes: 4,
-            eval_avg_model: self.dataset == "movielens",
-            target_metric: self.target_metric,
-            seed: self.seed,
-        }
-    }
-
-    /// Build the learning task for this spec. `runtime` may be `None` only
-    /// for the mock dataset.
-    pub fn build_task(&self, runtime: Option<&XlaRuntime>) -> Result<Box<dyn Task>> {
-        self.build_task_for(runtime, self.resolved_nodes()?)
-    }
-
-    /// Build the task sized for `n` nodes (>= resolved_nodes when a churn
-    /// script adds joiners whose shards must exist).
-    pub fn build_task_for(
-        &self,
-        runtime: Option<&XlaRuntime>,
-        n: usize,
-    ) -> Result<Box<dyn Task>> {
-        if self.dataset == "mock" {
-            return Ok(Box::new(MockTask::new(n.max(64), 32, 0.8, self.seed)));
-        }
-        self.build_artifact_task(runtime, n)
-    }
-
-    /// Artifact-backed datasets need the PJRT engine: without the `xla`
-    /// feature this is a clear runtime error instead of a build break.
-    #[cfg(not(feature = "xla"))]
-    fn build_artifact_task(
-        &self,
-        _runtime: Option<&XlaRuntime>,
-        _n: usize,
-    ) -> Result<Box<dyn Task>> {
-        anyhow::bail!(
-            "dataset {:?} needs AOT artifacts; uncomment the `xla` dependency \
-             in rust/Cargo.toml and rebuild with `--features xla`, or run with \
-             the mock dataset",
-            self.dataset
-        )
-    }
-
-    #[cfg(feature = "xla")]
-    fn build_artifact_task(
-        &self,
-        runtime: Option<&XlaRuntime>,
-        n: usize,
-    ) -> Result<Box<dyn Task>> {
-        let p = preset(&self.dataset)?;
-        let mut rng = SimRng::new(self.seed).fork("data");
-        let runtime = runtime
-            .ok_or_else(|| anyhow::anyhow!("dataset {} needs artifacts", self.dataset))?;
-        let manifest = runtime.manifest().variant(p.variant)?.clone();
-        let data = match manifest.kind.as_str() {
-            "classifier" => {
-                let classes = manifest.meta_usize("classes").unwrap_or(10);
-                let input_dim = manifest.meta_usize("input_dim").unwrap_or(128);
-                TaskData::Classif(ClassifData::generate(
-                    &ClassifParams {
-                        dim: input_dim,
-                        classes,
-                        nodes: n,
-                        samples_per_node: p.samples_per_node,
-                        test_samples: 2048,
-                        partition: p.partition,
-                        ..Default::default()
-                    },
-                    &mut rng,
-                ))
-            }
-            "matfact" => {
-                let users = manifest.meta_usize("users").unwrap_or(610);
-                let items = manifest.meta_usize("items").unwrap_or(9724);
-                TaskData::Ratings(RatingsData::generate(
-                    &RatingsParams {
-                        users,
-                        items,
-                        nodes: n,
-                        ratings_per_user: p.samples_per_node,
-                        test_per_user: 25,
-                        ..Default::default()
-                    },
-                    &mut rng,
-                ))
-            }
-            "lm" => {
-                let vocab = manifest.meta_usize("vocab").unwrap_or(64);
-                let max_t = manifest.meta_usize("max_t").unwrap_or(64);
-                TaskData::Tokens(TokensData::generate(
-                    &TokensParams {
-                        vocab,
-                        seq_len: max_t,
-                        nodes: n,
-                        seqs_per_node: p.samples_per_node,
-                        test_seqs: 128,
-                        ..Default::default()
-                    },
-                    &mut rng,
-                ))
-            }
-            other => anyhow::bail!("unknown variant kind {other}"),
-        };
-        Ok(Box::new(XlaTask::new(runtime, p.variant, data)?))
-    }
-
-    pub fn build_latency(&self, n: usize) -> LatencyMatrix {
-        let mut rng = SimRng::new(self.seed).fork("latency");
-        LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng)
-    }
-
-    /// The per-node capacity distribution this spec describes.
-    pub fn bandwidth_config(&self) -> BandwidthConfig {
-        if self.bandwidth_sigma > 0.0 {
-            BandwidthConfig::LogNormal {
-                median_bps: self.bandwidth_mbps * 1e6,
-                sigma: self.bandwidth_sigma,
-            }
-        } else {
-            BandwidthConfig::Uniform { bps: self.bandwidth_mbps * 1e6 }
-        }
-    }
-
-    /// Assemble the network fabric: synthetic geography + per-node
-    /// capacities, both seeded from the session seed.
-    pub fn build_fabric(&self, n: usize) -> NetworkFabric {
-        let latency = self.build_latency(n);
-        let mut rng = SimRng::new(self.seed).fork("bandwidth");
-        NetworkFabric::new(latency, &self.bandwidth_config(), n, &mut rng)
-    }
-
-    pub fn build_compute(&self, n: usize) -> ComputeModel {
-        let mut rng = SimRng::new(self.seed).fork("compute");
-        if self.hetero_sigma > 0.0 {
-            ComputeModel::heterogeneous(n, self.base_batch_s, self.hetero_sigma, &mut rng)
-        } else {
-            ComputeModel::uniform(n, self.base_batch_s)
-        }
-    }
-
-    /// Assemble a MoDeST (or FedAvg-emulation) session.
-    pub fn build_modest(
-        &self,
-        runtime: Option<&XlaRuntime>,
-        churn: ChurnSchedule,
-    ) -> Result<ModestSession> {
-        let n = self.resolved_nodes()?;
-        // Churn scripts may introduce node ids beyond the initial
-        // population; the dataset/fabric/compute substrates must cover
-        // them too.
-        let max_n = n.max(
-            churn.events().iter().map(|e| e.node as usize + 1).max().unwrap_or(0),
-        );
-        let task = self.build_task_for(runtime, max_n)?;
-        let fabric = self.build_fabric(max_n);
-        let compute = self.build_compute(max_n);
-        let mut cfg = self.modest_config()?;
-        if self.algo == Algo::Fedavg {
-            cfg = fedavg_config(&cfg, fabric.latency(), n);
-        }
-        Ok(ModestSession::new(cfg, n, task, compute, fabric, churn))
-    }
-
-    /// Assemble a D-SGD session.
-    pub fn build_dsgd(&self, runtime: Option<&XlaRuntime>) -> Result<DsgdSession> {
-        let n = self.resolved_nodes()?;
-        let task = self.build_task(runtime)?;
-        let fabric = self.build_fabric(n);
-        let compute = self.build_compute(n);
-        Ok(DsgdSession::new(self.dsgd_config(), n, task, compute, fabric))
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -446,93 +101,5 @@ mod tests {
             assert!(p.s >= 1 && p.a >= 1);
         }
         assert!(preset("nope").is_err());
-    }
-
-    #[test]
-    fn scale_shrinks_node_count() {
-        let spec = SessionSpec { dataset: "celeba".into(), scale: 0.1, ..Default::default() };
-        assert_eq!(spec.resolved_nodes().unwrap(), 50);
-    }
-
-    #[test]
-    fn explicit_nodes_override_scale() {
-        let spec =
-            SessionSpec { dataset: "cifar10".into(), nodes: 24, scale: 0.1, ..Default::default() };
-        assert_eq!(spec.resolved_nodes().unwrap(), 24);
-    }
-
-    #[test]
-    fn algo_parses() {
-        assert_eq!("modest".parse::<Algo>().unwrap(), Algo::Modest);
-        assert_eq!("FL".parse::<Algo>().unwrap(), Algo::Fedavg);
-        assert_eq!("d-sgd".parse::<Algo>().unwrap(), Algo::Dsgd);
-        assert!("x".parse::<Algo>().is_err());
-    }
-
-    #[test]
-    fn mock_session_builds_without_artifacts() {
-        let spec = SessionSpec {
-            dataset: "mock".into(),
-            nodes: 12,
-            max_time_s: 5.0,
-            ..Default::default()
-        };
-        let session = spec.build_modest(None, ChurnSchedule::empty());
-        assert!(session.is_ok());
-    }
-
-    #[test]
-    fn spec_parses_from_json() {
-        let spec = SessionSpec::from_json(
-            r#"{"dataset": "femnist", "algo": "dsgd", "scale": 0.2, "seed": 7}"#,
-        )
-        .unwrap();
-        assert_eq!(spec.dataset, "femnist");
-        assert_eq!(spec.algo, Algo::Dsgd);
-        assert_eq!(spec.seed, 7);
-        assert!((spec.scale - 0.2).abs() < 1e-12);
-        // defaults retained
-        assert_eq!(spec.dk, 20);
-    }
-
-    #[test]
-    fn spec_rejects_unknown_keys() {
-        assert!(SessionSpec::from_json(r#"{"datset": "x"}"#).is_err());
-    }
-
-    #[test]
-    fn bandwidth_spec_builds_hetero_fabric() {
-        let spec = SessionSpec {
-            dataset: "mock".into(),
-            nodes: 16,
-            bandwidth_mbps: 10.0,
-            bandwidth_sigma: 0.6,
-            ..Default::default()
-        };
-        let fabric = spec.build_fabric(16);
-        let min = (0..16u32).map(|n| fabric.up_bps(n)).fold(f64::MAX, f64::min);
-        let max = (0..16u32).map(|n| fabric.up_bps(n)).fold(0.0f64, f64::max);
-        assert!(max > min, "no heterogeneity: {min}..{max}");
-        // sigma = 0 gives a flat fabric
-        let flat = SessionSpec {
-            dataset: "mock".into(),
-            nodes: 16,
-            ..Default::default()
-        }
-        .build_fabric(16);
-        for n in 0..16u32 {
-            assert_eq!(flat.up_bps(n), 50e6);
-            assert_eq!(flat.down_bps(n), 50e6);
-        }
-    }
-
-    #[test]
-    fn bandwidth_sigma_parses_from_json() {
-        let spec = SessionSpec::from_json(
-            r#"{"dataset": "mock", "bandwidth_mbps": 25.0, "bandwidth_sigma": 0.4}"#,
-        )
-        .unwrap();
-        assert!((spec.bandwidth_mbps - 25.0).abs() < 1e-12);
-        assert!((spec.bandwidth_sigma - 0.4).abs() < 1e-12);
     }
 }

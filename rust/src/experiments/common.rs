@@ -1,14 +1,14 @@
-//! Shared experiment plumbing: run a (dataset, algo) session, collect
-//! metrics + traffic, write CSVs.
+//! Shared experiment plumbing: run a (dataset, protocol) session through
+//! the scenario registry, collect metrics + traffic, write CSVs.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::config::{Algo, SessionSpec};
 use crate::metrics::SessionMetrics;
 use crate::net::TrafficLedger;
 use crate::runtime::XlaRuntime;
+use crate::scenario::{ProtocolRegistry, ScenarioSpec};
 use crate::sim::ChurnSchedule;
 
 /// Common experiment options (from the CLI).
@@ -48,19 +48,18 @@ impl Default for ExpOptions {
 }
 
 impl ExpOptions {
-    pub fn spec(&self, dataset: &str, algo: Algo) -> SessionSpec {
-        SessionSpec {
-            dataset: if self.mock { "mock".into() } else { dataset.into() },
-            algo,
-            scale: self.scale,
-            max_time_s: self.max_time_s,
-            max_rounds: self.max_rounds,
-            seed: self.seed,
-            bandwidth_mbps: self.bandwidth_mbps,
-            bandwidth_sigma: self.bandwidth_sigma,
-            artifacts_dir: self.artifacts_dir.clone(),
-            ..Default::default()
-        }
+    /// The scenario these options describe for one (dataset, protocol).
+    pub fn scenario(&self, dataset: &str, protocol: &str) -> ScenarioSpec {
+        let mut spec =
+            ScenarioSpec::new(if self.mock { "mock" } else { dataset }, protocol);
+        spec.workload.artifacts_dir = self.artifacts_dir.clone();
+        spec.population.scale = self.scale;
+        spec.network.bandwidth_mbps = self.bandwidth_mbps;
+        spec.network.bandwidth_sigma = self.bandwidth_sigma;
+        spec.run.max_time_s = self.max_time_s;
+        spec.run.max_rounds = self.max_rounds;
+        spec.run.seed = self.seed;
+        spec
     }
 
     pub fn load_runtime(&self) -> Result<Option<XlaRuntime>> {
@@ -77,34 +76,38 @@ pub struct RunOutput {
     pub metrics: SessionMetrics,
     pub traffic: TrafficLedger,
     pub nodes: usize,
-    pub algo: Algo,
+    /// Canonical registry name of the protocol that ran.
+    pub protocol: String,
+    /// Paper-style label from registry metadata (drives table rows — no
+    /// hardcoded match anywhere).
+    pub label: &'static str,
+    /// CSV/file-name tag, from [`crate::scenario::ProtocolMeta::csv_tag`].
+    pub csv_tag: String,
     pub dataset: String,
 }
 
-/// Run one session for (dataset, algo) under shared options.
+/// Run one session for (dataset, protocol) under shared options.
 pub fn run_session(
     opts: &ExpOptions,
+    registry: &ProtocolRegistry,
     runtime: Option<&XlaRuntime>,
     dataset: &str,
-    algo: Algo,
+    protocol: &str,
     churn: ChurnSchedule,
-    tweak: impl FnOnce(&mut SessionSpec),
+    tweak: impl FnOnce(&mut ScenarioSpec),
 ) -> Result<RunOutput> {
-    let mut spec = opts.spec(dataset, algo);
+    let meta = registry.get(protocol)?.meta();
+    let mut spec = opts.scenario(dataset, meta.name);
     tweak(&mut spec);
     let nodes = spec.resolved_nodes()?;
-    let (metrics, traffic) = match algo {
-        Algo::Dsgd => spec.build_dsgd(runtime)?.run(),
-        _ => spec.build_modest(runtime, churn)?.run(),
-    };
-    Ok(RunOutput { metrics, traffic, nodes, algo, dataset: dataset.to_string() })
-}
-
-/// `algo` label as the paper prints it.
-pub fn algo_label(algo: Algo) -> &'static str {
-    match algo {
-        Algo::Modest => "MoDeST",
-        Algo::Fedavg => "FedAvg",
-        Algo::Dsgd => "D-SGD",
-    }
+    let (metrics, traffic) = registry.build(&spec, runtime, churn)?.run();
+    Ok(RunOutput {
+        metrics,
+        traffic,
+        nodes,
+        protocol: meta.name.to_string(),
+        label: meta.label,
+        csv_tag: meta.csv_tag(),
+        dataset: dataset.to_string(),
+    })
 }

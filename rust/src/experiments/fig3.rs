@@ -1,45 +1,52 @@
 //! Fig. 3 (and Fig. 1): convergence of FedAvg, D-SGD, and MoDeST on the
-//! four learning tasks. Writes one curve CSV per (dataset, algo) and prints
-//! the time-to-target + final-metric summary.
+//! four learning tasks. Writes one curve CSV per (dataset, protocol) and
+//! prints the time-to-target + final-metric summary. The protocol set is
+//! any slice of registry names, so `--protocols modest,gossip` sweeps a
+//! new protocol with zero experiment edits.
 
 use anyhow::Result;
 
-use crate::config::{preset, Algo};
+use crate::config::preset;
+use crate::scenario::ProtocolRegistry;
 use crate::sim::ChurnSchedule;
 
-use super::common::{algo_label, run_session, ExpOptions, RunOutput};
+use super::common::{run_session, ExpOptions, RunOutput};
 
 pub const ALL_DATASETS: [&str; 4] = ["cifar10", "celeba", "femnist", "movielens"];
-pub const ALL_ALGOS: [Algo; 3] = [Algo::Fedavg, Algo::Dsgd, Algo::Modest];
+/// The paper's three-way comparison, in its plotting order.
+pub const ALL_PROTOCOLS: [&str; 3] = ["fedavg", "dsgd", "modest"];
 
 /// Run the full grid (or a subset) and return the outputs.
-pub fn run(opts: &ExpOptions, datasets: &[&str], algos: &[Algo]) -> Result<Vec<RunOutput>> {
+pub fn run(opts: &ExpOptions, datasets: &[&str], protocols: &[&str]) -> Result<Vec<RunOutput>> {
     std::fs::create_dir_all(&opts.out_dir)?;
+    let registry = ProtocolRegistry::builtins();
     let runtime = opts.load_runtime()?;
     let mut outputs = Vec::new();
     println!("== Fig. 3: convergence of FL / DL / MoDeST (scale {:.2}) ==", opts.scale);
     println!(
-        "{:<10} {:<8} {:>6} {:>8} {:>10} {:>12} {:>12}",
-        "dataset", "algo", "nodes", "rounds", "best", "target", "t-to-target"
+        "{:<10} {:<9} {:>6} {:>8} {:>10} {:>12} {:>12}",
+        "dataset", "protocol", "nodes", "rounds", "best", "target", "t-to-target"
     );
     for &dataset in datasets {
         let p = preset(dataset)?;
-        for &algo in algos {
+        for &protocol in protocols {
+            // Round budgets when the caller gave none come from registry
+            // metadata: protocols that train every node every round (D-SGD,
+            // gossip) declare a smaller cap.
+            let budget = registry.get(protocol)?.meta().default_round_budget;
             let out = run_session(
                 opts,
+                &registry,
                 runtime.as_ref(),
                 dataset,
-                algo,
+                protocol,
                 ChurnSchedule::empty(),
                 |spec| {
-                    // Round budgets when the caller gave none: D-SGD trains
-                    // every node every round, so it gets a smaller cap —
-                    // its convergence lag is visible well before 120 rounds.
-                    if spec.max_rounds == 0 {
-                        spec.max_rounds = if algo == Algo::Dsgd { 120 } else { 200 };
+                    if spec.run.max_rounds == 0 {
+                        spec.run.max_rounds = budget;
                     }
-                    spec.max_time_s = spec.max_time_s.max(7200.0);
-                    spec.target_metric = Some(preset(dataset).unwrap().target);
+                    spec.run.max_time_s = spec.run.max_time_s.max(7200.0);
+                    spec.run.target_metric = Some(preset(dataset).unwrap().target);
                 },
             )?;
             let higher = dataset != "movielens";
@@ -50,18 +57,12 @@ pub fn run(opts: &ExpOptions, datasets: &[&str], algos: &[Algo]) -> Result<Vec<R
                 .map(|(t, _)| format!("{:.0}s", t))
                 .unwrap_or_else(|| "-".into());
             println!(
-                "{:<10} {:<8} {:>6} {:>8} {:>10.4} {:>12.3} {:>12}",
-                dataset,
-                algo_label(algo),
-                out.nodes,
-                out.metrics.final_round,
-                best,
-                p.target,
-                ttt
+                "{:<10} {:<9} {:>6} {:>8} {:>10.4} {:>12.3} {:>12}",
+                dataset, out.label, out.nodes, out.metrics.final_round, best, p.target, ttt
             );
             let csv = opts
                 .out_dir
-                .join(format!("fig3_{}_{}.csv", dataset, algo_label(algo).to_lowercase()));
+                .join(format!("fig3_{}_{}.csv", dataset, out.csv_tag));
             out.metrics.write_curve_csv(&csv)?;
             outputs.push(out);
         }

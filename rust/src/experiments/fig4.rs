@@ -5,7 +5,8 @@ use std::io::Write;
 
 use anyhow::Result;
 
-use crate::config::{preset, Algo};
+use crate::config::preset;
+use crate::scenario::ProtocolRegistry;
 use crate::sim::ChurnSchedule;
 
 use super::common::{run_session, ExpOptions};
@@ -28,6 +29,7 @@ pub fn run(
     target: Option<f64>,
 ) -> Result<Vec<SweepPoint>> {
     std::fs::create_dir_all(&opts.out_dir)?;
+    let registry = ProtocolRegistry::builtins();
     let runtime = opts.load_runtime()?;
     let p = preset(dataset)?;
     let target = target.unwrap_or(p.target);
@@ -42,14 +44,15 @@ pub fn run(
         for &a in a_values {
             let out = run_session(
                 opts,
+                &registry,
                 runtime.as_ref(),
                 dataset,
-                Algo::Modest,
+                "modest",
                 ChurnSchedule::empty(),
                 |spec| {
-                    spec.s = s;
-                    spec.a = a;
-                    spec.target_metric = Some(target);
+                    spec.protocol.s = s;
+                    spec.protocol.a = a;
+                    spec.run.target_metric = Some(target);
                 },
             )?;
             let tt = out.metrics.time_to_target(target, higher);

@@ -6,14 +6,15 @@ use std::io::Write;
 
 use anyhow::Result;
 
-use crate::config::Algo;
 use crate::metrics::JoinTrace;
+use crate::scenario::ProtocolRegistry;
 use crate::sim::{ChurnSchedule, SimTime};
 
 use super::common::{run_session, ExpOptions};
 
 pub fn run(opts: &ExpOptions, initial: usize, joiners: u32) -> Result<Vec<JoinTrace>> {
     std::fs::create_dir_all(&opts.out_dir)?;
+    let registry = ProtocolRegistry::builtins();
     let runtime = opts.load_runtime()?;
     let churn = ChurnSchedule::staggered_joins(
         initial as u32,
@@ -22,12 +23,12 @@ pub fn run(opts: &ExpOptions, initial: usize, joiners: u32) -> Result<Vec<JoinTr
         SimTime::from_secs_f64(60.0),
     );
     // Paper §4.6: CIFAR10 IID, s=10, a=5, sf=0.9, probing every few seconds.
-    let out = run_session(opts, runtime.as_ref(), "cifar10", Algo::Modest, churn, |spec| {
-        spec.nodes = initial;
-        spec.s = 10;
-        spec.a = 5;
-        spec.sf = 0.9;
-        spec.eval_interval_s = 5.0;
+    let out = run_session(opts, &registry, runtime.as_ref(), "cifar10", "modest", churn, |spec| {
+        spec.population.nodes = initial;
+        spec.protocol.s = 10;
+        spec.protocol.a = 5;
+        spec.protocol.sf = 0.9;
+        spec.run.eval_interval_s = 5.0;
     })?;
 
     println!("== Fig. 5: membership propagation after staggered joins ==");

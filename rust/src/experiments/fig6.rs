@@ -5,8 +5,8 @@
 
 use anyhow::Result;
 
-use crate::config::Algo;
 use crate::metrics::SessionMetrics;
+use crate::scenario::ProtocolRegistry;
 use crate::sim::{ChurnSchedule, SimTime};
 
 use super::common::{run_session, ExpOptions};
@@ -18,6 +18,7 @@ pub struct Fig6Output {
 
 pub fn run(opts: &ExpOptions, nodes: usize) -> Result<Fig6Output> {
     std::fs::create_dir_all(&opts.out_dir)?;
+    let registry = ProtocolRegistry::builtins();
     let runtime = opts.load_runtime()?;
     let survivors = (nodes / 5).max(4); // 20% survive
     let per_min = (nodes / 20).max(1); // 5/min at n=100
@@ -25,18 +26,19 @@ pub fn run(opts: &ExpOptions, nodes: usize) -> Result<Fig6Output> {
     // Scenario A: only `survivors` nodes exist from the start ("reliable").
     let reliable = run_session(
         opts,
+        &registry,
         runtime.as_ref(),
         "cifar10",
-        Algo::Modest,
+        "modest",
         ChurnSchedule::empty(),
         |spec| {
-            spec.nodes = survivors;
-            spec.s = 10.min(survivors);
-            spec.a = 5.min(survivors);
-            spec.sf = 0.9;
-            spec.dt_s = 2.0;
-            spec.dk = 20;
-            spec.eval_interval_s = 10.0;
+            spec.population.nodes = survivors;
+            spec.protocol.s = 10.min(survivors);
+            spec.protocol.a = 5.min(survivors);
+            spec.protocol.sf = 0.9;
+            spec.protocol.dt_s = 2.0;
+            spec.protocol.dk = 20;
+            spec.run.eval_interval_s = 10.0;
         },
     )?;
 
@@ -48,15 +50,16 @@ pub fn run(opts: &ExpOptions, nodes: usize) -> Result<Fig6Output> {
         SimTime::from_secs_f64(300.0),
         SimTime::from_secs_f64(60.0),
     );
-    let crashing = run_session(opts, runtime.as_ref(), "cifar10", Algo::Modest, churn, |spec| {
-        spec.nodes = nodes;
-        spec.s = 10.min(survivors);
-        spec.a = 5.min(survivors);
-        spec.sf = 0.9;
-        spec.dt_s = 2.0;
-        spec.dk = 20;
-        spec.eval_interval_s = 10.0;
-    })?;
+    let crashing =
+        run_session(opts, &registry, runtime.as_ref(), "cifar10", "modest", churn, |spec| {
+            spec.population.nodes = nodes;
+            spec.protocol.s = 10.min(survivors);
+            spec.protocol.a = 5.min(survivors);
+            spec.protocol.sf = 0.9;
+            spec.protocol.dt_s = 2.0;
+            spec.protocol.dk = 20;
+            spec.run.eval_interval_s = 10.0;
+        })?;
 
     println!("== Fig. 6: crash resilience (n={nodes}, survivors={survivors}) ==");
     for (name, m) in [("reliable", &reliable.metrics), ("crashing", &crashing.metrics)] {

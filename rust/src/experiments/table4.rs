@@ -1,17 +1,16 @@
 //! Table 4 (and Table 1 = its FEMNIST rows): total / min / max per-node
 //! network usage for D-SGD, FedAvg and MoDeST, plus the MoDeST overhead
-//! row. Reuses the Fig. 3 grid runs.
+//! row. Reuses the Fig. 3 grid runs; labels come from registry metadata.
 
 use anyhow::Result;
 
-use crate::config::Algo;
 use crate::net::traffic::fmt_bytes;
 
-use super::common::{algo_label, ExpOptions, RunOutput};
+use super::common::{ExpOptions, RunOutput};
 use super::fig3;
 
 pub fn run(opts: &ExpOptions, datasets: &[&str]) -> Result<Vec<RunOutput>> {
-    let outputs = fig3::run(opts, datasets, &fig3::ALL_ALGOS)?;
+    let outputs = fig3::run(opts, datasets, &fig3::ALL_PROTOCOLS)?;
     print_from(&outputs);
     Ok(outputs)
 }
@@ -21,15 +20,15 @@ pub fn print_from(outputs: &[RunOutput]) {
     println!();
     println!("== Table 4 (top): total / min / max network usage per node ==");
     println!(
-        "{:<10} {:<8} {:>12} {:>12} {:>12}",
+        "{:<10} {:<9} {:>12} {:>12} {:>12}",
         "dataset", "method", "total", "min", "max"
     );
     for out in outputs {
         let t = &out.metrics.traffic;
         println!(
-            "{:<10} {:<8} {:>12} {:>12} {:>12}",
+            "{:<10} {:<9} {:>12} {:>12} {:>12}",
             out.dataset,
-            algo_label(out.algo),
+            out.label,
             fmt_bytes(t.total),
             fmt_bytes(t.min_node),
             fmt_bytes(t.max_node)
@@ -38,7 +37,7 @@ pub fn print_from(outputs: &[RunOutput]) {
     println!();
     println!("== Table 4 (bottom): MoDeST overhead beyond model transfers ==");
     println!("{:<10} {:>14} {:>8}", "dataset", "overhead", "frac");
-    for out in outputs.iter().filter(|o| o.algo == Algo::Modest) {
+    for out in outputs.iter().filter(|o| o.protocol == "modest") {
         let t = &out.metrics.traffic;
         println!(
             "{:<10} {:>14} {:>7.1}%",
@@ -49,14 +48,18 @@ pub fn print_from(outputs: &[RunOutput]) {
     }
     // Headline ratios the paper calls out in §4.4.
     println!();
-    for dataset in outputs.iter().map(|o| o.dataset.clone()).collect::<std::collections::BTreeSet<_>>() {
-        let get = |a: Algo| {
+    for dataset in outputs
+        .iter()
+        .map(|o| o.dataset.clone())
+        .collect::<std::collections::BTreeSet<_>>()
+    {
+        let get = |p: &str| {
             outputs
                 .iter()
-                .find(|o| o.dataset == dataset && o.algo == a)
+                .find(|o| o.dataset == dataset && o.protocol == p)
                 .map(|o| o.metrics.traffic.total.max(1))
         };
-        if let (Some(dl), Some(fl), Some(md)) = (get(Algo::Dsgd), get(Algo::Fedavg), get(Algo::Modest)) {
+        if let (Some(dl), Some(fl), Some(md)) = (get("dsgd"), get("fedavg"), get("modest")) {
             println!(
                 "{dataset}: D-SGD/FedAvg = {:.1}x, D-SGD/MoDeST = {:.1}x, MoDeST/FedAvg = {:.1}x",
                 dl as f64 / fl as f64,

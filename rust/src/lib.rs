@@ -8,11 +8,15 @@
 //!   decentralized sampling ([`modest::sampler`]), the membership registry
 //!   ([`modest::registry`]), activity tracking ([`modest::activity`]), and
 //!   the push-based train/aggregate protocol ([`modest::node`]); plus the
-//!   FedAvg / D-SGD baselines ([`baselines`]). All protocols implement
-//!   [`sim::Protocol`] and run on one shared substrate: the deterministic
-//!   DES harness ([`sim::SimHarness`]) and the contended WAN fabric with
-//!   per-node uplink/downlink capacities ([`net::NetworkFabric`]), plus
-//!   synthetic federated datasets ([`data`]) and metrics ([`metrics`]).
+//!   FedAvg / D-SGD baselines ([`baselines`]) and epidemic gossip-DL
+//!   ([`gossip`]). All protocols implement [`sim::Protocol`], run on one
+//!   shared substrate — the deterministic DES harness ([`sim::SimHarness`])
+//!   and the contended WAN fabric with per-node uplink/downlink capacities
+//!   ([`net::NetworkFabric`]) — and are launched declaratively through the
+//!   Scenario API ([`scenario`]): a layered [`scenario::ScenarioSpec`]
+//!   (workload/population/network/protocol/run) dispatched via the
+//!   [`scenario::ProtocolRegistry`], plus synthetic federated datasets
+//!   ([`data`]) and metrics ([`metrics`]).
 //! * **Layer 2** — JAX train/eval/aggregate graphs per model variant,
 //!   AOT-lowered to HLO text at build time (`python/compile/`).
 //! * **Layer 1** — Pallas kernels for the dense layer (fwd+bwd), the fused
@@ -29,11 +33,13 @@ pub mod baselines;
 pub mod config;
 pub mod data;
 pub mod experiments;
+pub mod gossip;
 pub mod learning;
 pub mod metrics;
 pub mod modest;
 pub mod net;
 pub mod runtime;
+pub mod scenario;
 pub mod sim;
 pub mod util;
 

@@ -1,27 +1,30 @@
 //! `repro` — the MoDeST launcher.
 //!
 //! ```text
-//! repro train --dataset cifar10 --algo modest --scale 0.25
+//! repro run --config examples/scenarios/fcc_tiers.json
+//! repro run --protocol gossip --mock --max-time 120
 //! repro exp fig3 --datasets femnist --scale 0.2
 //! repro exp table4 --scale 0.2
 //! repro exp fig4 --s 1,2,4 --a 1,3
 //! repro exp fig5 --initial 90 --joiners 10
 //! repro exp fig6 --nodes 100
+//! repro protocols
 //! repro info
 //! ```
 //!
 //! Common flags: `--scale`, `--max-time`, `--max-rounds`, `--seed`,
 //! `--artifacts`, `--out`, `--mock` (protocol-only runs without artifacts),
-//! `--config file.json` (a [`SessionSpec`] JSON body; CLI flags override).
+//! `--config file.json` (a [`ScenarioSpec`] body — nested sections or the
+//! legacy flat keys; explicit CLI flags override the file).
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::experiments::{self, ExpOptions};
 use modest_dl::net::traffic::fmt_bytes;
 use modest_dl::runtime::XlaRuntime;
+use modest_dl::scenario::{ProtocolRegistry, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 use modest_dl::util::cli::Args;
 
@@ -29,14 +32,17 @@ const USAGE: &str = "\
 repro — MoDeST: decentralized learning with client sampling
 
 USAGE:
-  repro train [--dataset D] [--algo modest|fedavg|dsgd] [--s N] [--a N]
-              [--sf F] [--nodes N] [--config spec.json] [common flags]
-  repro exp fig3   [--datasets cifar10,celeba,femnist,movielens] [common]
+  repro run   [--config scenario.json] [--protocol NAME] [--dataset D]
+              [--s N] [--a N] [--sf F] [--nodes N] [common flags]
+              (`repro train ...` is an alias)
+  repro exp fig3   [--datasets cifar10,celeba,femnist,movielens]
+                   [--protocols fedavg,dsgd,modest] [common]
   repro exp table4 [--datasets ...] [common]
   repro exp fig4   [--dataset femnist] [--s 1,2,4,7] [--a 1,3,5]
                    [--target F] [common]
   repro exp fig5   [--initial 90] [--joiners 10] [common]
   repro exp fig6   [--nodes 100] [common]
+  repro protocols  (list registered protocols + metadata)
   repro info [--artifacts DIR]
 
 COMMON FLAGS:
@@ -65,62 +71,109 @@ fn common(args: &Args) -> Result<ExpOptions> {
     })
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn cmd_run(args: &Args) -> Result<()> {
     let opts = common(args)?;
+    let from_config = args.get_opt("config").is_some();
     let mut spec = match args.get_opt("config") {
-        Some(path) => SessionSpec::from_json(&std::fs::read_to_string(path)?)?,
-        None => SessionSpec::default(),
+        Some(path) => {
+            let mut s = ScenarioSpec::from_json(&std::fs::read_to_string(&path)?)?;
+            // Relative trace paths resolve against the config file's
+            // directory, so scenario presets work from any cwd.
+            if let Some(tf) = &s.network.trace_file {
+                let tf_path = std::path::Path::new(tf);
+                if tf_path.is_relative() {
+                    if let Some(dir) = std::path::Path::new(&path).parent() {
+                        s.network.trace_file =
+                            Some(dir.join(tf_path).to_string_lossy().into_owned());
+                    }
+                }
+            }
+            s
+        }
+        None => ScenarioSpec::default(),
     };
-    spec.dataset = if opts.mock {
-        "mock".into()
-    } else {
-        args.get_str("dataset", &spec.dataset.clone())
-    };
-    spec.algo = args.get_str("algo", "modest").parse()?;
-    spec.scale = opts.scale;
-    spec.max_time_s = opts.max_time_s;
-    spec.max_rounds = opts.max_rounds;
-    spec.seed = opts.seed;
-    // Only explicit flags override bandwidth — a --config file's
-    // bandwidth_mbps/bandwidth_sigma must survive when the flags are absent.
+
+    // A config file is authoritative; explicit flags override it. Without
+    // one, the common-flag defaults apply as before. Every flag is
+    // consumed up front so `reject_unknown` never trips over one that a
+    // conditional branch happened to skip (e.g. `--mock --dataset X`).
+    let dataset_flag = args.get_opt("dataset");
+    let protocol_flag = args.get_opt("protocol");
+    let algo_flag = args.get_opt("algo");
+    if opts.mock {
+        spec.workload.dataset = "mock".into();
+    } else if let Some(d) = dataset_flag {
+        spec.workload.dataset = d;
+    }
+    if let Some(p) = protocol_flag.or(algo_flag) {
+        spec.protocol.name = p;
+    }
+    let flag_or_no_config = |key: &str| args.get_opt(key).is_some() || !from_config;
+    if flag_or_no_config("scale") {
+        spec.population.scale = opts.scale;
+    }
+    if flag_or_no_config("max-time") {
+        spec.run.max_time_s = opts.max_time_s;
+    }
+    if flag_or_no_config("max-rounds") {
+        spec.run.max_rounds = opts.max_rounds;
+    }
+    if flag_or_no_config("seed") {
+        spec.run.seed = opts.seed;
+    }
+    if flag_or_no_config("artifacts") {
+        spec.workload.artifacts_dir = opts.artifacts_dir.clone();
+    }
+    // Bandwidth flags only when explicit — a config's `network` section
+    // (classes/trace) must survive when the flags are absent. When one IS
+    // passed, it must actually take effect, so the higher-precedence
+    // classes/trace modes are cleared rather than silently winning.
+    let bw_flagged =
+        args.get_opt("bw-mbps").is_some() || args.get_opt("bw-sigma").is_some();
+    if bw_flagged {
+        spec.network.classes.clear();
+        spec.network.trace_file = None;
+    }
     if args.get_opt("bw-mbps").is_some() {
-        spec.bandwidth_mbps = opts.bandwidth_mbps;
+        spec.network.bandwidth_mbps = opts.bandwidth_mbps;
     }
     if args.get_opt("bw-sigma").is_some() {
-        spec.bandwidth_sigma = opts.bandwidth_sigma;
+        spec.network.bandwidth_sigma = opts.bandwidth_sigma;
     }
-    spec.artifacts_dir = opts.artifacts_dir.clone();
     let s = args.get_usize("s", 0)?;
     if s > 0 {
-        spec.s = s;
+        spec.protocol.s = s;
     }
     let a = args.get_usize("a", 0)?;
     if a > 0 {
-        spec.a = a;
+        spec.protocol.a = a;
     }
-    spec.sf = args.get_f64("sf", spec.sf)?;
+    spec.protocol.sf = args.get_f64("sf", spec.protocol.sf)?;
     let nodes = args.get_usize("nodes", 0)?;
     if nodes > 0 {
-        spec.nodes = nodes;
+        spec.population.nodes = nodes;
     }
     args.reject_unknown()?;
 
-    let runtime =
-        if opts.mock { None } else { Some(XlaRuntime::load(&opts.artifacts_dir)?) };
+    let registry = ProtocolRegistry::builtins();
+    let meta = registry.get(&spec.protocol.name)?.meta();
+    let runtime = if spec.workload.dataset == "mock" {
+        None
+    } else {
+        Some(XlaRuntime::load(&spec.workload.artifacts_dir)?)
+    };
     let n = spec.resolved_nodes()?;
     println!(
-        "training {} with {:?} on {} nodes (s={}, a={}, sf={})",
-        spec.dataset,
-        spec.algo,
+        "running {} with {} on {} nodes (s={}, a={}, sf={})",
+        spec.workload.dataset,
+        meta.label,
         n,
         spec.resolved_s()?,
         spec.resolved_a()?,
-        spec.sf
+        spec.protocol.sf
     );
-    let (metrics, traffic) = match spec.algo {
-        Algo::Dsgd => spec.build_dsgd(runtime.as_ref())?.run(),
-        _ => spec.build_modest(runtime.as_ref(), ChurnSchedule::empty())?.run(),
-    };
+    let session = registry.build(&spec, runtime.as_ref(), ChurnSchedule::empty())?;
+    let (metrics, traffic) = session.run();
     println!(
         "finished: round {} after {:.0}s virtual, {} DES events",
         metrics.final_round, metrics.duration_s, metrics.events
@@ -142,9 +195,37 @@ fn cmd_train(args: &Args) -> Result<()> {
         traffic.is_conserved()
     );
     std::fs::create_dir_all(&opts.out_dir)?;
-    let csv = opts.out_dir.join(format!("train_{}_{:?}.csv", spec.dataset, spec.algo));
+    let csv = opts
+        .out_dir
+        .join(format!("run_{}_{}.csv", spec.workload.dataset, meta.csv_tag()));
     metrics.write_curve_csv(&csv)?;
     println!("curve written to {}", csv.display());
+    Ok(())
+}
+
+fn cmd_protocols(args: &Args) -> Result<()> {
+    args.reject_unknown()?;
+    let registry = ProtocolRegistry::builtins();
+    println!("registered protocols:");
+    for meta in registry.metas() {
+        let aliases = if meta.aliases.is_empty() {
+            String::new()
+        } else {
+            format!(" (aliases: {})", meta.aliases.join(", "))
+        };
+        let params = if meta.default_params.is_empty() {
+            String::new()
+        } else {
+            let kv: Vec<String> = meta
+                .default_params
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect();
+            format!(" [params: {}]", kv.join(", "))
+        };
+        println!("  {:<8} {}{aliases}{params}", meta.name, meta.label);
+        println!("           {}", meta.summary);
+    }
     Ok(())
 }
 
@@ -158,9 +239,14 @@ fn cmd_exp(which: &str, args: &Args) -> Result<()> {
                 "cifar10,celeba,femnist,movielens".to_string()
             };
             let ds = args.get_list("datasets", &default);
+            let ps = args.get_list(
+                "protocols",
+                &experiments::fig3::ALL_PROTOCOLS.join(","),
+            );
             args.reject_unknown()?;
-            let refs: Vec<&str> = ds.iter().map(|s| s.as_str()).collect();
-            experiments::fig3::run(&opts, &refs, &experiments::fig3::ALL_ALGOS)?;
+            let dref: Vec<&str> = ds.iter().map(|s| s.as_str()).collect();
+            let pref: Vec<&str> = ps.iter().map(|s| s.as_str()).collect();
+            experiments::fig3::run(&opts, &dref, &pref)?;
         }
         "table1" | "table4" => {
             let default = if which == "table1" {
@@ -203,7 +289,8 @@ fn cmd_exp(which: &str, args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1))?;
     match args.positionals.first().map(|s| s.as_str()) {
-        Some("train") => cmd_train(&args),
+        // `train` kept as an alias for the pre-scenario CLI.
+        Some("run") | Some("train") => cmd_run(&args),
         Some("exp") => {
             let which = args
                 .positionals
@@ -212,6 +299,7 @@ fn main() -> Result<()> {
                 .clone();
             cmd_exp(&which, &args)
         }
+        Some("protocols") => cmd_protocols(&args),
         Some("info") => {
             let dir = args.get_str("artifacts", "artifacts");
             args.reject_unknown()?;

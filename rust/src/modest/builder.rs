@@ -1,0 +1,107 @@
+//! Scenario-API glue for MoDeST: the [`SessionBuilder`] registered under
+//! `modest`, plus the shared assembly the FedAvg emulation reuses.
+
+use anyhow::Result;
+
+use crate::runtime::XlaRuntime;
+use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
+use crate::sim::{ChurnSchedule, SimTime};
+
+use super::session::{ModestConfig, ModestSession};
+
+/// Derive the MoDeST protocol config from a scenario spec.
+pub fn modest_config(spec: &ScenarioSpec) -> Result<ModestConfig> {
+    Ok(ModestConfig {
+        s: spec.resolved_s()?,
+        a: spec.resolved_a()?,
+        sf: spec.protocol.sf,
+        dt: SimTime::from_secs_f64(spec.protocol.dt_s),
+        dk: spec.protocol.dk,
+        max_time: SimTime::from_secs_f64(spec.run.max_time_s),
+        max_rounds: spec.run.max_rounds,
+        eval_interval: SimTime::from_secs_f64(spec.run.eval_interval_s),
+        target_metric: spec.run.target_metric,
+        seed: spec.run.seed,
+        fedavg_server: None,
+    })
+}
+
+/// Assemble a [`ModestSession`] from a scenario. `fedavg` switches on the
+/// §4.3 emulation (fixed best-connected aggregator, unlimited server
+/// capacity, sf = 1) — shared here because FedAvg *is* the MoDeST stack
+/// under a degenerate config, not a separate protocol implementation.
+pub fn assemble_modest(
+    spec: &ScenarioSpec,
+    runtime: Option<&XlaRuntime>,
+    churn: ChurnSchedule,
+    fedavg: bool,
+) -> Result<ModestSession> {
+    let n = spec.resolved_nodes()?;
+    // Churn scripts may introduce node ids beyond the initial population;
+    // the dataset/fabric/compute substrates must cover them too.
+    let max_n = n.max(
+        churn.events().iter().map(|e| e.node as usize + 1).max().unwrap_or(0),
+    );
+    let task = spec.build_task_for(runtime, max_n)?;
+    let fabric = spec.build_fabric(max_n)?;
+    let compute = spec.build_compute(max_n);
+    let mut cfg = modest_config(spec)?;
+    if fedavg {
+        cfg = crate::baselines::fedavg_config(&cfg, fabric.latency(), n);
+    }
+    Ok(ModestSession::new(cfg, n, task, compute, fabric, churn))
+}
+
+impl Session for ModestSession {
+    fn run(self: Box<Self>) -> (crate::metrics::SessionMetrics, crate::net::TrafficLedger) {
+        ModestSession::run(*self)
+    }
+}
+
+/// Registry factory for MoDeST.
+pub struct ModestBuilder;
+
+impl SessionBuilder for ModestBuilder {
+    fn meta(&self) -> ProtocolMeta {
+        ProtocolMeta {
+            name: "modest",
+            label: "MoDeST",
+            aliases: &[],
+            summary: "the paper's protocol: decentralized client sampling, `s` \
+                      trainers + `a` aggregators per round, churn-tolerant views",
+            default_round_budget: 200,
+            default_params: &[],
+        }
+    }
+
+    fn build(
+        &self,
+        spec: &ScenarioSpec,
+        runtime: Option<&XlaRuntime>,
+        churn: ChurnSchedule,
+    ) -> Result<Box<dyn Session>> {
+        Ok(Box::new(assemble_modest(spec, runtime, churn, false)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_session_builds_without_artifacts() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.population.nodes = 12;
+        spec.run.max_time_s = 5.0;
+        assert!(assemble_modest(&spec, None, ChurnSchedule::empty(), false).is_ok());
+    }
+
+    #[test]
+    fn config_resolves_preset_s_and_a() {
+        let spec = ScenarioSpec::new("cifar10", "modest");
+        let cfg = modest_config(&spec).unwrap();
+        assert_eq!(cfg.s, 10);
+        assert_eq!(cfg.a, 3);
+        assert_eq!(cfg.fedavg_server, None);
+    }
+}

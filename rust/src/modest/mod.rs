@@ -15,6 +15,7 @@
 //!   multi-aggregator fast path, driven over the discrete-event simulator.
 
 pub mod activity;
+pub mod builder;
 pub mod node;
 pub mod registry;
 pub mod sampler;
@@ -22,6 +23,7 @@ pub mod session;
 pub mod view;
 
 pub use activity::ActivityClock;
+pub use builder::{assemble_modest, modest_config, ModestBuilder};
 pub use registry::{MembershipEvent, Registry};
 pub use sampler::candidate_order;
 pub use session::{ModestConfig, ModestProtocol, ModestSession};

@@ -1,0 +1,31 @@
+//! The Scenario API: declarative session composition.
+//!
+//! This layer replaces the old closed surface (an `Algo` enum, a flat
+//! 19-field `SessionSpec`, and per-algorithm `build_*` calls at every
+//! launch site) with two orthogonal pieces:
+//!
+//! * [`ScenarioSpec`] — a layered description of one session, nested as
+//!   `{workload, population, network, protocol, run}` and parseable from
+//!   JSON (legacy flat keys keep working through a compatibility shim).
+//!   The `network` section speaks the full fabric vocabulary: uniform,
+//!   lognormal, weighted asymmetric capacity tiers, per-node traces.
+//! * [`ProtocolRegistry`] — protocol name → [`SessionBuilder`] factory
+//!   returning a type-erased [`Session`] with uniform
+//!   `run() -> (SessionMetrics, TrafficLedger)`, plus [`ProtocolMeta`]
+//!   (label, aliases, default params) that drives CLI help, experiment
+//!   labels, and CSV naming.
+//!
+//! Every launcher (`main.rs`, `experiments::*`, the examples, tests and
+//! benches) goes through this module; protocols never appear by name
+//! outside their own module and one registration line in
+//! [`ProtocolRegistry::builtins`].
+
+pub mod network;
+pub mod registry;
+pub mod spec;
+
+pub use network::{NetworkSpec, TierSpec};
+pub use registry::{
+    run_scenario, ProtocolMeta, ProtocolRegistry, Session, SessionBuilder,
+};
+pub use spec::{PopulationSpec, ProtocolSpec, RunSpec, ScenarioSpec, WorkloadSpec};

@@ -1,0 +1,363 @@
+//! The `network` section of a scenario: first-class shaping of per-node
+//! capacities, compiled down to [`net::BandwidthConfig`](crate::net::BandwidthConfig).
+//!
+//! The old flat `SessionSpec` could only express symmetric capacities
+//! (`bandwidth_mbps` + lognormal `bandwidth_sigma`); the full fabric
+//! vocabulary — weighted **asymmetric up/down tiers** (FCC/speedtest-style
+//! cable / DSL / fiber classes) and explicit per-node trace playback — was
+//! reachable only programmatically. [`NetworkSpec`] exposes all four modes
+//! declaratively:
+//!
+//! ```json
+//! "network": {
+//!   "bandwidth_mbps": 50.0,
+//!   "bandwidth_sigma": 0.0,
+//!   "classes": [
+//!     {"name": "fiber", "weight": 0.2, "up_mbps": 100.0, "down_mbps": 300.0},
+//!     {"name": "cable", "weight": 0.5, "up_mbps": 10.0,  "down_mbps": 100.0},
+//!     {"name": "dsl",   "weight": 0.3, "up_mbps": 1.5,   "down_mbps": 12.0}
+//!   ],
+//!   "trace_file": null
+//! }
+//! ```
+//!
+//! Precedence: `trace_file` > `classes` > `bandwidth_sigma` (lognormal) >
+//! `bandwidth_mbps` (uniform). Trace files are CSV, one node per line,
+//! `up_mbps,down_mbps` (a single column means symmetric); `#` comments and
+//! an alphabetic header line are skipped.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::net::{BandwidthClass, BandwidthConfig};
+use crate::util::Json;
+
+/// One capacity tier of `network.classes`: asymmetric up/down rates with a
+/// relative sampling weight (weights need not sum to 1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TierSpec {
+    /// Display name ("fiber", "cable", ...) — documentation only.
+    pub name: String,
+    pub weight: f64,
+    pub up_mbps: f64,
+    pub down_mbps: f64,
+}
+
+impl TierSpec {
+    pub fn from_json(v: &Json) -> Result<TierSpec> {
+        let mut name = String::new();
+        let mut weight = 1.0;
+        let mut up_mbps = None;
+        let mut down_mbps = None;
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                "name" => name = val.as_str()?.to_string(),
+                "weight" => weight = val.as_f64()?,
+                "up_mbps" => up_mbps = Some(val.as_f64()?),
+                "down_mbps" => down_mbps = Some(val.as_f64()?),
+                other => bail!("unknown bandwidth-class key {other:?}"),
+            }
+        }
+        let up = up_mbps.ok_or_else(|| anyhow!("bandwidth class missing up_mbps"))?;
+        // A tier with only `up_mbps` is symmetric.
+        let down = down_mbps.unwrap_or(up);
+        anyhow::ensure!(weight > 0.0, "bandwidth class weight must be > 0, got {weight}");
+        anyhow::ensure!(up >= 0.0 && down >= 0.0, "negative capacity in class {name:?}");
+        Ok(TierSpec { name, weight, up_mbps: up, down_mbps: down })
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("weight", Json::Num(self.weight)),
+            ("up_mbps", Json::Num(self.up_mbps)),
+            ("down_mbps", Json::Num(self.down_mbps)),
+        ])
+    }
+}
+
+/// The `network` section of a [`super::ScenarioSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NetworkSpec {
+    /// Median symmetric per-node capacity in Mbit/s (uniform / lognormal
+    /// modes; ignored when `classes` or `trace_file` is set).
+    pub bandwidth_mbps: f64,
+    /// Capacity heterogeneity: lognormal sigma around `bandwidth_mbps`
+    /// (0 = every node identical).
+    pub bandwidth_sigma: f64,
+    /// Weighted asymmetric capacity tiers; non-empty wins over the scalar
+    /// knobs.
+    pub classes: Vec<TierSpec>,
+    /// Per-node capacity trace (CSV `up_mbps,down_mbps` per node); wins
+    /// over everything else.
+    pub trace_file: Option<String>,
+}
+
+impl Default for NetworkSpec {
+    fn default() -> Self {
+        NetworkSpec {
+            bandwidth_mbps: 50.0,
+            bandwidth_sigma: 0.0,
+            classes: Vec::new(),
+            trace_file: None,
+        }
+    }
+}
+
+impl NetworkSpec {
+    pub fn from_json(v: &Json) -> Result<NetworkSpec> {
+        let mut out = NetworkSpec::default();
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                "bandwidth_mbps" => out.bandwidth_mbps = val.as_f64()?,
+                "bandwidth_sigma" => out.bandwidth_sigma = val.as_f64()?,
+                "classes" => {
+                    out.classes = val
+                        .as_arr()?
+                        .iter()
+                        .map(TierSpec::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                }
+                "trace_file" => {
+                    out.trace_file = if *val == Json::Null {
+                        None
+                    } else {
+                        Some(val.as_str()?.to_string())
+                    }
+                }
+                other => bail!("unknown network key {other:?}"),
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bandwidth_mbps", Json::Num(self.bandwidth_mbps)),
+            ("bandwidth_sigma", Json::Num(self.bandwidth_sigma)),
+            (
+                "classes",
+                Json::Arr(self.classes.iter().map(TierSpec::to_json).collect()),
+            ),
+            (
+                "trace_file",
+                match &self.trace_file {
+                    Some(p) => Json::Str(p.clone()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Compile this section into the per-node capacity distribution the
+    /// fabric samples from. Fails only on an unreadable/malformed trace.
+    pub fn bandwidth_config(&self) -> Result<BandwidthConfig> {
+        if let Some(path) = &self.trace_file {
+            return load_trace(path);
+        }
+        if !self.classes.is_empty() {
+            return Ok(BandwidthConfig::Classes(
+                self.classes
+                    .iter()
+                    .map(|t| BandwidthClass {
+                        weight: t.weight,
+                        up_bps: t.up_mbps * 1e6,
+                        down_bps: t.down_mbps * 1e6,
+                    })
+                    .collect(),
+            ));
+        }
+        anyhow::ensure!(
+            self.bandwidth_mbps > 0.0,
+            "bandwidth_mbps must be > 0, got {}",
+            self.bandwidth_mbps
+        );
+        if self.bandwidth_sigma > 0.0 {
+            Ok(BandwidthConfig::LogNormal {
+                median_bps: self.bandwidth_mbps * 1e6,
+                sigma: self.bandwidth_sigma,
+            })
+        } else {
+            Ok(BandwidthConfig::Uniform { bps: self.bandwidth_mbps * 1e6 })
+        }
+    }
+}
+
+/// Parse a capacity trace file into [`BandwidthConfig::PerNode`].
+fn load_trace(path: &str) -> Result<BandwidthConfig> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading bandwidth trace {path:?}"))?;
+    parse_trace(&text).with_context(|| format!("parsing bandwidth trace {path:?}"))
+}
+
+/// CSV body: `up_mbps[,down_mbps]` per node, `#` comments, optional header.
+fn parse_trace(text: &str) -> Result<BandwidthConfig> {
+    let mut up_bps = Vec::new();
+    let mut down_bps = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        // Parse-first so numeric rows with letters in them ("1e1,1e2")
+        // stay data. An unparseable row is tolerated as a header only
+        // before the first data row AND when it leads with a letter
+        // ("up_mbps,down_mbps") — a typoed first data row ("1O.0,100")
+        // must error, not silently shift every node's capacities by one.
+        let row = parse_trace_row(line);
+        let (up, down) = match row {
+            Ok(pair) => pair,
+            Err(_)
+                if up_bps.is_empty()
+                    && line.chars().next().is_some_and(|c| c.is_ascii_alphabetic()) =>
+            {
+                continue
+            }
+            Err(e) => bail!("trace line {}: {e}", lineno + 1),
+        };
+        anyhow::ensure!(
+            up >= 0.0 && down >= 0.0,
+            "negative capacity on trace line {}",
+            lineno + 1
+        );
+        up_bps.push(up * 1e6);
+        down_bps.push(down * 1e6);
+    }
+    anyhow::ensure!(!up_bps.is_empty(), "trace holds no capacity rows");
+    Ok(BandwidthConfig::PerNode { up_bps, down_bps })
+}
+
+/// One `up[,down]` row; a single column means symmetric.
+fn parse_trace_row(line: &str) -> Result<(f64, f64)> {
+    let mut cols = line.split(',').map(str::trim);
+    let up: f64 = cols
+        .next()
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| anyhow!("empty row"))?
+        .parse()
+        .map_err(|e| anyhow!("bad up_mbps: {e}"))?;
+    let down: f64 = match cols.next().filter(|s| !s.is_empty()) {
+        Some(s) => s.parse().map_err(|e| anyhow!("bad down_mbps: {e}"))?,
+        None => up,
+    };
+    Ok((up, down))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_flat_50mbps() {
+        let cfg = NetworkSpec::default().bandwidth_config().unwrap();
+        match cfg {
+            BandwidthConfig::Uniform { bps } => assert_eq!(bps, 50e6),
+            other => panic!("expected Uniform, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sigma_selects_lognormal() {
+        let spec = NetworkSpec { bandwidth_sigma: 0.5, ..Default::default() };
+        match spec.bandwidth_config().unwrap() {
+            BandwidthConfig::LogNormal { median_bps, sigma } => {
+                assert_eq!(median_bps, 50e6);
+                assert_eq!(sigma, 0.5);
+            }
+            other => panic!("expected LogNormal, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn classes_parse_with_asymmetric_tiers() {
+        let v = Json::parse(
+            r#"{"classes": [
+                {"name": "cable", "weight": 2.0, "up_mbps": 10.0, "down_mbps": 100.0},
+                {"name": "dsl", "weight": 1.0, "up_mbps": 1.5, "down_mbps": 12.0}
+            ]}"#,
+        )
+        .unwrap();
+        let spec = NetworkSpec::from_json(&v).unwrap();
+        assert_eq!(spec.classes.len(), 2);
+        match spec.bandwidth_config().unwrap() {
+            BandwidthConfig::Classes(cs) => {
+                assert_eq!(cs[0].up_bps, 10e6);
+                assert_eq!(cs[0].down_bps, 100e6);
+                assert_eq!(cs[1].weight, 1.0);
+            }
+            other => panic!("expected Classes, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tier_with_only_up_is_symmetric() {
+        let v = Json::parse(r#"{"weight": 1.0, "up_mbps": 25.0}"#).unwrap();
+        let t = TierSpec::from_json(&v).unwrap();
+        assert_eq!(t.up_mbps, 25.0);
+        assert_eq!(t.down_mbps, 25.0);
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let v = Json::parse(r#"{"bandwidht_mbps": 1.0}"#).unwrap();
+        assert!(NetworkSpec::from_json(&v).is_err());
+        let t = Json::parse(r#"{"up_mbps": 1.0, "wieght": 2.0}"#).unwrap();
+        assert!(TierSpec::from_json(&t).is_err());
+    }
+
+    #[test]
+    fn trace_parses_csv_with_header_and_comments() {
+        let cfg = parse_trace(
+            "# FCC sample\nup_mbps,down_mbps\n10.0,100.0\n1.5,12\n25\n",
+        )
+        .unwrap();
+        match cfg {
+            BandwidthConfig::PerNode { up_bps, down_bps } => {
+                assert_eq!(up_bps, vec![10e6, 1.5e6, 25e6]);
+                assert_eq!(down_bps, vec![100e6, 12e6, 25e6]);
+            }
+            other => panic!("expected PerNode, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn empty_or_bad_traces_fail() {
+        assert!(parse_trace("# nothing\n").is_err());
+        assert!(parse_trace("10.0\nnot-a-number,5\n").is_err());
+        assert!(parse_trace("10.0,-5\n").is_err());
+        // A typoed FIRST data row must not be mistaken for a header — that
+        // would silently shift every node's capacity assignment by one.
+        assert!(parse_trace("1O.0,100\n2,3\n").is_err());
+        assert!(load_trace("/definitely/not/a/file.csv").is_err());
+    }
+
+    #[test]
+    fn scientific_notation_rows_are_data_not_headers() {
+        // "1e1" contains a letter but is a valid f64 — it must not be
+        // mistaken for a header row and dropped.
+        match parse_trace("1e1,1e2\n2,3\n").unwrap() {
+            BandwidthConfig::PerNode { up_bps, down_bps } => {
+                assert_eq!(up_bps, vec![10e6, 2e6]);
+                assert_eq!(down_bps, vec![100e6, 3e6]);
+            }
+            other => panic!("expected PerNode, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn roundtrips_through_json() {
+        let spec = NetworkSpec {
+            bandwidth_mbps: 25.0,
+            bandwidth_sigma: 0.0,
+            classes: vec![TierSpec {
+                name: "fiber".into(),
+                weight: 1.0,
+                up_mbps: 100.0,
+                down_mbps: 300.0,
+            }],
+            trace_file: None,
+        };
+        let back = NetworkSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(spec, back);
+    }
+}

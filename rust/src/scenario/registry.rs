@@ -1,0 +1,218 @@
+//! The protocol registry: name → session factory.
+//!
+//! Protocols register a [`SessionBuilder`] that assembles a type-erased
+//! [`Session`] from a [`ScenarioSpec`]; every launcher (CLI, experiment
+//! drivers, examples, tests) dispatches through the registry instead of
+//! matching on an enum. Adding a protocol = implement [`sim::Protocol`]
+//! (one page), add a [`SessionBuilder`] next to it, and register it in
+//! [`ProtocolRegistry::builtins`] — no edits anywhere else.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::SessionMetrics;
+use crate::net::TrafficLedger;
+use crate::runtime::XlaRuntime;
+use crate::sim::ChurnSchedule;
+
+use super::spec::ScenarioSpec;
+
+/// A fully-assembled, runnable protocol session (type-erased).
+pub trait Session {
+    /// Drive the session to its budget; returns the collected metrics and
+    /// the traffic ledger.
+    fn run(self: Box<Self>) -> (SessionMetrics, TrafficLedger);
+}
+
+/// Static metadata a protocol publishes through the registry.
+#[derive(Debug, Clone, Copy)]
+pub struct ProtocolMeta {
+    /// Canonical registry name (`modest`, `fedavg`, `dsgd`, `gossip`).
+    pub name: &'static str,
+    /// Label as the paper prints it (`MoDeST`, `FedAvg`, `D-SGD`, ...);
+    /// also the source of CSV file tags via [`ProtocolMeta::csv_tag`].
+    pub label: &'static str,
+    /// Accepted alternative names (`fl`, `d-sgd`, `dl`, ...).
+    pub aliases: &'static [&'static str],
+    /// One-line description for `repro protocols`.
+    pub summary: &'static str,
+    /// Round budget figure drivers apply when the caller gives none
+    /// (protocols that train every node every round get a lower cap).
+    pub default_round_budget: u64,
+    /// Protocol-specific extras and their defaults (documentation +
+    /// `repro protocols`); read at build time via `ProtocolSpec::param`.
+    pub default_params: &'static [(&'static str, f64)],
+}
+
+impl ProtocolMeta {
+    /// Lower-cased label used in CSV/file names (`modest`, `d-sgd`, ...).
+    pub fn csv_tag(&self) -> String {
+        self.label.to_lowercase()
+    }
+
+    fn answers_to(&self, name: &str) -> bool {
+        self.name.eq_ignore_ascii_case(name)
+            || self.aliases.iter().any(|a| a.eq_ignore_ascii_case(name))
+    }
+}
+
+/// Factory assembling a runnable [`Session`] for one protocol.
+pub trait SessionBuilder {
+    fn meta(&self) -> ProtocolMeta;
+
+    /// Assemble the session: task, fabric, compute model, protocol state.
+    /// `runtime` may be `None` for the mock dataset; builders that do not
+    /// support churn scripts must reject a non-empty `churn`.
+    fn build(
+        &self,
+        spec: &ScenarioSpec,
+        runtime: Option<&XlaRuntime>,
+        churn: ChurnSchedule,
+    ) -> Result<Box<dyn Session>>;
+}
+
+/// Name → [`SessionBuilder`] mapping; the single dispatch point for every
+/// launcher.
+pub struct ProtocolRegistry {
+    builders: Vec<Box<dyn SessionBuilder>>,
+}
+
+impl Default for ProtocolRegistry {
+    fn default() -> Self {
+        ProtocolRegistry::builtins()
+    }
+}
+
+impl ProtocolRegistry {
+    /// An empty registry (tests, downstream embedders).
+    pub fn empty() -> ProtocolRegistry {
+        ProtocolRegistry { builders: Vec::new() }
+    }
+
+    /// All in-tree protocols. This is the only place a new protocol is
+    /// named outside its own module.
+    pub fn builtins() -> ProtocolRegistry {
+        let mut r = ProtocolRegistry::empty();
+        r.register(Box::new(crate::modest::ModestBuilder));
+        r.register(Box::new(crate::baselines::FedavgBuilder));
+        r.register(Box::new(crate::baselines::DsgdBuilder));
+        r.register(Box::new(crate::gossip::GossipBuilder));
+        r
+    }
+
+    /// Register a builder. Panics on a name/alias collision — that is a
+    /// programming error, not a runtime condition.
+    pub fn register(&mut self, builder: Box<dyn SessionBuilder>) {
+        let meta = builder.meta();
+        for existing in &self.builders {
+            let e = existing.meta();
+            let clash = std::iter::once(meta.name)
+                .chain(meta.aliases.iter().copied())
+                .any(|n| e.answers_to(n));
+            assert!(!clash, "protocol {:?} collides with {:?}", meta.name, e.name);
+        }
+        self.builders.push(builder);
+    }
+
+    /// Look up by canonical name or alias (case-insensitive).
+    pub fn get(&self, name: &str) -> Result<&dyn SessionBuilder> {
+        match self.builders.iter().find(|b| b.meta().answers_to(name)) {
+            Some(b) => Ok(b.as_ref()),
+            None => bail!(
+                "unknown protocol {name:?} (registered: {})",
+                self.names().join("|")
+            ),
+        }
+    }
+
+    /// Canonical names in registration order.
+    pub fn names(&self) -> Vec<&'static str> {
+        self.builders.iter().map(|b| b.meta().name).collect()
+    }
+
+    /// Metadata rows in registration order.
+    pub fn metas(&self) -> Vec<ProtocolMeta> {
+        self.builders.iter().map(|b| b.meta()).collect()
+    }
+
+    /// Paper-style label for a protocol name (replaces the old hardcoded
+    /// `algo_label` match).
+    pub fn label(&self, name: &str) -> Result<&'static str> {
+        Ok(self.get(name)?.meta().label)
+    }
+
+    /// Assemble the session `spec` describes, dispatching on
+    /// `spec.protocol.name`. Protocol-specific `params` are validated
+    /// against the builder's declared `default_params`, so a typoed
+    /// `fanuot` fails loudly like every other unknown config key.
+    pub fn build(
+        &self,
+        spec: &ScenarioSpec,
+        runtime: Option<&XlaRuntime>,
+        churn: ChurnSchedule,
+    ) -> Result<Box<dyn Session>> {
+        let builder = self.get(&spec.protocol.name)?;
+        let meta = builder.meta();
+        for (key, _) in &spec.protocol.params {
+            if !meta.default_params.iter().any(|(name, _)| *name == key.as_str()) {
+                let known = if meta.default_params.is_empty() {
+                    "none".to_string()
+                } else {
+                    meta.default_params
+                        .iter()
+                        .map(|&(name, _)| name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                };
+                bail!("unknown {} param {key:?} (known params: {known})", meta.name);
+            }
+        }
+        builder.build(spec, runtime, churn)
+    }
+}
+
+/// Build and run `spec` on the builtin registry — the one-call entry point
+/// for examples and tests.
+pub fn run_scenario(
+    spec: &ScenarioSpec,
+    runtime: Option<&XlaRuntime>,
+    churn: ChurnSchedule,
+) -> Result<(SessionMetrics, TrafficLedger)> {
+    Ok(ProtocolRegistry::builtins().build(spec, runtime, churn)?.run())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_cover_all_four_protocols() {
+        let r = ProtocolRegistry::builtins();
+        assert_eq!(r.names(), vec!["modest", "fedavg", "dsgd", "gossip"]);
+    }
+
+    #[test]
+    fn aliases_resolve_case_insensitively() {
+        let r = ProtocolRegistry::builtins();
+        assert_eq!(r.get("FL").unwrap().meta().name, "fedavg");
+        assert_eq!(r.get("d-sgd").unwrap().meta().name, "dsgd");
+        assert_eq!(r.get("dl").unwrap().meta().name, "dsgd");
+        assert_eq!(r.get("MoDeST").unwrap().meta().name, "modest");
+        assert!(r.get("nope").is_err());
+    }
+
+    #[test]
+    fn labels_match_the_paper() {
+        let r = ProtocolRegistry::builtins();
+        assert_eq!(r.label("modest").unwrap(), "MoDeST");
+        assert_eq!(r.label("fedavg").unwrap(), "FedAvg");
+        assert_eq!(r.label("dsgd").unwrap(), "D-SGD");
+        assert_eq!(r.get("dsgd").unwrap().meta().csv_tag(), "d-sgd");
+    }
+
+    #[test]
+    #[should_panic(expected = "collides")]
+    fn duplicate_registration_panics() {
+        let mut r = ProtocolRegistry::builtins();
+        r.register(Box::new(crate::modest::ModestBuilder));
+    }
+}

@@ -1,0 +1,609 @@
+//! The layered scenario specification.
+//!
+//! A [`ScenarioSpec`] fully describes one runnable session as five nested
+//! sections — replacing the old flat 19-field `SessionSpec`:
+//!
+//! * [`WorkloadSpec`] — which learning task (dataset preset, artifact dir).
+//! * [`PopulationSpec`] — how many nodes and how fast they compute.
+//! * [`NetworkSpec`] — latency + per-node capacity shaping (see
+//!   [`super::network`]).
+//! * [`ProtocolSpec`] — which registered protocol runs, with its knobs.
+//! * [`RunSpec`] — budgets, eval cadence, stop target, seed.
+//!
+//! JSON configs may use the nested sections, the old flat keys (accepted
+//! via a compatibility shim so every pre-existing config file keeps
+//! parsing, with identical same-seed behaviour), or a mix of both; flat
+//! keys are applied after sections so an explicit flat override wins.
+
+use anyhow::{bail, Result};
+
+use crate::config::preset;
+use crate::learning::{ComputeModel, MockTask, Task};
+use crate::net::{LatencyMatrix, LatencyParams, NetworkFabric};
+use crate::runtime::XlaRuntime;
+use crate::sim::SimRng;
+use crate::util::Json;
+
+use super::network::NetworkSpec;
+
+/// The `workload` section: which learning task the session trains.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Dataset preset name (`cifar10`, `celeba`, `femnist`, `movielens`,
+    /// `transformer`, `mock`).
+    pub dataset: String,
+    /// AOT artifact directory for the XLA path.
+    pub artifacts_dir: String,
+}
+
+impl Default for WorkloadSpec {
+    fn default() -> Self {
+        WorkloadSpec { dataset: "cifar10".into(), artifacts_dir: "artifacts".into() }
+    }
+}
+
+/// The `population` section: node count and compute heterogeneity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PopulationSpec {
+    /// Explicit node count; 0 = paper preset count (times `scale`).
+    pub nodes: usize,
+    /// Scale factor on the preset node count for CI-speed runs.
+    pub scale: f64,
+    /// Base per-batch train time (s) on a speed-1 node.
+    pub base_batch_s: f64,
+    /// Compute heterogeneity (lognormal sigma; 0 = uniform).
+    pub hetero_sigma: f64,
+}
+
+impl Default for PopulationSpec {
+    fn default() -> Self {
+        PopulationSpec { nodes: 0, scale: 1.0, base_batch_s: 0.05, hetero_sigma: 0.35 }
+    }
+}
+
+/// The `protocol` section: which registered protocol runs the session.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProtocolSpec {
+    /// Registry name or alias (`modest`, `fedavg`/`fl`, `dsgd`/`d-sgd`/`dl`,
+    /// `gossip`, ...).
+    pub name: String,
+    /// Sample size `s` (trainers per round); 0 = dataset preset.
+    pub s: usize,
+    /// Aggregators per round `a`; 0 = dataset preset.
+    pub a: usize,
+    /// Success fraction `sf` of models required to aggregate.
+    pub sf: f64,
+    /// Ping timeout `Δt` in seconds.
+    pub dt_s: f64,
+    /// Activity window `Δk` in rounds.
+    pub dk: u64,
+    /// Protocol-specific extras (e.g. gossip `fanout`), free-form numeric
+    /// key/value pairs a builder may read via [`ProtocolSpec::param`].
+    pub params: Vec<(String, f64)>,
+}
+
+impl Default for ProtocolSpec {
+    fn default() -> Self {
+        ProtocolSpec {
+            name: "modest".into(),
+            s: 0,
+            a: 0,
+            sf: 1.0,
+            dt_s: 2.0,
+            dk: 20,
+            params: Vec::new(),
+        }
+    }
+}
+
+impl ProtocolSpec {
+    /// Look up a protocol-specific extra parameter.
+    pub fn param(&self, key: &str) -> Option<f64> {
+        self.params.iter().find(|(k, _)| k == key).map(|&(_, v)| v)
+    }
+}
+
+/// The `run` section: budgets, eval cadence, stop target, seed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpec {
+    /// Stop after this much virtual time (seconds).
+    pub max_time_s: f64,
+    /// Round budget (0 = unlimited).
+    pub max_rounds: u64,
+    /// Evaluate the model(s) this often (virtual seconds).
+    pub eval_interval_s: f64,
+    /// Stop early when the metric crosses this target (accuracy >=, mse <=).
+    pub target_metric: Option<f64>,
+    /// Seed for everything in the session.
+    pub seed: u64,
+}
+
+impl Default for RunSpec {
+    fn default() -> Self {
+        RunSpec {
+            max_time_s: 1800.0,
+            max_rounds: 0,
+            eval_interval_s: 20.0,
+            target_metric: None,
+            seed: 42,
+        }
+    }
+}
+
+/// Full layered session description; see the module docs.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ScenarioSpec {
+    pub workload: WorkloadSpec,
+    pub population: PopulationSpec,
+    pub network: NetworkSpec,
+    pub protocol: ProtocolSpec,
+    pub run: RunSpec,
+}
+
+impl ScenarioSpec {
+    /// Convenience constructor for the common case.
+    pub fn new(dataset: &str, protocol: &str) -> ScenarioSpec {
+        ScenarioSpec {
+            workload: WorkloadSpec { dataset: dataset.into(), ..Default::default() },
+            protocol: ProtocolSpec { name: protocol.into(), ..Default::default() },
+            ..Default::default()
+        }
+    }
+
+    // ------------------------------------------------------------- parsing
+
+    /// Load from a JSON config body. Accepts the nested five-section form,
+    /// the legacy flat keys, or a mix (flat keys applied last, so they
+    /// override sections). Unknown keys are rejected at every level.
+    pub fn from_json(text: &str) -> Result<ScenarioSpec> {
+        let v = Json::parse(text)?;
+        let mut spec = ScenarioSpec::default();
+        let mut flat: Vec<(&str, &Json)> = Vec::new();
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                // -------- nested sections
+                "workload" => {
+                    for (k, val) in val.as_obj()? {
+                        match k.as_str() {
+                            "dataset" => spec.workload.dataset = val.as_str()?.to_string(),
+                            "artifacts_dir" => {
+                                spec.workload.artifacts_dir = val.as_str()?.to_string()
+                            }
+                            other => bail!("unknown workload key {other:?}"),
+                        }
+                    }
+                }
+                "population" => {
+                    for (k, val) in val.as_obj()? {
+                        match k.as_str() {
+                            "nodes" => spec.population.nodes = val.as_usize()?,
+                            "scale" => spec.population.scale = val.as_f64()?,
+                            "base_batch_s" => spec.population.base_batch_s = val.as_f64()?,
+                            "hetero_sigma" => spec.population.hetero_sigma = val.as_f64()?,
+                            other => bail!("unknown population key {other:?}"),
+                        }
+                    }
+                }
+                "network" => spec.network = NetworkSpec::from_json(val)?,
+                "protocol" => {
+                    for (k, val) in val.as_obj()? {
+                        match k.as_str() {
+                            "name" => spec.protocol.name = val.as_str()?.to_string(),
+                            "s" => spec.protocol.s = val.as_usize()?,
+                            "a" => spec.protocol.a = val.as_usize()?,
+                            "sf" => spec.protocol.sf = val.as_f64()?,
+                            "dt_s" => spec.protocol.dt_s = val.as_f64()?,
+                            "dk" => spec.protocol.dk = val.as_u64()?,
+                            "params" => {
+                                spec.protocol.params = val
+                                    .as_obj()?
+                                    .iter()
+                                    .map(|(k, v)| Ok((k.clone(), v.as_f64()?)))
+                                    .collect::<Result<Vec<_>>>()?;
+                            }
+                            other => bail!("unknown protocol key {other:?}"),
+                        }
+                    }
+                }
+                "run" => {
+                    for (k, val) in val.as_obj()? {
+                        match k.as_str() {
+                            "max_time_s" => spec.run.max_time_s = val.as_f64()?,
+                            "max_rounds" => spec.run.max_rounds = val.as_u64()?,
+                            "eval_interval_s" => spec.run.eval_interval_s = val.as_f64()?,
+                            "target_metric" => {
+                                spec.run.target_metric = if *val == Json::Null {
+                                    None
+                                } else {
+                                    Some(val.as_f64()?)
+                                }
+                            }
+                            "seed" => spec.run.seed = val.as_u64()?,
+                            other => bail!("unknown run key {other:?}"),
+                        }
+                    }
+                }
+                // -------- legacy flat keys (deferred so they win over
+                // sections regardless of key order)
+                _ => flat.push((key.as_str(), val)),
+            }
+        }
+        for (key, val) in flat {
+            spec.apply_flat_key(key, val)?;
+        }
+        Ok(spec)
+    }
+
+    /// Legacy flat-key compatibility shim: the full old `SessionSpec`
+    /// vocabulary routed into the nested sections.
+    fn apply_flat_key(&mut self, key: &str, val: &Json) -> Result<()> {
+        match key {
+            "dataset" => self.workload.dataset = val.as_str()?.to_string(),
+            "artifacts_dir" => self.workload.artifacts_dir = val.as_str()?.to_string(),
+            // `algo` was the enum-backed protocol selector.
+            "algo" => self.protocol.name = val.as_str()?.to_string(),
+            "nodes" => self.population.nodes = val.as_usize()?,
+            "scale" => self.population.scale = val.as_f64()?,
+            "base_batch_s" => self.population.base_batch_s = val.as_f64()?,
+            "hetero_sigma" => self.population.hetero_sigma = val.as_f64()?,
+            "s" => self.protocol.s = val.as_usize()?,
+            "a" => self.protocol.a = val.as_usize()?,
+            "sf" => self.protocol.sf = val.as_f64()?,
+            "dt_s" => self.protocol.dt_s = val.as_f64()?,
+            "dk" => self.protocol.dk = val.as_u64()?,
+            "max_time_s" => self.run.max_time_s = val.as_f64()?,
+            "max_rounds" => self.run.max_rounds = val.as_u64()?,
+            "eval_interval_s" => self.run.eval_interval_s = val.as_f64()?,
+            "target_metric" => {
+                self.run.target_metric =
+                    if *val == Json::Null { None } else { Some(val.as_f64()?) }
+            }
+            "seed" => self.run.seed = val.as_u64()?,
+            "bandwidth_mbps" => self.network.bandwidth_mbps = val.as_f64()?,
+            "bandwidth_sigma" => self.network.bandwidth_sigma = val.as_f64()?,
+            other => bail!(
+                "unknown config key {other:?} (not a section or a legacy flat key)"
+            ),
+        }
+        Ok(())
+    }
+
+    /// Serialize as the nested five-section JSON form.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "workload",
+                Json::obj(vec![
+                    ("dataset", Json::Str(self.workload.dataset.clone())),
+                    ("artifacts_dir", Json::Str(self.workload.artifacts_dir.clone())),
+                ]),
+            ),
+            (
+                "population",
+                Json::obj(vec![
+                    ("nodes", Json::Num(self.population.nodes as f64)),
+                    ("scale", Json::Num(self.population.scale)),
+                    ("base_batch_s", Json::Num(self.population.base_batch_s)),
+                    ("hetero_sigma", Json::Num(self.population.hetero_sigma)),
+                ]),
+            ),
+            ("network", self.network.to_json()),
+            (
+                "protocol",
+                Json::obj(vec![
+                    ("name", Json::Str(self.protocol.name.clone())),
+                    ("s", Json::Num(self.protocol.s as f64)),
+                    ("a", Json::Num(self.protocol.a as f64)),
+                    ("sf", Json::Num(self.protocol.sf)),
+                    ("dt_s", Json::Num(self.protocol.dt_s)),
+                    ("dk", Json::Num(self.protocol.dk as f64)),
+                    (
+                        "params",
+                        Json::Obj(
+                            self.protocol
+                                .params
+                                .iter()
+                                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "run",
+                Json::obj(vec![
+                    ("max_time_s", Json::Num(self.run.max_time_s)),
+                    ("max_rounds", Json::Num(self.run.max_rounds as f64)),
+                    ("eval_interval_s", Json::Num(self.run.eval_interval_s)),
+                    (
+                        "target_metric",
+                        match self.run.target_metric {
+                            Some(t) => Json::Num(t),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("seed", Json::Num(self.run.seed as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    // ----------------------------------------------------------- resolvers
+
+    pub fn resolved_nodes(&self) -> Result<usize> {
+        let p = preset(&self.workload.dataset)?;
+        let n = if self.population.nodes > 0 {
+            self.population.nodes
+        } else {
+            ((p.nodes as f64 * self.population.scale).round() as usize).max(8)
+        };
+        Ok(n)
+    }
+
+    pub fn resolved_s(&self) -> Result<usize> {
+        Ok(if self.protocol.s > 0 { self.protocol.s } else { preset(&self.workload.dataset)?.s })
+    }
+
+    pub fn resolved_a(&self) -> Result<usize> {
+        Ok(if self.protocol.a > 0 { self.protocol.a } else { preset(&self.workload.dataset)?.a })
+    }
+
+    // ------------------------------------------------------------ builders
+
+    /// Build the learning task for this scenario. `runtime` may be `None`
+    /// only for the mock dataset.
+    pub fn build_task(&self, runtime: Option<&XlaRuntime>) -> Result<Box<dyn Task>> {
+        self.build_task_for(runtime, self.resolved_nodes()?)
+    }
+
+    /// Build the task sized for `n` nodes (>= resolved_nodes when a churn
+    /// script adds joiners whose shards must exist).
+    pub fn build_task_for(
+        &self,
+        runtime: Option<&XlaRuntime>,
+        n: usize,
+    ) -> Result<Box<dyn Task>> {
+        if self.workload.dataset == "mock" {
+            return Ok(Box::new(MockTask::new(n.max(64), 32, 0.8, self.run.seed)));
+        }
+        self.build_artifact_task(runtime, n)
+    }
+
+    /// Artifact-backed datasets need the PJRT engine: without the `xla`
+    /// feature this is a clear runtime error instead of a build break.
+    #[cfg(not(feature = "xla"))]
+    fn build_artifact_task(
+        &self,
+        _runtime: Option<&XlaRuntime>,
+        _n: usize,
+    ) -> Result<Box<dyn Task>> {
+        anyhow::bail!(
+            "dataset {:?} needs AOT artifacts; uncomment the `xla` dependency \
+             in rust/Cargo.toml and rebuild with `--features xla`, or run with \
+             the mock dataset",
+            self.workload.dataset
+        )
+    }
+
+    #[cfg(feature = "xla")]
+    fn build_artifact_task(
+        &self,
+        runtime: Option<&XlaRuntime>,
+        n: usize,
+    ) -> Result<Box<dyn Task>> {
+        use crate::data::{
+            classif::ClassifParams, ratings::RatingsParams, tokens::TokensParams, ClassifData,
+            RatingsData, TokensData,
+        };
+        use crate::learning::{TaskData, XlaTask};
+
+        let p = preset(&self.workload.dataset)?;
+        let mut rng = SimRng::new(self.run.seed).fork("data");
+        let runtime = runtime.ok_or_else(|| {
+            anyhow::anyhow!("dataset {} needs artifacts", self.workload.dataset)
+        })?;
+        let manifest = runtime.manifest().variant(p.variant)?.clone();
+        let data = match manifest.kind.as_str() {
+            "classifier" => {
+                let classes = manifest.meta_usize("classes").unwrap_or(10);
+                let input_dim = manifest.meta_usize("input_dim").unwrap_or(128);
+                TaskData::Classif(ClassifData::generate(
+                    &ClassifParams {
+                        dim: input_dim,
+                        classes,
+                        nodes: n,
+                        samples_per_node: p.samples_per_node,
+                        test_samples: 2048,
+                        partition: p.partition,
+                        ..Default::default()
+                    },
+                    &mut rng,
+                ))
+            }
+            "matfact" => {
+                let users = manifest.meta_usize("users").unwrap_or(610);
+                let items = manifest.meta_usize("items").unwrap_or(9724);
+                TaskData::Ratings(RatingsData::generate(
+                    &RatingsParams {
+                        users,
+                        items,
+                        nodes: n,
+                        ratings_per_user: p.samples_per_node,
+                        test_per_user: 25,
+                        ..Default::default()
+                    },
+                    &mut rng,
+                ))
+            }
+            "lm" => {
+                let vocab = manifest.meta_usize("vocab").unwrap_or(64);
+                let max_t = manifest.meta_usize("max_t").unwrap_or(64);
+                TaskData::Tokens(TokensData::generate(
+                    &TokensParams {
+                        vocab,
+                        seq_len: max_t,
+                        nodes: n,
+                        seqs_per_node: p.samples_per_node,
+                        test_seqs: 128,
+                        ..Default::default()
+                    },
+                    &mut rng,
+                ))
+            }
+            other => anyhow::bail!("unknown variant kind {other}"),
+        };
+        Ok(Box::new(XlaTask::new(runtime, p.variant, data)?))
+    }
+
+    pub fn build_latency(&self, n: usize) -> LatencyMatrix {
+        let mut rng = SimRng::new(self.run.seed).fork("latency");
+        LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng)
+    }
+
+    /// Assemble the network fabric: synthetic geography + per-node
+    /// capacities from the `network` section, both seeded from the session
+    /// seed.
+    pub fn build_fabric(&self, n: usize) -> Result<NetworkFabric> {
+        let latency = self.build_latency(n);
+        let bw = self.network.bandwidth_config()?;
+        let mut rng = SimRng::new(self.run.seed).fork("bandwidth");
+        Ok(NetworkFabric::new(latency, &bw, n, &mut rng))
+    }
+
+    pub fn build_compute(&self, n: usize) -> ComputeModel {
+        let mut rng = SimRng::new(self.run.seed).fork("compute");
+        if self.population.hetero_sigma > 0.0 {
+            ComputeModel::heterogeneous(
+                n,
+                self.population.base_batch_s,
+                self.population.hetero_sigma,
+                &mut rng,
+            )
+        } else {
+            ComputeModel::uniform(n, self.population.base_batch_s)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_shrinks_node_count() {
+        let mut spec = ScenarioSpec::new("celeba", "modest");
+        spec.population.scale = 0.1;
+        assert_eq!(spec.resolved_nodes().unwrap(), 50);
+    }
+
+    #[test]
+    fn explicit_nodes_override_scale() {
+        let mut spec = ScenarioSpec::new("cifar10", "modest");
+        spec.population.nodes = 24;
+        spec.population.scale = 0.1;
+        assert_eq!(spec.resolved_nodes().unwrap(), 24);
+    }
+
+    #[test]
+    fn nested_sections_parse() {
+        let spec = ScenarioSpec::from_json(
+            r#"{
+                "workload": {"dataset": "femnist"},
+                "protocol": {"name": "dsgd", "s": 4},
+                "population": {"scale": 0.2},
+                "run": {"seed": 7, "max_rounds": 30},
+                "network": {"bandwidth_mbps": 25.0}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.workload.dataset, "femnist");
+        assert_eq!(spec.protocol.name, "dsgd");
+        assert_eq!(spec.protocol.s, 4);
+        assert_eq!(spec.run.seed, 7);
+        assert_eq!(spec.run.max_rounds, 30);
+        assert!((spec.population.scale - 0.2).abs() < 1e-12);
+        assert!((spec.network.bandwidth_mbps - 25.0).abs() < 1e-12);
+        // defaults retained
+        assert_eq!(spec.protocol.dk, 20);
+    }
+
+    #[test]
+    fn flat_keys_still_parse() {
+        let spec = ScenarioSpec::from_json(
+            r#"{"dataset": "femnist", "algo": "dsgd", "scale": 0.2, "seed": 7,
+                "bandwidth_mbps": 25.0, "bandwidth_sigma": 0.4}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.workload.dataset, "femnist");
+        assert_eq!(spec.protocol.name, "dsgd");
+        assert_eq!(spec.run.seed, 7);
+        assert!((spec.network.bandwidth_sigma - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn flat_key_overrides_section() {
+        // Mixed configs: flat keys are a compatibility override layer.
+        let spec = ScenarioSpec::from_json(
+            r#"{"seed": 9, "run": {"seed": 7, "max_rounds": 30}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.run.seed, 9);
+        assert_eq!(spec.run.max_rounds, 30);
+    }
+
+    #[test]
+    fn unknown_keys_rejected_everywhere() {
+        assert!(ScenarioSpec::from_json(r#"{"datset": "x"}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"run": {"sede": 1}}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"protocol": {"nmae": "x"}}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"network": {"bw": 1}}"#).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_lossless() {
+        let mut spec = ScenarioSpec::new("femnist", "gossip");
+        spec.population.nodes = 32;
+        spec.protocol.sf = 0.75;
+        spec.protocol.params = vec![("fanout".into(), 3.0)];
+        spec.run.target_metric = Some(0.8);
+        spec.network.bandwidth_sigma = 0.6;
+        let text = spec.to_json().to_string();
+        let back = ScenarioSpec::from_json(&text).unwrap();
+        assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn protocol_params_parse_and_lookup() {
+        let spec = ScenarioSpec::from_json(
+            r#"{"protocol": {"name": "gossip", "params": {"fanout": 3}}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.protocol.param("fanout"), Some(3.0));
+        assert_eq!(spec.protocol.param("absent"), None);
+    }
+
+    #[test]
+    fn hetero_bandwidth_builds_spread_fabric() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.population.nodes = 16;
+        spec.network.bandwidth_mbps = 10.0;
+        spec.network.bandwidth_sigma = 0.6;
+        let fabric = spec.build_fabric(16).unwrap();
+        let min = (0..16u32).map(|n| fabric.up_bps(n)).fold(f64::MAX, f64::min);
+        let max = (0..16u32).map(|n| fabric.up_bps(n)).fold(0.0f64, f64::max);
+        assert!(max > min, "no heterogeneity: {min}..{max}");
+        // sigma = 0 gives a flat fabric
+        let flat = ScenarioSpec::new("mock", "modest").build_fabric(16).unwrap();
+        for n in 0..16u32 {
+            assert_eq!(flat.up_bps(n), 50e6);
+            assert_eq!(flat.down_bps(n), 50e6);
+        }
+    }
+
+    #[test]
+    fn mock_task_builds_without_artifacts() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.population.nodes = 12;
+        assert!(spec.build_task(None).is_ok());
+    }
+}

@@ -103,16 +103,41 @@ impl Args {
     }
 
     /// Error on any flag never consumed by a getter (typo protection).
-    /// Call after all getters ran.
+    /// Every launcher path must call this after its getters ran, so a
+    /// typoed `--bw-mpbs` fails loudly — with the closest known flag
+    /// suggested when one is within two edits.
     pub fn reject_unknown(&self) -> Result<()> {
         let seen = self.seen.borrow();
         for k in self.flags.keys() {
             if !seen.iter().any(|s| s == k) {
-                bail!("unknown flag --{k}");
+                let suggestion = seen
+                    .iter()
+                    .map(|s| (edit_distance(k, s), s))
+                    .min()
+                    .filter(|&(d, _)| d <= 2)
+                    .map(|(_, s)| format!(" (did you mean --{s}?)"))
+                    .unwrap_or_default();
+                bail!("unknown flag --{k}{suggestion}");
             }
         }
         Ok(())
     }
+}
+
+/// Levenshtein distance, for near-miss flag suggestions.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -154,6 +179,33 @@ mod tests {
         let a = args("train --styp 3");
         let _ = a.get_usize("s", 0);
         assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn typoed_flag_suggests_nearest_known() {
+        // The launcher's canonical failure mode: --bw-mpbs for --bw-mbps.
+        let a = args("run --bw-mpbs 10");
+        let _ = a.get_f64("bw-mbps", 50.0);
+        let _ = a.get_u64("seed", 42);
+        let err = a.reject_unknown().unwrap_err().to_string();
+        assert!(err.contains("--bw-mpbs"), "{err}");
+        assert!(err.contains("did you mean --bw-mbps"), "{err}");
+    }
+
+    #[test]
+    fn distant_typos_get_no_suggestion() {
+        let a = args("run --zzzzzz 1");
+        let _ = a.get_u64("seed", 42);
+        let err = a.reject_unknown().unwrap_err().to_string();
+        assert!(err.contains("--zzzzzz"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("bw-mpbs", "bw-mbps"), 2); // transposition = 2 edits
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("same", "same"), 0);
     }
 
     #[test]

@@ -1,38 +1,35 @@
 //! Protocol-behaviour integration tests: the paper's qualitative claims,
-//! checked end-to-end on the mock task (fast, artifact-free).
+//! checked end-to-end on the mock task (fast, artifact-free) through the
+//! scenario registry.
 
-use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::metrics::SessionMetrics;
+use modest_dl::net::TrafficLedger;
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::ChurnSchedule;
 
-fn spec(algo: Algo, s: usize, a: usize, sf: f64) -> SessionSpec {
-    SessionSpec {
-        dataset: "mock".into(),
-        algo,
-        nodes: 20,
-        s,
-        a,
-        sf,
-        max_time_s: 600.0,
-        max_rounds: 50,
-        eval_interval_s: 5.0,
-        ..Default::default()
-    }
+fn spec(protocol: &str, s: usize, a: usize, sf: f64) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new("mock", protocol);
+    spec.population.nodes = 20;
+    spec.protocol.s = s;
+    spec.protocol.a = a;
+    spec.protocol.sf = sf;
+    spec.run.max_time_s = 600.0;
+    spec.run.max_rounds = 50;
+    spec.run.eval_interval_s = 5.0;
+    spec
 }
 
-fn run(spec: &SessionSpec) -> (modest_dl::metrics::SessionMetrics, modest_dl::net::TrafficLedger) {
-    match spec.algo {
-        Algo::Dsgd => spec.build_dsgd(None).unwrap().run(),
-        _ => spec.build_modest(None, ChurnSchedule::empty()).unwrap().run(),
-    }
+fn run(spec: &ScenarioSpec) -> (SessionMetrics, TrafficLedger) {
+    run_scenario(spec, None, ChurnSchedule::empty()).unwrap()
 }
 
 #[test]
 fn modest_converges_like_fedavg_better_than_dsgd() {
     // The headline Fig. 3 ordering on the mock task.
-    let (m_md, _) = run(&spec(Algo::Modest, 6, 3, 1.0));
-    let (m_fl, _) = run(&spec(Algo::Fedavg, 6, 1, 1.0));
-    let (m_dl, _) = run(&spec(Algo::Dsgd, 0, 0, 1.0));
-    let best = |m: &modest_dl::metrics::SessionMetrics| m.best_metric(true).unwrap_or(0.0);
+    let (m_md, _) = run(&spec("modest", 6, 3, 1.0));
+    let (m_fl, _) = run(&spec("fedavg", 6, 1, 1.0));
+    let (m_dl, _) = run(&spec("dsgd", 0, 0, 1.0));
+    let best = |m: &SessionMetrics| m.best_metric(true).unwrap_or(0.0);
     assert!(
         best(&m_md) > 0.85 * best(&m_fl),
         "MoDeST {} far below FedAvg {}",
@@ -48,11 +45,28 @@ fn modest_converges_like_fedavg_better_than_dsgd() {
 }
 
 #[test]
+fn gossip_learns_but_lags_modest() {
+    // The new registry-added protocol: epidemic averaging makes progress,
+    // but without aggregators it keeps residual replica variance, so it
+    // must not beat MoDeST's aggregated model.
+    let (m_md, _) = run(&spec("modest", 6, 3, 1.0));
+    let (m_gp, _) = run(&spec("gossip", 0, 0, 1.0));
+    let best = |m: &SessionMetrics| m.best_metric(true).unwrap_or(0.0);
+    assert!(best(&m_gp) > 0.4, "gossip never learned: {}", best(&m_gp));
+    assert!(
+        best(&m_md) >= 0.95 * best(&m_gp),
+        "MoDeST {} unexpectedly far below gossip {}",
+        best(&m_md),
+        best(&m_gp)
+    );
+}
+
+#[test]
 fn more_aggregators_do_not_change_rounds_needed() {
     // §4.5: rounds-to-accuracy is indifferent to `a` when sf = 1 (same
     // aggregated model from every aggregator).
-    let (m_a1, _) = run(&spec(Algo::Modest, 6, 1, 1.0));
-    let (m_a4, _) = run(&spec(Algo::Modest, 6, 4, 1.0));
+    let (m_a1, _) = run(&spec("modest", 6, 1, 1.0));
+    let (m_a4, _) = run(&spec("modest", 6, 4, 1.0));
     let target = 0.85;
     let r1 = m_a1.time_to_target(target, true).map(|(_, r)| r);
     let r4 = m_a4.time_to_target(target, true).map(|(_, r)| r);
@@ -66,8 +80,8 @@ fn more_aggregators_do_not_change_rounds_needed() {
 #[test]
 fn larger_sample_lowers_rounds_to_target() {
     // Fig. 4 right panel: rounds-to-target decreases with s.
-    let (m_s2, _) = run(&spec(Algo::Modest, 2, 2, 1.0));
-    let (m_s10, _) = run(&spec(Algo::Modest, 10, 2, 1.0));
+    let (m_s2, _) = run(&spec("modest", 2, 2, 1.0));
+    let (m_s10, _) = run(&spec("modest", 10, 2, 1.0));
     let target = 0.8;
     let r2 = m_s2.time_to_target(target, true).map(|(_, r)| r).unwrap_or(u64::MAX);
     let r10 = m_s10.time_to_target(target, true).map(|(_, r)| r).unwrap_or(u64::MAX);
@@ -85,10 +99,10 @@ fn sf_below_one_tolerates_failures() {
         modest_dl::sim::SimTime::from_secs_f64(50.0),
         modest_dl::sim::SimTime::from_secs_f64(25.0),
     );
-    let mut sp = spec(Algo::Modest, 6, 3, 0.67);
-    sp.max_rounds = 0;
-    sp.max_time_s = 500.0;
-    let (m, _) = sp.build_modest(None, churn).unwrap().run();
+    let mut sp = spec("modest", 6, 3, 0.67);
+    sp.run.max_rounds = 0;
+    sp.run.max_time_s = 500.0;
+    let (m, _) = run_scenario(&sp, None, churn).unwrap();
     let last_round_start = m.round_starts.last().map(|&(_, t)| t).unwrap_or(0.0);
     assert!(
         last_round_start > 200.0,
@@ -99,7 +113,7 @@ fn sf_below_one_tolerates_failures() {
 
 #[test]
 fn view_overhead_is_counted_but_small() {
-    let (m, _) = run(&spec(Algo::Modest, 6, 3, 1.0));
+    let (m, _) = run(&spec("modest", 6, 3, 1.0));
     let t = &m.traffic;
     assert!(t.overhead > 0, "views/pings must produce overhead");
     // Mock model is tiny (32 f32), so overhead fraction is large here; the
@@ -109,7 +123,7 @@ fn view_overhead_is_counted_but_small() {
 
 #[test]
 fn round_times_are_plausible() {
-    let (m, _) = run(&spec(Algo::Modest, 6, 3, 1.0));
+    let (m, _) = run(&spec("modest", 6, 3, 1.0));
     let mean = m.mean_round_time_s().expect("round times");
     // A round = ping wave + model push + training (0.05s/batch x 5) +
     // aggregation: it cannot be faster than training alone, nor slower
@@ -120,7 +134,7 @@ fn round_times_are_plausible() {
 
 #[test]
 fn fedavg_single_aggregator_is_the_latency_hub() {
-    let (_, t) = run(&spec(Algo::Fedavg, 6, 1, 1.0));
+    let (_, t) = run(&spec("fedavg", 6, 1, 1.0));
     // The best-connected node carries ~50% of total traffic (Table 4's
     // "Max. vs Total" observation).
     let (_, max) = t.min_max_usage(20);

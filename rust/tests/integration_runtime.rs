@@ -5,9 +5,9 @@
 //! on a fresh checkout too).
 #![cfg(feature = "xla")]
 
-use modest_dl::config::{Algo, SessionSpec};
 use modest_dl::learning::{Task, TaskData, XlaTask};
 use modest_dl::runtime::{Batch, XlaRuntime};
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::{ChurnSchedule, SimRng};
 
 fn runtime() -> Option<XlaRuntime> {
@@ -103,11 +103,8 @@ fn init_params_match_manifest_hash_length() {
 #[test]
 fn xla_task_local_update_runs_one_epoch() {
     let Some(rt) = runtime() else { return };
-    let spec = SessionSpec {
-        dataset: "celeba".into(),
-        nodes: 10,
-        ..Default::default()
-    };
+    let mut spec = ScenarioSpec::new("celeba", "modest");
+    spec.population.nodes = 10;
     let mut task = spec.build_task(Some(&rt)).unwrap();
     let model = task.init_model();
     let (updated, loss, batches) = task.local_update(&model, 3, 42).unwrap();
@@ -127,7 +124,8 @@ fn xla_task_local_update_runs_one_epoch() {
 #[test]
 fn xla_task_evaluate_improves_with_training() {
     let Some(rt) = runtime() else { return };
-    let spec = SessionSpec { dataset: "celeba".into(), nodes: 10, ..Default::default() };
+    let mut spec = ScenarioSpec::new("celeba", "modest");
+    spec.population.nodes = 10;
     let mut task = spec.build_task(Some(&rt)).unwrap();
     let mut model = task.init_model();
     let before = task.evaluate(&model).unwrap();
@@ -153,20 +151,15 @@ fn xla_task_evaluate_improves_with_training() {
 #[test]
 fn full_modest_session_on_real_celeba_artifacts() {
     let Some(rt) = runtime() else { return };
-    let spec = SessionSpec {
-        dataset: "celeba".into(),
-        algo: Algo::Modest,
-        nodes: 12,
-        s: 4,
-        a: 2,
-        sf: 1.0,
-        max_time_s: 400.0,
-        max_rounds: 12,
-        eval_interval_s: 10.0,
-        ..Default::default()
-    };
-    let session = spec.build_modest(Some(&rt), ChurnSchedule::empty()).unwrap();
-    let (m, traffic) = session.run();
+    let mut spec = ScenarioSpec::new("celeba", "modest");
+    spec.population.nodes = 12;
+    spec.protocol.s = 4;
+    spec.protocol.a = 2;
+    spec.protocol.sf = 1.0;
+    spec.run.max_time_s = 400.0;
+    spec.run.max_rounds = 12;
+    spec.run.eval_interval_s = 10.0;
+    let (m, traffic) = run_scenario(&spec, Some(&rt), ChurnSchedule::empty()).unwrap();
     assert!(m.final_round >= 8, "only reached round {}", m.final_round);
     assert!(traffic.is_conserved());
     let first = m.curve.first().unwrap().metric;

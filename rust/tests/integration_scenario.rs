@@ -1,0 +1,251 @@
+//! Scenario-API integration tests: JSON round-trip, flat-key back-compat,
+//! registry completeness, and same-seed equivalence between the legacy
+//! flat config form and its nested translation.
+
+use modest_dl::metrics::SessionMetrics;
+use modest_dl::net::TrafficLedger;
+use modest_dl::scenario::{run_scenario, ProtocolRegistry, ScenarioSpec};
+use modest_dl::sim::ChurnSchedule;
+
+fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
+    (
+        m.final_round,
+        m.events,
+        m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect(),
+        t.total(),
+    )
+}
+
+/// A short deterministic mock scenario for `protocol`.
+fn short_mock(protocol: &str) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new("mock", protocol);
+    spec.population.nodes = 12;
+    spec.protocol.s = 4;
+    spec.protocol.a = 2;
+    spec.run.max_time_s = 120.0;
+    spec.run.max_rounds = 15;
+    spec.run.eval_interval_s = 10.0;
+    spec
+}
+
+#[test]
+fn every_registered_protocol_runs_a_deterministic_mock_session() {
+    // Registry completeness: each protocol builds from a plain spec and
+    // replays identically under the same seed.
+    let registry = ProtocolRegistry::builtins();
+    for name in registry.names() {
+        let spec = short_mock(name);
+        let go = || {
+            let (m, t) = registry
+                .build(&spec, None, ChurnSchedule::empty())
+                .unwrap_or_else(|e| panic!("{name} failed to build: {e:#}"))
+                .run();
+            fingerprint(&m, &t)
+        };
+        let a = go();
+        let b = go();
+        assert!(a.1 > 0, "{name} processed no events");
+        assert!(a.3 > 0, "{name} sent no traffic");
+        assert_eq!(a, b, "{name} is not deterministic under one seed");
+    }
+}
+
+#[test]
+fn nested_json_roundtrip_preserves_every_field() {
+    let mut spec = ScenarioSpec::new("femnist", "gossip");
+    spec.workload.artifacts_dir = "my-artifacts".into();
+    spec.population.nodes = 48;
+    spec.population.scale = 0.5;
+    spec.population.base_batch_s = 0.08;
+    spec.population.hetero_sigma = 0.2;
+    spec.network.bandwidth_mbps = 12.5;
+    spec.network.bandwidth_sigma = 0.9;
+    spec.protocol.s = 6;
+    spec.protocol.a = 2;
+    spec.protocol.sf = 0.8;
+    spec.protocol.dt_s = 1.5;
+    spec.protocol.dk = 15;
+    spec.protocol.params = vec![("fanout".into(), 4.0)];
+    spec.run.max_time_s = 321.0;
+    spec.run.max_rounds = 77;
+    spec.run.eval_interval_s = 7.0;
+    spec.run.target_metric = Some(0.9);
+    spec.run.seed = 1234;
+    let text = spec.to_json().to_string();
+    let back = ScenarioSpec::from_json(&text).unwrap();
+    assert_eq!(spec, back);
+}
+
+#[test]
+fn legacy_flat_fixture_parses_into_sections() {
+    // A verbatim pre-scenario config file (the old SessionSpec vocabulary).
+    let flat = r#"{
+        "dataset": "mock",
+        "algo": "fedavg",
+        "nodes": 14,
+        "scale": 0.3,
+        "s": 5,
+        "a": 2,
+        "sf": 0.9,
+        "dt_s": 1.0,
+        "dk": 10,
+        "max_time_s": 200.0,
+        "max_rounds": 20,
+        "eval_interval_s": 5.0,
+        "target_metric": null,
+        "seed": 99,
+        "bandwidth_mbps": 20.0,
+        "bandwidth_sigma": 0.5,
+        "base_batch_s": 0.04,
+        "hetero_sigma": 0.1,
+        "artifacts_dir": "artifacts"
+    }"#;
+    let spec = ScenarioSpec::from_json(flat).unwrap();
+    assert_eq!(spec.workload.dataset, "mock");
+    assert_eq!(spec.protocol.name, "fedavg");
+    assert_eq!(spec.population.nodes, 14);
+    assert_eq!(spec.protocol.s, 5);
+    assert_eq!(spec.protocol.sf, 0.9);
+    assert_eq!(spec.run.max_rounds, 20);
+    assert_eq!(spec.run.seed, 99);
+    assert_eq!(spec.run.target_metric, None);
+    assert_eq!(spec.network.bandwidth_mbps, 20.0);
+    assert_eq!(spec.network.bandwidth_sigma, 0.5);
+    assert_eq!(spec.population.base_batch_s, 0.04);
+    assert_eq!(spec.population.hetero_sigma, 0.1);
+}
+
+#[test]
+fn flat_and_nested_translations_run_identically_same_seed() {
+    // The compatibility shim must not just parse — it must reproduce the
+    // exact same session: same events, same curve bits, same bytes.
+    let flat = r#"{
+        "dataset": "mock", "algo": "modest", "nodes": 14, "s": 4, "a": 2,
+        "sf": 1.0, "max_time_s": 150.0, "max_rounds": 12,
+        "eval_interval_s": 5.0, "seed": 7,
+        "bandwidth_mbps": 25.0, "bandwidth_sigma": 0.4
+    }"#;
+    let nested = r#"{
+        "workload": {"dataset": "mock"},
+        "population": {"nodes": 14},
+        "protocol": {"name": "modest", "s": 4, "a": 2, "sf": 1.0},
+        "run": {"max_time_s": 150.0, "max_rounds": 12,
+                "eval_interval_s": 5.0, "seed": 7},
+        "network": {"bandwidth_mbps": 25.0, "bandwidth_sigma": 0.4}
+    }"#;
+    let spec_flat = ScenarioSpec::from_json(flat).unwrap();
+    let spec_nested = ScenarioSpec::from_json(nested).unwrap();
+    assert_eq!(spec_flat, spec_nested, "translations parse differently");
+    let (mf, tf) = run_scenario(&spec_flat, None, ChurnSchedule::empty()).unwrap();
+    let (mn, tn) = run_scenario(&spec_nested, None, ChurnSchedule::empty()).unwrap();
+    assert_eq!(fingerprint(&mf, &tf), fingerprint(&mn, &tn));
+}
+
+#[test]
+fn nested_network_classes_drive_asymmetric_fabric() {
+    // The ROADMAP item: asymmetric class tiers expressible in config, end
+    // to end through the fabric.
+    let spec = ScenarioSpec::from_json(
+        r#"{
+            "workload": {"dataset": "mock"},
+            "population": {"nodes": 32},
+            "network": {"classes": [
+                {"name": "fiber", "weight": 1.0, "up_mbps": 100.0, "down_mbps": 300.0},
+                {"name": "dsl",   "weight": 1.0, "up_mbps": 1.5,   "down_mbps": 12.0}
+            ]}
+        }"#,
+    )
+    .unwrap();
+    let fabric = spec.build_fabric(32).unwrap();
+    let mut asym = 0;
+    let mut tiers = std::collections::BTreeSet::new();
+    for n in 0..32u32 {
+        if fabric.down_bps(n) > fabric.up_bps(n) {
+            asym += 1;
+        }
+        tiers.insert(fabric.up_bps(n) as u64);
+    }
+    assert_eq!(asym, 32, "every node must have down > up in these tiers");
+    assert_eq!(tiers.len(), 2, "both tiers must be sampled: {tiers:?}");
+}
+
+#[test]
+fn scenario_with_classes_runs_end_to_end() {
+    let mut spec = short_mock("modest");
+    spec.network.classes = vec![
+        modest_dl::scenario::TierSpec {
+            name: "cable".into(),
+            weight: 1.0,
+            up_mbps: 10.0,
+            down_mbps: 100.0,
+        },
+        modest_dl::scenario::TierSpec {
+            name: "dsl".into(),
+            weight: 1.0,
+            up_mbps: 1.5,
+            down_mbps: 12.0,
+        },
+    ];
+    let (m, t) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+    assert!(m.final_round >= 5, "round {}", m.final_round);
+    assert!(t.is_conserved());
+}
+
+#[test]
+fn per_node_trace_file_round_trips_through_the_fabric() {
+    let dir = std::env::temp_dir().join(format!("scenario_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.csv");
+    std::fs::write(&path, "up_mbps,down_mbps\n10,100\n2,16\n50,50\n").unwrap();
+    let mut spec = short_mock("modest");
+    spec.network.trace_file = Some(path.to_string_lossy().into_owned());
+    let fabric = spec.build_fabric(4).unwrap();
+    assert_eq!(fabric.up_bps(0), 10e6);
+    assert_eq!(fabric.down_bps(1), 16e6);
+    // Nodes beyond the trace reuse the last entry.
+    assert_eq!(fabric.up_bps(3), 50e6);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn typoed_protocol_params_fail_loudly() {
+    // `params` typos must not silently fall back to defaults: a gossip run
+    // asking for "fanuot": 8 would otherwise run with fanout 2.
+    let mut spec = short_mock("gossip");
+    spec.protocol.params = vec![("fanuot".into(), 8.0)];
+    let err = run_scenario(&spec, None, ChurnSchedule::empty())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("fanuot"), "{err}");
+    assert!(err.contains("fanout"), "should list known params: {err}");
+    // The correctly-spelled param is accepted.
+    spec.protocol.params = vec![("fanout".into(), 3.0)];
+    assert!(run_scenario(&spec, None, ChurnSchedule::empty()).is_ok());
+    // Protocols that declare no params reject any param.
+    let mut spec = short_mock("modest");
+    spec.protocol.params = vec![("fanout".into(), 3.0)];
+    assert!(run_scenario(&spec, None, ChurnSchedule::empty()).is_err());
+}
+
+#[test]
+fn invalid_param_values_fail_loudly() {
+    // A fanout of 0 (or a fractional one) must error, not silently clamp.
+    for bad in [0.0, -1.0, 2.5] {
+        let mut spec = short_mock("gossip");
+        spec.protocol.params = vec![("fanout".into(), bad)];
+        assert!(
+            run_scenario(&spec, None, ChurnSchedule::empty()).is_err(),
+            "fanout {bad} was accepted"
+        );
+    }
+}
+
+#[test]
+fn registry_rejects_unknown_protocols_with_catalog() {
+    let spec = ScenarioSpec::new("mock", "no-such-protocol");
+    let err = run_scenario(&spec, None, ChurnSchedule::empty())
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no-such-protocol"), "{err}");
+    assert!(err.contains("modest"), "error should list the catalog: {err}");
+}

@@ -1,74 +1,68 @@
 //! Integration tests over the simulation substrates (no artifacts needed):
 //! DES + network + traffic + churn wired together through full sessions on
-//! the mock task.
+//! the mock task, launched through the scenario registry.
 
-use modest_dl::config::{Algo, SessionSpec};
+use modest_dl::metrics::SessionMetrics;
+use modest_dl::net::TrafficLedger;
+use modest_dl::scenario::{run_scenario, ScenarioSpec};
 use modest_dl::sim::{ChurnSchedule, SimTime};
 
-fn mock_spec(algo: Algo) -> SessionSpec {
-    SessionSpec {
-        dataset: "mock".into(),
-        algo,
-        nodes: 16,
-        s: 4,
-        a: 2,
-        sf: 1.0,
-        max_time_s: 400.0,
-        max_rounds: 40,
-        eval_interval_s: 5.0,
-        hetero_sigma: 0.35,
-        ..Default::default()
-    }
+fn mock_spec(protocol: &str) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new("mock", protocol);
+    spec.population.nodes = 16;
+    spec.protocol.s = 4;
+    spec.protocol.a = 2;
+    spec.protocol.sf = 1.0;
+    spec.run.max_time_s = 400.0;
+    spec.run.max_rounds = 40;
+    spec.run.eval_interval_s = 5.0;
+    spec.population.hetero_sigma = 0.35;
+    spec
+}
+
+fn run(spec: &ScenarioSpec) -> (SessionMetrics, TrafficLedger) {
+    run_scenario(spec, None, ChurnSchedule::empty()).unwrap()
 }
 
 #[test]
 fn modest_session_is_deterministic_given_seed() {
-    let run = || {
-        let spec = mock_spec(Algo::Modest);
-        let (m, t) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    let go = || {
+        let (m, t) = run(&mock_spec("modest"));
         (
             m.final_round,
             m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect::<Vec<_>>(),
             t.total(),
         )
     };
-    let a = run();
-    let b = run();
+    let a = go();
+    let b = go();
     assert_eq!(a, b, "same seed must replay identically");
 }
 
 #[test]
 fn different_seeds_give_different_traffic_patterns() {
-    let mut spec = mock_spec(Algo::Modest);
-    let (_, t1) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
-    spec.seed = 1234;
-    let (_, t2) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    let mut spec = mock_spec("modest");
+    let (_, t1) = run(&spec);
+    spec.run.seed = 1234;
+    let (_, t2) = run(&spec);
     assert_ne!(t1.total(), t2.total());
 }
 
 #[test]
-fn traffic_conservation_across_all_algorithms() {
-    for algo in [Algo::Modest, Algo::Fedavg, Algo::Dsgd] {
-        let spec = mock_spec(algo);
-        let (_, t) = match algo {
-            Algo::Dsgd => spec.build_dsgd(None).unwrap().run(),
-            _ => spec.build_modest(None, ChurnSchedule::empty()).unwrap().run(),
-        };
-        assert!(t.is_conserved(), "{algo:?} lost bytes");
-        assert!(t.total() > 0, "{algo:?} sent nothing");
+fn traffic_conservation_across_all_registered_protocols() {
+    // Registry-driven: every protocol in the builtin registry must conserve
+    // bytes, with zero per-protocol launch code here.
+    for protocol in modest_dl::scenario::ProtocolRegistry::builtins().names() {
+        let (_, t) = run(&mock_spec(protocol));
+        assert!(t.is_conserved(), "{protocol} lost bytes");
+        assert!(t.total() > 0, "{protocol} sent nothing");
     }
 }
 
 #[test]
 fn fedavg_server_dominates_traffic_modest_balances() {
-    let (_, t_fl) = mock_spec(Algo::Fedavg)
-        .build_modest(None, ChurnSchedule::empty())
-        .unwrap()
-        .run();
-    let (_, t_md) = mock_spec(Algo::Modest)
-        .build_modest(None, ChurnSchedule::empty())
-        .unwrap()
-        .run();
+    let (_, t_fl) = run(&mock_spec("fedavg"));
+    let (_, t_md) = run(&mock_spec("modest"));
     let (min_fl, max_fl) = t_fl.min_max_usage(16);
     let (min_md, max_md) = t_md.min_max_usage(16);
     let spread_fl = max_fl as f64 / min_fl.max(1) as f64;
@@ -84,14 +78,14 @@ fn fedavg_server_dominates_traffic_modest_balances() {
 fn dsgd_total_traffic_exceeds_modest() {
     // D-SGD involves every node every round: at equal round counts its
     // total traffic must exceed MoDeST's sampled rounds (Table 4 shape).
-    let mut spec_md = mock_spec(Algo::Modest);
-    spec_md.max_rounds = 20;
-    spec_md.max_time_s = 2000.0;
-    let (m_md, t_md) = spec_md.build_modest(None, ChurnSchedule::empty()).unwrap().run();
-    let mut spec_dl = mock_spec(Algo::Dsgd);
-    spec_dl.max_rounds = 20;
-    spec_dl.max_time_s = 2000.0;
-    let (m_dl, t_dl) = spec_dl.build_dsgd(None).unwrap().run();
+    let mut spec_md = mock_spec("modest");
+    spec_md.run.max_rounds = 20;
+    spec_md.run.max_time_s = 2000.0;
+    let (m_md, t_md) = run(&spec_md);
+    let mut spec_dl = mock_spec("dsgd");
+    spec_dl.run.max_rounds = 20;
+    spec_dl.run.max_time_s = 2000.0;
+    let (m_dl, t_dl) = run(&spec_dl);
     assert!(m_md.final_round >= 18 && m_dl.final_round >= 18);
     assert!(
         t_dl.kind_total(modest_dl::net::MsgKind::ModelPayload)
@@ -111,12 +105,12 @@ fn mass_crash_session_keeps_making_progress() {
         SimTime::from_secs_f64(60.0),
         SimTime::from_secs_f64(20.0),
     );
-    let mut spec = mock_spec(Algo::Modest);
-    spec.a = 3;
-    spec.sf = 0.5;
-    spec.max_rounds = 0;
-    spec.max_time_s = 600.0;
-    let (m, _) = spec.build_modest(None, churn).unwrap().run();
+    let mut spec = mock_spec("modest");
+    spec.protocol.a = 3;
+    spec.protocol.sf = 0.5;
+    spec.run.max_rounds = 0;
+    spec.run.max_time_s = 600.0;
+    let (m, _) = run_scenario(&spec, None, churn).unwrap();
     let after_crashes = m.round_starts.iter().filter(|&&(_, t)| t > 200.0).count();
     assert!(after_crashes > 3, "no rounds after the crash wave");
 }
@@ -129,11 +123,11 @@ fn staggered_joins_propagate_to_all_initial_nodes() {
         SimTime::from_secs_f64(30.0),
         SimTime::from_secs_f64(30.0),
     );
-    let mut spec = mock_spec(Algo::Modest);
-    spec.nodes = 12;
-    spec.max_rounds = 0;
-    spec.max_time_s = 500.0;
-    let (m, _) = spec.build_modest(None, churn).unwrap().run();
+    let mut spec = mock_spec("modest");
+    spec.population.nodes = 12;
+    spec.run.max_rounds = 0;
+    spec.run.max_time_s = 500.0;
+    let (m, _) = run_scenario(&spec, None, churn).unwrap();
     assert_eq!(m.joins.len(), 3);
     for j in &m.joins {
         let prop = j.full_propagation_s();
@@ -143,9 +137,28 @@ fn staggered_joins_propagate_to_all_initial_nodes() {
 }
 
 #[test]
+fn churnless_protocols_reject_churn_scripts() {
+    // The registry surfaces a clear error instead of silently dropping the
+    // schedule (the old enum dispatch just ignored it for D-SGD).
+    let churn = ChurnSchedule::mass_crash(
+        16,
+        8,
+        2,
+        SimTime::from_secs_f64(10.0),
+        SimTime::from_secs_f64(10.0),
+    );
+    for protocol in ["dsgd", "gossip"] {
+        let spec = mock_spec(protocol);
+        assert!(
+            run_scenario(&spec, None, churn.clone()).is_err(),
+            "{protocol} accepted a churn script"
+        );
+    }
+}
+
+#[test]
 fn curve_csv_roundtrip() {
-    let spec = mock_spec(Algo::Modest);
-    let (m, _) = spec.build_modest(None, ChurnSchedule::empty()).unwrap().run();
+    let (m, _) = run(&mock_spec("modest"));
     let dir = std::env::temp_dir().join(format!("modest_test_{}", std::process::id()));
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("curve.csv");
