@@ -1,21 +1,30 @@
 //! Microbenchmarks of the L3 hot paths (§Perf):
 //!
-//! * model aggregation — native mean vs naive indexed loop vs the
+//! * model aggregation — native chunked mean vs naive indexed loop vs the
 //!   XLA/Pallas masked-mean executable (if artifacts are present),
+//! * DES event-queue throughput — the classic hold model at 1M events,
+//!   calendar backend vs the BinaryHeap shim (the acceptance bar is >= 2x),
+//! * zero-copy fan-out — Arc payload sharing vs deep copies, and a 10k-way
+//!   broadcast through the contended fabric,
 //! * the sampler's per-round hash+sort candidate ordering,
-//! * DES event-queue throughput,
 //! * registry/view merge, and view wire-size computation.
 //!
 //! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
+//! Results are also written machine-readable to `BENCH_hotpaths.json`
+//! (override the path with `BENCH_JSON=...`) so future PRs can track the
+//! trajectory.
+
+use std::sync::Arc;
 
 use modest_dl::learning::{aggregate_native, Model};
+use modest_dl::modest::node::{Msg, ViewRef};
 use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::candidate_order;
 use modest_dl::modest::View;
-use modest_dl::net::SizeModel;
+use modest_dl::net::{LatencyMatrix, MsgKind, NetworkFabric, SizeModel};
 #[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
-use modest_dl::sim::{EventQueue, SimRng, SimTime};
+use modest_dl::sim::{CalendarEventQueue, HeapEventQueue, SimRng, SimTime};
 use modest_dl::util::bench::{black_box, Bencher};
 use modest_dl::NodeId;
 
@@ -34,9 +43,57 @@ fn aggregate_naive(models: &[&Model]) -> Model {
     out
 }
 
+/// The two queue backends under one local trait so the hold model is
+/// written once.
+trait Queue {
+    fn push(&mut self, at: SimTime, v: u64);
+    fn pop_next(&mut self) -> Option<(SimTime, u64)>;
+}
+
+impl Queue for CalendarEventQueue<u64> {
+    fn push(&mut self, at: SimTime, v: u64) {
+        self.schedule_at(at, v);
+    }
+    fn pop_next(&mut self) -> Option<(SimTime, u64)> {
+        self.pop()
+    }
+}
+
+impl Queue for HeapEventQueue<u64> {
+    fn push(&mut self, at: SimTime, v: u64) {
+        self.schedule_at(at, v);
+    }
+    fn pop_next(&mut self) -> Option<(SimTime, u64)> {
+        self.pop()
+    }
+}
+
+/// Classic DES hold model: steady-state queue of `resident` events; each
+/// operation pops the head and reschedules it a short random delay ahead —
+/// the exact access pattern of a running session. Returns a checksum so
+/// the work cannot be optimized away.
+fn hold_model<Q: Queue>(q: &mut Q, resident: u64, ops: u64) -> u64 {
+    let mut rng = SimRng::new(0xbe9c);
+    for i in 0..resident {
+        q.push(SimTime::from_micros(rng.gen_range(1_000_000)), i);
+    }
+    let mut sum = 0u64;
+    for i in 0..ops {
+        let (t, v) = q.pop_next().expect("hold model under-filled");
+        sum = sum.wrapping_add(t.0 ^ v);
+        let delay = 1 + rng.gen_range(2_000);
+        q.push(SimTime::from_micros(t.0 + delay), i);
+    }
+    while let Some((t, v)) = q.pop_next() {
+        sum = sum.wrapping_add(t.0 ^ v);
+    }
+    sum
+}
+
 fn main() {
     let mut b = Bencher::new("hotpaths");
     let mut rng = SimRng::new(42);
+    let fast = std::env::var("BENCH_FAST").is_ok();
 
     // ---- aggregation: s models x P params (FEMNIST-sized and CIFAR-sized)
     for (label, s, p) in [
@@ -76,19 +133,30 @@ fn main() {
         }
     }
 
-    // ---- sampler ordering at population scales
-    for n in [100usize, 1_000, 10_000] {
-        let cands: Vec<NodeId> = (0..n as NodeId).collect();
-        let mut round = 0u64;
-        b.bench(&format!("sampler/candidate_order/n={n}"), || {
-            round += 1;
-            black_box(candidate_order(round, black_box(&cands)));
-        });
-    }
+    // ---- DES queue: the acceptance benchmark. 1M hold-model operations
+    // over a 10k-event resident set, calendar vs heap shim.
+    let ops: u64 = if fast { 100_000 } else { 1_000_000 };
+    let resident: u64 = 10_000;
+    let cal = b
+        .bench_once(&format!("des/queue/hold-{ops}/calendar"), || {
+            let mut q = CalendarEventQueue::new();
+            black_box(hold_model(&mut q, resident, ops));
+        })
+        .mean;
+    let heap = b
+        .bench_once(&format!("des/queue/hold-{ops}/heap"), || {
+            let mut q = HeapEventQueue::new();
+            black_box(hold_model(&mut q, resident, ops));
+        })
+        .mean;
+    println!(
+        "des/queue: calendar is {:.2}x the heap at {ops} hold-model ops",
+        heap.as_secs_f64() / cal.as_secs_f64().max(1e-12)
+    );
 
-    // ---- DES queue throughput: push+pop 10k events
+    // Legacy pattern kept for cross-PR comparability: batch-push then drain.
     b.bench("des/queue/10k-events", || {
-        let mut q = EventQueue::new();
+        let mut q = CalendarEventQueue::new();
         for i in 0..10_000u64 {
             q.schedule_at(SimTime::from_micros((i * 7919) % 100_000), i);
         }
@@ -98,6 +166,80 @@ fn main() {
         }
         black_box(n);
     });
+
+    // ---- zero-copy fan-out: constructing the s in-flight copies of a
+    // Train broadcast. Arc sharing must be O(refcount), independent of
+    // model size; the deep-copy baseline shows what each delivery used to
+    // pay (s * model bytes + s * view clones).
+    {
+        let model: Arc<Model> = Arc::new((0..1_754_430).map(|_| rng.next_f32()).collect());
+        let mut view = View::default();
+        for node in 0..10_000u32 {
+            view.registry.update(node, 1, MembershipEvent::Joined);
+            view.activity.update(node, (node % 60) as u64);
+        }
+        let view: ViewRef = Arc::new(view);
+        // Same fan-out count in both, so the JSON rows compare directly.
+        b.bench("fanout/arc-msgs/8-of-1.75M", || {
+            let msgs: Vec<Msg> = (0..8)
+                .map(|_| Msg::Train {
+                    round: 7,
+                    model: black_box(&model).clone(),
+                    view: black_box(&view).clone(),
+                })
+                .collect();
+            black_box(msgs);
+        });
+        b.bench("fanout/deep-copy-baseline/8-of-1.75M", || {
+            // What 8 deliveries cost pre-Arc: a full model + view copy each.
+            let msgs: Vec<(Model, View)> = (0..8)
+                .map(|_| (black_box(&model).as_ref().clone(), black_box(&view).as_ref().clone()))
+                .collect();
+            black_box(msgs);
+        });
+        // The 10k-node scale point for the Arc path (no deep-copy twin —
+        // 10k deep copies would be ~70 GB of memcpy per iteration).
+        b.bench("fanout/arc-msgs/10k-of-1.75M", || {
+            let msgs: Vec<Msg> = (0..10_000)
+                .map(|_| Msg::Train {
+                    round: 7,
+                    model: black_box(&model).clone(),
+                    view: black_box(&view).clone(),
+                })
+                .collect();
+            black_box(msgs);
+        });
+    }
+
+    // ---- fabric: a 10k-way broadcast through the FIFO link queues (the
+    // n=10k harness hot path: per-transfer latency lookup + capacity
+    // bookkeeping, no allocation).
+    {
+        let n = 10_000usize;
+        let mut frng = SimRng::new(7);
+        let latency = LatencyMatrix::synthetic(&Default::default(), n, &mut frng);
+        let mut fabric = NetworkFabric::uniform(latency, 50e6, n);
+        let mut t = 0u64;
+        b.bench("fabric/transfer-fanout/n=10k", || {
+            t += 1_000_000;
+            let now = SimTime::from_micros(t);
+            let mut last = SimTime::ZERO;
+            for to in 1..n as NodeId {
+                last = fabric.transfer(now, 0, to, &[(MsgKind::ModelPayload, 1_000)]);
+            }
+            black_box(last);
+        });
+    }
+
+    // ---- sampler ordering at population scales
+    for n in [100usize, 1_000, 10_000] {
+        let cands: Vec<NodeId> = (0..n as NodeId).collect();
+        let mut round = 0u64;
+        b.bench(&format!("sampler/candidate_order/n={n}"), || {
+            round += 1;
+            black_box(candidate_order(round, black_box(&cands)));
+        });
+    }
 
     // ---- view merge + wire size at population 500 (celeba scale)
     {
@@ -123,5 +265,8 @@ fn main() {
         });
     }
 
+    let json_path =
+        std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_hotpaths.json".to_string());
+    b.write_json(&json_path);
     b.finish();
 }

@@ -18,7 +18,10 @@ use crate::metrics::SessionMetrics;
 use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
 use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
-use crate::sim::{ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness, SimTime};
+use crate::sim::{
+    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness,
+    SimTime,
+};
 use crate::{NodeId, Round};
 
 use super::topology::OnePeerExpGraph;
@@ -87,6 +90,13 @@ pub struct DsgdProtocol {
     cfg: DsgdConfig,
     graph: OnePeerExpGraph,
     nodes: Vec<DsgdNode>,
+    /// Liveness mirror for churn tolerance: a node whose in-neighbour died
+    /// advances without the dead trainer's model instead of deadlocking on
+    /// the pairwise barrier.
+    dead: Vec<bool>,
+    /// Highest round recorded in `round_starts` (keeps the trace monotone
+    /// when churn moves the recorder to a different node).
+    started: Round,
     sizes: SizeModel,
 }
 
@@ -126,25 +136,30 @@ impl DsgdProtocol {
         );
     }
 
-    /// If node finished training and has its neighbour's model, average and
-    /// move to the next round.
+    /// If node finished training and has its neighbour's model (or that
+    /// neighbour is dead — skip the dead trainer), average and move to the
+    /// next round.
     fn try_advance(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId) {
         let round = self.nodes[node as usize].round;
         let ready = {
             let n = &self.nodes[node as usize];
-            n.trained.is_some() && n.inbox.contains_key(&round)
+            n.trained.is_some()
+                && (n.inbox.contains_key(&round)
+                    || self.dead[self.graph.in_neighbor(node, round) as usize])
         };
         if !ready {
             return;
         }
         let (own, incoming) = {
             let n = &mut self.nodes[node as usize];
-            (n.trained.take().unwrap(), n.inbox.remove(&round).unwrap())
+            (n.trained.take().unwrap(), n.inbox.remove(&round))
         };
-        let avg = ctx
-            .task
-            .aggregate(&[&own, incoming.as_ref()])
-            .expect("aggregate");
+        let avg = match &incoming {
+            Some(inc) => ctx.task.aggregate(&[&own, inc.as_ref()]).expect("aggregate"),
+            // The round's in-neighbour crashed before its model arrived:
+            // proceed with the local model alone.
+            None => own,
+        };
         {
             let n = &mut self.nodes[node as usize];
             n.model = avg;
@@ -152,7 +167,11 @@ impl DsgdProtocol {
             // Drop stale early arrivals of long-past rounds.
             n.inbox.retain(|&k, _| k >= round);
         }
-        if node == 0 {
+        // Record from the lowest live node (node 0 unless churn killed it),
+        // keeping the round trace monotone across recorder handoffs.
+        let recorder = self.dead.iter().position(|&d| !d);
+        if recorder == Some(node as usize) && round + 1 > self.started {
+            self.started = round + 1;
             ctx.record_round_start(round + 1);
         }
         if ctx.round_budget_exceeded(round + 1) {
@@ -168,6 +187,7 @@ impl Protocol for DsgdProtocol {
 
     fn bootstrap(&mut self, ctx: &mut Ctx<'_, DsgdMsg>) {
         ctx.record_round_start(1);
+        self.started = 1;
         for node in 0..self.nodes.len() as NodeId {
             self.start_training(ctx, node);
         }
@@ -190,15 +210,46 @@ impl Protocol for DsgdProtocol {
         let out = self.graph.out_neighbor(node, round);
         let arc = Arc::new(updated.clone());
         self.nodes[node as usize].trained = Some(updated);
-        self.send_model(ctx, node, out, round, arc);
+        if !self.dead[out as usize] {
+            self.send_model(ctx, node, out, round, arc);
+        }
         self.try_advance(ctx, node);
     }
 
+    fn on_churn(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, ev: ChurnEvent) {
+        let i = ev.node as usize;
+        if i >= self.nodes.len() {
+            return;
+        }
+        match ev.kind {
+            ChurnKind::Leave | ChurnKind::Crash => {
+                self.dead[i] = true;
+                // Unblock every live node whose pairwise barrier was
+                // waiting on the dead trainer's model.
+                for v in 0..self.nodes.len() as NodeId {
+                    if v as usize != i && !self.dead[v as usize] {
+                        self.try_advance(ctx, v);
+                    }
+                }
+            }
+            // Rejected at build time (the fixed topology cannot admit
+            // joiners); defensive no-op if reached.
+            ChurnKind::Join | ChurnKind::Recover => {}
+        }
+    }
+
     fn evaluate(&mut self, task: &mut dyn Task) -> Result<EvalPoint> {
-        let n = self.nodes.len();
+        // Dead replicas are frozen at their crash-time model; evaluation
+        // covers live nodes only (identical to the original when no churn).
+        let live: Vec<usize> = (0..self.nodes.len()).filter(|&i| !self.dead[i]).collect();
+        let n = live.len().max(1);
         let (metric, loss, std) = if self.cfg.eval_avg_model {
-            let models: Vec<&Model> = self.nodes.iter().map(|x| &x.model).collect();
-            let avg = task.aggregate(&models)?;
+            let models: Vec<&Model> = live.iter().map(|&i| &self.nodes[i].model).collect();
+            let avg = if models.is_empty() {
+                self.nodes[0].model.clone()
+            } else {
+                task.aggregate(&models)?
+            };
             let e = task.evaluate(&avg)?;
             (e.metric, e.loss, 0.0)
         } else {
@@ -208,7 +259,7 @@ impl Protocol for DsgdProtocol {
             let mut metrics = Vec::with_capacity(k);
             let mut losses = Vec::with_capacity(k);
             for j in 0..k {
-                let idx = j * n / k;
+                let idx = live.get(j * n / k).copied().unwrap_or(0);
                 let model = self.nodes[idx].model.clone();
                 let e = task.evaluate(&model)?;
                 metrics.push(e.metric);
@@ -224,7 +275,13 @@ impl Protocol for DsgdProtocol {
     }
 
     fn final_round(&self) -> Round {
-        self.nodes.iter().map(|x| x.round).min().unwrap_or(0)
+        self.nodes
+            .iter()
+            .zip(&self.dead)
+            .filter(|(_, &dead)| !dead)
+            .map(|(x, _)| x.round)
+            .min()
+            .unwrap_or(0)
     }
 }
 
@@ -234,12 +291,16 @@ pub struct DsgdSession {
 }
 
 impl DsgdSession {
+    /// Build a session over `n` nodes. The churn script may crash/leave
+    /// (and is validated by the builder to contain nothing else — the
+    /// fixed topology cannot admit joiners).
     pub fn new(
         cfg: DsgdConfig,
         n: usize,
         task: Box<dyn Task>,
         compute: ComputeModel,
         fabric: NetworkFabric,
+        churn: ChurnSchedule,
     ) -> DsgdSession {
         let init = task.init_model();
         let nodes = (0..n)
@@ -255,19 +316,12 @@ impl DsgdSession {
             cfg,
             graph: OnePeerExpGraph::new(n as u32),
             nodes,
+            dead: vec![false; n],
+            started: 0,
             sizes: SizeModel::default(),
         };
         DsgdSession {
-            harness: SimHarness::new(
-                hcfg,
-                protocol,
-                n,
-                n,
-                task,
-                compute,
-                fabric,
-                crate::sim::ChurnSchedule::empty(),
-            ),
+            harness: SimHarness::new(hcfg, protocol, n, n, task, compute, fabric, churn),
         }
     }
 
@@ -321,16 +375,26 @@ impl SessionBuilder for DsgdBuilder {
         runtime: Option<&XlaRuntime>,
         churn: ChurnSchedule,
     ) -> Result<Box<dyn Session>> {
-        anyhow::ensure!(
-            churn.events().is_empty(),
-            "d-sgd does not support churn scripts (its pairwise barrier \
-             assumes a fixed population)"
-        );
         let n = spec.resolved_nodes()?;
+        // Crashes and graceful leaves are tolerated (the pairwise barrier
+        // skips dead trainers); joins are not — the one-peer exponential
+        // graph is fixed at n nodes.
+        for e in churn.events() {
+            anyhow::ensure!(
+                matches!(e.kind, ChurnKind::Crash | ChurnKind::Leave),
+                "d-sgd supports only crash/leave churn (its fixed one-peer \
+                 topology cannot admit joiners)"
+            );
+            anyhow::ensure!(
+                (e.node as usize) < n,
+                "d-sgd churn names node {} outside the fixed population of {n}",
+                e.node
+            );
+        }
         let task = spec.build_task(runtime)?;
         let fabric = spec.build_fabric(n)?;
         let compute = spec.build_compute(n);
-        Ok(Box::new(DsgdSession::new(dsgd_config(spec), n, task, compute, fabric)))
+        Ok(Box::new(DsgdSession::new(dsgd_config(spec), n, task, compute, fabric, churn)))
     }
 }
 
@@ -341,14 +405,18 @@ mod tests {
     use crate::net::{BandwidthConfig, LatencyMatrix, LatencyParams};
     use crate::sim::SimRng;
 
-    fn session(n: usize, cfg: DsgdConfig) -> DsgdSession {
+    fn session_with_churn(n: usize, cfg: DsgdConfig, churn: ChurnSchedule) -> DsgdSession {
         let mut rng = SimRng::new(cfg.seed);
         let task = MockTask::new(n, 16, 0.5, cfg.seed);
         let latency = LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
         let fabric =
             NetworkFabric::new(latency, &BandwidthConfig::uniform_mbps(50.0), n, &mut rng.fork("bw"));
         let compute = ComputeModel::uniform(n, 0.05);
-        DsgdSession::new(cfg, n, Box::new(task), compute, fabric)
+        DsgdSession::new(cfg, n, Box::new(task), compute, fabric, churn)
+    }
+
+    fn session(n: usize, cfg: DsgdConfig) -> DsgdSession {
+        session_with_churn(n, cfg, ChurnSchedule::empty())
     }
 
     #[test]
@@ -388,6 +456,30 @@ mod tests {
             (max as f64) < 1.2 * (min as f64),
             "imbalanced D-SGD: {min} vs {max}"
         );
+    }
+
+    #[test]
+    fn crashes_no_longer_deadlock_the_barrier() {
+        use crate::sim::{ChurnEvent, ChurnKind};
+        // Two of eight nodes crash early. Without churn tolerance the
+        // pairwise barrier deadlocks within log2(n) rounds of the crash
+        // (someone's in-neighbour never sends); with it, live nodes skip
+        // the dead trainers and keep advancing.
+        let churn = ChurnSchedule::new(vec![
+            ChurnEvent { at: SimTime::from_secs_f64(10.0), node: 3, kind: ChurnKind::Crash },
+            ChurnEvent { at: SimTime::from_secs_f64(15.0), node: 6, kind: ChurnKind::Leave },
+        ]);
+        let cfg = DsgdConfig {
+            max_time: SimTime::from_secs_f64(600.0),
+            max_rounds: 40,
+            eval_interval: SimTime::from_secs_f64(10.0),
+            ..Default::default()
+        };
+        let (m, traffic) = session_with_churn(8, cfg, churn).run();
+        assert!(m.final_round >= 25, "barrier stalled at round {}", m.final_round);
+        let late = m.round_starts.iter().filter(|&&(_, t)| t > 60.0).count();
+        assert!(late > 5, "no progress after the crash window: {late}");
+        assert!(traffic.is_conserved());
     }
 
     #[test]

@@ -24,7 +24,8 @@ use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
 use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
-    ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness, SimTime,
+    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness,
+    SimRng, SimTime,
 };
 use crate::{NodeId, Round};
 
@@ -73,6 +74,15 @@ struct GossipNode {
 pub struct GossipProtocol {
     cfg: GossipConfig,
     nodes: Vec<GossipNode>,
+    /// Protocol-side liveness mirror (the harness drops events at dead
+    /// nodes; this keeps evaluation and the round budget to live replicas).
+    dead: Vec<bool>,
+    /// Highest round recorded in `round_starts` (keeps the trace monotone
+    /// when churn moves the recorder to a different node).
+    started: Round,
+    /// Scripted Join/Recover events that have not fired yet: a total
+    /// outage with revivals still pending must not finish the session.
+    pending_revivals: usize,
     sizes: SizeModel,
 }
 
@@ -94,21 +104,62 @@ impl GossipProtocol {
     }
 
     fn push_model(&self, ctx: &mut Ctx<'_, GossipMsg>, from: NodeId, model: Arc<Model>) {
+        let n = ctx.n_nodes();
+        let model_b = ctx.task.model_bytes();
+        let total = self.sizes.model_transfer_bytes(model_b, 0);
+        let parts = [(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)];
+        // All-alive fast path (every churn-free session): the peer list is
+        // "each id but `from`", so skip materializing it and map sampled
+        // indices directly. Same `sample_indices(m, k)` call as the general
+        // path, so the RNG stream — and the session fingerprint — are
+        // identical.
+        if ctx.alive_count() == n && (from as usize) < n {
+            let m = n - 1;
+            if m == 0 {
+                return;
+            }
+            let k = self.cfg.fanout.min(m);
+            let picks = ctx.rng.sample_indices(m, k);
+            for p in picks {
+                let to = if (p as NodeId) < from { p as NodeId } else { p as NodeId + 1 };
+                ctx.send(from, to, &parts, GossipMsg { model: model.clone() });
+            }
+            return;
+        }
         let peers = ctx.alive_peers(from);
         if peers.is_empty() {
             return;
         }
         let k = self.cfg.fanout.min(peers.len());
         let picks = ctx.rng.sample_indices(peers.len(), k);
-        let model_b = ctx.task.model_bytes();
-        let total = self.sizes.model_transfer_bytes(model_b, 0);
         for p in picks {
-            ctx.send(
-                from,
-                peers[p],
-                &[(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)],
-                GossipMsg { model: model.clone() },
-            );
+            ctx.send(from, peers[p], &parts, GossipMsg { model: model.clone() });
+        }
+    }
+
+    /// True when at least one node is live and every live node has run out
+    /// of round budget (with `max_rounds == 0` this is never true).
+    fn all_live_done(&self, ctx: &Ctx<'_, GossipMsg>) -> bool {
+        let mut any_live = false;
+        for (x, &dead) in self.nodes.iter().zip(&self.dead) {
+            if dead {
+                continue;
+            }
+            any_live = true;
+            if !ctx.round_budget_exceeded(x.round) {
+                return false;
+            }
+        }
+        any_live
+    }
+
+    /// Record the start of `round` once, from the lowest live node (node 0
+    /// unless churn killed it), keeping the trace monotone.
+    fn record_round(&mut self, ctx: &mut Ctx<'_, GossipMsg>, node: NodeId, round: Round) {
+        let recorder = self.dead.iter().position(|&d| !d);
+        if recorder == Some(node as usize) && round > self.started {
+            self.started = round;
+            ctx.record_round_start(round);
         }
     }
 }
@@ -118,7 +169,13 @@ impl Protocol for GossipProtocol {
 
     fn bootstrap(&mut self, ctx: &mut Ctx<'_, GossipMsg>) {
         ctx.record_round_start(1);
+        self.started = 1;
         for node in 0..self.nodes.len() as NodeId {
+            // Churn-script joiners exist only as NotJoined placeholders at
+            // t=0; they start training when their Join event fires.
+            if self.dead[node as usize] {
+                continue;
+            }
             self.start_training(ctx, node);
         }
     }
@@ -147,16 +204,15 @@ impl Protocol for GossipProtocol {
         self.nodes[node as usize].model = arc.clone();
         self.push_model(ctx, node, arc);
         self.nodes[node as usize].round = round + 1;
-        if node == 0 {
-            ctx.record_round_start(round + 1);
-        }
+        self.record_round(ctx, node, round + 1);
         // Rounds are purely local, so the budget is per node: a node that
         // hits it just stops training while slower replicas catch up.
         // Finishing globally on the FIRST node would truncate slow nodes
         // well short of the budget under heterogeneous compute and bias
-        // comparisons; the session ends once the LAST node is done.
+        // comparisons; the session ends once the LAST live node is done
+        // (dead replicas can never catch up and must not stall the stop).
         if ctx.round_budget_exceeded(round + 1) {
-            if self.nodes.iter().all(|x| ctx.round_budget_exceeded(x.round)) {
+            if self.all_live_done(ctx) {
                 ctx.finish();
             }
             return;
@@ -164,15 +220,58 @@ impl Protocol for GossipProtocol {
         self.start_training(ctx, node);
     }
 
+    /// Scripted churn (ROADMAP item: gossip used to reject churn scripts).
+    /// Crashes/leaves only flip the liveness mirror — the harness already
+    /// drops the dead node's in-flight deliveries and pending train
+    /// completions, and `alive_peers` excludes it from future fan-outs.
+    /// Joins/recoveries bump the local epoch (invalidating any stale
+    /// pre-crash completion) and restart training.
+    fn on_churn(&mut self, ctx: &mut Ctx<'_, GossipMsg>, ev: ChurnEvent) {
+        let i = ev.node as usize;
+        if i >= self.nodes.len() {
+            return;
+        }
+        match ev.kind {
+            ChurnKind::Join | ChurnKind::Recover => {
+                self.pending_revivals = self.pending_revivals.saturating_sub(1);
+                self.dead[i] = false;
+                self.nodes[i].round += 1;
+                if !ctx.round_budget_exceeded(self.nodes[i].round) {
+                    self.start_training(ctx, ev.node);
+                }
+            }
+            ChurnKind::Leave | ChurnKind::Crash => {
+                self.dead[i] = true;
+                // The dead node may have been the last one still under its
+                // round budget; without this check the session would idle
+                // through probe ticks until max_time. A total outage also
+                // ends the session — unless a scripted revival has not
+                // fired yet (even one queued at this same instant), in
+                // which case the queue must keep running so it can.
+                let any_live = self.dead.iter().any(|&d| !d);
+                let done = if any_live {
+                    self.all_live_done(ctx)
+                } else {
+                    self.pending_revivals == 0
+                };
+                if done {
+                    ctx.finish();
+                }
+            }
+        }
+    }
+
     fn evaluate(&mut self, task: &mut dyn Task) -> Result<EvalPoint> {
-        // Mean±std over an even subsample of node models, like D-SGD: the
-        // residual variance across replicas is the story.
-        let n = self.nodes.len();
+        // Mean±std over an even subsample of LIVE node models, like D-SGD:
+        // the residual variance across replicas is the story. (With no
+        // churn every node is live, so this is the original subsample.)
+        let live: Vec<usize> = (0..self.nodes.len()).filter(|&i| !self.dead[i]).collect();
+        let n = live.len().max(1);
         let k = self.cfg.eval_nodes.min(n).max(1);
         let mut metrics = Vec::with_capacity(k);
         let mut losses = Vec::with_capacity(k);
         for j in 0..k {
-            let idx = j * n / k;
+            let idx = live.get(j * n / k).copied().unwrap_or(0);
             let e = task.evaluate(&self.nodes[idx].model)?;
             metrics.push(e.metric);
             losses.push(e.loss);
@@ -189,7 +288,13 @@ impl Protocol for GossipProtocol {
     }
 
     fn final_round(&self) -> Round {
-        self.nodes.iter().map(|x| x.round).min().unwrap_or(0)
+        self.nodes
+            .iter()
+            .zip(&self.dead)
+            .filter(|(_, &dead)| !dead)
+            .map(|(x, _)| x.round)
+            .min()
+            .unwrap_or(0)
     }
 }
 
@@ -199,15 +304,28 @@ pub struct GossipSession {
 }
 
 impl GossipSession {
+    /// Build a session over `n` initially-alive nodes plus whatever node
+    /// ids the churn script introduces later.
     pub fn new(
         cfg: GossipConfig,
         n: usize,
         task: Box<dyn Task>,
         compute: ComputeModel,
         fabric: NetworkFabric,
+        churn: ChurnSchedule,
     ) -> GossipSession {
+        let max_node = churn.node_extent().max(n);
         let init = Arc::new(task.init_model());
-        let nodes = (0..n).map(|_| GossipNode { round: 1, model: init.clone() }).collect();
+        let nodes = (0..max_node).map(|_| GossipNode { round: 1, model: init.clone() }).collect();
+        let dead = (0..max_node).map(|i| i >= n).collect();
+        let pending_revivals = churn
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, ChurnKind::Join | ChurnKind::Recover))
+            .count();
+        let mut compute = compute;
+        let mut rng = SimRng::new(cfg.seed ^ 0x676f_7373_6970_0001);
+        compute.ensure_nodes(max_node, &mut rng);
         let hcfg = HarnessConfig {
             max_time: cfg.max_time,
             max_rounds: cfg.max_rounds,
@@ -215,17 +333,17 @@ impl GossipSession {
             target_metric: cfg.target_metric,
             seed: cfg.seed,
         };
-        let protocol = GossipProtocol { cfg, nodes, sizes: SizeModel::default() };
+        let protocol = GossipProtocol {
+            cfg,
+            nodes,
+            dead,
+            started: 0,
+            pending_revivals,
+            sizes: SizeModel::default(),
+        };
         GossipSession {
             harness: SimHarness::new(
-                hcfg,
-                protocol,
-                n,
-                n,
-                task,
-                compute,
-                fabric,
-                ChurnSchedule::empty(),
+                hcfg, protocol, max_node, n, task, compute, fabric, churn,
             ),
         }
     }
@@ -264,14 +382,24 @@ impl SessionBuilder for GossipBuilder {
         runtime: Option<&XlaRuntime>,
         churn: ChurnSchedule,
     ) -> Result<Box<dyn Session>> {
-        anyhow::ensure!(
-            churn.events().is_empty(),
-            "gossip-dl does not support churn scripts yet"
-        );
         let n = spec.resolved_nodes()?;
-        let task = spec.build_task(runtime)?;
-        let fabric = spec.build_fabric(n)?;
-        let compute = spec.build_compute(n);
+        // Only Join/Recover events may introduce node ids beyond the
+        // initial population (the dataset/fabric/compute substrates are
+        // sized to cover them); a Crash/Leave of a node that can never
+        // exist is a script typo and must fail, not silently inflate the
+        // session with phantom dead nodes.
+        let max_n = n.max(churn.join_extent());
+        for e in churn.events() {
+            anyhow::ensure!(
+                (e.node as usize) < max_n,
+                "gossip churn {:?} names node {} which never joins a population of {max_n}",
+                e.kind,
+                e.node
+            );
+        }
+        let task = spec.build_task_for(runtime, max_n)?;
+        let fabric = spec.build_fabric(max_n)?;
+        let compute = spec.build_compute(max_n);
         // The fallback comes from this builder's own advertised metadata,
         // so `repro protocols` can never document a different default than
         // the one that actually runs.
@@ -297,7 +425,7 @@ impl SessionBuilder for GossipBuilder {
             target_metric: spec.run.target_metric,
             seed: spec.run.seed,
         };
-        Ok(Box::new(GossipSession::new(cfg, n, task, compute, fabric)))
+        Ok(Box::new(GossipSession::new(cfg, n, task, compute, fabric, churn)))
     }
 }
 
@@ -308,19 +436,24 @@ mod tests {
     use crate::net::{BandwidthConfig, LatencyMatrix, LatencyParams};
     use crate::sim::SimRng;
 
-    fn session(n: usize, cfg: GossipConfig) -> GossipSession {
+    fn session_with_churn(n: usize, cfg: GossipConfig, churn: ChurnSchedule) -> GossipSession {
         let mut rng = SimRng::new(cfg.seed);
-        let task = MockTask::new(n, 16, 0.5, cfg.seed);
+        let max_n = n.max(churn.node_extent());
+        let task = MockTask::new(max_n, 16, 0.5, cfg.seed);
         let latency =
-            LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+            LatencyMatrix::synthetic(&LatencyParams::default(), max_n, &mut rng.fork("lat"));
         let fabric = NetworkFabric::new(
             latency,
             &BandwidthConfig::uniform_mbps(50.0),
-            n,
+            max_n,
             &mut rng.fork("bw"),
         );
-        let compute = ComputeModel::uniform(n, 0.05);
-        GossipSession::new(cfg, n, Box::new(task), compute, fabric)
+        let compute = ComputeModel::uniform(max_n, 0.05);
+        GossipSession::new(cfg, n, Box::new(task), compute, fabric, churn)
+    }
+
+    fn session(n: usize, cfg: GossipConfig) -> GossipSession {
+        session_with_churn(n, cfg, ChurnSchedule::empty())
     }
 
     #[test]
@@ -356,6 +489,94 @@ mod tests {
             t3.total(),
             t1.total()
         );
+    }
+
+    #[test]
+    fn survives_crashes_and_joins() {
+        use crate::sim::{ChurnEvent, ChurnKind};
+        // 10 initial nodes; 3 crash mid-run, 2 fresh ids join later. The
+        // epidemic must keep mixing among the survivors and fold the
+        // joiners in — gossip used to reject churn scripts outright.
+        let churn = ChurnSchedule::new(vec![
+            ChurnEvent { at: SimTime::from_secs_f64(20.0), node: 7, kind: ChurnKind::Crash },
+            ChurnEvent { at: SimTime::from_secs_f64(25.0), node: 8, kind: ChurnKind::Crash },
+            ChurnEvent { at: SimTime::from_secs_f64(30.0), node: 9, kind: ChurnKind::Leave },
+            ChurnEvent { at: SimTime::from_secs_f64(40.0), node: 10, kind: ChurnKind::Join },
+            ChurnEvent { at: SimTime::from_secs_f64(60.0), node: 11, kind: ChurnKind::Join },
+            ChurnEvent { at: SimTime::from_secs_f64(80.0), node: 8, kind: ChurnKind::Recover },
+        ]);
+        let cfg = GossipConfig {
+            max_time: SimTime::from_secs_f64(400.0),
+            max_rounds: 40,
+            eval_interval: SimTime::from_secs_f64(10.0),
+            ..Default::default()
+        };
+        let (m, traffic) = session_with_churn(10, cfg, churn).run();
+        // Live replicas keep making rounds well past the churn window.
+        assert!(m.final_round >= 10, "stalled at round {}", m.final_round);
+        let late = m.round_starts.iter().filter(|&&(_, t)| t > 100.0).count();
+        assert!(late > 0, "no round progress after the churn window");
+        assert!(traffic.is_conserved());
+        assert!(m.best_metric(true).unwrap() > 0.3);
+    }
+
+    #[test]
+    fn total_outage_finishes_instead_of_idling_to_max_time() {
+        // Every node crashes by t=40 and nothing is scripted to revive:
+        // the session must end at the outage, not probe a frozen
+        // population for the remaining ~14 virtual minutes.
+        let churn = ChurnSchedule::mass_crash(
+            6,
+            0,
+            2,
+            SimTime::from_secs_f64(20.0),
+            SimTime::from_secs_f64(10.0),
+        );
+        let cfg = GossipConfig {
+            max_time: SimTime::from_secs_f64(900.0),
+            max_rounds: 0,
+            eval_interval: SimTime::from_secs_f64(10.0),
+            ..Default::default()
+        };
+        let (m, _) = session_with_churn(6, cfg, churn).run();
+        assert!(m.duration_s < 60.0, "idled to {}s after total outage", m.duration_s);
+    }
+
+    #[test]
+    fn builder_rejects_crash_of_never_joining_node() {
+        use crate::sim::{ChurnEvent, ChurnKind};
+        let mut spec = ScenarioSpec::new("mock", "gossip");
+        spec.population.nodes = 10;
+        let churn = ChurnSchedule::new(vec![ChurnEvent {
+            at: SimTime::from_secs_f64(5.0),
+            node: 9_999,
+            kind: ChurnKind::Crash,
+        }]);
+        assert!(GossipBuilder.build(&spec, None, churn).is_err());
+    }
+
+    #[test]
+    fn churn_session_replays_identically() {
+        let mk = || {
+            let churn = ChurnSchedule::mass_crash(
+                8,
+                5,
+                1,
+                SimTime::from_secs_f64(15.0),
+                SimTime::from_secs_f64(10.0),
+            );
+            let cfg = GossipConfig {
+                max_time: SimTime::from_secs_f64(200.0),
+                max_rounds: 20,
+                ..Default::default()
+            };
+            session_with_churn(8, cfg, churn).run()
+        };
+        let (a, ta) = mk();
+        let (b, tb) = mk();
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.final_round, b.final_round);
+        assert_eq!(ta.total(), tb.total());
     }
 
     #[test]

@@ -1,30 +1,63 @@
 //! Native model averaging — the L3 aggregation hot path.
 //!
 //! An aggregator averages up to `s` models of up to ~1.75M f32 each, every
-//! round. This implementation accumulates in f32 with the models as the
-//! outer loop and a plain slice add as the inner loop, which LLVM
-//! auto-vectorizes; `benches/hotpaths.rs` compares it against the
-//! XLA/Pallas path and a naive index-per-element loop (see EXPERIMENTS.md
-//! §Perf for numbers).
+//! round. The accumulator is one flat buffer filled once and updated
+//! in-place with a chunked slice add (8 independent lanes per step) that
+//! LLVM turns into packed SIMD; element order within each lane is
+//! preserved, so results are bit-identical to the sequential loop.
+//! `benches/hotpaths.rs` compares it against the XLA/Pallas path and a
+//! naive index-per-element loop (see EXPERIMENTS.md §Perf for numbers).
 
 use super::task::Model;
 
-/// Mean of `models` (all same length, at least one).
+/// Lanes per unrolled step of the accumulate/scale loops.
+const CHUNK: usize = 8;
+
+/// `acc[i] += src[i]` over equal-length slices, in `CHUNK`-wide strips so
+/// the bounds checks hoist and the body auto-vectorizes. Per-element
+/// accumulation order is unchanged (each element still adds the same
+/// sequence of values), so this is bit-compatible with the scalar loop.
+#[inline]
+fn add_assign_chunked(acc: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(acc.len(), src.len());
+    let mut a = acc.chunks_exact_mut(CHUNK);
+    let mut s = src.chunks_exact(CHUNK);
+    for (ca, cs) in (&mut a).zip(&mut s) {
+        for (x, &y) in ca.iter_mut().zip(cs.iter()) {
+            *x += y;
+        }
+    }
+    for (x, &y) in a.into_remainder().iter_mut().zip(s.remainder()) {
+        *x += y;
+    }
+}
+
+/// `acc[i] *= k` in the same chunked shape.
+#[inline]
+fn scale_chunked(acc: &mut [f32], k: f32) {
+    let mut a = acc.chunks_exact_mut(CHUNK);
+    for ca in &mut a {
+        for x in ca {
+            *x *= k;
+        }
+    }
+    for x in a.into_remainder() {
+        *x *= k;
+    }
+}
+
+/// Mean of `models` (all same length, at least one). Allocates exactly one
+/// output buffer and accumulates into it in place.
 pub fn aggregate_native(models: &[&Model]) -> Model {
     assert!(!models.is_empty(), "aggregate of zero models");
     let n = models[0].len();
-    let mut acc = models[0].clone();
+    // One allocation + one memcpy (no redundant zero-fill).
+    let mut acc = models[0].to_vec();
     for m in &models[1..] {
         assert_eq!(m.len(), n, "model length mismatch");
-        // Slice-of-equal-length add: bounds checks hoisted, vectorized.
-        for (a, &b) in acc.iter_mut().zip(m.iter()) {
-            *a += b;
-        }
+        add_assign_chunked(&mut acc, m);
     }
-    let inv = 1.0 / models.len() as f32;
-    for a in &mut acc {
-        *a *= inv;
-    }
+    scale_chunked(&mut acc, 1.0 / models.len() as f32);
     acc
 }
 
@@ -61,6 +94,32 @@ mod tests {
     fn single_model_identity() {
         let a = vec![1.5f32; 100];
         assert_eq!(aggregate_native(&[&a]), a);
+    }
+
+    #[test]
+    fn matches_sequential_reference_bitwise() {
+        // The chunked kernel must reproduce the plain sequential
+        // accumulate+scale exactly, including on a non-multiple-of-CHUNK
+        // tail — same-seed session fingerprints depend on it.
+        let ms: Vec<Model> = (0..7)
+            .map(|i| (0..1003).map(|j| ((i * 31 + j) as f32).sin()).collect())
+            .collect();
+        let refs: Vec<&Model> = ms.iter().collect();
+        let mut expect = refs[0].clone();
+        for m in &refs[1..] {
+            for (a, &b) in expect.iter_mut().zip(m.iter()) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / refs.len() as f32;
+        for a in &mut expect {
+            *a *= inv;
+        }
+        let got = aggregate_native(&refs);
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

@@ -39,9 +39,7 @@ pub fn assemble_modest(
     let n = spec.resolved_nodes()?;
     // Churn scripts may introduce node ids beyond the initial population;
     // the dataset/fabric/compute substrates must cover them too.
-    let max_n = n.max(
-        churn.events().iter().map(|e| e.node as usize + 1).max().unwrap_or(0),
-    );
+    let max_n = n.max(churn.node_extent());
     let task = spec.build_task_for(runtime, max_n)?;
     let fabric = spec.build_fabric(max_n)?;
     let compute = spec.build_compute(max_n);

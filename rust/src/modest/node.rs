@@ -21,6 +21,11 @@ use super::view::View;
 /// copies — the traffic ledger accounts for the bytes instead).
 pub type ModelRef = Arc<Model>;
 
+/// Shared-ownership view payload: a fan-out to `s` peers snapshots the
+/// sender's view once and every message holds the same immutable snapshot
+/// (the ledger still charges the full serialized view per transfer).
+pub type ViewRef = Arc<View>;
+
 /// Wire messages of the MoDeST protocol.
 #[derive(Debug, Clone)]
 pub enum Msg {
@@ -33,9 +38,9 @@ pub enum Msg {
     /// Graceful-leave advertisement (Alg. 2).
     Left { node: NodeId, counter: u64 },
     /// Participant -> aggregators of the next sample (Alg. 4).
-    Aggregate { round: Round, model: ModelRef, view: View },
+    Aggregate { round: Round, model: ModelRef, view: ViewRef },
     /// Aggregator -> participants of its sample (Alg. 4).
-    Train { round: Round, model: ModelRef, view: View },
+    Train { round: Round, model: ModelRef, view: ViewRef },
 }
 
 /// Why a sampling operation is running (continuation on completion).

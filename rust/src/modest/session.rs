@@ -34,7 +34,7 @@ use crate::sim::{
 };
 use crate::{NodeId, Round};
 
-use super::node::{ModelRef, ModestNode, Msg, NodeAction, Purpose, SampleOp};
+use super::node::{ModelRef, ModestNode, Msg, NodeAction, Purpose, SampleOp, ViewRef};
 use super::registry::MembershipEvent;
 use super::sampler::candidate_order;
 
@@ -104,8 +104,9 @@ pub struct ModestProtocol {
     cfg: ModestConfig,
     nodes: Vec<ModestNode>,
     sizes: SizeModel,
-    /// Latest aggregated model dispatched by any aggregator.
-    latest_global: Model,
+    /// Latest aggregated model dispatched by any aggregator (shared with
+    /// the train messages that carried it — never deep-copied).
+    latest_global: ModelRef,
     latest_round: Round,
     /// Size of the initial population (observers for join traces).
     initial_nodes: usize,
@@ -122,30 +123,32 @@ impl ModestProtocol {
     }
 
     /// Compute the wire parts for `msg` and hand it to the fabric via `ctx`
-    /// (self-sends are loopback: no traffic, no latency).
+    /// (self-sends are loopback: no traffic, no latency). Parts live on the
+    /// stack — the fan-out hot path performs no per-send allocation.
     fn send(&self, ctx: &mut Ctx<'_, Msg>, from: NodeId, to: NodeId, msg: Msg) {
         if from == to {
             ctx.deliver_local(to, msg);
             return;
         }
-        let parts: Vec<(MsgKind, u64)> = match &msg {
+        let (parts, used): ([(MsgKind, u64); 2], usize) = match &msg {
             Msg::Ping { .. } | Msg::Pong { .. } => {
-                vec![(MsgKind::Control, self.sizes.ping_bytes())]
+                ([(MsgKind::Control, self.sizes.ping_bytes()), (MsgKind::Control, 0)], 1)
             }
-            Msg::Joined { .. } | Msg::Left { .. } => {
-                vec![(MsgKind::Membership, self.sizes.membership_bytes())]
-            }
+            Msg::Joined { .. } | Msg::Left { .. } => (
+                [(MsgKind::Membership, self.sizes.membership_bytes()), (MsgKind::Control, 0)],
+                1,
+            ),
             Msg::Train { view, .. } | Msg::Aggregate { view, .. } => {
                 let model_b = ctx.task.model_bytes();
                 let view_b = view.wire_bytes(&self.sizes);
                 let total = self.sizes.model_transfer_bytes(model_b, 0) + view_b;
-                vec![
-                    (MsgKind::ModelPayload, model_b),
-                    (MsgKind::ViewPayload, total - model_b),
-                ]
+                (
+                    [(MsgKind::ModelPayload, model_b), (MsgKind::ViewPayload, total - model_b)],
+                    2,
+                )
             }
         };
-        ctx.send(from, to, &parts, msg);
+        ctx.send(from, to, &parts[..used], msg);
     }
 
     // ------------------------------------------------------------- sampling
@@ -289,8 +292,9 @@ impl ModestProtocol {
     ) {
         match purpose {
             Purpose::Aggregators => {
-                // Trainer pushes its updated model to A^{round}.
-                let view = self.nodes[node as usize].view.clone();
+                // Trainer pushes its updated model to A^{round}: one view
+                // snapshot, shared by every copy in flight.
+                let view: ViewRef = Arc::new(self.nodes[node as usize].view.clone());
                 for &j in targets {
                     self.send(
                         ctx,
@@ -311,13 +315,14 @@ impl ModestProtocol {
                     Arc::new(ctx.task.aggregate(&models).expect("aggregate"))
                 };
                 self.nodes[node as usize].theta.clear();
-                // Track the freshest global model for evaluation.
+                // Track the freshest global model for evaluation (shared,
+                // not copied: the Arc already owns the buffer).
                 if round > self.latest_round {
                     self.latest_round = round;
-                    self.latest_global = (*avg).clone();
+                    self.latest_global = avg.clone();
                     ctx.record_round_start(round);
                 }
-                let view = self.nodes[node as usize].view.clone();
+                let view: ViewRef = Arc::new(self.nodes[node as usize].view.clone());
                 for &j in targets {
                     self.send(
                         ctx,
@@ -380,7 +385,7 @@ impl Protocol for ModestProtocol {
         // All initial nodes share the same view, so S^1 is consistent.
         let candidates: Vec<NodeId> = (0..self.initial_nodes as NodeId).collect();
         let order = candidate_order(1, &candidates);
-        let view = self.nodes[0].view.clone();
+        let view: ViewRef = Arc::new(self.nodes[0].view.clone());
         for &i in order.iter().take(self.cfg.s.min(order.len())) {
             ctx.deliver_local(i, Msg::Train { round: 1, model: init.clone(), view: view.clone() });
         }
@@ -521,7 +526,7 @@ impl Protocol for ModestProtocol {
     }
 
     fn evaluate(&mut self, task: &mut dyn Task) -> Result<EvalPoint> {
-        let e = task.evaluate(&self.latest_global)?;
+        let e = task.evaluate(self.latest_global.as_ref())?;
         Ok(EvalPoint {
             round: self.latest_round,
             metric: e.metric,
@@ -553,13 +558,7 @@ impl ModestSession {
         churn: ChurnSchedule,
     ) -> ModestSession {
         let mut rng = SimRng::new(cfg.seed ^ 0x6d6f6465_73740001);
-        let max_node = churn
-            .events()
-            .iter()
-            .map(|e| e.node as usize + 1)
-            .max()
-            .unwrap_or(0)
-            .max(n_initial);
+        let max_node = churn.node_extent().max(n_initial);
         let mut nodes: Vec<ModestNode> = (0..max_node as NodeId).map(ModestNode::new).collect();
 
         // Initial population: registered with counter 1, activity 0.
@@ -576,7 +575,7 @@ impl ModestSession {
             }
         }
 
-        let latest_global = task.init_model();
+        let latest_global = Arc::new(task.init_model());
         let mut compute = compute;
         compute.ensure_nodes(max_node, &mut rng);
         fabric.ensure_nodes(max_node);
@@ -605,7 +604,7 @@ impl ModestSession {
     /// The freshest aggregated model and its round.
     pub fn latest_global(&self) -> (&Model, Round) {
         let p = self.harness.protocol();
-        (&p.latest_global, p.latest_round)
+        (p.latest_global.as_ref(), p.latest_round)
     }
 
     /// Run to completion; returns the collected metrics.

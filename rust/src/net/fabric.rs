@@ -96,7 +96,19 @@ impl BandwidthConfig {
             }
             BandwidthConfig::Classes(classes) => {
                 assert!(!classes.is_empty(), "empty bandwidth class list");
-                let total: f64 = classes.iter().map(|c| c.weight).sum();
+                // A NaN/∞/non-positive weight would silently skew the
+                // cumulative walk toward the last class; fail loudly
+                // instead (config-file paths validate earlier with a
+                // recoverable error, this guards programmatic use).
+                let mut total = 0.0;
+                for c in classes {
+                    assert!(
+                        c.weight.is_finite() && c.weight > 0.0,
+                        "bandwidth class weight must be a finite positive number, got {}",
+                        c.weight
+                    );
+                    total += c.weight;
+                }
                 let mut pick = rng.next_f64() * total;
                 for c in classes {
                     pick -= c.weight;
@@ -468,6 +480,31 @@ mod tests {
         let fast = (0..32u32).filter(|&n| f.up_bps(n) == 50e6).count();
         assert_eq!(slow + fast, 32);
         assert!(slow > 0 && fast > 0, "{slow} slow / {fast} fast");
+    }
+
+    #[test]
+    #[should_panic(expected = "finite positive")]
+    fn nan_class_weight_panics() {
+        let latency = LatencyMatrix::uniform(4, SimTime::ZERO);
+        let bw = BandwidthConfig::Classes(vec![
+            BandwidthClass { weight: 1.0, up_bps: 1e6, down_bps: 1e6 },
+            BandwidthClass { weight: f64::NAN, up_bps: 2e6, down_bps: 2e6 },
+        ]);
+        let mut rng = SimRng::new(1);
+        let _ = NetworkFabric::new(latency, &bw, 4, &mut rng);
+    }
+
+    #[test]
+    #[should_panic(expected = "finite positive")]
+    fn negative_class_weight_panics() {
+        let latency = LatencyMatrix::uniform(4, SimTime::ZERO);
+        let bw = BandwidthConfig::Classes(vec![BandwidthClass {
+            weight: -2.0,
+            up_bps: 1e6,
+            down_bps: 1e6,
+        }]);
+        let mut rng = SimRng::new(1);
+        let _ = NetworkFabric::new(latency, &bw, 4, &mut rng);
     }
 
     #[test]

@@ -37,16 +37,29 @@ const EARTH_RADIUS_KM: f64 = 6371.0;
 const FIBER_KM_S: f64 = 199_000.0;
 
 /// Dense symmetric one-way latency matrix over cities + node->city map.
+///
+/// Latencies are stored pre-quantized in integer µs (the exact values
+/// `SimTime::from_secs_f64` would produce), and each node carries its
+/// city-row base offset, so the per-transfer lookup on the fabric hot path
+/// is two array reads and an add — no float math, no multiply.
 #[derive(Debug, Clone)]
 pub struct LatencyMatrix {
     cities: usize,
-    /// Row-major one-way latency in seconds between cities.
-    lat: Vec<f64>,
+    /// Row-major one-way latency in µs between cities (pre-quantized).
+    lat_us: Vec<u64>,
     /// City index for each node (round-robin).
     node_city: Vec<usize>,
+    /// Precomputed `city * cities` row base per node.
+    node_row: Vec<usize>,
 }
 
 impl LatencyMatrix {
+    fn from_secs_table(cities: usize, lat_s: Vec<f64>, node_city: Vec<usize>) -> Self {
+        let lat_us = lat_s.iter().map(|&s| SimTime::from_secs_f64(s).0).collect();
+        let node_row = node_city.iter().map(|&c| c * cities).collect();
+        LatencyMatrix { cities, lat_us, node_city, node_row }
+    }
+
     /// Build the synthetic geography from a seeded RNG.
     pub fn synthetic(params: &LatencyParams, nodes: usize, rng: &mut SimRng) -> Self {
         let c = params.cities.max(1);
@@ -75,16 +88,16 @@ impl LatencyMatrix {
             lat[i * c + i] = params.base_s;
         }
         let node_city = (0..nodes).map(|n| n % c).collect();
-        LatencyMatrix { cities: c, lat, node_city }
+        LatencyMatrix::from_secs_table(c, lat, node_city)
     }
 
     /// Uniform constant latency (useful in tests and microbenches).
     pub fn uniform(nodes: usize, one_way: SimTime) -> Self {
-        let s = one_way.as_secs_f64();
         LatencyMatrix {
             cities: 1,
-            lat: vec![s],
+            lat_us: vec![one_way.0],
             node_city: vec![0; nodes],
+            node_row: vec![0; nodes],
         }
     }
 
@@ -93,10 +106,9 @@ impl LatencyMatrix {
     }
 
     /// One-way latency between two nodes.
+    #[inline]
     pub fn one_way(&self, a: NodeId, b: NodeId) -> SimTime {
-        let ca = self.node_city[a as usize];
-        let cb = self.node_city[b as usize];
-        SimTime::from_secs_f64(self.lat[ca * self.cities + cb])
+        SimTime(self.lat_us[self.node_row[a as usize] + self.node_city[b as usize]])
     }
 
     /// Round-trip time between two nodes.

@@ -24,7 +24,7 @@ pub mod network;
 pub mod registry;
 pub mod spec;
 
-pub use network::{NetworkSpec, TierSpec};
+pub use network::{LatencySpec, NetworkSpec, TierSpec};
 pub use registry::{
     run_scenario, ProtocolMeta, ProtocolRegistry, Session, SessionBuilder,
 };

@@ -28,8 +28,108 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::net::{BandwidthClass, BandwidthConfig};
+use crate::net::{BandwidthClass, BandwidthConfig, LatencyParams};
 use crate::util::Json;
+
+/// The `network.latency` section: knobs of the synthetic WAN geography
+/// (ROADMAP item — latency shaping used to be reachable only
+/// programmatically while bandwidth was already declarative).
+///
+/// ```json
+/// "latency": {"cities": 64, "base_ms": 2.0, "inflation": 1.6,
+///             "jitter": 0.15, "seed": 9}
+/// ```
+///
+/// Every field is optional; defaults mirror [`LatencyParams::default`].
+/// `seed` decouples the geography from the run seed (absent = derive from
+/// `run.seed` exactly as before, so existing configs replay identically).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySpec {
+    /// Number of distinct cities nodes are assigned to round-robin.
+    pub cities: usize,
+    /// Fixed last-mile cost added to every one-way latency, in ms.
+    pub base_ms: f64,
+    /// Route inflation over great-circle distance.
+    pub inflation: f64,
+    /// Relative jitter amplitude per city pair (0.1 = ±10%).
+    pub jitter: f64,
+    /// Independent geography seed; `null`/absent = derive from `run.seed`.
+    pub seed: Option<u64>,
+}
+
+impl Default for LatencySpec {
+    fn default() -> Self {
+        let p = LatencyParams::default();
+        LatencySpec {
+            cities: p.cities,
+            base_ms: p.base_s * 1e3,
+            inflation: p.inflation,
+            jitter: p.jitter,
+            seed: None,
+        }
+    }
+}
+
+impl LatencySpec {
+    pub fn from_json(v: &Json) -> Result<LatencySpec> {
+        let mut out = LatencySpec::default();
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                "cities" => out.cities = val.as_usize()?,
+                "base_ms" => out.base_ms = val.as_f64()?,
+                "inflation" => out.inflation = val.as_f64()?,
+                "jitter" => out.jitter = val.as_f64()?,
+                "seed" => {
+                    out.seed = if *val == Json::Null { None } else { Some(val.as_u64()?) }
+                }
+                other => bail!("unknown latency key {other:?}"),
+            }
+        }
+        anyhow::ensure!(out.cities > 0, "latency.cities must be > 0");
+        anyhow::ensure!(
+            out.base_ms.is_finite() && out.base_ms >= 0.0,
+            "latency.base_ms must be a finite non-negative number, got {}",
+            out.base_ms
+        );
+        anyhow::ensure!(
+            out.inflation.is_finite() && out.inflation > 0.0,
+            "latency.inflation must be a finite positive number, got {}",
+            out.inflation
+        );
+        anyhow::ensure!(
+            out.jitter.is_finite() && (0.0..1.0).contains(&out.jitter),
+            "latency.jitter must be in [0, 1), got {}",
+            out.jitter
+        );
+        Ok(out)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("cities", Json::Num(self.cities as f64)),
+            ("base_ms", Json::Num(self.base_ms)),
+            ("inflation", Json::Num(self.inflation)),
+            ("jitter", Json::Num(self.jitter)),
+            (
+                "seed",
+                match self.seed {
+                    Some(s) => Json::Num(s as f64),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// The geography parameters this section describes.
+    pub fn params(&self) -> LatencyParams {
+        LatencyParams {
+            cities: self.cities,
+            base_s: self.base_ms / 1e3,
+            inflation: self.inflation,
+            jitter: self.jitter,
+        }
+    }
+}
 
 /// One capacity tier of `network.classes`: asymmetric up/down rates with a
 /// relative sampling weight (weights need not sum to 1).
@@ -60,7 +160,10 @@ impl TierSpec {
         let up = up_mbps.ok_or_else(|| anyhow!("bandwidth class missing up_mbps"))?;
         // A tier with only `up_mbps` is symmetric.
         let down = down_mbps.unwrap_or(up);
-        anyhow::ensure!(weight > 0.0, "bandwidth class weight must be > 0, got {weight}");
+        anyhow::ensure!(
+            weight.is_finite() && weight > 0.0,
+            "bandwidth class weight must be a finite number > 0, got {weight}"
+        );
         anyhow::ensure!(up >= 0.0 && down >= 0.0, "negative capacity in class {name:?}");
         Ok(TierSpec { name, weight, up_mbps: up, down_mbps: down })
     }
@@ -90,6 +193,9 @@ pub struct NetworkSpec {
     /// Per-node capacity trace (CSV `up_mbps,down_mbps` per node); wins
     /// over everything else.
     pub trace_file: Option<String>,
+    /// Synthetic WAN geography shaping; absent = the built-in defaults
+    /// seeded from `run.seed` (bit-identical to pre-section behaviour).
+    pub latency: Option<LatencySpec>,
 }
 
 impl Default for NetworkSpec {
@@ -99,6 +205,7 @@ impl Default for NetworkSpec {
             bandwidth_sigma: 0.0,
             classes: Vec::new(),
             trace_file: None,
+            latency: None,
         }
     }
 }
@@ -124,6 +231,13 @@ impl NetworkSpec {
                         Some(val.as_str()?.to_string())
                     }
                 }
+                "latency" => {
+                    out.latency = if *val == Json::Null {
+                        None
+                    } else {
+                        Some(LatencySpec::from_json(val)?)
+                    }
+                }
                 other => bail!("unknown network key {other:?}"),
             }
         }
@@ -142,6 +256,13 @@ impl NetworkSpec {
                 "trace_file",
                 match &self.trace_file {
                     Some(p) => Json::Str(p.clone()),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "latency",
+                match &self.latency {
+                    Some(l) => l.to_json(),
                     None => Json::Null,
                 },
             ),
@@ -344,6 +465,37 @@ mod tests {
     }
 
     #[test]
+    fn latency_section_parses_and_validates() {
+        let v = Json::parse(
+            r#"{"latency": {"cities": 32, "base_ms": 2.5, "jitter": 0.1, "seed": 7}}"#,
+        )
+        .unwrap();
+        let spec = NetworkSpec::from_json(&v).unwrap();
+        let l = spec.latency.expect("latency parsed");
+        assert_eq!(l.cities, 32);
+        assert!((l.base_ms - 2.5).abs() < 1e-12);
+        assert!((l.inflation - 1.6).abs() < 1e-12); // default retained
+        assert_eq!(l.seed, Some(7));
+        let p = l.params();
+        assert_eq!(p.cities, 32);
+        assert!((p.base_s - 0.0025).abs() < 1e-12);
+
+        // Bad values are rejected with clear errors.
+        for bad in [
+            r#"{"latency": {"cities": 0}}"#,
+            r#"{"latency": {"base_ms": -1.0}}"#,
+            r#"{"latency": {"jitter": 1.5}}"#,
+            r#"{"latency": {"inflation": 0.0}}"#,
+            r#"{"latency": {"citties": 3}}"#,
+        ] {
+            assert!(
+                NetworkSpec::from_json(&Json::parse(bad).unwrap()).is_err(),
+                "accepted {bad}"
+            );
+        }
+    }
+
+    #[test]
     fn roundtrips_through_json() {
         let spec = NetworkSpec {
             bandwidth_mbps: 25.0,
@@ -355,6 +507,7 @@ mod tests {
                 down_mbps: 300.0,
             }],
             trace_file: None,
+            latency: Some(LatencySpec { cities: 12, seed: Some(3), ..Default::default() }),
         };
         let back = NetworkSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap())
             .unwrap();

@@ -53,6 +53,24 @@ impl ChurnSchedule {
         self.events.is_empty()
     }
 
+    /// One past the highest node id referenced by any event (0 if none) —
+    /// how far a session's node tables must stretch to cover the script.
+    pub fn node_extent(&self) -> usize {
+        self.events.iter().map(|e| e.node as usize + 1).max().unwrap_or(0)
+    }
+
+    /// One past the highest node id that ever joins or recovers (0 if
+    /// none) — the only events that may legitimately introduce ids beyond
+    /// the initial population.
+    pub fn join_extent(&self) -> usize {
+        self.events
+            .iter()
+            .filter(|e| matches!(e.kind, ChurnKind::Join | ChurnKind::Recover))
+            .map(|e| e.node as usize + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Paper §4.6: `joiners` nodes join one-by-one at `interval`, starting at
     /// `start`. Node ids are `first..first+joiners`.
     pub fn staggered_joins(first: NodeId, joiners: u32, start: SimTime, interval: SimTime) -> Self {

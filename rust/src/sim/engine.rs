@@ -1,12 +1,29 @@
 //! The discrete-event queue: monotone virtual clock + deterministic order.
 //!
-//! Sessions (MoDeST, FedAvg, D-SGD) push `(fire_time, event)` pairs and pop
-//! them in timestamp order; ties break by insertion sequence so identical
-//! configs replay identically. The queue is generic over the session's event
-//! type — each protocol defines its own.
+//! Sessions (MoDeST, FedAvg, D-SGD, gossip) push `(fire_time, event)` pairs
+//! and pop them in timestamp order; ties break by insertion sequence so
+//! identical configs replay identically. The queue is generic over the
+//! session's event type — each protocol defines its own.
+//!
+//! Two backends share one API and one observable pop order:
+//!
+//! * [`CalendarEventQueue`] — the default. A calendar queue in the style of
+//!   Brown '88 (and of Corten's allocation-free event loop): a window of
+//!   time-sliced buckets over the near future gives O(1) amortized
+//!   push/pop for the hot path (messages scheduled within a few average
+//!   event-gaps of `now`), while a spill heap holds the far future (probe
+//!   ticks, churn scripts scheduled at bootstrap). The bucket width adapts
+//!   to the observed inter-event gap whenever the window is re-anchored.
+//! * [`HeapEventQueue`] — the original `BinaryHeap` implementation, kept as
+//!   a differential-testing shim (`tests/queue_differential.rs` drives both
+//!   in lockstep) and selectable crate-wide via the `queue-heap` cargo
+//!   feature.
+//!
+//! Both pop strictly by `(time, insertion seq)`, so swapping backends never
+//! changes a session's fingerprint.
 
 use std::cmp::Ordering;
-use std::collections::BinaryHeap;
+use std::collections::{BinaryHeap, VecDeque};
 
 use super::time::SimTime;
 
@@ -41,26 +58,36 @@ impl<E> Ord for ScheduledEvent<E> {
     }
 }
 
-/// Min-heap event queue with a virtual clock.
+/// The default event queue backend.
+#[cfg(not(feature = "queue-heap"))]
+pub type EventQueue<E> = CalendarEventQueue<E>;
+
+/// The default event queue backend (heap shim selected by `queue-heap`).
+#[cfg(feature = "queue-heap")]
+pub type EventQueue<E> = HeapEventQueue<E>;
+
+// --------------------------------------------------------------- heap shim
+
+/// Min-heap event queue with a virtual clock (the pre-calendar backend).
 ///
 /// Invariant: `pop()` never returns an event earlier than the last popped
 /// one (time is monotone), and events at equal times pop in push order.
-pub struct EventQueue<E> {
+pub struct HeapEventQueue<E> {
     heap: BinaryHeap<ScheduledEvent<E>>,
     now: SimTime,
     seq: u64,
     popped: u64,
 }
 
-impl<E> Default for EventQueue<E> {
+impl<E> Default for HeapEventQueue<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<E> EventQueue<E> {
+impl<E> HeapEventQueue<E> {
     pub fn new() -> Self {
-        EventQueue {
+        HeapEventQueue {
             heap: BinaryHeap::new(),
             now: SimTime::ZERO,
             seq: 0,
@@ -117,72 +144,410 @@ impl<E> EventQueue<E> {
     }
 }
 
+// ----------------------------------------------------------- calendar queue
+
+/// Number of near-window buckets (power of two; window = `BUCKETS * width`).
+const BUCKETS: usize = 2048;
+/// Upper bound on the adaptive bucket width (µs) so `BUCKETS * width` stays
+/// far from u64 overflow.
+const MAX_WIDTH_US: u64 = 1 << 40;
+/// Width adaptation targets this many events per bucket on average.
+const TARGET_PER_BUCKET: f64 = 4.0;
+/// A push that leaves a bucket beyond this length triggers a near-window
+/// rebuild with a freshly derived width (recovers from a stale coarse
+/// width after an idle stretch, when `rewindow` cannot run because the
+/// near window never drains).
+const REBALANCE_LEN: usize = 512;
+
+/// Bucketed calendar event queue: O(1) amortized push/pop on the hot path.
+///
+/// Near-future events (within `BUCKETS * width` µs of the window anchor)
+/// live in time-sliced buckets, each kept sorted ascending by
+/// `(time, seq)`; the common append-at-end insert and the pop-front are
+/// both O(1). Far-future events spill into a min-heap and are drained into
+/// buckets when the window re-anchors past them. Pop order is exactly
+/// `(time, insertion seq)` — bit-identical to [`HeapEventQueue`].
+pub struct CalendarEventQueue<E> {
+    /// `buckets[i]` covers `[win_start + i*width, win_start + (i+1)*width)`
+    /// µs, sorted ascending by `(at, seq)` (front = earliest).
+    buckets: Vec<VecDeque<ScheduledEvent<E>>>,
+    /// Bucket width in µs (adapts at each re-anchor).
+    width: u64,
+    /// Absolute µs covered by `buckets[0]`'s left edge.
+    win_start: u64,
+    /// First bucket that may still hold events (monotone within a window).
+    cursor: usize,
+    /// Events currently in buckets.
+    near_len: usize,
+    /// Events at or beyond the window end (min-first via `ScheduledEvent`'s
+    /// reversed `Ord`).
+    far: BinaryHeap<ScheduledEvent<E>>,
+    now: SimTime,
+    seq: u64,
+    popped: u64,
+    /// Exponential moving average of the inter-pop time gap (µs); sizes the
+    /// buckets at the next re-anchor.
+    gap_ema: f64,
+    /// Pushes since the last rebalance — a rebuild is allowed only after
+    /// `near_len` further pushes, keeping its cost amortized O(1)/push even
+    /// for distributions no width can spread (dense same-µs clusters).
+    since_rebalance: u64,
+}
+
+impl<E> Default for CalendarEventQueue<E> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl<E> CalendarEventQueue<E> {
+    pub fn new() -> Self {
+        CalendarEventQueue {
+            buckets: (0..BUCKETS).map(|_| VecDeque::new()).collect(),
+            width: 256,
+            win_start: 0,
+            cursor: 0,
+            near_len: 0,
+            far: BinaryHeap::new(),
+            now: SimTime::ZERO,
+            seq: 0,
+            popped: 0,
+            gap_ema: 256.0,
+            since_rebalance: 0,
+        }
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Number of events processed so far.
+    pub fn events_processed(&self) -> u64 {
+        self.popped
+    }
+
+    pub fn len(&self) -> usize {
+        self.near_len + self.far.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.near_len == 0 && self.far.is_empty()
+    }
+
+    fn win_end(&self) -> u64 {
+        self.win_start.saturating_add(self.width * BUCKETS as u64)
+    }
+
+    /// Insert into the right near bucket; returns the bucket index so
+    /// [`CalendarEventQueue::schedule_at`] can watch for overflow.
+    fn insert_near(&mut self, ev: ScheduledEvent<E>) -> usize {
+        // When the window was just (re-)anchored ahead of `now` (idle jump
+        // to a distant first event), a push may land before `win_start`;
+        // clamp it into the cursor bucket. Every earlier bucket is empty
+        // and every event in or after the cursor bucket has a larger
+        // (at, seq) key — in-bucket sorted insertion keeps the global pop
+        // order exact.
+        let idx = if ev.at.0 <= self.win_start {
+            self.cursor
+        } else {
+            (((ev.at.0 - self.win_start) / self.width) as usize).max(self.cursor)
+        };
+        debug_assert!(idx < BUCKETS, "near insert outside window");
+        let b = &mut self.buckets[idx];
+        let key = (ev.at.0, ev.seq);
+        // Hot path: events arrive mostly in increasing (at, seq) — append.
+        if !b.back().is_some_and(|e| (e.at.0, e.seq) > key) {
+            b.push_back(ev);
+        } else {
+            let pos = b.partition_point(|e| (e.at.0, e.seq) < key);
+            b.insert(pos, ev);
+        }
+        self.near_len += 1;
+        idx
+    }
+
+    /// Rebuild the near window around the events it actually holds, with a
+    /// width derived from their spread. Triggered when one bucket grows
+    /// past [`REBALANCE_LEN`] — a stale over-coarse width after an idle
+    /// stretch (probe-only traffic inflates the gap estimate; `rewindow`
+    /// can only fix it once the near window drains, which a steady-state
+    /// session never does). Pop order is untouched: events are re-placed
+    /// in canonical `(at, seq)` order.
+    fn rebalance(&mut self) {
+        let mut all: Vec<ScheduledEvent<E>> = Vec::with_capacity(self.near_len);
+        for b in &mut self.buckets[self.cursor..] {
+            all.extend(b.drain(..));
+        }
+        all.sort_unstable_by(|a, b| (a.at.0, a.seq).cmp(&(b.at.0, b.seq)));
+        if all.is_empty() {
+            return;
+        }
+        // Width from the 99th-percentile span so one straggler far ahead
+        // (a probe tick past a dense burst) cannot keep the width coarse;
+        // events beyond the resulting window spill to the far heap.
+        let lo = all[0].at.0;
+        let p99 = all[(all.len() * 99) / 100].at.0;
+        let span = (p99 - lo).max(1);
+        let per_event = span as f64 * TARGET_PER_BUCKET / all.len() as f64;
+        self.width = (per_event.ceil() as u64).clamp(1, MAX_WIDTH_US);
+        self.gap_ema = self.gap_ema.min(self.width as f64);
+        self.win_start = (lo / self.width) * self.width;
+        self.cursor = 0;
+        self.near_len = 0;
+        let end = self.win_end();
+        for ev in all {
+            if ev.at.0 < end {
+                // Sorted order → the append fast path, O(1) each.
+                self.insert_near(ev);
+            } else {
+                self.far.push(ev);
+            }
+        }
+        // The new window may END LATER than the old one (a width increase):
+        // any far event now inside it must move near, or a later-timed near
+        // event could pop before it and break the far >= win_end invariant
+        // (and with it, clock monotonicity and heap-equivalence).
+        while let Some(e) = self.far.peek() {
+            if e.at.0 >= end {
+                break;
+            }
+            let ev = self.far.pop().expect("peeked event vanished");
+            self.insert_near(ev);
+        }
+    }
+
+    /// Re-anchor the window at the earliest far event and drain every far
+    /// event that now falls inside it. Only called when the buckets are
+    /// empty, so the cursor restarts at 0.
+    fn rewindow(&mut self) {
+        debug_assert_eq!(self.near_len, 0);
+        self.width = ((self.gap_ema * TARGET_PER_BUCKET).ceil() as u64).clamp(1, MAX_WIDTH_US);
+        let first = self.far.peek().expect("rewindow on an empty far heap").at.0;
+        self.win_start = (first / self.width) * self.width;
+        self.cursor = 0;
+        let end = self.win_end();
+        while let Some(e) = self.far.peek() {
+            if e.at.0 >= end {
+                break;
+            }
+            let ev = self.far.pop().expect("peeked event vanished");
+            self.insert_near(ev);
+        }
+    }
+
+    /// Schedule `event` at absolute virtual time `at`.
+    ///
+    /// Scheduling in the past (before `now`) is clamped to `now`: it models
+    /// a zero-delay effect and keeps the monotonicity invariant.
+    pub fn schedule_at(&mut self, at: SimTime, event: E) {
+        let at = at.max(self.now);
+        let seq = self.seq;
+        self.seq += 1;
+        let ev = ScheduledEvent { at, seq, event };
+        if self.near_len == 0 && self.far.is_empty() {
+            // Empty queue: re-anchor the window directly at this event so a
+            // long idle jump (e.g. the gap to the next probe tick) never
+            // forces a far-heap round trip.
+            self.win_start = (at.0 / self.width) * self.width;
+            self.cursor = 0;
+            self.insert_near(ev);
+            return;
+        }
+        if at.0 < self.win_end() {
+            let idx = self.insert_near(ev);
+            self.since_rebalance += 1;
+            // An over-coarse width piles everything into one bucket and
+            // degrades the sorted insert; rebuild with a fresh width. At
+            // width 1 the events are true ties and no width can help; the
+            // cooldown amortizes the rebuild over the pushes since.
+            if self.buckets[idx].len() > REBALANCE_LEN
+                && self.width > 1
+                && self.since_rebalance >= self.near_len as u64
+            {
+                self.rebalance();
+                self.since_rebalance = 0;
+            }
+        } else {
+            self.far.push(ev);
+        }
+    }
+
+    /// Schedule `event` after a virtual delay from now.
+    pub fn schedule_in(&mut self, delay: SimTime, event: E) {
+        self.schedule_at(self.now + delay, event);
+    }
+
+    /// Pop the earliest event, advancing the clock to its timestamp.
+    pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        if self.near_len == 0 {
+            if self.far.is_empty() {
+                return None;
+            }
+            self.rewindow();
+        }
+        while self.buckets[self.cursor].is_empty() {
+            self.cursor += 1;
+            debug_assert!(self.cursor < BUCKETS, "near events lost");
+        }
+        let ev = self.buckets[self.cursor].pop_front().expect("non-empty bucket");
+        self.near_len -= 1;
+        debug_assert!(ev.at >= self.now, "event queue went back in time");
+        // Clamp the sample so one idle jump (a probe tick after traffic
+        // went quiet) cannot blow the gap estimate — and hence the next
+        // window's bucket width — up by orders of magnitude. A genuinely
+        // coarser workload still converges (≤16x growth per sample).
+        let gap = ((ev.at.0 - self.now.0) as f64).min(self.gap_ema * 16.0);
+        self.gap_ema = 0.9 * self.gap_ema + 0.1 * gap;
+        self.now = ev.at;
+        self.popped += 1;
+        Some((ev.at, ev.event))
+    }
+
+    /// Peek at the next event time without popping.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        if self.near_len > 0 {
+            for b in &self.buckets[self.cursor..] {
+                if let Some(e) = b.front() {
+                    return Some(e.at);
+                }
+            }
+        }
+        self.far.peek().map(|e| e.at)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Run the shared queue contract against both backends.
+    macro_rules! queue_contract {
+        ($mod:ident, $q:ident) => {
+            mod $mod {
+                use crate::sim::engine::$q;
+                use crate::sim::time::SimTime;
+
+                #[test]
+                fn pops_in_time_order() {
+                    let mut q = $q::new();
+                    q.schedule_at(SimTime::from_millis(30), "c");
+                    q.schedule_at(SimTime::from_millis(10), "a");
+                    q.schedule_at(SimTime::from_millis(20), "b");
+                    let order: Vec<&str> =
+                        std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+                    assert_eq!(order, vec!["a", "b", "c"]);
+                }
+
+                #[test]
+                fn ties_break_by_insertion_order() {
+                    let mut q = $q::new();
+                    let t = SimTime::from_millis(5);
+                    for i in 0..10 {
+                        q.schedule_at(t, i);
+                    }
+                    let order: Vec<i32> =
+                        std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+                    assert_eq!(order, (0..10).collect::<Vec<_>>());
+                }
+
+                #[test]
+                fn clock_advances_monotonically() {
+                    let mut q = $q::new();
+                    q.schedule_at(SimTime::from_millis(10), ());
+                    q.schedule_at(SimTime::from_millis(5), ());
+                    let mut last = SimTime::ZERO;
+                    while let Some((t, _)) = q.pop() {
+                        assert!(t >= last);
+                        last = t;
+                        assert_eq!(q.now(), t);
+                    }
+                }
+
+                #[test]
+                fn past_scheduling_clamps_to_now() {
+                    let mut q = $q::new();
+                    q.schedule_at(SimTime::from_millis(10), "first");
+                    q.pop();
+                    q.schedule_at(SimTime::from_millis(1), "late");
+                    let (t, e) = q.pop().unwrap();
+                    assert_eq!(e, "late");
+                    assert_eq!(t, SimTime::from_millis(10));
+                }
+
+                #[test]
+                fn schedule_in_is_relative() {
+                    let mut q = $q::new();
+                    q.schedule_at(SimTime::from_millis(100), "base");
+                    q.pop();
+                    q.schedule_in(SimTime::from_millis(50), "later");
+                    let (t, _) = q.pop().unwrap();
+                    assert_eq!(t, SimTime::from_millis(150));
+                }
+
+                #[test]
+                fn counts_processed_events() {
+                    let mut q = $q::new();
+                    for i in 0..5u64 {
+                        q.schedule_at(SimTime::from_micros(i), i);
+                    }
+                    while q.pop().is_some() {}
+                    assert_eq!(q.events_processed(), 5);
+                }
+
+                #[test]
+                fn peek_matches_next_pop() {
+                    let mut q = $q::new();
+                    assert_eq!(q.peek_time(), None);
+                    q.schedule_at(SimTime::from_millis(7), 1);
+                    q.schedule_at(SimTime::from_millis(3), 2);
+                    assert_eq!(q.peek_time(), Some(SimTime::from_millis(3)));
+                    let (t, _) = q.pop().unwrap();
+                    assert_eq!(t, SimTime::from_millis(3));
+                }
+
+                #[test]
+                fn len_tracks_contents() {
+                    let mut q = $q::new();
+                    assert!(q.is_empty());
+                    for i in 0..100u64 {
+                        q.schedule_at(SimTime::from_micros(i * 37 % 50), i);
+                    }
+                    assert_eq!(q.len(), 100);
+                    q.pop();
+                    assert_eq!(q.len(), 99);
+                }
+            }
+        };
+    }
+
+    queue_contract!(heap_backend, HeapEventQueue);
+    queue_contract!(calendar_backend, CalendarEventQueue);
+
     #[test]
-    fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule_at(SimTime::from_millis(30), "c");
-        q.schedule_at(SimTime::from_millis(10), "a");
-        q.schedule_at(SimTime::from_millis(20), "b");
-        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, vec!["a", "b", "c"]);
+    fn calendar_survives_window_hops_and_reanchors() {
+        let mut q = CalendarEventQueue::new();
+        // Far beyond any initial window: forces far-heap spill + rewindow.
+        q.schedule_at(SimTime::from_secs_f64(3600.0), "late");
+        q.schedule_at(SimTime::from_millis(1), "early");
+        assert_eq!(q.pop().unwrap().1, "early");
+        // Idle jump: queue drains then re-anchors on the distant event.
+        assert_eq!(q.pop().unwrap().1, "late");
+        assert_eq!(q.now(), SimTime::from_secs_f64(3600.0));
+        // Post-jump scheduling still works near the new now.
+        q.schedule_in(SimTime::from_millis(2), "after");
+        assert_eq!(q.pop().unwrap().1, "after");
+        assert!(q.pop().is_none());
     }
 
     #[test]
-    fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        let t = SimTime::from_millis(5);
-        for i in 0..10 {
+    fn calendar_tie_burst_in_one_bucket_pops_in_seq_order() {
+        let mut q = CalendarEventQueue::new();
+        let t = SimTime::from_micros(42);
+        for i in 0..1000u64 {
             q.schedule_at(t, i);
         }
-        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
-        assert_eq!(order, (0..10).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn clock_advances_monotonically() {
-        let mut q = EventQueue::new();
-        q.schedule_at(SimTime::from_millis(10), ());
-        q.schedule_at(SimTime::from_millis(5), ());
-        let mut last = SimTime::ZERO;
-        while let Some((t, _)) = q.pop() {
-            assert!(t >= last);
-            last = t;
-            assert_eq!(q.now(), t);
-        }
-    }
-
-    #[test]
-    fn past_scheduling_clamps_to_now() {
-        let mut q = EventQueue::new();
-        q.schedule_at(SimTime::from_millis(10), "first");
-        q.pop();
-        q.schedule_at(SimTime::from_millis(1), "late");
-        let (t, e) = q.pop().unwrap();
-        assert_eq!(e, "late");
-        assert_eq!(t, SimTime::from_millis(10));
-    }
-
-    #[test]
-    fn schedule_in_is_relative() {
-        let mut q = EventQueue::new();
-        q.schedule_at(SimTime::from_millis(100), "base");
-        q.pop();
-        q.schedule_in(SimTime::from_millis(50), "later");
-        let (t, _) = q.pop().unwrap();
-        assert_eq!(t, SimTime::from_millis(150));
-    }
-
-    #[test]
-    fn counts_processed_events() {
-        let mut q = EventQueue::new();
-        for i in 0..5u64 {
-            q.schedule_at(SimTime::from_micros(i), i);
-        }
-        while q.pop().is_some() {}
-        assert_eq!(q.events_processed(), 5);
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop().map(|(_, e)| e)).collect();
+        assert_eq!(order, (0..1000).collect::<Vec<_>>());
     }
 }

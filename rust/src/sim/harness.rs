@@ -86,6 +86,7 @@ pub struct Ctx<'a, M> {
     pub rng: &'a mut SimRng,
     pub metrics: &'a mut SessionMetrics,
     status: &'a [Status],
+    alive: usize,
     max_rounds: Round,
     done: &'a mut bool,
 }
@@ -105,9 +106,26 @@ impl<M> Ctx<'_, M> {
         self.status.len()
     }
 
+    /// Number of currently alive nodes (maintained by the harness, O(1)).
+    pub fn alive_count(&self) -> usize {
+        self.alive
+    }
+
     /// All alive nodes except `of` (bootstrap/advertisement peer sets).
+    ///
+    /// Fast path for the common churn-free large-population case: when the
+    /// whole table is alive the peer set is just "every id but `of`", so
+    /// the 10k-node gossip fan-out skips the per-call liveness scan. Both
+    /// paths produce the identical ascending-id vector.
     pub fn alive_peers(&self, of: NodeId) -> Vec<NodeId> {
-        (0..self.status.len() as NodeId)
+        let n = self.status.len();
+        if self.alive == n && (of as usize) < n {
+            let mut peers = Vec::with_capacity(n - 1);
+            peers.extend(0..of);
+            peers.extend(of + 1..n as NodeId);
+            return peers;
+        }
+        (0..n as NodeId)
             .filter(|&j| j != of && self.status[j as usize] == Status::Alive)
             .collect()
     }
@@ -215,6 +233,7 @@ macro_rules! harness_ctx {
             rng: &mut $h.rng,
             metrics: &mut $h.metrics,
             status: &$h.status,
+            alive: $h.alive,
             max_rounds: $h.cfg.max_rounds,
             done: &mut $h.done,
         }
@@ -229,6 +248,8 @@ pub struct SimHarness<P: Protocol> {
     queue: EventQueue<HarnessEvent<P::Msg>>,
     fabric: NetworkFabric,
     status: Vec<Status>,
+    /// Count of `Status::Alive` entries (kept in sync by churn handling).
+    alive: usize,
     task: Box<dyn Task>,
     compute: ComputeModel,
     churn: ChurnSchedule,
@@ -264,6 +285,7 @@ impl<P: Protocol> SimHarness<P> {
             queue: EventQueue::new(),
             fabric,
             status,
+            alive: initial_alive,
             task,
             compute,
             churn,
@@ -296,6 +318,9 @@ impl<P: Protocol> SimHarness<P> {
         }
         match ev.kind {
             ChurnKind::Join | ChurnKind::Recover => {
+                if self.status[i] != Status::Alive {
+                    self.alive += 1;
+                }
                 self.status[i] = Status::Alive;
                 self.fabric.ensure_nodes(i + 1);
                 let mut ctx = harness_ctx!(self);
@@ -309,8 +334,12 @@ impl<P: Protocol> SimHarness<P> {
                 let mut ctx = harness_ctx!(self);
                 self.protocol.on_churn(&mut ctx, ev);
                 self.status[i] = Status::Dead;
+                self.alive -= 1;
             }
             ChurnKind::Crash => {
+                if self.status[i] == Status::Alive {
+                    self.alive -= 1;
+                }
                 self.status[i] = Status::Dead;
                 let mut ctx = harness_ctx!(self);
                 self.protocol.on_churn(&mut ctx, ev);

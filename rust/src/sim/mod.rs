@@ -14,7 +14,7 @@ pub mod rng;
 pub mod time;
 
 pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
-pub use engine::{EventQueue, ScheduledEvent};
+pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent};
 pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness, Status};
 pub use rng::SimRng;
 pub use time::SimTime;

@@ -146,6 +146,38 @@ impl Bencher {
         &self.results
     }
 
+    /// Serialize every recorded result as machine-readable JSON so future
+    /// PRs can track the trajectory (`BENCH_hotpaths.json` et al.).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"group\": \"{}\",\n", self.group));
+        out.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iterations\": {}, \"mean_ns\": {}, \
+                 \"p50_ns\": {}, \"p95_ns\": {}, \"per_sec\": {:.3}}}{}\n",
+                r.name,
+                r.iterations,
+                r.mean.as_nanos(),
+                r.p50.as_nanos(),
+                r.p95.as_nanos(),
+                r.per_sec(),
+                if i + 1 == self.results.len() { "" } else { "," }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON summary to `path` (best-effort: a read-only CI
+    /// checkout must not fail the bench run itself).
+    pub fn write_json(&self, path: &str) {
+        match std::fs::write(path, self.to_json()) {
+            Ok(()) => println!("{}: results written to {path}", self.group),
+            Err(e) => eprintln!("{}: could not write {path}: {e}", self.group),
+        }
+    }
+
     /// Print the summary footer.
     pub fn finish(self) {
         println!(
@@ -185,6 +217,25 @@ mod tests {
         let r = b.bench_once("single", || std::thread::sleep(Duration::from_millis(2)));
         assert_eq!(r.iterations, 1);
         assert!(r.mean >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn json_lists_every_result() {
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = Bencher::new("jtest");
+        b.bench("one", || {
+            black_box(1 + 1);
+        });
+        b.bench("two", || {
+            black_box(2 + 2);
+        });
+        let j = b.to_json();
+        assert!(j.contains("\"group\": \"jtest\""));
+        assert!(j.contains("\"name\": \"one\""));
+        assert!(j.contains("\"name\": \"two\""));
+        assert!(j.contains("\"mean_ns\""));
+        // Exactly one trailing entry without a comma.
+        assert_eq!(j.matches("},").count(), 1);
     }
 
     #[test]

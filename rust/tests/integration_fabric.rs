@@ -43,7 +43,7 @@ fn dsgd_session(n: usize, bw: &BandwidthConfig) -> DsgdSession {
     };
     let task = MockTask::new(n, 16, 0.5, SEED);
     let compute = ComputeModel::uniform(n, 0.05);
-    DsgdSession::new(cfg, n, Box::new(task), compute, fabric_with(n, bw))
+    DsgdSession::new(cfg, n, Box::new(task), compute, fabric_with(n, bw), ChurnSchedule::empty())
 }
 
 /// Acceptance: a fast uniform fabric vs one with 10x-thinner uplinks —

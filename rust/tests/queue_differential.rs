@@ -1,0 +1,227 @@
+//! Differential tests pinning the calendar event queue to the BinaryHeap
+//! shim: identical pop order — `(time, insertion seq)` — under randomized
+//! schedules, including past-clamping, tie bursts, window-crossing jumps,
+//! and interleaved push/pop (the live-session access pattern). Also
+//! session-level fingerprint equivalence: the Arc-payload refactor and the
+//! queue swap must leave same-seed `SessionMetrics` bit-identical.
+
+use modest_dl::metrics::SessionMetrics;
+use modest_dl::net::TrafficLedger;
+use modest_dl::scenario::{run_scenario, ProtocolRegistry, ScenarioSpec};
+use modest_dl::sim::{CalendarEventQueue, ChurnSchedule, HeapEventQueue, SimRng, SimTime};
+
+/// Drive both backends through one interleaved push/pop script and assert
+/// every observable matches step-by-step.
+fn differential(seed: u64, ops: usize, spread_us: u64, tie_every: u64) {
+    let mut rng = SimRng::new(seed);
+    let mut cal = CalendarEventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    let mut label = 0u64;
+    for step in 0..ops {
+        let roll = rng.gen_range(100);
+        if roll < 60 {
+            // Push: mostly near-future, sometimes far jumps, sometimes the
+            // past (exercises the clamp), sometimes exact-tie bursts.
+            let at = if tie_every > 0 && (step as u64) % tie_every == 0 {
+                cal.now() + SimTime::from_micros(17)
+            } else if roll < 5 {
+                // "In the past": clamped to now by both backends.
+                SimTime::from_micros(cal.now().0 / 2)
+            } else if roll < 10 {
+                // Far beyond any near window.
+                cal.now() + SimTime::from_micros(spread_us * 4096)
+            } else {
+                cal.now() + SimTime::from_micros(rng.gen_range(spread_us.max(1)))
+            };
+            cal.schedule_at(at, label);
+            heap.schedule_at(at, label);
+            label += 1;
+        } else {
+            let a = cal.pop();
+            let b = heap.pop();
+            match (a, b) {
+                (None, None) => {}
+                (Some((ta, va)), Some((tb, vb))) => {
+                    assert_eq!(ta, tb, "time diverged at step {step} (seed {seed})");
+                    assert_eq!(va, vb, "order diverged at step {step} (seed {seed})");
+                }
+                (a, b) => panic!("emptiness diverged at step {step}: {a:?} vs {b:?}"),
+            }
+        }
+        assert_eq!(cal.len(), heap.len(), "len diverged at step {step}");
+        assert_eq!(cal.now(), heap.now(), "clock diverged at step {step}");
+    }
+    // Drain both completely: the tails must agree too.
+    loop {
+        match (cal.pop(), heap.pop()) {
+            (None, None) => break,
+            (Some((ta, va)), Some((tb, vb))) => {
+                assert_eq!((ta, va), (tb, vb), "tail diverged (seed {seed})");
+            }
+            (a, b) => panic!("tail emptiness diverged: {a:?} vs {b:?}"),
+        }
+    }
+    assert_eq!(cal.events_processed(), heap.events_processed());
+}
+
+#[test]
+fn calendar_matches_heap_on_dense_microsecond_schedules() {
+    differential(1, 20_000, 50, 0);
+}
+
+#[test]
+fn calendar_matches_heap_on_sparse_wan_scale_schedules() {
+    // Millisecond-to-second gaps: crosses many bucket windows.
+    differential(2, 20_000, 2_000_000, 0);
+}
+
+#[test]
+fn calendar_matches_heap_under_tie_bursts_and_past_clamping() {
+    differential(3, 20_000, 10_000, 3);
+}
+
+#[test]
+fn calendar_matches_heap_across_many_seeds() {
+    for seed in 10..30 {
+        differential(seed, 3_000, 1 + seed * 997, if seed % 3 == 0 { 5 } else { 0 });
+    }
+}
+
+#[test]
+fn calendar_matches_heap_on_dense_traffic_after_an_idle_stretch() {
+    // Probe-only 10s gaps inflate the internal gap estimate; dense µs-scale
+    // traffic then returns (a churn recovery). The calendar queue must both
+    // stay order-identical to the heap AND re-derive a fine bucket width
+    // (the rebalance path) instead of degrading to one giant bucket.
+    let mut cal = CalendarEventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    for i in 0..20u64 {
+        let t = SimTime::from_micros((i + 1) * 10_000_000);
+        cal.schedule_at(t, i);
+        heap.schedule_at(t, i);
+    }
+    for _ in 0..19 {
+        assert_eq!(cal.pop(), heap.pop());
+    }
+    let mut rng = SimRng::new(3);
+    for i in 0..5_000u64 {
+        let at = cal.now() + SimTime::from_micros(rng.gen_range(2_000));
+        cal.schedule_at(at, 1_000 + i);
+        heap.schedule_at(at, 1_000 + i);
+    }
+    for i in 0..100_000u64 {
+        let a = cal.pop().expect("cal under-filled");
+        let b = heap.pop().expect("heap under-filled");
+        assert_eq!(a, b, "diverged at hold iteration {i}");
+        let at = a.0 + SimTime::from_micros(1 + rng.gen_range(2_000));
+        cal.schedule_at(at, 10_000 + i);
+        heap.schedule_at(at, 10_000 + i);
+    }
+    loop {
+        match (cal.pop(), heap.pop()) {
+            (None, None) => break,
+            (a, b) => assert_eq!(a, b),
+        }
+    }
+}
+
+#[test]
+fn calendar_matches_heap_when_a_rebalance_grows_the_window_over_far_events() {
+    // A far-heap event sits just past the initial window; a burst then
+    // forces a rebalance whose new width can ENLARGE the window past that
+    // event. The rebalance must pull it into the buckets, or a later near
+    // push would pop ahead of it.
+    let mut cal = CalendarEventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    let mut label = 0u64;
+    cal.schedule_at(SimTime::from_micros(600_000), label);
+    heap.schedule_at(SimTime::from_micros(600_000), label);
+    label += 1;
+    let mut rng = SimRng::new(11);
+    for _ in 0..1_500 {
+        let at = SimTime::from_micros(rng.gen_range(520_000));
+        cal.schedule_at(at, label);
+        heap.schedule_at(at, label);
+        label += 1;
+    }
+    for _ in 0..10 {
+        assert_eq!(cal.pop(), heap.pop());
+    }
+    for _ in 0..600 {
+        let at = cal.now() + SimTime::from_micros(5);
+        cal.schedule_at(at, label);
+        heap.schedule_at(at, label);
+        label += 1;
+    }
+    cal.schedule_at(SimTime::from_micros(700_000), label);
+    heap.schedule_at(SimTime::from_micros(700_000), label);
+    loop {
+        match (cal.pop(), heap.pop()) {
+            (None, None) => break,
+            (a, b) => assert_eq!(a, b),
+        }
+    }
+}
+
+#[test]
+fn batch_push_then_drain_is_fully_sorted() {
+    // The harness bootstrap pattern: churn script + every probe tick pushed
+    // up front, then the session drains. The calendar queue must hand back
+    // a perfect (time, seq) sort through all its window re-anchors.
+    let mut rng = SimRng::new(77);
+    let mut cal = CalendarEventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    for i in 0..50_000u64 {
+        let at = SimTime::from_micros(rng.gen_range(3_600_000_000));
+        cal.schedule_at(at, i);
+        heap.schedule_at(at, i);
+    }
+    let a: Vec<(SimTime, u64)> = std::iter::from_fn(|| cal.pop()).collect();
+    let b: Vec<(SimTime, u64)> = std::iter::from_fn(|| heap.pop()).collect();
+    assert_eq!(a.len(), 50_000);
+    assert_eq!(a, b);
+}
+
+// ------------------------------------------------------------ fingerprints
+
+fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
+    (
+        m.final_round,
+        m.events,
+        m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect(),
+        t.total(),
+    )
+}
+
+fn smoke_spec(protocol: &str) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::new("mock", protocol);
+    spec.population.nodes = 14;
+    spec.protocol.s = 4;
+    spec.protocol.a = 2;
+    spec.run.max_time_s = 150.0;
+    spec.run.max_rounds = 18;
+    spec.run.eval_interval_s = 10.0;
+    spec.run.seed = 4242;
+    spec
+}
+
+/// Same-seed fingerprint equivalence across the zero-copy refactor: every
+/// protocol's smoke scenario must replay bit-identically run-over-run (the
+/// Arc payload sharing and the calendar queue may not perturb a single
+/// event, metric bit, or ledger byte). Run with
+/// `--features queue-heap` to cross-check the same fingerprints on the
+/// heap backend — CI exercises both.
+#[test]
+fn every_protocol_smoke_fingerprint_is_reproducible() {
+    for name in ProtocolRegistry::builtins().names() {
+        let spec = smoke_spec(name);
+        let (m1, t1) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        let (m2, t2) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        assert!(m1.events > 0 && t1.total() > 0, "{name} did nothing");
+        assert_eq!(
+            fingerprint(&m1, &t1),
+            fingerprint(&m2, &t2),
+            "{name} same-seed fingerprint diverged"
+        );
+    }
+}
