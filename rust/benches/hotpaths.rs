@@ -7,6 +7,8 @@
 //! * zero-copy fan-out — Arc payload sharing vs deep copies, and a 10k-way
 //!   broadcast through the contended fabric,
 //! * the sampler's per-round hash+sort candidate ordering,
+//! * peer sampling — the frozen V1 full shuffle vs the O(k) V2 partial
+//!   shuffle at n ∈ {1k, 10k, 100k}, k = 10 (the 100k-node fast path),
 //! * registry/view merge, and view wire-size computation.
 //!
 //! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
@@ -238,6 +240,21 @@ fn main() {
         b.bench(&format!("sampler/candidate_order/n={n}"), || {
             round += 1;
             black_box(candidate_order(round, black_box(&cands)));
+        });
+    }
+
+    // ---- peer sampling: the V1 full shuffle vs the V2 partial shuffle at
+    // gossip fan-out shape (k=10). V1 is O(n) — materialize + shuffle the
+    // whole population; V2 is O(k) and must stay flat across n (the
+    // 100k-node fast path; rows are guarded by the CI bench-diff gate).
+    for n in [1_000usize, 10_000, 100_000] {
+        let mut r1 = SimRng::new(0x5a);
+        b.bench(&format!("sample/v1-shuffle/n={n},k=10"), || {
+            black_box(r1.sample_indices(black_box(n), 10));
+        });
+        let mut r2 = SimRng::new(0x5a);
+        b.bench(&format!("sample/v2-partial/n={n},k=10"), || {
+            black_box(r2.sample_indices_v2(black_box(n), 10));
         });
     }
 

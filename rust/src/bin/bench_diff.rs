@@ -1,0 +1,83 @@
+//! `bench-diff` — the CI bench-trend gate.
+//!
+//! ```text
+//! bench-diff BASE.json NEW.json [--threshold 2.0]
+//! ```
+//!
+//! Compares per-bench medians (p50) between two `BENCH_hotpaths.json`
+//! snapshots and exits non-zero when a guarded hot path — DES queue
+//! push/pop (`des/queue/*`), fan-out (`fanout/*`), or peer sampling
+//! (`sample/*`) — regressed by more than the threshold. Rows missing from
+//! either snapshot are skipped (benches come and go across PRs), so an
+//! empty baseline passes with a warning: CI falls back to the committed
+//! `rust/BENCH_baseline.json` seed when the base commit has no artifact.
+
+use anyhow::{bail, Context, Result};
+
+use modest_dl::util::trend::{compare_trend, parse_snapshot, regressions};
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut paths: Vec<&str> = Vec::new();
+    let mut threshold = 2.0f64;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--threshold" => {
+                let v = it.next().context("--threshold needs a value")?;
+                threshold = v.parse().with_context(|| format!("--threshold {v:?}"))?;
+            }
+            other if other.starts_with("--") => bail!("unknown flag {other}"),
+            other => paths.push(other),
+        }
+    }
+    if paths.len() != 2 {
+        bail!("usage: bench-diff BASE.json NEW.json [--threshold 2.0]");
+    }
+    let (base_path, new_path) = (paths[0], paths[1]);
+    anyhow::ensure!(threshold > 1.0, "threshold must be > 1.0, got {threshold}");
+
+    let base = parse_snapshot(
+        &std::fs::read_to_string(base_path).with_context(|| base_path.to_string())?,
+    )?;
+    let new = parse_snapshot(
+        &std::fs::read_to_string(new_path).with_context(|| new_path.to_string())?,
+    )?;
+
+    let diffs = compare_trend(&base, &new);
+    if diffs.is_empty() {
+        println!(
+            "bench-diff: no comparable benches between {base_path} ({}) and \
+             {new_path} ({}) — nothing to gate",
+            base.len(),
+            new.len()
+        );
+        return Ok(());
+    }
+
+    println!("bench-diff: {base_path} -> {new_path} (fail guarded rows > {threshold}x)");
+    for d in &diffs {
+        println!(
+            "  {:<44} {:>12} -> {:>12} ns  {:>6.2}x  {}",
+            d.name,
+            d.base_ns,
+            d.new_ns,
+            d.ratio,
+            if d.guarded { "guarded" } else { "info" }
+        );
+    }
+
+    let bad = regressions(&diffs, threshold);
+    if bad.is_empty() {
+        println!("bench-diff: OK — no guarded regression above {threshold}x");
+        return Ok(());
+    }
+    eprintln!("bench-diff: FAIL — guarded hot paths regressed >{threshold}x:");
+    for d in &bad {
+        eprintln!(
+            "  {} : {} -> {} ns ({:.2}x)",
+            d.name, d.base_ns, d.new_ns, d.ratio
+        );
+    }
+    std::process::exit(1);
+}

@@ -7,7 +7,7 @@
 //! runs — the model still has the full 610-user embedding table because
 //! the AOT'd parameter shapes are fixed).
 
-use crate::sim::SimRng;
+use crate::sim::{SamplingVersion, SimRng};
 
 /// One (user, item, rating) triple.
 pub type RatingRow = (u32, u32, f32);
@@ -21,6 +21,10 @@ pub struct RatingsParams {
     pub ratings_per_user: usize,
     pub test_per_user: usize,
     pub noise: f32,
+    /// Which sampling stream draws each user's rated-item subset. `v1`
+    /// full-shuffles the whole 9.7k-item catalogue per user (the frozen
+    /// historical stream); `v2` is O(ratings_per_user) per user.
+    pub sampling: SamplingVersion,
 }
 
 impl Default for RatingsParams {
@@ -33,6 +37,7 @@ impl Default for RatingsParams {
             ratings_per_user: 140, // ~100k ratings over 610 users + test
             test_per_user: 25,
             noise: 0.3,
+            sampling: SamplingVersion::default(),
         }
     }
 }
@@ -70,7 +75,8 @@ impl RatingsData {
         for u in 0..p.users {
             let node = u % p.nodes;
             let total = p.ratings_per_user + p.test_per_user;
-            let items = rng.sample_indices(p.items, total.min(p.items));
+            let items =
+                rng.sample_indices_versioned(p.sampling, p.items, total.min(p.items));
             for (j, &i) in items.iter().enumerate() {
                 let r = rate(u, i, rng);
                 if j < p.ratings_per_user {
@@ -163,5 +169,34 @@ mod tests {
         // noise floor, so MF training has signal to extract.
         let d = gen();
         assert!(d.global_mean_mse() > 0.3, "{}", d.global_mean_mse());
+    }
+
+    #[test]
+    fn v2_sampling_is_deterministic_with_identical_shape() {
+        let mk = |sampling| {
+            let mut rng = SimRng::new(2);
+            RatingsData::generate(
+                &RatingsParams {
+                    users: 60,
+                    items: 500,
+                    nodes: 30,
+                    ratings_per_user: 40,
+                    test_per_user: 10,
+                    sampling,
+                    ..Default::default()
+                },
+                &mut rng,
+            )
+        };
+        let a = mk(SamplingVersion::V2Partial);
+        let b = mk(SamplingVersion::V2Partial);
+        assert_eq!(a.train, b.train);
+        assert_eq!(a.test, b.test);
+        assert_eq!(a.shards, b.shards);
+        // Same dataset shape as V1 — only the drawn item subsets differ.
+        let v1 = mk(SamplingVersion::V1Shuffle);
+        assert_eq!(v1.train.len(), a.train.len());
+        assert_eq!(v1.test.len(), a.test.len());
+        assert!(a.train.iter().all(|&(u, i, _)| u < 60 && i < 500));
     }
 }

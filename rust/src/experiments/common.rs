@@ -9,7 +9,7 @@ use crate::metrics::SessionMetrics;
 use crate::net::TrafficLedger;
 use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolRegistry, ScenarioSpec};
-use crate::sim::ChurnSchedule;
+use crate::sim::{ChurnSchedule, SamplingVersion};
 
 /// Common experiment options (from the CLI).
 #[derive(Debug, Clone)]
@@ -29,6 +29,8 @@ pub struct ExpOptions {
     pub out_dir: PathBuf,
     /// Use the mock task instead of XLA (fast smoke runs).
     pub mock: bool,
+    /// Peer-sampling stream version for every session of the experiment.
+    pub sampling: SamplingVersion,
 }
 
 impl Default for ExpOptions {
@@ -43,6 +45,7 @@ impl Default for ExpOptions {
             artifacts_dir: "artifacts".into(),
             out_dir: PathBuf::from("results"),
             mock: false,
+            sampling: SamplingVersion::default(),
         }
     }
 }
@@ -59,6 +62,7 @@ impl ExpOptions {
         spec.run.max_time_s = self.max_time_s;
         spec.run.max_rounds = self.max_rounds;
         spec.run.seed = self.seed;
+        spec.run.sampling = self.sampling;
         spec
     }
 

@@ -25,7 +25,7 @@ use modest_dl::experiments::{self, ExpOptions};
 use modest_dl::net::traffic::fmt_bytes;
 use modest_dl::runtime::XlaRuntime;
 use modest_dl::scenario::{ProtocolRegistry, ScenarioSpec};
-use modest_dl::sim::ChurnSchedule;
+use modest_dl::sim::{ChurnSchedule, SamplingVersion};
 use modest_dl::util::cli::Args;
 
 const USAGE: &str = "\
@@ -52,6 +52,8 @@ COMMON FLAGS:
   --seed N         session seed (default 42)
   --bw-mbps F      median per-node capacity in Mbit/s (default 50)
   --bw-sigma F     capacity heterogeneity, lognormal sigma (default 0)
+  --sampling V     peer-sampling stream: v1 (frozen full shuffle, default)
+                   or v2 (O(k) partial shuffle for 100k-node sessions)
   --artifacts DIR  AOT artifact dir (default artifacts)
   --out DIR        CSV output dir (default results)
   --mock           use the mock task (no artifacts needed)
@@ -68,6 +70,10 @@ fn common(args: &Args) -> Result<ExpOptions> {
         artifacts_dir: args.get_str("artifacts", "artifacts"),
         out_dir: PathBuf::from(args.get_str("out", "results")),
         mock: args.get_bool("mock"),
+        sampling: match args.get_opt("sampling") {
+            Some(v) => SamplingVersion::parse(&v)?,
+            None => SamplingVersion::default(),
+        },
     })
 }
 
@@ -153,6 +159,9 @@ fn cmd_run(args: &Args) -> Result<()> {
     if nodes > 0 {
         spec.population.nodes = nodes;
     }
+    if let Some(v) = args.get_opt("sampling") {
+        spec.run.sampling = SamplingVersion::parse(&v)?;
+    }
     args.reject_unknown()?;
 
     let registry = ProtocolRegistry::builtins();
@@ -164,13 +173,14 @@ fn cmd_run(args: &Args) -> Result<()> {
     };
     let n = spec.resolved_nodes()?;
     println!(
-        "running {} with {} on {} nodes (s={}, a={}, sf={})",
+        "running {} with {} on {} nodes (s={}, a={}, sf={}, sampling={})",
         spec.workload.dataset,
         meta.label,
         n,
         spec.resolved_s()?,
         spec.resolved_a()?,
-        spec.protocol.sf
+        spec.protocol.sf,
+        spec.run.sampling.as_str()
     );
     let session = registry.build(&spec, runtime.as_ref(), ChurnSchedule::empty())?;
     let (metrics, traffic) = session.run();

@@ -22,6 +22,7 @@ pub fn modest_config(spec: &ScenarioSpec) -> Result<ModestConfig> {
         eval_interval: SimTime::from_secs_f64(spec.run.eval_interval_s),
         target_metric: spec.run.target_metric,
         seed: spec.run.seed,
+        sampling: spec.run.sampling,
         fedavg_server: None,
     })
 }

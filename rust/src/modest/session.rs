@@ -29,8 +29,8 @@ use crate::learning::{ComputeModel, Model, Task};
 use crate::metrics::{JoinTrace, SessionMetrics};
 use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
 use crate::sim::{
-    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol, SimHarness,
-    SimRng, SimTime,
+    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol,
+    SamplingVersion, SimHarness, SimRng, SimTime,
 };
 use crate::{NodeId, Round};
 
@@ -62,6 +62,10 @@ pub struct ModestConfig {
     pub target_metric: Option<f64>,
     /// RNG seed for everything in the session.
     pub seed: u64,
+    /// Peer-sampling stream version for the uniform-draw sites (bootstrap
+    /// advertisement sets, auto-rejoin, the FedAvg participant draw) —
+    /// Alg. 1's ping-based candidate walk is deterministic and unaffected.
+    pub sampling: SamplingVersion,
     /// FedAvg emulation (§4.3): fix this node as the only aggregator, skip
     /// sampling pings toward it; the session grants it unlimited fabric
     /// capacity.
@@ -81,6 +85,7 @@ impl Default for ModestConfig {
             eval_interval: SimTime::from_secs_f64(20.0),
             target_metric: None,
             seed: 42,
+            sampling: SamplingVersion::default(),
             fedavg_server: None,
         }
     }
@@ -95,6 +100,7 @@ impl ModestConfig {
             eval_interval: self.eval_interval,
             target_metric: self.target_metric,
             seed: self.seed,
+            sampling: self.sampling,
         }
     }
 }
@@ -169,15 +175,33 @@ impl ModestProtocol {
             let targets: Vec<NodeId> = match purpose {
                 Purpose::Aggregators => vec![server],
                 Purpose::Participants => {
-                    let alive: Vec<NodeId> = (0..self.nodes.len() as NodeId)
-                        .filter(|&j| ctx.is_alive(j) && Some(j) != self.cfg.fedavg_server)
-                        .collect();
-                    let k = need.min(alive.len());
                     let mut rng = SimRng::new(self.local_seed(node, round) ^ 0xfeda);
-                    rng.sample_indices(alive.len(), k)
+                    let n_all = self.nodes.len();
+                    // All-alive fast path: the candidate set is every id
+                    // but the server, so `sample_indices_excluding` maps
+                    // picks straight to node ids — no O(n) candidate list
+                    // per round, identical RNG stream to the materialized
+                    // list below.
+                    if ctx.alive_count() == n_all && (server as usize) < n_all {
+                        rng.sample_indices_excluding(
+                            ctx.sampling(),
+                            n_all,
+                            server as usize,
+                            need,
+                        )
                         .into_iter()
-                        .map(|i| alive[i])
+                        .map(|i| i as NodeId)
                         .collect()
+                    } else {
+                        let alive: Vec<NodeId> = (0..n_all as NodeId)
+                            .filter(|&j| ctx.is_alive(j) && j != server)
+                            .collect();
+                        let k = need.min(alive.len());
+                        rng.sample_indices_versioned(ctx.sampling(), alive.len(), k)
+                            .into_iter()
+                            .map(|i| alive[i])
+                            .collect()
+                    }
                 }
             };
             self.dispatch_payload(ctx, node, round, purpose, payload, &targets);
@@ -365,11 +389,11 @@ impl ModestProtocol {
                 n.last_active = now; // throttle: try again after another horizon
                 c
             };
-            let peers = ctx.alive_peers(node);
-            let k = self.cfg.s.min(peers.len());
-            let picks = ctx.rng.sample_indices(peers.len(), k);
-            for p in picks {
-                self.send(ctx, node, peers[p], Msg::Joined { node, counter: c });
+            // `Ctx::sample_peers` = alive_peers + versioned sample, with
+            // the all-alive fast path (no peer-list materialization);
+            // RNG-stream identical to the pre-helper code under v1.
+            for p in ctx.sample_peers(node, self.cfg.s) {
+                self.send(ctx, node, p, Msg::Joined { node, counter: c });
             }
         }
     }
@@ -474,11 +498,8 @@ impl Protocol for ModestProtocol {
                     c
                 };
                 // Advertise to s random alive peers (bootstrap set P).
-                let peers = ctx.alive_peers(ev.node);
-                let k = self.cfg.s.min(peers.len());
-                let picks = ctx.rng.sample_indices(peers.len(), k);
-                for p in picks {
-                    self.send(ctx, ev.node, peers[p], Msg::Joined { node: ev.node, counter: c });
+                for p in ctx.sample_peers(ev.node, self.cfg.s) {
+                    self.send(ctx, ev.node, p, Msg::Joined { node: ev.node, counter: c });
                 }
                 let now_s = ctx.now().as_secs_f64();
                 self.join_watch.push((ev.node, now_s));
@@ -496,11 +517,8 @@ impl Protocol for ModestProtocol {
                     node.view.registry.update(ev.node, c, MembershipEvent::Left);
                     c
                 };
-                let peers = ctx.alive_peers(ev.node);
-                let k = self.cfg.s.min(peers.len());
-                let picks = ctx.rng.sample_indices(peers.len(), k);
-                for p in picks {
-                    self.send(ctx, ev.node, peers[p], Msg::Left { node: ev.node, counter: c });
+                for p in ctx.sample_peers(ev.node, self.cfg.s) {
+                    self.send(ctx, ev.node, p, Msg::Left { node: ev.node, counter: c });
                 }
             }
             ChurnKind::Crash => {}

@@ -21,7 +21,7 @@ use crate::config::preset;
 use crate::learning::{ComputeModel, MockTask, Task};
 use crate::net::{LatencyMatrix, LatencyParams, NetworkFabric};
 use crate::runtime::XlaRuntime;
-use crate::sim::SimRng;
+use crate::sim::{SamplingVersion, SimRng};
 use crate::util::Json;
 
 use super::network::NetworkSpec;
@@ -116,6 +116,11 @@ pub struct RunSpec {
     pub target_metric: Option<f64>,
     /// Seed for everything in the session.
     pub seed: u64,
+    /// Peer-sampling stream version (JSON `"sampling": "v1" | "v2"`).
+    /// `v1` — the default — keeps every pre-existing same-seed session
+    /// fingerprint bit-identical; `v2` draws the same set distribution in
+    /// O(k) per fan-out for large populations.
+    pub sampling: SamplingVersion,
 }
 
 impl Default for RunSpec {
@@ -126,6 +131,7 @@ impl Default for RunSpec {
             eval_interval_s: 20.0,
             target_metric: None,
             seed: 42,
+            sampling: SamplingVersion::default(),
         }
     }
 }
@@ -219,6 +225,9 @@ impl ScenarioSpec {
                                 }
                             }
                             "seed" => spec.run.seed = val.as_u64()?,
+                            "sampling" => {
+                                spec.run.sampling = SamplingVersion::parse(val.as_str()?)?
+                            }
                             other => bail!("unknown run key {other:?}"),
                         }
                     }
@@ -259,6 +268,7 @@ impl ScenarioSpec {
                     if *val == Json::Null { None } else { Some(val.as_f64()?) }
             }
             "seed" => self.run.seed = val.as_u64()?,
+            "sampling" => self.run.sampling = SamplingVersion::parse(val.as_str()?)?,
             "bandwidth_mbps" => self.network.bandwidth_mbps = val.as_f64()?,
             "bandwidth_sigma" => self.network.bandwidth_sigma = val.as_f64()?,
             other => bail!(
@@ -323,6 +333,7 @@ impl ScenarioSpec {
                         },
                     ),
                     ("seed", Json::Num(self.run.seed as f64)),
+                    ("sampling", Json::Str(self.run.sampling.as_str().to_string())),
                 ]),
             ),
         ])
@@ -430,6 +441,7 @@ impl ScenarioSpec {
                         nodes: n,
                         ratings_per_user: p.samples_per_node,
                         test_per_user: 25,
+                        sampling: self.run.sampling,
                         ..Default::default()
                     },
                     &mut rng,
@@ -573,10 +585,31 @@ mod tests {
         spec.protocol.sf = 0.75;
         spec.protocol.params = vec![("fanout".into(), 3.0)];
         spec.run.target_metric = Some(0.8);
+        spec.run.sampling = SamplingVersion::V2Partial;
         spec.network.bandwidth_sigma = 0.6;
         let text = spec.to_json().to_string();
         let back = ScenarioSpec::from_json(&text).unwrap();
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn sampling_version_parses_nested_flat_and_defaults() {
+        // Nested form.
+        let spec =
+            ScenarioSpec::from_json(r#"{"run": {"sampling": "v2"}}"#).unwrap();
+        assert_eq!(spec.run.sampling, SamplingVersion::V2Partial);
+        // Legacy flat key (overrides the section, like every flat key).
+        let spec = ScenarioSpec::from_json(
+            r#"{"sampling": "v2", "run": {"sampling": "v1"}}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.run.sampling, SamplingVersion::V2Partial);
+        // Absent = v1, so every pre-existing config keeps its fingerprint.
+        let spec = ScenarioSpec::from_json(r#"{"run": {"seed": 3}}"#).unwrap();
+        assert_eq!(spec.run.sampling, SamplingVersion::V1Shuffle);
+        // Unknown spellings fail loudly.
+        assert!(ScenarioSpec::from_json(r#"{"run": {"sampling": "v9"}}"#).is_err());
+        assert!(ScenarioSpec::from_json(r#"{"run": {"sampling": 2}}"#).is_err());
     }
 
     #[test]

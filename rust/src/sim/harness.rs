@@ -27,7 +27,7 @@ use crate::{NodeId, Round};
 
 use super::churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 use super::engine::EventQueue;
-use super::rng::SimRng;
+use super::rng::{SamplingVersion, SimRng};
 use super::time::SimTime;
 
 /// Liveness status of a simulated node process.
@@ -54,6 +54,9 @@ pub struct HarnessConfig {
     pub target_metric: Option<f64>,
     /// Seed of the harness RNG stream.
     pub seed: u64,
+    /// Which peer-sampling stream [`Ctx::sample_peers`] draws from
+    /// (`V1Shuffle` = the frozen historical stream, `V2Partial` = O(k)).
+    pub sampling: SamplingVersion,
 }
 
 /// Internal DES events; `M` is the protocol's wire-message type.
@@ -88,6 +91,7 @@ pub struct Ctx<'a, M> {
     status: &'a [Status],
     alive: usize,
     max_rounds: Round,
+    sampling: SamplingVersion,
     done: &'a mut bool,
 }
 
@@ -127,6 +131,43 @@ impl<M> Ctx<'_, M> {
         }
         (0..n as NodeId)
             .filter(|&j| j != of && self.status[j as usize] == Status::Alive)
+            .collect()
+    }
+
+    /// The sampling-stream version this session runs under.
+    pub fn sampling(&self) -> SamplingVersion {
+        self.sampling
+    }
+
+    /// Draw up to `k` distinct uniformly-random alive peers of `of`
+    /// (excluding `of` itself) from the session RNG, under the session's
+    /// [`SamplingVersion`].
+    ///
+    /// All-alive fast path (every churn-free session): the peer set is
+    /// "each id but `of`", so sampled indices map straight to node ids and
+    /// no peer list is materialized — with `V2Partial` a fan-out is O(k)
+    /// end to end. Both paths draw the identical `sample_indices(m, k)`
+    /// call with `m` = the alive-peer count, so the RNG stream — and the
+    /// session fingerprint — never depends on which path ran.
+    pub fn sample_peers(&mut self, of: NodeId, k: usize) -> Vec<NodeId> {
+        let n = self.status.len();
+        if self.alive == n && (of as usize) < n {
+            return self
+                .rng
+                .sample_indices_excluding(self.sampling, n, of as usize, k)
+                .into_iter()
+                .map(|p| p as NodeId)
+                .collect();
+        }
+        let peers = self.alive_peers(of);
+        if peers.is_empty() {
+            return Vec::new();
+        }
+        let k = k.min(peers.len());
+        self.rng
+            .sample_indices_versioned(self.sampling, peers.len(), k)
+            .into_iter()
+            .map(|p| peers[p])
             .collect()
     }
 
@@ -235,6 +276,7 @@ macro_rules! harness_ctx {
             status: &$h.status,
             alive: $h.alive,
             max_rounds: $h.cfg.max_rounds,
+            sampling: $h.cfg.sampling,
             done: &mut $h.done,
         }
     };
@@ -499,6 +541,7 @@ mod tests {
                 eval_interval: SimTime::from_secs_f64(5.0),
                 target_metric: None,
                 seed: 9,
+                sampling: SamplingVersion::default(),
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -570,6 +613,7 @@ mod tests {
                 eval_interval: SimTime::from_secs_f64(5.0),
                 target_metric: None,
                 seed: 9,
+                sampling: SamplingVersion::default(),
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,

@@ -1,0 +1,205 @@
+//! Protocol-side liveness mirror: the churn bookkeeping every
+//! leaderless protocol was copying.
+//!
+//! The harness owns the authoritative liveness table ([`super::Status`])
+//! and drops events at dead nodes, but a protocol still needs its own view
+//! of who is live to (1) keep the round-start trace monotone when churn
+//! moves the recording node, (2) filter evaluation and `final_round` to
+//! live replicas, and (3) decide "is anyone left". Gossip-DL and D-SGD
+//! each grew an identical `dead: Vec<bool>` + `started: Round` +
+//! lowest-live-recorder idiom; [`LivenessMirror`] is that idiom extracted
+//! once, before a third protocol copies it again (ROADMAP item).
+//!
+//! Everything here is pure bookkeeping — no RNG, no event scheduling — so
+//! adopting the mirror cannot change a session's event order or its
+//! same-seed fingerprint (the gossip/D-SGD churn tests pin that).
+
+use crate::{NodeId, Round};
+
+/// Dead/live flags plus the monotone round-start recorder.
+#[derive(Debug, Clone)]
+pub struct LivenessMirror {
+    /// `true` = crashed/left (or a scripted joiner that has not joined).
+    dead: Vec<bool>,
+    /// Highest round recorded so far (keeps the trace monotone when churn
+    /// hands the recorder role to a different node).
+    started: Round,
+}
+
+impl LivenessMirror {
+    /// All `n` nodes start live.
+    pub fn all_live(n: usize) -> LivenessMirror {
+        LivenessMirror { dead: vec![false; n], started: 0 }
+    }
+
+    /// `total` node slots of which the first `live` start live — the
+    /// shape of a session whose churn script introduces joiners later.
+    pub fn with_live_prefix(total: usize, live: usize) -> LivenessMirror {
+        LivenessMirror { dead: (0..total).map(|i| i >= live).collect(), started: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.dead.is_empty()
+    }
+
+    /// Ids outside the table count as dead (same defensive contract as the
+    /// harness's own dispatch check).
+    pub fn is_dead(&self, i: usize) -> bool {
+        self.dead.get(i).copied().unwrap_or(true)
+    }
+
+    pub fn set_dead(&mut self, i: usize) {
+        if let Some(d) = self.dead.get_mut(i) {
+            *d = true;
+        }
+    }
+
+    pub fn set_live(&mut self, i: usize) {
+        if let Some(d) = self.dead.get_mut(i) {
+            *d = false;
+        }
+    }
+
+    pub fn any_live(&self) -> bool {
+        self.dead.iter().any(|&d| !d)
+    }
+
+    /// Indices of live nodes, ascending (evaluation subsampling).
+    pub fn live_indices(&self) -> Vec<usize> {
+        (0..self.dead.len()).filter(|&i| !self.dead[i]).collect()
+    }
+
+    /// The node that records round starts: the lowest live id (node 0
+    /// unless churn killed it). `None` during a total outage.
+    pub fn recorder(&self) -> Option<usize> {
+        self.dead.iter().position(|&d| !d)
+    }
+
+    /// Highest round recorded so far.
+    pub fn started(&self) -> Round {
+        self.started
+    }
+
+    /// Bootstrap: the caller recorded `round` itself (e.g. round 1 at
+    /// t=0); pin the monotone guard there.
+    pub fn force_started(&mut self, round: Round) {
+        self.started = round;
+    }
+
+    /// True exactly when `node` is the current recorder and `round`
+    /// advances the trace; updates the guard so each round is recorded
+    /// once. The caller then calls `ctx.record_round_start(round)`.
+    pub fn should_record(&mut self, node: NodeId, round: Round) -> bool {
+        if self.recorder() == Some(node as usize) && round > self.started {
+            self.started = round;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Minimum of `rounds` over live nodes (the session's `final_round`);
+    /// 0 during a total outage. `rounds` must iterate node-table order.
+    pub fn min_live_round<I: IntoIterator<Item = Round>>(&self, rounds: I) -> Round {
+        rounds
+            .into_iter()
+            .zip(&self.dead)
+            .filter(|&(_, &dead)| !dead)
+            .map(|(r, _)| r)
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prefix_construction_marks_joiners_dead() {
+        let m = LivenessMirror::with_live_prefix(5, 3);
+        assert_eq!(m.len(), 5);
+        assert!(!m.is_dead(0) && !m.is_dead(2));
+        assert!(m.is_dead(3) && m.is_dead(4));
+        assert!(m.is_dead(99), "out-of-table ids are dead");
+        assert_eq!(m.live_indices(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn recorder_is_lowest_live_and_hands_off_on_crash() {
+        let mut m = LivenessMirror::all_live(4);
+        assert_eq!(m.recorder(), Some(0));
+        m.set_dead(0);
+        assert_eq!(m.recorder(), Some(1));
+        m.set_dead(1);
+        m.set_dead(2);
+        m.set_dead(3);
+        assert_eq!(m.recorder(), None);
+        assert!(!m.any_live());
+        m.set_live(2); // revival
+        assert_eq!(m.recorder(), Some(2));
+    }
+
+    #[test]
+    fn trace_stays_monotone_across_recorder_handoff() {
+        // The exact crash/leave/revival sequence the gossip churn tests
+        // exercise: node 0 records 1..3, crashes, node 1 takes over — but
+        // must not re-record a round <= 3; a revival of node 0 reclaims
+        // the role with the guard intact.
+        let mut m = LivenessMirror::all_live(3);
+        assert!(m.should_record(0, 1));
+        assert!(m.should_record(0, 2));
+        assert!(m.should_record(0, 3));
+        assert!(!m.should_record(1, 4), "non-recorder must not record");
+        m.set_dead(0);
+        assert!(!m.should_record(1, 3), "stale round after handoff");
+        assert!(m.should_record(1, 4));
+        m.set_live(0); // recover: lowest live again
+        assert!(!m.should_record(1, 5), "role returned to node 0");
+        assert!(m.should_record(0, 5));
+        assert_eq!(m.started(), 5);
+    }
+
+    #[test]
+    fn repeated_rounds_record_once() {
+        let mut m = LivenessMirror::all_live(2);
+        assert!(m.should_record(0, 1));
+        assert!(!m.should_record(0, 1));
+        assert!(m.should_record(0, 2));
+    }
+
+    #[test]
+    fn force_started_pins_bootstrap_round() {
+        let mut m = LivenessMirror::all_live(2);
+        m.force_started(1);
+        assert!(!m.should_record(0, 1));
+        assert!(m.should_record(0, 2));
+    }
+
+    #[test]
+    fn min_live_round_filters_dead_nodes() {
+        let mut m = LivenessMirror::all_live(4);
+        let rounds = [7u64, 3, 9, 5];
+        assert_eq!(m.min_live_round(rounds.iter().copied()), 3);
+        m.set_dead(1); // the slowest node dies: min moves to a live one
+        assert_eq!(m.min_live_round(rounds.iter().copied()), 5);
+        m.set_dead(0);
+        m.set_dead(2);
+        m.set_dead(3);
+        assert_eq!(m.min_live_round(rounds.iter().copied()), 0);
+    }
+
+    #[test]
+    fn join_sequence_extends_live_set() {
+        let mut m = LivenessMirror::with_live_prefix(4, 2);
+        assert_eq!(m.live_indices(), vec![0, 1]);
+        m.set_live(2); // scripted Join fires
+        m.set_dead(0); // then the original recorder leaves
+        assert_eq!(m.live_indices(), vec![1, 2]);
+        assert_eq!(m.recorder(), Some(1));
+    }
+}

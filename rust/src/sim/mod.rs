@@ -10,11 +10,13 @@
 pub mod churn;
 pub mod engine;
 pub mod harness;
+pub mod liveness;
 pub mod rng;
 pub mod time;
 
 pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent};
 pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness, Status};
-pub use rng::SimRng;
+pub use liveness::LivenessMirror;
+pub use rng::{SamplingVersion, SimRng};
 pub use time::SimTime;

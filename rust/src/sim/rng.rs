@@ -5,11 +5,61 @@
 //! derives from the session seed through labelled streams, so a session is
 //! exactly reproducible from its config — a property the proptest suite and
 //! the experiment harness both rely on.
+//!
+//! Peer sampling is **versioned** ([`SamplingVersion`]): the historical
+//! full-shuffle stream (`v1`) stays bit-identical forever, while `v2` draws
+//! the same set distribution in O(k) time and memory for the 100k-node fast
+//! path. Sessions select a version through `ScenarioSpec.run.sampling`.
+
+use std::collections::HashMap;
+
+/// Which peer-sampling stream a session draws from.
+///
+/// Both versions sample `k` distinct indices uniformly from `[0, n)` — the
+/// *set distribution* is identical — but they consume the RNG stream
+/// differently, so same-seed session fingerprints are only stable within a
+/// version. `V1Shuffle` is the historical default and must never change;
+/// `V2Partial` is the O(k) stream for large populations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SamplingVersion {
+    /// Full Fisher–Yates shuffle of `[0, n)` truncated to `k`: O(n) time,
+    /// one O(n) allocation, exactly `n - 1` `gen_range` draws. The stream
+    /// every pre-versioning session fingerprint was recorded under.
+    #[default]
+    V1Shuffle,
+    /// Partial front Fisher–Yates over an implicit identity array (a small
+    /// map holds only displaced slots): O(k) time and memory, exactly `k`
+    /// `gen_range` draws. Use for n ≫ k populations (100k-node sessions).
+    V2Partial,
+}
+
+impl SamplingVersion {
+    /// Parse the JSON/CLI spelling (`"v1"` | `"v2"`).
+    pub fn parse(s: &str) -> anyhow::Result<SamplingVersion> {
+        match s {
+            "v1" => Ok(SamplingVersion::V1Shuffle),
+            "v2" => Ok(SamplingVersion::V2Partial),
+            other => {
+                anyhow::bail!("unknown sampling version {other:?} (expected \"v1\" or \"v2\")")
+            }
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SamplingVersion::V1Shuffle => "v1",
+            SamplingVersion::V2Partial => "v2",
+        }
+    }
+}
 
 /// xoshiro256** by Blackman & Vigna (public domain reference impl).
 #[derive(Clone, Debug)]
 pub struct SimRng {
     s: [u64; 4],
+    /// Count of raw `next_u64` outputs (complexity assertions in tests;
+    /// one wrapping add per draw, noise-level on the hot path).
+    draws: u64,
 }
 
 fn splitmix64(state: &mut u64) -> u64 {
@@ -31,7 +81,15 @@ impl SimRng {
                 splitmix64(&mut sm),
                 splitmix64(&mut sm),
             ],
+            draws: 0,
         }
+    }
+
+    /// How many raw `next_u64` outputs this stream has produced. Used by
+    /// the sampling complexity tests (`V2Partial` must stay O(k) at
+    /// n = 100k); not part of the reproducibility contract.
+    pub fn draw_count(&self) -> u64 {
+        self.draws
     }
 
     /// Derive an independent stream for a labelled purpose.
@@ -48,6 +106,7 @@ impl SimRng {
     }
 
     pub fn next_u64(&mut self) -> u64 {
+        self.draws = self.draws.wrapping_add(1);
         let result = self.s[1]
             .wrapping_mul(5)
             .rotate_left(7)
@@ -140,7 +199,17 @@ impl SimRng {
     }
 
     /// Fisher–Yates shuffle.
+    ///
+    /// RNG-stream contract: consumes exactly `len - 1` `gen_range` draws
+    /// for slices of length >= 2 and exactly **zero** draws for empty or
+    /// single-element slices (the early return below — there is nothing to
+    /// permute, so no stream entropy may be spent). Callers rely on exact
+    /// draw counts for same-seed reproducibility; never add or remove
+    /// draws here.
     pub fn shuffle<T>(&mut self, v: &mut [T]) {
+        if v.len() <= 1 {
+            return;
+        }
         for i in (1..v.len()).rev() {
             let j = self.gen_range((i + 1) as u64) as usize;
             v.swap(i, j);
@@ -148,12 +217,91 @@ impl SimRng {
     }
 
     /// Sample `k` distinct indices from [0, n) (k <= n), in random order.
+    ///
+    /// This is the **V1** sampling stream ([`SamplingVersion::V1Shuffle`]):
+    /// a full shuffle truncated to `k` — O(n) work, an O(n) allocation,
+    /// and exactly `n - 1` `gen_range` draws regardless of `k`. Every
+    /// pre-versioning session fingerprint was recorded against this exact
+    /// draw sequence, so its behaviour is frozen; large-n callers opt into
+    /// [`SimRng::sample_indices_v2`] through the scenario's `run.sampling`.
     pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
         assert!(k <= n, "sample {k} from {n}");
         let mut idx: Vec<usize> = (0..n).collect();
         self.shuffle(&mut idx);
         idx.truncate(k);
         idx
+    }
+
+    /// Sample `k` distinct indices from [0, n) (k <= n), in random order,
+    /// in O(k) time and memory.
+    ///
+    /// This is the **V2** sampling stream ([`SamplingVersion::V2Partial`]):
+    /// a partial front Fisher–Yates over an *implicit* identity array.
+    /// Draw-sequence contract: for `i` in `0..k` the stream consumes
+    /// exactly one `gen_range(n - i)` draw selecting swap target
+    /// `j = i + draw`; the output is the (virtual) value at slot `j`, and
+    /// slot `j` inherits slot `i`'s value. Only displaced slots are stored
+    /// (a map of at most `k` entries), so no O(n) array is ever
+    /// materialized. The distribution over ordered k-tuples — and hence
+    /// over sets — is identical to [`SimRng::sample_indices`]; the byte
+    /// stream is not, which is why the version is part of a scenario's
+    /// reproducibility fingerprint.
+    pub fn sample_indices_v2(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample {k} from {n}");
+        let mut out = Vec::with_capacity(k);
+        let mut displaced: HashMap<usize, usize> = HashMap::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.gen_range((n - i) as u64) as usize;
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            out.push(vj);
+            // Slot j inherits slot i's value; slot i is never read again
+            // (future swap targets are all > i), so it needs no entry.
+            displaced.insert(j, vi);
+        }
+        out
+    }
+
+    /// Version-dispatched sampling: the one entry point session code uses,
+    /// so a scenario's `run.sampling` selects the stream everywhere at
+    /// once.
+    pub fn sample_indices_versioned(
+        &mut self,
+        version: SamplingVersion,
+        n: usize,
+        k: usize,
+    ) -> Vec<usize> {
+        match version {
+            SamplingVersion::V1Shuffle => self.sample_indices(n, k),
+            SamplingVersion::V2Partial => self.sample_indices_v2(n, k),
+        }
+    }
+
+    /// Sample up to `k` distinct indices from `[0, n)` minus `excluded` —
+    /// the all-alive "every id but one" fast path shared by
+    /// `Ctx::sample_peers` (excluding the sender) and the FedAvg
+    /// participant draw (excluding the server). Draws exactly one
+    /// `sample_indices_versioned(n - 1, k')` call and remaps the picks
+    /// around the hole, so the stream equals sampling from the
+    /// materialized peer list — keep both properties in sync with any
+    /// caller-side slow path.
+    pub fn sample_indices_excluding(
+        &mut self,
+        version: SamplingVersion,
+        n: usize,
+        excluded: usize,
+        k: usize,
+    ) -> Vec<usize> {
+        assert!(excluded < n, "exclude {excluded} from [0, {n})");
+        let m = n - 1;
+        if m == 0 {
+            return Vec::new();
+        }
+        let k = k.min(m);
+        self.sample_indices_versioned(version, m, k)
+            .into_iter()
+            .map(|i| if i < excluded { i } else { i + 1 })
+            .collect()
     }
 }
 
@@ -251,5 +399,121 @@ mod tests {
         let mut s = v.clone();
         s.sort_unstable();
         assert_eq!(s, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn shuffle_consumes_no_draws_for_trivial_slices() {
+        // The RNG-stream contract: len <= 1 must spend zero entropy, so a
+        // caller interleaving trivial shuffles replays identically.
+        let mut r = SimRng::new(11);
+        let before = r.draw_count();
+        r.shuffle::<u32>(&mut []);
+        r.shuffle(&mut [42u32]);
+        assert_eq!(r.draw_count(), before);
+        let mut two = [1u32, 2];
+        r.shuffle(&mut two);
+        assert!(r.draw_count() > before);
+    }
+
+    #[test]
+    fn v1_sample_stream_is_bit_stable() {
+        // Golden vector pinned from the frozen V1 draw sequence (full
+        // Fisher–Yates truncated to k). If this test ever fails, the V1
+        // stream changed and every recorded same-seed session fingerprint
+        // breaks with it — that is exactly what SamplingVersion exists to
+        // prevent. Do NOT update the constant; fix the regression.
+        let mut r = SimRng::new(0xD5);
+        assert_eq!(
+            r.sample_indices(100, 10),
+            vec![64, 23, 78, 49, 53, 45, 57, 36, 5, 70]
+        );
+        let mut r = SimRng::new(6);
+        assert_eq!(r.sample_indices(8, 3), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn v2_sample_stream_matches_documented_contract() {
+        // Golden vector for the V2 draw-sequence contract (one
+        // gen_range(n - i) draw per output, partial front Fisher–Yates).
+        let mut r = SimRng::new(0xD5);
+        assert_eq!(
+            r.sample_indices_v2(100, 10),
+            vec![9, 62, 24, 40, 13, 12, 14, 86, 97, 74]
+        );
+        let mut r = SimRng::new(6);
+        assert_eq!(r.sample_indices_v2(8, 3), vec![6, 7, 1]);
+    }
+
+    #[test]
+    fn v2_sample_indices_distinct_and_in_range() {
+        let mut r = SimRng::new(13);
+        for &(n, k) in &[(1usize, 1usize), (2, 2), (50, 20), (50, 50), (1000, 1)] {
+            let s = r.sample_indices_v2(n, k);
+            assert_eq!(s.len(), k);
+            assert!(s.iter().all(|&i| i < n), "{s:?} out of [0, {n})");
+            let mut sorted = s.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), k, "duplicates in {s:?}");
+        }
+        assert!(r.sample_indices_v2(7, 0).is_empty());
+    }
+
+    #[test]
+    fn v2_full_sample_is_a_permutation() {
+        let mut r = SimRng::new(14);
+        let mut s = r.sample_indices_v2(64, 64);
+        s.sort_unstable();
+        assert_eq!(s, (0..64).collect::<Vec<usize>>());
+    }
+
+    #[test]
+    fn versioned_dispatch_matches_direct_calls() {
+        let mut a = SimRng::new(21);
+        let mut b = SimRng::new(21);
+        assert_eq!(
+            a.sample_indices_versioned(SamplingVersion::V1Shuffle, 40, 6),
+            b.sample_indices(40, 6)
+        );
+        assert_eq!(
+            a.sample_indices_versioned(SamplingVersion::V2Partial, 40, 6),
+            b.sample_indices_v2(40, 6)
+        );
+    }
+
+    #[test]
+    fn sample_excluding_matches_manual_remap() {
+        // The helper must be draw-for-draw identical to sampling from a
+        // materialized "every index but `excluded`" list (that is what
+        // keeps the all-alive fast paths fingerprint-neutral).
+        let mut a = SimRng::new(33);
+        let mut b = SimRng::new(33);
+        for version in [SamplingVersion::V1Shuffle, SamplingVersion::V2Partial] {
+            let got = a.sample_indices_excluding(version, 20, 7, 5);
+            let manual: Vec<usize> = b
+                .sample_indices_versioned(version, 19, 5)
+                .into_iter()
+                .map(|i| if i < 7 { i } else { i + 1 })
+                .collect();
+            assert_eq!(got, manual);
+            assert_eq!(got.len(), 5);
+            assert!(!got.contains(&7));
+            assert!(got.iter().all(|&i| i < 20));
+        }
+        // n = 1: the only index is excluded — empty, zero draws.
+        let before = a.draw_count();
+        assert!(a
+            .sample_indices_excluding(SamplingVersion::V2Partial, 1, 0, 3)
+            .is_empty());
+        assert_eq!(a.draw_count(), before);
+    }
+
+    #[test]
+    fn sampling_version_parses_and_prints() {
+        assert_eq!(SamplingVersion::parse("v1").unwrap(), SamplingVersion::V1Shuffle);
+        assert_eq!(SamplingVersion::parse("v2").unwrap(), SamplingVersion::V2Partial);
+        assert!(SamplingVersion::parse("v3").is_err());
+        assert_eq!(SamplingVersion::default().as_str(), "v1");
+        assert_eq!(SamplingVersion::V2Partial.as_str(), "v2");
     }
 }

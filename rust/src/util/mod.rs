@@ -9,9 +9,12 @@
 //! * [`cli`]   — declarative flag/subcommand parsing for the launcher.
 //! * [`bench`] — a criterion-style micro/macro benchmark harness with
 //!   warmup, adaptive iteration counts, and mean/p50/p95 reporting.
+//! * [`trend`] — cross-PR comparison of `BENCH_hotpaths.json` snapshots
+//!   (the CI `bench-diff` regression gate).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod trend;
 
 pub use json::Json;

@@ -1,0 +1,199 @@
+//! Cross-PR bench-trend comparison over `BENCH_hotpaths.json` snapshots.
+//!
+//! CI stashes one snapshot per commit as an artifact; the `bench-diff`
+//! binary (`src/bin/bench_diff.rs`) loads the base commit's snapshot and
+//! the fresh one, compares per-bench medians, and fails the job when a
+//! **guarded** hot path — DES queue push/pop, fan-out, peer sampling —
+//! regresses by more than the threshold (closing the ROADMAP "track
+//! BENCH_hotpaths.json across PRs" item). Non-guarded rows are reported
+//! but never fail the build: they are informational trajectory, not
+//! acceptance bars.
+
+use anyhow::{Context, Result};
+
+use super::json::Json;
+
+/// Bench-name prefixes whose regression fails the build. Everything else
+/// (aggregation kernels, view merges, ...) is tracked but advisory.
+pub const GUARDED_PREFIXES: &[&str] = &["des/queue/", "fanout/", "sample/"];
+
+/// Guarded rows faster than this in BOTH snapshots are exempt from the
+/// ratio gate: a 2x swing on a tens-of-nanoseconds row is scheduler noise
+/// on shared CI runners, not a regression.
+pub const MIN_GUARDED_NS: u64 = 500;
+
+/// One bench row of a snapshot (the median is what trends compare —
+/// p50 is far more stable across runners than the mean).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRow {
+    pub name: String,
+    pub p50_ns: u64,
+}
+
+/// Parse the `Bencher::to_json` format (`{"group": ..., "results": [...]}`).
+pub fn parse_snapshot(text: &str) -> Result<Vec<BenchRow>> {
+    let v = Json::parse(text).context("bench snapshot is not valid JSON")?;
+    v.field("results")?
+        .as_arr()?
+        .iter()
+        .map(|r| {
+            Ok(BenchRow {
+                name: r.field("name")?.as_str()?.to_string(),
+                p50_ns: r.field("p50_ns")?.as_u64()?,
+            })
+        })
+        .collect()
+}
+
+/// One compared row: `ratio` > 1 means the new snapshot is slower.
+#[derive(Debug, Clone)]
+pub struct TrendDiff {
+    pub name: String,
+    pub base_ns: u64,
+    pub new_ns: u64,
+    pub ratio: f64,
+    /// Name matched a guarded prefix (eligible to fail the build).
+    pub guarded: bool,
+}
+
+impl TrendDiff {
+    /// Whether this row trips the gate at `threshold` (e.g. 2.0 = fail on
+    /// a >2x median regression).
+    pub fn fails(&self, threshold: f64) -> bool {
+        self.guarded
+            && self.ratio > threshold
+            && (self.base_ns >= MIN_GUARDED_NS || self.new_ns >= MIN_GUARDED_NS)
+    }
+}
+
+/// Compare two snapshots by bench name. Rows present in only one snapshot
+/// are skipped (benches come and go across PRs); an empty intersection is
+/// not an error — the caller reports it and passes (first run on a branch,
+/// or the committed empty-baseline fallback).
+pub fn compare_trend(base: &[BenchRow], new: &[BenchRow]) -> Vec<TrendDiff> {
+    new.iter()
+        .filter_map(|n| {
+            let b = base.iter().find(|b| b.name == n.name)?;
+            Some(TrendDiff {
+                name: n.name.clone(),
+                base_ns: b.p50_ns,
+                new_ns: n.p50_ns,
+                ratio: if b.p50_ns == 0 {
+                    if n.p50_ns == 0 { 1.0 } else { f64::INFINITY }
+                } else {
+                    n.p50_ns as f64 / b.p50_ns as f64
+                },
+                guarded: GUARDED_PREFIXES.iter().any(|p| n.name.starts_with(p)),
+            })
+        })
+        .collect()
+}
+
+/// The rows that fail the gate at `threshold`, worst first.
+pub fn regressions(diffs: &[TrendDiff], threshold: f64) -> Vec<&TrendDiff> {
+    let mut out: Vec<&TrendDiff> = diffs.iter().filter(|d| d.fails(threshold)).collect();
+    out.sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snapshot(rows: &[(&str, u64)]) -> Vec<BenchRow> {
+        rows.iter()
+            .map(|&(name, p50_ns)| BenchRow { name: name.to_string(), p50_ns })
+            .collect()
+    }
+
+    #[test]
+    fn parses_bencher_json_output() {
+        // Exactly the format Bencher::to_json writes.
+        std::env::set_var("BENCH_FAST", "1");
+        let mut b = crate::util::bench::Bencher::new("trendtest");
+        b.bench("des/queue/unit", || {
+            crate::util::bench::black_box((0..64).sum::<u64>());
+        });
+        let rows = parse_snapshot(&b.to_json()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].name, "des/queue/unit");
+    }
+
+    #[test]
+    fn rejects_malformed_snapshots() {
+        assert!(parse_snapshot("not json").is_err());
+        assert!(parse_snapshot(r#"{"group": "x"}"#).is_err());
+        assert!(parse_snapshot(r#"{"results": [{"name": "a"}]}"#).is_err());
+    }
+
+    #[test]
+    fn injected_2x_queue_regression_fails_the_gate() {
+        // The CI self-check scenario: same snapshot with the queue rows
+        // doctored 2.5x slower must trip the >2x gate.
+        let base = snapshot(&[
+            ("des/queue/hold-100000/calendar", 80_000_000),
+            ("fanout/arc-msgs/8-of-1.75M", 900),
+            ("aggregate/native/10x86k(cifar10)", 500_000),
+        ]);
+        let new = snapshot(&[
+            ("des/queue/hold-100000/calendar", 200_000_000),
+            ("fanout/arc-msgs/8-of-1.75M", 950),
+            ("aggregate/native/10x86k(cifar10)", 500_000),
+        ]);
+        let diffs = compare_trend(&base, &new);
+        let bad = regressions(&diffs, 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "des/queue/hold-100000/calendar");
+        assert!(bad[0].ratio > 2.0);
+    }
+
+    #[test]
+    fn unguarded_rows_never_fail() {
+        let base = snapshot(&[("view/merge/500-nodes", 1_000_000)]);
+        let new = snapshot(&[("view/merge/500-nodes", 10_000_000)]);
+        let diffs = compare_trend(&base, &new);
+        assert_eq!(diffs.len(), 1);
+        assert!((diffs[0].ratio - 10.0).abs() < 1e-9);
+        assert!(regressions(&diffs, 2.0).is_empty());
+    }
+
+    #[test]
+    fn sample_and_fanout_rows_are_guarded() {
+        let base = snapshot(&[
+            ("sample/v2-partial/n=100000,k=10", 2_000),
+            ("fanout/arc-msgs/10k-of-1.75M", 400_000),
+        ]);
+        let new = snapshot(&[
+            ("sample/v2-partial/n=100000,k=10", 9_000),
+            ("fanout/arc-msgs/10k-of-1.75M", 700_000),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1, "1.75x fan-out drift must not fail");
+        assert_eq!(bad[0].name, "sample/v2-partial/n=100000,k=10");
+    }
+
+    #[test]
+    fn nanosecond_noise_is_exempt() {
+        // 3x on a 90ns row: scheduler noise, below MIN_GUARDED_NS.
+        let base = snapshot(&[("fanout/arc-msgs/tiny", 90)]);
+        let new = snapshot(&[("fanout/arc-msgs/tiny", 280)]);
+        assert!(regressions(&compare_trend(&base, &new), 2.0).is_empty());
+    }
+
+    #[test]
+    fn disjoint_snapshots_compare_empty() {
+        let base = snapshot(&[("old/bench", 1_000)]);
+        let new = snapshot(&[("new/bench", 1_000)]);
+        assert!(compare_trend(&base, &new).is_empty());
+        assert!(compare_trend(&[], &new).is_empty());
+    }
+
+    #[test]
+    fn speedups_and_parity_pass() {
+        let base = snapshot(&[("des/queue/hold-1000000/calendar", 100_000_000)]);
+        let new = snapshot(&[("des/queue/hold-1000000/calendar", 60_000_000)]);
+        let diffs = compare_trend(&base, &new);
+        assert!(regressions(&diffs, 2.0).is_empty());
+        assert!(diffs[0].ratio < 1.0);
+    }
+}

@@ -71,6 +71,7 @@ fn nested_json_roundtrip_preserves_every_field() {
     spec.run.eval_interval_s = 7.0;
     spec.run.target_metric = Some(0.9);
     spec.run.seed = 1234;
+    spec.run.sampling = modest_dl::sim::SamplingVersion::V2Partial;
     let text = spec.to_json().to_string();
     let back = ScenarioSpec::from_json(&text).unwrap();
     assert_eq!(spec, back);
