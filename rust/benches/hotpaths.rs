@@ -9,6 +9,9 @@
 //! * the sampler's per-round hash+sort candidate ordering,
 //! * peer sampling — the frozen V1 full shuffle vs the O(k) V2 partial
 //!   shuffle at n ∈ {1k, 10k, 100k}, k = 10 (the 100k-node fast path),
+//!   plus the churned path (30% dead) through the Population's Fenwick
+//!   rank/select index — O(k log n) under v2, no alive-list
+//!   materialization,
 //! * registry/view merge, and view wire-size computation.
 //!
 //! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
@@ -26,7 +29,9 @@ use modest_dl::modest::View;
 use modest_dl::net::{LatencyMatrix, MsgKind, NetworkFabric, SizeModel};
 #[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
-use modest_dl::sim::{CalendarEventQueue, HeapEventQueue, SimRng, SimTime};
+use modest_dl::sim::{
+    CalendarEventQueue, HeapEventQueue, Population, SamplingVersion, SimRng, SimTime,
+};
 use modest_dl::util::bench::{black_box, Bencher};
 use modest_dl::NodeId;
 
@@ -255,6 +260,39 @@ fn main() {
         let mut r2 = SimRng::new(0x5a);
         b.bench(&format!("sample/v2-partial/n={n},k=10"), || {
             black_box(r2.sample_indices_v2(black_box(n), 10));
+        });
+    }
+
+    // ---- churned peer sampling: the non-all-alive path over a
+    // Population with 30% of the nodes dead. v1 still burns the frozen
+    // O(alive) draw stream by contract; v2 is the tentpole — O(k log n)
+    // Fenwick rank/select with zero peer-list materialization, near-flat
+    // across n (guarded rows: the CI bench-diff gate fails a >2x p50
+    // regression on any `sample/` row).
+    for n in [1_000usize, 10_000, 100_000] {
+        let mut pop = Population::new(n, n);
+        let mut killer = SimRng::new(0xDEAD ^ n as u64);
+        for i in killer.sample_indices_v2(n, (3 * n) / 10) {
+            pop.mark_dead(i);
+        }
+        let of = pop.select(0);
+        let mut r1 = SimRng::new(0x5a);
+        b.bench(&format!("sample/churned-v1/n={n},k=10"), || {
+            black_box(pop.sample_alive_excluding(
+                &mut r1,
+                SamplingVersion::V1Shuffle,
+                black_box(of),
+                10,
+            ));
+        });
+        let mut r2 = SimRng::new(0x5a);
+        b.bench(&format!("sample/churned-v2/n={n},k=10"), || {
+            black_box(pop.sample_alive_excluding(
+                &mut r2,
+                SamplingVersion::V2Partial,
+                black_box(of),
+                10,
+            ));
         });
     }
 

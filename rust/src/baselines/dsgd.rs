@@ -88,6 +88,19 @@ struct DsgdNode {
     trained: Option<Model>,
     /// Early-arrived neighbour models per round.
     inbox: HashMap<Round, Arc<Model>>,
+    /// The round this node jumped to when it last recovered from a crash
+    /// (0 = never recovered). Rounds below this were skipped while dead:
+    /// the node never trains them, so an out-neighbour's pairwise barrier
+    /// must not wait on them, and the recovery round itself runs
+    /// barrier-free (the in-neighbour's model for it may have been
+    /// dropped at the dead node).
+    resumed_at: Round,
+    /// Monotone training sequence, bumped at every `start_training` and at
+    /// recovery. Completions carry it, so a pre-crash in-flight completion
+    /// cannot be mistaken for post-recovery training when the rejoin round
+    /// equals the crash-time round (the node must not "train through" its
+    /// own downtime).
+    seq: u64,
 }
 
 /// The D-SGD state machine (drives through [`SimHarness`]).
@@ -100,6 +113,13 @@ pub struct DsgdProtocol {
     /// the pairwise barrier. Shared bookkeeping with gossip-DL (recorder
     /// handoff, monotone round trace, live-filtered evaluation).
     live: LivenessMirror,
+    /// Highest round any node has reached through actual barrier
+    /// advancement (monotone, updated in `try_advance` only — recovery
+    /// rejoins read it but never bump it, so repeated Recover events
+    /// cannot inflate it past real training progress). Gives recovery an
+    /// O(1) rejoin target instead of an O(n) live-frontier scan per
+    /// Recover event.
+    top_round: Round,
     sizes: SizeModel,
 }
 
@@ -115,10 +135,14 @@ impl DsgdProtocol {
     fn start_training(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId) {
         let batches = ctx.task.batches_per_epoch(node);
         let dur = ctx.compute.train_time(node, batches);
-        let round = self.nodes[node as usize].round;
-        // The round number doubles as the training sequence id: a node
-        // trains exactly once per round.
-        ctx.schedule_train_done(dur, node, round);
+        // A fresh sequence id per training job: exactly one completion is
+        // ever valid, and recovery invalidates in-flight pre-crash jobs by
+        // bumping past them (the round alone cannot, since a rejoin may
+        // land on the crash-time round number).
+        let n = &mut self.nodes[node as usize];
+        n.seq += 1;
+        let seq = n.seq;
+        ctx.schedule_train_done(dur, node, seq);
     }
 
     fn send_model(
@@ -140,15 +164,21 @@ impl DsgdProtocol {
     }
 
     /// If node finished training and has its neighbour's model (or that
-    /// neighbour is dead — skip the dead trainer), average and move to the
-    /// next round.
+    /// neighbour is dead or skipped this round while crashed — skip the
+    /// missing trainer), average and move to the next round.
     fn try_advance(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId) {
         let round = self.nodes[node as usize].round;
+        let in_nb = self.graph.in_neighbor(node, round) as usize;
+        // The round's model can never arrive when the in-neighbour is
+        // dead, or recovered past this round (it skipped it while down),
+        // or when this IS the node's own barrier-free recovery round (its
+        // in-neighbour may have sent while this node was dead — dropped).
+        let never_arrives = self.live.is_dead(in_nb)
+            || self.nodes.get(in_nb).is_some_and(|nb| nb.resumed_at > round)
+            || self.nodes[node as usize].resumed_at == round;
         let ready = {
             let n = &self.nodes[node as usize];
-            n.trained.is_some()
-                && (n.inbox.contains_key(&round)
-                    || self.live.is_dead(self.graph.in_neighbor(node, round) as usize))
+            n.trained.is_some() && (n.inbox.contains_key(&round) || never_arrives)
         };
         if !ready {
             return;
@@ -170,6 +200,7 @@ impl DsgdProtocol {
             // Drop stale early arrivals of long-past rounds.
             n.inbox.retain(|&k, _| k >= round);
         }
+        self.top_round = self.top_round.max(round + 1);
         // Record from the lowest live node (node 0 unless churn killed it),
         // keeping the round trace monotone across recorder handoffs.
         if self.live.should_record(node, round + 1) {
@@ -200,10 +231,13 @@ impl Protocol for DsgdProtocol {
     }
 
     fn on_train_done(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId, seq: u64) {
-        let round = seq;
-        if self.nodes[node as usize].round != round {
-            return; // stale
+        if self.nodes[node as usize].seq != seq {
+            return; // stale (a newer job superseded it, or recovery did)
         }
+        // The node's round cannot have moved since this job was scheduled
+        // (advancing requires taking this very completion's `trained`), so
+        // it is the round the training was for.
+        let round = self.nodes[node as usize].round;
         let seed = self.seed_for(node, round);
         let model = self.nodes[node as usize].model.clone();
         let (updated, _loss, _b) =
@@ -225,17 +259,66 @@ impl Protocol for DsgdProtocol {
         match ev.kind {
             ChurnKind::Leave | ChurnKind::Crash => {
                 self.live.set_dead(i);
-                // Unblock every live node whose pairwise barrier was
-                // waiting on the dead trainer's model.
-                for v in 0..self.nodes.len() as NodeId {
+                // Unblock the nodes whose pairwise barrier was waiting on
+                // the dead trainer's model. Only a node whose CURRENT
+                // round's in-neighbour is `i` can be newly unblocked (the
+                // death flips exactly the `is_dead` term of its barrier
+                // condition), and those all sit among the <= tau distinct
+                // out-neighbours of `i` — an O(log n) candidate set
+                // instead of a full-table sweep, which matters when
+                // availability schedules emit crashes by the tens of
+                // thousands. Ascending id order replays the old full
+                // sweep's action order exactly (advancements within one
+                // sweep cannot unblock each other — their sends are
+                // future deliveries), so event order is unchanged.
+                let mut waiters: Vec<NodeId> = (1..=self.graph.degree() as Round)
+                    .map(|r| self.graph.out_neighbor(ev.node, r))
+                    .collect();
+                waiters.sort_unstable();
+                waiters.dedup();
+                for v in waiters {
                     if v as usize != i && !self.live.is_dead(v as usize) {
                         self.try_advance(ctx, v);
                     }
                 }
             }
-            // Rejected at build time (the fixed topology cannot admit
-            // joiners); defensive no-op if reached.
-            ChurnKind::Join | ChurnKind::Recover => {}
+            // Recovery of a previously-crashed node (availability churn):
+            // rejoin the fixed topology AT the current training frontier
+            // (`top_round`, the highest round any node has reached). The
+            // rejoin round itself is barrier-free (`resumed_at`), so the
+            // node never waits on a round model that was dropped while it
+            // was dead, and nobody waits on the rounds it skipped; from
+            // the next round it is in lockstep with the frontier. Because
+            // the target is the frontier — not one past it — recovery
+            // never raises `top_round`, so periodic availability churn
+            // cannot ratchet rounds toward `max_rounds` faster than real
+            // training does. No try_advance sweep is needed here: every
+            // waiter whose in-neighbour is `i` was already unblocked when
+            // `i` crashed (the Crash arm's sweep, or its own
+            // `on_train_done`'s dead-skip). Fresh joiner ids are still
+            // rejected at build time — the one-peer exponential graph is
+            // fixed at n nodes; a Join reaching here for a known id
+            // behaves as a recovery.
+            ChurnKind::Join | ChurnKind::Recover => {
+                if !self.live.is_dead(i) {
+                    return;
+                }
+                self.live.set_live(i);
+                let rejoin = self.top_round.max(self.nodes[i].round);
+                {
+                    let n = &mut self.nodes[i];
+                    n.round = rejoin;
+                    n.resumed_at = rejoin;
+                    n.trained = None;
+                    // Invalidate any pre-crash in-flight completion even
+                    // when the rejoin round equals the crash-time round.
+                    n.seq += 1;
+                    n.inbox.retain(|&k, _| k >= rejoin);
+                }
+                if !ctx.round_budget_exceeded(rejoin) {
+                    self.start_training(ctx, ev.node);
+                }
+            }
         }
     }
 
@@ -304,6 +387,8 @@ impl DsgdSession {
                 model: init.clone(),
                 trained: None,
                 inbox: HashMap::new(),
+                resumed_at: 0,
+                seq: 0,
             })
             .collect();
         let hcfg = cfg.harness_config();
@@ -312,6 +397,7 @@ impl DsgdSession {
             graph: OnePeerExpGraph::new(n as u32),
             nodes,
             live: LivenessMirror::all_live(n),
+            top_round: 1,
             sizes: SizeModel::default(),
         };
         DsgdSession {
@@ -371,14 +457,16 @@ impl SessionBuilder for DsgdBuilder {
         churn: ChurnSchedule,
     ) -> Result<Box<dyn Session>> {
         let n = spec.resolved_nodes()?;
-        // Crashes and graceful leaves are tolerated (the pairwise barrier
-        // skips dead trainers); joins are not — the one-peer exponential
-        // graph is fixed at n nodes.
+        // Crashes, graceful leaves, and recoveries are tolerated (the
+        // pairwise barrier skips dead or round-skipping trainers); joins
+        // of fresh ids are not — the one-peer exponential graph is fixed
+        // at n nodes. This admits availability-compiled schedules, which
+        // emit only Crash/Recover over the initial population.
         for e in churn.events() {
             anyhow::ensure!(
-                matches!(e.kind, ChurnKind::Crash | ChurnKind::Leave),
-                "d-sgd supports only crash/leave churn (its fixed one-peer \
-                 topology cannot admit joiners)"
+                matches!(e.kind, ChurnKind::Crash | ChurnKind::Leave | ChurnKind::Recover),
+                "d-sgd supports only crash/leave/recover churn (its fixed \
+                 one-peer topology cannot admit fresh joiners)"
             );
             anyhow::ensure!(
                 (e.node as usize) < n,
@@ -516,6 +604,75 @@ mod tests {
         sorted.sort_unstable();
         sorted.dedup();
         assert_eq!(rounds, sorted, "trace not strictly monotone: {rounds:?}");
+    }
+
+    #[test]
+    fn crashed_node_recovers_and_rejoins_the_barrier() {
+        use crate::sim::{ChurnEvent, ChurnKind};
+        // Node 3 crashes early and recovers mid-run (the availability
+        // model's crash/recover shape). The barrier must not deadlock in
+        // either direction: waiters skip the rounds node 3 missed, and
+        // node 3 rejoins AT the training frontier with a barrier-free
+        // first round instead of waiting for a round model that was
+        // dropped while it was dead.
+        let mk = || {
+            let churn = ChurnSchedule::new(vec![
+                ChurnEvent { at: SimTime::from_secs_f64(10.0), node: 3, kind: ChurnKind::Crash },
+                ChurnEvent {
+                    at: SimTime::from_secs_f64(40.0),
+                    node: 3,
+                    kind: ChurnKind::Recover,
+                },
+            ]);
+            let cfg = DsgdConfig {
+                max_time: SimTime::from_secs_f64(600.0),
+                max_rounds: 40,
+                eval_interval: SimTime::from_secs_f64(10.0),
+                ..Default::default()
+            };
+            session_with_churn(8, cfg, churn).run()
+        };
+        let (m, traffic) = mk();
+        // final_round is the min over LIVE nodes, so a recovered node
+        // stuck at its crash-time round would pin it low.
+        assert!(m.final_round >= 25, "stalled at round {}", m.final_round);
+        let late = m.round_starts.iter().filter(|&&(_, t)| t > 50.0).count();
+        assert!(late > 3, "no progress after the recovery: {late}");
+        assert!(traffic.is_conserved());
+        // Deterministic replay, monotone trace — same bar as the other
+        // churn sessions.
+        let (b, tb) = mk();
+        assert_eq!(m.events, b.events);
+        assert_eq!(m.final_round, b.final_round);
+        assert_eq!(traffic.total(), tb.total());
+        let rounds: Vec<Round> = m.round_starts.iter().map(|&(r, _)| r).collect();
+        let mut sorted = rounds.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(rounds, sorted, "trace not strictly monotone: {rounds:?}");
+    }
+
+    #[test]
+    fn builder_accepts_recover_but_rejects_fresh_joins() {
+        use crate::sim::{ChurnEvent, ChurnKind};
+        let mut spec = ScenarioSpec::new("mock", "dsgd");
+        spec.population.nodes = 8;
+        spec.run.max_time_s = 30.0;
+        let recover = ChurnSchedule::new(vec![
+            ChurnEvent { at: SimTime::from_secs_f64(2.0), node: 3, kind: ChurnKind::Crash },
+            ChurnEvent { at: SimTime::from_secs_f64(5.0), node: 3, kind: ChurnKind::Recover },
+        ]);
+        assert!(DsgdBuilder.build(&spec, None, recover).is_ok());
+        let join = ChurnSchedule::new(vec![ChurnEvent {
+            at: SimTime::from_secs_f64(2.0),
+            node: 9,
+            kind: ChurnKind::Join,
+        }]);
+        let err = DsgdBuilder
+            .build(&spec, None, join)
+            .err()
+            .expect("fresh join must be rejected");
+        assert!(err.to_string().contains("fresh joiners"), "{err:#}");
     }
 
     #[test]

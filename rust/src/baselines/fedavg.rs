@@ -16,7 +16,10 @@ use crate::sim::{ChurnSchedule, SimTime};
 /// single fixed aggregator at the best-connected node, full success
 /// fraction, and no failure-detection machinery. The server's unlimited
 /// bandwidth is applied by `ModestSession::new` as a per-node capacity
-/// override on the `NetworkFabric`.
+/// override on the `NetworkFabric`. The per-round participant draw goes
+/// through the harness `Population` (see `modest::session`), so a churned
+/// population — e.g. one driven by a `population.availability` section —
+/// samples only live clients without materializing a candidate list.
 pub fn fedavg_config(base: &ModestConfig, latency: &LatencyMatrix, n: usize) -> ModestConfig {
     let server = latency.best_connected(n);
     ModestConfig {

@@ -108,11 +108,13 @@ impl GossipProtocol {
         let model_b = ctx.task.model_bytes();
         let total = self.sizes.model_transfer_bytes(model_b, 0);
         let parts = [(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)];
-        // `Ctx::sample_peers` owns the all-alive fast path (sampled indices
-        // map straight to peer ids — under `sampling: v2` the whole fan-out
-        // is O(fanout)) and draws the identical `sample_indices(m, k)` call
-        // either way, so the RNG stream — and the session fingerprint — are
-        // unchanged from the pre-helper code.
+        // `Ctx::sample_peers` never materializes a peer list: all-alive
+        // tables map sampled indices straight to peer ids, churned tables
+        // map sampled alive-ranks through the Population's Fenwick index
+        // (O(fanout · log n) under `sampling: v2`). Both draw the
+        // identical `sample_indices(m, k)` call, so the RNG stream — and
+        // the session fingerprint — are unchanged from the pre-helper
+        // code.
         for to in ctx.sample_peers(from, self.cfg.fanout) {
             ctx.send(from, to, &parts, GossipMsg { model: model.clone() });
         }
@@ -199,10 +201,11 @@ impl Protocol for GossipProtocol {
         self.start_training(ctx, node);
     }
 
-    /// Scripted churn (ROADMAP item: gossip used to reject churn scripts).
+    /// Scripted churn (ROADMAP item: gossip used to reject churn scripts),
+    /// including availability-compiled crash/recover cycles.
     /// Crashes/leaves only flip the liveness mirror — the harness already
     /// drops the dead node's in-flight deliveries and pending train
-    /// completions, and `alive_peers` excludes it from future fan-outs.
+    /// completions, and `sample_peers` excludes it from future fan-outs.
     /// Joins/recoveries bump the local epoch (invalidating any stale
     /// pre-crash completion) and restart training.
     fn on_churn(&mut self, ctx: &mut Ctx<'_, GossipMsg>, ev: ChurnEvent) {

@@ -83,15 +83,25 @@ fn cmd_run(args: &Args) -> Result<()> {
     let mut spec = match args.get_opt("config") {
         Some(path) => {
             let mut s = ScenarioSpec::from_json(&std::fs::read_to_string(&path)?)?;
-            // Relative trace paths resolve against the config file's
-            // directory, so scenario presets work from any cwd.
-            if let Some(tf) = &s.network.trace_file {
+            // Relative trace paths (bandwidth and availability) resolve
+            // against the config file's directory, so scenario presets
+            // work from any cwd.
+            let resolve = |tf: &str| -> Option<String> {
                 let tf_path = std::path::Path::new(tf);
                 if tf_path.is_relative() {
-                    if let Some(dir) = std::path::Path::new(&path).parent() {
-                        s.network.trace_file =
-                            Some(dir.join(tf_path).to_string_lossy().into_owned());
-                    }
+                    std::path::Path::new(&path)
+                        .parent()
+                        .map(|dir| dir.join(tf_path).to_string_lossy().into_owned())
+                } else {
+                    None
+                }
+            };
+            if let Some(resolved) = s.network.trace_file.as_deref().and_then(resolve) {
+                s.network.trace_file = Some(resolved);
+            }
+            if let Some(av) = &mut s.population.availability {
+                if let Some(resolved) = av.trace_file.as_deref().and_then(resolve) {
+                    av.trace_file = Some(resolved);
                 }
             }
             s

@@ -176,32 +176,18 @@ impl ModestProtocol {
                 Purpose::Aggregators => vec![server],
                 Purpose::Participants => {
                     let mut rng = SimRng::new(self.local_seed(node, round) ^ 0xfeda);
-                    let n_all = self.nodes.len();
-                    // All-alive fast path: the candidate set is every id
-                    // but the server, so `sample_indices_excluding` maps
-                    // picks straight to node ids — no O(n) candidate list
-                    // per round, identical RNG stream to the materialized
-                    // list below.
-                    if ctx.alive_count() == n_all && (server as usize) < n_all {
-                        rng.sample_indices_excluding(
-                            ctx.sampling(),
-                            n_all,
-                            server as usize,
-                            need,
-                        )
-                        .into_iter()
-                        .map(|i| i as NodeId)
-                        .collect()
-                    } else {
-                        let alive: Vec<NodeId> = (0..n_all as NodeId)
-                            .filter(|&j| ctx.is_alive(j) && j != server)
-                            .collect();
-                        let k = need.min(alive.len());
-                        rng.sample_indices_versioned(ctx.sampling(), alive.len(), k)
-                            .into_iter()
-                            .map(|i| alive[i])
-                            .collect()
-                    }
+                    // The harness's Population owns both draw paths: all
+                    // alive maps sampled indices straight to node ids, a
+                    // churned table maps sampled alive-ranks through the
+                    // Fenwick `select` — either way no O(n) candidate
+                    // list per round, and the RNG stream is identical to
+                    // sampling from the old materialized alive list.
+                    ctx.population().sample_alive_excluding(
+                        &mut rng,
+                        ctx.sampling(),
+                        server as usize,
+                        need,
+                    )
                 }
             };
             self.dispatch_payload(ctx, node, round, purpose, payload, &targets);
@@ -360,6 +346,19 @@ impl ModestProtocol {
         }
     }
 
+    /// The FedAvg emulation cannot outlive its fixed aggregator: there is
+    /// no failure detection and no re-election (§4.3 strips the sampling
+    /// machinery), so once the server is down every upload is dropped at
+    /// dispatch and no round can ever complete. Finish the session instead
+    /// of idling through probe ticks to `max_time` — availability-compiled
+    /// churn makes a server crash a routine scenario, not a scripting
+    /// error. (MoDeST proper has no such single point of failure.)
+    fn finish_if_fedavg_server_died(&self, ctx: &mut Ctx<'_, Msg>, died: NodeId) {
+        if self.cfg.fedavg_server == Some(died) {
+            ctx.finish();
+        }
+    }
+
     /// §3.5 auto-rejoin: a reliable node that has not been activated for
     /// more than `Δk * Δt̄` (average round time) re-advertises itself, so a
     /// falsely-suspected node re-enters the candidate set.
@@ -389,9 +388,10 @@ impl ModestProtocol {
                 n.last_active = now; // throttle: try again after another horizon
                 c
             };
-            // `Ctx::sample_peers` = alive_peers + versioned sample, with
-            // the all-alive fast path (no peer-list materialization);
-            // RNG-stream identical to the pre-helper code under v1.
+            // `Ctx::sample_peers` draws the alive peer set through the
+            // Population (all-alive fast path or Fenwick rank/select; no
+            // peer-list materialization on either path); RNG-stream
+            // identical to the pre-helper code under v1.
             for p in ctx.sample_peers(node, self.cfg.s) {
                 self.send(ctx, node, p, Msg::Joined { node, counter: c });
             }
@@ -501,13 +501,24 @@ impl Protocol for ModestProtocol {
                 for p in ctx.sample_peers(ev.node, self.cfg.s) {
                     self.send(ctx, ev.node, p, Msg::Joined { node: ev.node, counter: c });
                 }
-                let now_s = ctx.now().as_secs_f64();
-                self.join_watch.push((ev.node, now_s));
-                ctx.metrics.joins.push(JoinTrace {
-                    joiner: ev.node,
-                    joined_at_s: now_s,
-                    missing: Vec::new(),
-                });
+                // Fig. 5 join-propagation watches track nodes ENTERING the
+                // system (ids beyond the initial population), once each.
+                // An availability Recover of an initial node is routine
+                // churn, not a join experiment — and duplicate watches
+                // would both corrupt the traces (only the first per
+                // joiner ever accumulates samples) and grow the per-probe
+                // scan without bound under periodic availability churn.
+                if ev.node as usize >= self.initial_nodes
+                    && !ctx.metrics.joins.iter().any(|t| t.joiner == ev.node)
+                {
+                    let now_s = ctx.now().as_secs_f64();
+                    self.join_watch.push((ev.node, now_s));
+                    ctx.metrics.joins.push(JoinTrace {
+                        joiner: ev.node,
+                        joined_at_s: now_s,
+                        missing: Vec::new(),
+                    });
+                }
             }
             ChurnKind::Leave => {
                 let c = {
@@ -520,17 +531,24 @@ impl Protocol for ModestProtocol {
                 for p in ctx.sample_peers(ev.node, self.cfg.s) {
                     self.send(ctx, ev.node, p, Msg::Left { node: ev.node, counter: c });
                 }
+                self.finish_if_fedavg_server_died(ctx, ev.node);
             }
-            ChurnKind::Crash => {}
+            ChurnKind::Crash => {
+                self.finish_if_fedavg_server_died(ctx, ev.node);
+            }
         }
     }
 
     fn on_probe(&mut self, ctx: &mut Ctx<'_, Msg>) {
         self.auto_rejoin(ctx);
         // Join-propagation traces (Fig. 5): count initial-population nodes
-        // that still don't know each watched joiner.
+        // that still don't know each watched joiner. A fully-propagated
+        // watch is retired — `full_propagation_s` reads the FIRST zero
+        // sample, so the trace is complete and further O(n) scans for it
+        // would be pure waste.
         let now_s = ctx.now().as_secs_f64();
-        for w in 0..self.join_watch.len() {
+        let mut w = 0;
+        while w < self.join_watch.len() {
             let (joiner, _) = self.join_watch[w];
             let missing = (0..self.initial_nodes)
                 .filter(|&i| {
@@ -539,6 +557,11 @@ impl Protocol for ModestProtocol {
                 .count();
             if let Some(trace) = ctx.metrics.joins.iter_mut().find(|t| t.joiner == joiner) {
                 trace.missing.push((now_s, missing));
+            }
+            if missing == 0 {
+                self.join_watch.swap_remove(w);
+            } else {
+                w += 1;
             }
         }
     }

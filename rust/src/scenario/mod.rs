@@ -20,10 +20,12 @@
 //! outside their own module and one registration line in
 //! [`ProtocolRegistry::builtins`].
 
+pub mod availability;
 pub mod network;
 pub mod registry;
 pub mod spec;
 
+pub use availability::{AvailabilityModel, AvailabilitySpec};
 pub use network::{LatencySpec, NetworkSpec, TierSpec};
 pub use registry::{
     run_scenario, ProtocolMeta, ProtocolRegistry, Session, SessionBuilder,

@@ -310,39 +310,23 @@ fn load_trace(path: &str) -> Result<BandwidthConfig> {
     parse_trace(&text).with_context(|| format!("parsing bandwidth trace {path:?}"))
 }
 
-/// CSV body: `up_mbps[,down_mbps]` per node, `#` comments, optional header.
+/// CSV body: `up_mbps[,down_mbps]` per node, with the shared trace
+/// envelope (`#` comments, optional alphabetic header tolerated only
+/// before the first data row — so a typoed first data row errors instead
+/// of silently shifting every node's capacities by one; line-numbered
+/// errors): [`crate::util::parse_trace_rows`].
 fn parse_trace(text: &str) -> Result<BandwidthConfig> {
     let mut up_bps = Vec::new();
     let mut down_bps = Vec::new();
-    for (lineno, raw) in text.lines().enumerate() {
-        let line = raw.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        // Parse-first so numeric rows with letters in them ("1e1,1e2")
-        // stay data. An unparseable row is tolerated as a header only
-        // before the first data row AND when it leads with a letter
-        // ("up_mbps,down_mbps") — a typoed first data row ("1O.0,100")
-        // must error, not silently shift every node's capacities by one.
-        let row = parse_trace_row(line);
-        let (up, down) = match row {
-            Ok(pair) => pair,
-            Err(_)
-                if up_bps.is_empty()
-                    && line.chars().next().is_some_and(|c| c.is_ascii_alphabetic()) =>
-            {
-                continue
-            }
-            Err(e) => bail!("trace line {}: {e}", lineno + 1),
-        };
+    crate::util::parse_trace_rows(text, parse_trace_row, |lineno, (up, down)| {
         anyhow::ensure!(
             up >= 0.0 && down >= 0.0,
-            "negative capacity on trace line {}",
-            lineno + 1
+            "negative capacity on trace line {lineno}"
         );
         up_bps.push(up * 1e6);
         down_bps.push(down * 1e6);
-    }
+        Ok(())
+    })?;
     anyhow::ensure!(!up_bps.is_empty(), "trace holds no capacity rows");
     Ok(BandwidthConfig::PerNode { up_bps, down_bps })
 }

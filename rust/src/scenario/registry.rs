@@ -144,6 +144,14 @@ impl ProtocolRegistry {
     /// `spec.protocol.name`. Protocol-specific `params` are validated
     /// against the builder's declared `default_params`, so a typoed
     /// `fanuot` fails loudly like every other unknown config key.
+    ///
+    /// Churn assembly happens here, once for every protocol: the
+    /// `population.availability` section (if any) compiles into a churn
+    /// schedule and merges with the caller's programmatic script
+    /// (caller's events first at same-instant ties), and the combined
+    /// schedule is validated against the population —
+    /// [`ScenarioSpec::validate_churn`] rejects scripts that crash/leave a
+    /// node id that never joins, before any session state is built.
     pub fn build(
         &self,
         spec: &ScenarioSpec,
@@ -166,6 +174,9 @@ impl ProtocolRegistry {
                 bail!("unknown {} param {key:?} (known params: {known})", meta.name);
             }
         }
+        let availability = spec.availability_churn()?;
+        let churn = if availability.is_empty() { churn } else { churn.merged(availability) };
+        spec.validate_churn(&churn)?;
         builder.build(spec, runtime, churn)
     }
 }

@@ -21,9 +21,10 @@ use crate::config::preset;
 use crate::learning::{ComputeModel, MockTask, Task};
 use crate::net::{LatencyMatrix, LatencyParams, NetworkFabric};
 use crate::runtime::XlaRuntime;
-use crate::sim::{SamplingVersion, SimRng};
+use crate::sim::{ChurnKind, ChurnSchedule, SamplingVersion, SimRng};
 use crate::util::Json;
 
+use super::availability::AvailabilitySpec;
 use super::network::NetworkSpec;
 
 /// The `workload` section: which learning task the session trains.
@@ -42,7 +43,8 @@ impl Default for WorkloadSpec {
     }
 }
 
-/// The `population` section: node count and compute heterogeneity.
+/// The `population` section: node count, compute heterogeneity, and
+/// (optionally) trace-driven or synthetic node availability.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PopulationSpec {
     /// Explicit node count; 0 = paper preset count (times `scale`).
@@ -53,11 +55,22 @@ pub struct PopulationSpec {
     pub base_batch_s: f64,
     /// Compute heterogeneity (lognormal sigma; 0 = uniform).
     pub hetero_sigma: f64,
+    /// Node availability over time (diurnal sine / step / CSV trace),
+    /// compiled into a churn schedule at session build time; absent =
+    /// everyone stays up unless a programmatic churn script says
+    /// otherwise.
+    pub availability: Option<AvailabilitySpec>,
 }
 
 impl Default for PopulationSpec {
     fn default() -> Self {
-        PopulationSpec { nodes: 0, scale: 1.0, base_batch_s: 0.05, hetero_sigma: 0.35 }
+        PopulationSpec {
+            nodes: 0,
+            scale: 1.0,
+            base_batch_s: 0.05,
+            hetero_sigma: 0.35,
+            availability: None,
+        }
     }
 }
 
@@ -186,6 +199,13 @@ impl ScenarioSpec {
                             "scale" => spec.population.scale = val.as_f64()?,
                             "base_batch_s" => spec.population.base_batch_s = val.as_f64()?,
                             "hetero_sigma" => spec.population.hetero_sigma = val.as_f64()?,
+                            "availability" => {
+                                spec.population.availability = if *val == Json::Null {
+                                    None
+                                } else {
+                                    Some(AvailabilitySpec::from_json(val)?)
+                                }
+                            }
                             other => bail!("unknown population key {other:?}"),
                         }
                     }
@@ -295,6 +315,13 @@ impl ScenarioSpec {
                     ("scale", Json::Num(self.population.scale)),
                     ("base_batch_s", Json::Num(self.population.base_batch_s)),
                     ("hetero_sigma", Json::Num(self.population.hetero_sigma)),
+                    (
+                        "availability",
+                        match &self.population.availability {
+                            Some(a) => a.to_json(),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
             ("network", self.network.to_json()),
@@ -357,6 +384,50 @@ impl ScenarioSpec {
 
     pub fn resolved_a(&self) -> Result<usize> {
         Ok(if self.protocol.a > 0 { self.protocol.a } else { preset(&self.workload.dataset)?.a })
+    }
+
+    // -------------------------------------------------------- churn wiring
+
+    /// Compile the `population.availability` section (if any) into a churn
+    /// schedule over this scenario's resolved population and time budget.
+    /// Deterministic; uses its own labelled seed stream, so adding an
+    /// availability section never perturbs the session RNG.
+    pub fn availability_churn(&self) -> Result<ChurnSchedule> {
+        match &self.population.availability {
+            Some(av) => av.compile(self.resolved_nodes()?, self.run.seed, self.run.max_time_s),
+            None => Ok(ChurnSchedule::empty()),
+        }
+    }
+
+    /// Reject churn scripts that crash/leave a node id that never joins
+    /// this scenario's population — at spec level, with a pointed message,
+    /// instead of surfacing as a runtime protocol error (or silent phantom
+    /// dead node) deep inside the session. Ids beyond the initial
+    /// population are legitimate only when the same script also
+    /// joins/recovers them at some point.
+    pub fn validate_churn(&self, churn: &ChurnSchedule) -> Result<()> {
+        let n = self.resolved_nodes()?;
+        // One pass to collect the ids the script legitimately introduces,
+        // so join-heavy scale scripts validate in O(E) instead of
+        // rescanning the whole event list per out-of-population event.
+        let joiners: std::collections::HashSet<crate::NodeId> = churn
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, ChurnKind::Join | ChurnKind::Recover))
+            .map(|e| e.node)
+            .collect();
+        for e in churn.events() {
+            if matches!(e.kind, ChurnKind::Crash | ChurnKind::Leave) && (e.node as usize) >= n {
+                anyhow::ensure!(
+                    joiners.contains(&e.node),
+                    "churn script applies {:?} to node {} which never joins (initial \
+                     population {n}, and the script has no Join/Recover event for it)",
+                    e.kind,
+                    e.node
+                );
+            }
+        }
+        Ok(())
     }
 
     // ------------------------------------------------------------ builders
@@ -682,6 +753,57 @@ mod tests {
         let c = mk(1, None);
         let d = mk(2, None);
         assert!((0..16u32).any(|i| c.one_way(0, i) != d.one_way(0, i)));
+    }
+
+    #[test]
+    fn availability_parses_nested_and_compiles() {
+        let spec = ScenarioSpec::from_json(
+            r#"{
+                "workload": {"dataset": "mock"},
+                "population": {"nodes": 40, "availability": {
+                    "model": "step", "amplitude": 0.5, "period_s": 60.0, "seed": 2}},
+                "run": {"max_time_s": 100.0}
+            }"#,
+        )
+        .unwrap();
+        let av = spec.population.availability.as_ref().expect("availability parsed");
+        assert_eq!(av.period_s, 60.0);
+        let churn = spec.availability_churn().unwrap();
+        // One down-step at t = 30 for 20 of 40 nodes; the up-step at 60
+        // and the next down-step at 90 are also inside the horizon.
+        assert!(!churn.is_empty());
+        assert!(churn.events().iter().all(|e| (e.node as usize) < 40));
+        // Explicit null and absence both mean "no availability".
+        let spec =
+            ScenarioSpec::from_json(r#"{"population": {"availability": null}}"#).unwrap();
+        assert!(spec.population.availability.is_none());
+        assert!(spec.availability_churn().unwrap().is_empty());
+        // Bad sections fail at parse.
+        assert!(ScenarioSpec::from_json(
+            r#"{"population": {"availability": {"model": "nope"}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn validate_churn_rejects_never_joining_targets() {
+        use crate::sim::{ChurnEvent, ChurnKind, SimTime};
+        let mut spec = ScenarioSpec::new("mock", "gossip");
+        spec.population.nodes = 10;
+        let orphan = ChurnSchedule::new(vec![ChurnEvent {
+            at: SimTime::from_secs_f64(1.0),
+            node: 42,
+            kind: ChurnKind::Leave,
+        }]);
+        let err = spec.validate_churn(&orphan).unwrap_err();
+        assert!(err.to_string().contains("never joins"), "{err:#}");
+        // In-population targets and joined-then-crashed ids are fine.
+        let ok = ChurnSchedule::new(vec![
+            ChurnEvent { at: SimTime::from_secs_f64(1.0), node: 3, kind: ChurnKind::Crash },
+            ChurnEvent { at: SimTime::from_secs_f64(2.0), node: 42, kind: ChurnKind::Join },
+            ChurnEvent { at: SimTime::from_secs_f64(3.0), node: 42, kind: ChurnKind::Crash },
+        ]);
+        assert!(spec.validate_churn(&ok).is_ok());
     }
 
     #[test]

@@ -36,6 +36,18 @@ pub struct ChurnSchedule {
 }
 
 impl ChurnSchedule {
+    /// Build a schedule from `events`, sorted by `(at, insertion seq)`.
+    ///
+    /// Tie-order contract: events at the *same instant* keep the order the
+    /// caller supplied them in — `sort_by_key` is a stable sort (a
+    /// documented guarantee of the std sort, relied on here; the tie-order
+    /// tests below pin it), so the effective key is `(at, insertion seq)`
+    /// without materializing the index. The harness schedules events into
+    /// the DES queue in schedule order — whose pop order is
+    /// `(time, insertion seq)` — so same-instant churn applies in exactly
+    /// this order. That makes availability-generated schedules (which
+    /// routinely emit many events at one instant) reproducible
+    /// byte-for-byte across builds and platforms.
     pub fn new(mut events: Vec<ChurnEvent>) -> Self {
         events.sort_by_key(|e| e.at);
         ChurnSchedule { events }
@@ -116,7 +128,11 @@ impl ChurnSchedule {
         ChurnSchedule::new(events)
     }
 
-    /// Merge two schedules, keeping global time order.
+    /// Merge two schedules, keeping global time order. Same-instant ties
+    /// resolve to `self`'s events before `other`'s (the `(at, insertion
+    /// seq)` contract of [`ChurnSchedule::new`] applied to the
+    /// concatenation), so merging a hand-written script with an
+    /// availability-compiled one is deterministic.
     pub fn merged(self, other: ChurnSchedule) -> ChurnSchedule {
         let mut all = self.events;
         all.extend(other.events);
@@ -173,6 +189,38 @@ mod tests {
             ChurnEvent { at: SimTime::from_millis(10), node: 2, kind: ChurnKind::Join },
         ]);
         assert!(s.events()[0].at < s.events()[1].at);
+    }
+
+    #[test]
+    fn same_instant_events_keep_insertion_order() {
+        // The (at, insertion seq) tie-order contract: three events pinned
+        // to one instant must come out exactly as supplied, after any
+        // earlier-timed event.
+        let t = SimTime::from_millis(10);
+        let s = ChurnSchedule::new(vec![
+            ChurnEvent { at: t, node: 5, kind: ChurnKind::Crash },
+            ChurnEvent { at: t, node: 2, kind: ChurnKind::Join },
+            ChurnEvent { at: SimTime::from_millis(5), node: 9, kind: ChurnKind::Leave },
+            ChurnEvent { at: t, node: 1, kind: ChurnKind::Recover },
+        ]);
+        let order: Vec<(u64, NodeId)> = s.events().iter().map(|e| (e.at.0, e.node)).collect();
+        assert_eq!(order, vec![(5_000, 9), (10_000, 5), (10_000, 2), (10_000, 1)]);
+    }
+
+    #[test]
+    fn merged_ties_keep_self_before_other() {
+        let t = SimTime::from_millis(30);
+        let a = ChurnSchedule::new(vec![
+            ChurnEvent { at: t, node: 0, kind: ChurnKind::Crash },
+            ChurnEvent { at: t, node: 1, kind: ChurnKind::Crash },
+        ]);
+        let b = ChurnSchedule::new(vec![
+            ChurnEvent { at: t, node: 2, kind: ChurnKind::Recover },
+            ChurnEvent { at: SimTime::from_millis(1), node: 3, kind: ChurnKind::Join },
+        ]);
+        let m = a.merged(b);
+        let nodes: Vec<NodeId> = m.events().iter().map(|e| e.node).collect();
+        assert_eq!(nodes, vec![3, 0, 1, 2], "self's same-instant events come first");
     }
 
     #[test]

@@ -10,7 +10,8 @@
 //!
 //! The harness owns:
 //! * the [`EventQueue`] and the virtual clock,
-//! * the node liveness table ([`Status`]) and churn-script application,
+//! * the node liveness subsystem ([`Population`]: [`Status`] table, O(1)
+//!   alive counter, Fenwick alive index) and churn-script application,
 //! * the session RNG,
 //! * the [`NetworkFabric`] (latency + per-node capacity + FIFO contention),
 //! * the learning [`Task`] and [`ComputeModel`],
@@ -27,18 +28,11 @@ use crate::{NodeId, Round};
 
 use super::churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 use super::engine::EventQueue;
+use super::population::Population;
 use super::rng::{SamplingVersion, SimRng};
 use super::time::SimTime;
 
-/// Liveness status of a simulated node process.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Status {
-    Alive,
-    /// Crashed or left: the harness drops its deliveries and timers.
-    Dead,
-    /// Scripted to join later; does not exist yet.
-    NotJoined,
-}
+pub use super::population::Status;
 
 /// Session-plumbing knobs shared by every protocol.
 #[derive(Debug, Clone)]
@@ -88,8 +82,7 @@ pub struct Ctx<'a, M> {
     pub compute: &'a ComputeModel,
     pub rng: &'a mut SimRng,
     pub metrics: &'a mut SessionMetrics,
-    status: &'a [Status],
-    alive: usize,
+    pop: &'a Population,
     max_rounds: Round,
     sampling: SamplingVersion,
     done: &'a mut bool,
@@ -102,36 +95,26 @@ impl<M> Ctx<'_, M> {
     }
 
     pub fn is_alive(&self, node: NodeId) -> bool {
-        self.status.get(node as usize) == Some(&Status::Alive)
+        self.pop.is_alive(node as usize)
     }
 
     /// Size of the node table (initial population + scripted joiners).
     pub fn n_nodes(&self) -> usize {
-        self.status.len()
+        self.pop.len()
     }
 
     /// Number of currently alive nodes (maintained by the harness, O(1)).
     pub fn alive_count(&self) -> usize {
-        self.alive
+        self.pop.alive_count()
     }
 
-    /// All alive nodes except `of` (bootstrap/advertisement peer sets).
-    ///
-    /// Fast path for the common churn-free large-population case: when the
-    /// whole table is alive the peer set is just "every id but `of`", so
-    /// the 10k-node gossip fan-out skips the per-call liveness scan. Both
-    /// paths produce the identical ascending-id vector.
-    pub fn alive_peers(&self, of: NodeId) -> Vec<NodeId> {
-        let n = self.status.len();
-        if self.alive == n && (of as usize) < n {
-            let mut peers = Vec::with_capacity(n - 1);
-            peers.extend(0..of);
-            peers.extend(of + 1..n as NodeId);
-            return peers;
-        }
-        (0..n as NodeId)
-            .filter(|&j| j != of && self.status[j as usize] == Status::Alive)
-            .collect()
+    /// The harness's consolidated liveness subsystem (status table, alive
+    /// counter, Fenwick alive index). Protocols that sample from their own
+    /// labelled RNG streams (e.g. the FedAvg participant draw) go through
+    /// this to get the same zero-materialization path as
+    /// [`Ctx::sample_peers`].
+    pub fn population(&self) -> &Population {
+        self.pop
     }
 
     /// The sampling-stream version this session runs under.
@@ -143,32 +126,17 @@ impl<M> Ctx<'_, M> {
     /// (excluding `of` itself) from the session RNG, under the session's
     /// [`SamplingVersion`].
     ///
-    /// All-alive fast path (every churn-free session): the peer set is
-    /// "each id but `of`", so sampled indices map straight to node ids and
-    /// no peer list is materialized — with `V2Partial` a fan-out is O(k)
-    /// end to end. Both paths draw the identical `sample_indices(m, k)`
-    /// call with `m` = the alive-peer count, so the RNG stream — and the
-    /// session fingerprint — never depends on which path ran.
+    /// Delegates to [`Population::sample_alive_excluding`]: the all-alive
+    /// fast path maps sampled indices straight to node ids, and the
+    /// churned path maps sampled alive-ranks through the Fenwick `select`
+    /// — O(k log n) under `V2Partial`, with zero peer-list
+    /// materialization on either path. Both draw the identical
+    /// `sample_indices(m, k)` call with `m` = the alive-peer count, so
+    /// the RNG stream — and the session fingerprint — never depends on
+    /// which path ran.
     pub fn sample_peers(&mut self, of: NodeId, k: usize) -> Vec<NodeId> {
-        let n = self.status.len();
-        if self.alive == n && (of as usize) < n {
-            return self
-                .rng
-                .sample_indices_excluding(self.sampling, n, of as usize, k)
-                .into_iter()
-                .map(|p| p as NodeId)
-                .collect();
-        }
-        let peers = self.alive_peers(of);
-        if peers.is_empty() {
-            return Vec::new();
-        }
-        let k = k.min(peers.len());
-        self.rng
-            .sample_indices_versioned(self.sampling, peers.len(), k)
-            .into_iter()
-            .map(|p| peers[p])
-            .collect()
+        self.pop
+            .sample_alive_excluding(self.rng, self.sampling, of as usize, k)
     }
 
     /// Send `msg` from `from` to `to`, charging `parts` bytes against the
@@ -273,8 +241,7 @@ macro_rules! harness_ctx {
             compute: &$h.compute,
             rng: &mut $h.rng,
             metrics: &mut $h.metrics,
-            status: &$h.status,
-            alive: $h.alive,
+            pop: &$h.population,
             max_rounds: $h.cfg.max_rounds,
             sampling: $h.cfg.sampling,
             done: &mut $h.done,
@@ -289,9 +256,9 @@ pub struct SimHarness<P: Protocol> {
     protocol: P,
     queue: EventQueue<HarnessEvent<P::Msg>>,
     fabric: NetworkFabric,
-    status: Vec<Status>,
-    /// Count of `Status::Alive` entries (kept in sync by churn handling).
-    alive: usize,
+    /// The liveness subsystem: status table, O(1) alive counter, and the
+    /// Fenwick alive index behind [`Ctx::sample_peers`].
+    population: Population,
     task: Box<dyn Task>,
     compute: ComputeModel,
     churn: ChurnSchedule,
@@ -314,11 +281,7 @@ impl<P: Protocol> SimHarness<P> {
         mut fabric: NetworkFabric,
         churn: ChurnSchedule,
     ) -> SimHarness<P> {
-        assert!(initial_alive <= total_nodes);
-        let mut status = vec![Status::NotJoined; total_nodes];
-        for s in status.iter_mut().take(initial_alive) {
-            *s = Status::Alive;
-        }
+        let population = Population::new(total_nodes, initial_alive);
         fabric.ensure_nodes(total_nodes);
         let rng = SimRng::new(cfg.seed ^ 0x5b_4841_524e_4553); // "HARNES"
         SimHarness {
@@ -326,8 +289,7 @@ impl<P: Protocol> SimHarness<P> {
             protocol,
             queue: EventQueue::new(),
             fabric,
-            status,
-            alive: initial_alive,
+            population,
             task,
             compute,
             churn,
@@ -349,40 +311,33 @@ impl<P: Protocol> SimHarness<P> {
     /// (a protocol bug) are treated as dead, so their events are dropped
     /// instead of panicking mid-run.
     fn is_alive(&self, node: NodeId) -> bool {
-        self.status.get(node as usize) == Some(&Status::Alive)
+        self.population.is_alive(node as usize)
     }
 
     fn handle_churn(&mut self, idx: usize) {
         let ev = self.churn.events()[idx];
         let i = ev.node as usize;
-        if i >= self.status.len() {
+        if i >= self.population.len() {
             return;
         }
         match ev.kind {
             ChurnKind::Join | ChurnKind::Recover => {
-                if self.status[i] != Status::Alive {
-                    self.alive += 1;
-                }
-                self.status[i] = Status::Alive;
+                self.population.mark_alive(i);
                 self.fabric.ensure_nodes(i + 1);
                 let mut ctx = harness_ctx!(self);
                 self.protocol.on_churn(&mut ctx, ev);
             }
             ChurnKind::Leave => {
-                if self.status[i] != Status::Alive {
+                if !self.population.is_alive(i) {
                     return;
                 }
                 // The node advertises `left` while still up, then dies.
                 let mut ctx = harness_ctx!(self);
                 self.protocol.on_churn(&mut ctx, ev);
-                self.status[i] = Status::Dead;
-                self.alive -= 1;
+                self.population.mark_dead(i);
             }
             ChurnKind::Crash => {
-                if self.status[i] == Status::Alive {
-                    self.alive -= 1;
-                }
-                self.status[i] = Status::Dead;
+                self.population.mark_dead(i);
                 let mut ctx = harness_ctx!(self);
                 self.protocol.on_churn(&mut ctx, ev);
             }
@@ -462,7 +417,7 @@ impl<P: Protocol> SimHarness<P> {
         self.metrics.final_round = self.protocol.final_round();
         self.metrics.duration_s = self.queue.now().as_secs_f64();
         self.metrics.events = self.queue.events_processed();
-        let nodes = self.status.len();
+        let nodes = self.population.len();
         let ledger = self.fabric.into_ledger();
         self.metrics.traffic = TrafficSummary::from_ledger(&ledger, nodes);
         (self.metrics, ledger)

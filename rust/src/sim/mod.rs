@@ -3,20 +3,23 @@
 //! The paper evaluates MoDeST by *simulating the passing of time* on top of
 //! a customized asyncio event loop (§4.2); this module is the rust
 //! equivalent: a virtual clock, a monotone event queue with deterministic
-//! tie-breaking, a seeded RNG, churn (join/crash) schedule generators, and
-//! — tying them together — the generic [`harness::SimHarness`] that drives
-//! any [`harness::Protocol`] over the shared substrate.
+//! tie-breaking, a seeded RNG, churn (join/crash) schedule generators, the
+//! consolidated [`population::Population`] liveness subsystem (status
+//! table, O(1) alive counter, Fenwick alive index for O(k log n) churned
+//! peer sampling), and — tying them together — the generic
+//! [`harness::SimHarness`] that drives any [`harness::Protocol`] over the
+//! shared substrate.
 
 pub mod churn;
 pub mod engine;
 pub mod harness;
-pub mod liveness;
+pub mod population;
 pub mod rng;
 pub mod time;
 
 pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent};
-pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness, Status};
-pub use liveness::LivenessMirror;
+pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness};
+pub use population::{LivenessMirror, Population, Status};
 pub use rng::{SamplingVersion, SimRng};
 pub use time::SimTime;

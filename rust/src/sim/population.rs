@@ -1,0 +1,602 @@
+//! The consolidated liveness subsystem: one source of truth for "who is
+//! alive right now".
+//!
+//! Before this module, aliveness was scattered across three places: the
+//! harness's `Vec<Status>` table + hand-maintained alive counter, the O(n)
+//! alive-peer materialization inside `Ctx::sample_peers`, and the
+//! protocol-side `LivenessMirror` bookkeeping. [`Population`] owns all of
+//! it: the [`Status`] table, the O(1) alive count, and a **Fenwick-tree
+//! alive index** supporting `rank`/`select` over alive node ids — which is
+//! what makes a churned fan-out O(k log n) with *zero* peer-list
+//! materialization ([`Population::sample_alive_excluding`]).
+//!
+//! Reproducibility contract: the churned sampling path draws the identical
+//! `sample_indices_versioned(alive_peer_count, k)` RNG stream the old
+//! materialize-then-index code drew, and maps each sampled *rank* to a node
+//! id through `select` — bit-for-bit the same peers, so every recorded
+//! same-seed churn fingerprint (gossip, D-SGD, MoDeST) replays unchanged.
+//! `tests/sampling_differential.rs` pins this against a materialized-list
+//! oracle.
+
+use crate::{NodeId, Round};
+
+use super::rng::{SamplingVersion, SimRng};
+
+/// Liveness status of a simulated node process.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Alive,
+    /// Crashed or left: the harness drops its deliveries and timers.
+    Dead,
+    /// Scripted to join later; does not exist yet.
+    NotJoined,
+}
+
+/// Status table + O(1) alive counter + Fenwick alive index.
+///
+/// The Fenwick tree stores one bit per node (1 = alive) as prefix-summable
+/// counts, giving O(log n) [`Population::rank`] (alive nodes below an id)
+/// and [`Population::select`] (the r-th smallest alive id). All mutation
+/// goes through [`Population::mark_alive`] / [`Population::mark_dead`], so
+/// table, counter, and index can never disagree.
+#[derive(Debug, Clone)]
+pub struct Population {
+    status: Vec<Status>,
+    /// 1-based Fenwick tree over alive flags (`tree[0]` unused).
+    tree: Vec<u32>,
+    alive: usize,
+}
+
+impl Population {
+    /// `total` node slots of which the first `initial_alive` start alive;
+    /// the rest are `NotJoined` placeholders for churn-scripted joiners.
+    pub fn new(total: usize, initial_alive: usize) -> Population {
+        assert!(initial_alive <= total, "{initial_alive} alive of {total}");
+        let mut status = vec![Status::NotJoined; total];
+        for s in status.iter_mut().take(initial_alive) {
+            *s = Status::Alive;
+        }
+        // O(n) in-place Fenwick build: each node's bit lands in tree[i],
+        // then i's finished total is pushed up to its parent once.
+        let mut tree = vec![0u32; total + 1];
+        for i in 1..=total {
+            if i - 1 < initial_alive {
+                tree[i] += 1;
+            }
+            let parent = i + (i & i.wrapping_neg());
+            if parent <= total {
+                let v = tree[i];
+                tree[parent] += v;
+            }
+        }
+        Population { status, tree, alive: initial_alive }
+    }
+
+    /// Size of the node table (initial population + scripted joiners).
+    pub fn len(&self) -> usize {
+        self.status.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.status.is_empty()
+    }
+
+    /// Number of currently alive nodes (O(1)).
+    pub fn alive_count(&self) -> usize {
+        self.alive
+    }
+
+    /// Ids outside the table count as not alive (same defensive contract
+    /// as harness event dispatch).
+    pub fn is_alive(&self, i: usize) -> bool {
+        self.status.get(i) == Some(&Status::Alive)
+    }
+
+    pub fn status(&self, i: usize) -> Option<Status> {
+        self.status.get(i).copied()
+    }
+
+    fn index_update(&mut self, i: usize, inc: bool) {
+        let mut i = i + 1;
+        while i < self.tree.len() {
+            if inc {
+                self.tree[i] += 1;
+            } else {
+                self.tree[i] -= 1;
+            }
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Mark `i` alive (Join/Recover). Returns whether the node was not
+    /// alive before; out-of-table ids are a no-op.
+    pub fn mark_alive(&mut self, i: usize) -> bool {
+        match self.status.get(i).copied() {
+            Some(Status::Alive) | None => false,
+            Some(_) => {
+                self.status[i] = Status::Alive;
+                self.alive += 1;
+                self.index_update(i, true);
+                true
+            }
+        }
+    }
+
+    /// Mark `i` dead (Crash/Leave — also turns a `NotJoined` placeholder
+    /// dead, matching the historical harness semantics). Returns whether
+    /// the node was alive before; out-of-table ids are a no-op.
+    pub fn mark_dead(&mut self, i: usize) -> bool {
+        match self.status.get(i).copied() {
+            None => false,
+            Some(Status::Alive) => {
+                self.status[i] = Status::Dead;
+                self.alive -= 1;
+                self.index_update(i, false);
+                true
+            }
+            Some(_) => {
+                self.status[i] = Status::Dead;
+                false
+            }
+        }
+    }
+
+    /// Number of alive node ids strictly below `i` (O(log n)).
+    pub fn rank(&self, i: usize) -> usize {
+        let mut i = i.min(self.status.len());
+        let mut sum = 0usize;
+        while i > 0 {
+            sum += self.tree[i] as usize;
+            i -= i & i.wrapping_neg();
+        }
+        sum
+    }
+
+    /// The `r`-th smallest alive node id, 0-based (O(log n)). Requires
+    /// `r < alive_count()`.
+    pub fn select(&self, r: usize) -> usize {
+        debug_assert!(r < self.alive, "select({r}) of {} alive", self.alive);
+        let n = self.status.len();
+        let mut pos = 0usize;
+        let mut rem = r;
+        // Binary descent over the implicit tree: at each step `tree[next]`
+        // is the alive count in (pos, next], so skipping it means the
+        // answer lies further right.
+        let mut step = n.next_power_of_two();
+        while step > 0 {
+            let next = pos + step;
+            if next <= n && (self.tree[next] as usize) <= rem {
+                pos = next;
+                rem -= self.tree[next] as usize;
+            }
+            step >>= 1;
+        }
+        pos
+    }
+
+    /// Lowest alive node id (`None` during a total outage) — the round
+    /// recorder role, O(log n) instead of an O(n) scan.
+    pub fn lowest_alive(&self) -> Option<usize> {
+        if self.alive == 0 {
+            None
+        } else {
+            Some(self.select(0))
+        }
+    }
+
+    /// All alive node ids, ascending (an explicitly materialized list —
+    /// inherently O(n); sampling paths never call this).
+    pub fn alive_ids(&self) -> Vec<usize> {
+        (0..self.status.len()).filter(|&i| self.is_alive(i)).collect()
+    }
+
+    /// All alive nodes except `of` (bootstrap/advertisement peer sets).
+    ///
+    /// Fast path for the common churn-free large-population case: when the
+    /// whole table is alive the peer set is just "every id but `of`", so
+    /// large fan-outs skip the per-call liveness scan. Both paths produce
+    /// the identical ascending-id vector.
+    pub fn alive_peers(&self, of: NodeId) -> Vec<NodeId> {
+        let n = self.status.len();
+        if self.alive == n && (of as usize) < n {
+            let mut peers = Vec::with_capacity(n - 1);
+            peers.extend(0..of);
+            peers.extend(of + 1..n as NodeId);
+            return peers;
+        }
+        (0..n as NodeId)
+            .filter(|&j| j != of && self.is_alive(j as usize))
+            .collect()
+    }
+
+    /// Draw up to `k` distinct uniformly-random alive nodes excluding
+    /// `excluded` (if it is alive), under `version`, with **zero peer-list
+    /// materialization**:
+    ///
+    /// * all alive — sampled indices map straight to node ids
+    ///   ([`SimRng::sample_indices_excluding`]), O(k) under `V2Partial`;
+    /// * churned — the stream draws the identical
+    ///   `sample_indices_versioned(m, k)` call the old materialized path
+    ///   drew (`m` = alive count minus the excluded node), and each sampled
+    ///   *rank* maps to a node id through the Fenwick [`Population::select`]
+    ///   (skipping over `excluded`'s own alive-rank), O(k log n) under
+    ///   `V2Partial`.
+    ///
+    /// Both paths are draw-for-draw and peer-for-peer identical to sampling
+    /// positions from the materialized `alive_peers(excluded)` vector, so
+    /// session fingerprints never depend on which path ran —
+    /// `tests/sampling_differential.rs` pins this against that oracle.
+    pub fn sample_alive_excluding(
+        &self,
+        rng: &mut SimRng,
+        version: SamplingVersion,
+        excluded: usize,
+        k: usize,
+    ) -> Vec<NodeId> {
+        let n = self.status.len();
+        if self.alive == n {
+            if excluded < n {
+                return rng
+                    .sample_indices_excluding(version, n, excluded, k)
+                    .into_iter()
+                    .map(|i| i as NodeId)
+                    .collect();
+            }
+            let k = k.min(n);
+            if n == 0 {
+                return Vec::new();
+            }
+            return rng
+                .sample_indices_versioned(version, n, k)
+                .into_iter()
+                .map(|i| i as NodeId)
+                .collect();
+        }
+        // `excluded` only shrinks the candidate set when it is itself
+        // alive; its rank among alive ids is where the "hole" sits.
+        let hole = if excluded < n && self.is_alive(excluded) {
+            Some(self.rank(excluded))
+        } else {
+            None
+        };
+        let m = self.alive - hole.is_some() as usize;
+        if m == 0 {
+            return Vec::new();
+        }
+        let k = k.min(m);
+        rng.sample_indices_versioned(version, m, k)
+            .into_iter()
+            .map(|p| {
+                let r = match hole {
+                    Some(h) if p >= h => p + 1,
+                    _ => p,
+                };
+                self.select(r) as NodeId
+            })
+            .collect()
+    }
+}
+
+/// Protocol-side liveness mirror: the churn bookkeeping every leaderless
+/// protocol was copying, now a thin layer over [`Population`].
+///
+/// The harness owns the authoritative liveness table and drops events at
+/// dead nodes, but a protocol still needs its own view of who is live to
+/// (1) keep the round-start trace monotone when churn moves the recording
+/// node, (2) filter evaluation and `final_round` to live replicas, and
+/// (3) decide "is anyone left". Gossip-DL and D-SGD each grew an identical
+/// `dead: Vec<bool>` + `started: Round` + lowest-live-recorder idiom;
+/// [`LivenessMirror`] is that idiom extracted once — and since the fold
+/// into [`Population`], the recorder lookup is an O(log n) Fenwick
+/// `select(0)` instead of an O(n) scan.
+///
+/// Everything here is pure bookkeeping — no RNG, no event scheduling — so
+/// adopting the mirror cannot change a session's event order or its
+/// same-seed fingerprint (the gossip/D-SGD churn tests pin that).
+#[derive(Debug, Clone)]
+pub struct LivenessMirror {
+    pop: Population,
+    /// Highest round recorded so far (keeps the trace monotone when churn
+    /// hands the recorder role to a different node).
+    started: Round,
+}
+
+impl LivenessMirror {
+    /// All `n` nodes start live.
+    pub fn all_live(n: usize) -> LivenessMirror {
+        LivenessMirror { pop: Population::new(n, n), started: 0 }
+    }
+
+    /// `total` node slots of which the first `live` start live — the
+    /// shape of a session whose churn script introduces joiners later.
+    pub fn with_live_prefix(total: usize, live: usize) -> LivenessMirror {
+        LivenessMirror { pop: Population::new(total, live), started: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pop.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pop.is_empty()
+    }
+
+    /// Ids outside the table count as dead (same defensive contract as the
+    /// harness's own dispatch check).
+    pub fn is_dead(&self, i: usize) -> bool {
+        !self.pop.is_alive(i)
+    }
+
+    pub fn set_dead(&mut self, i: usize) {
+        self.pop.mark_dead(i);
+    }
+
+    pub fn set_live(&mut self, i: usize) {
+        self.pop.mark_alive(i);
+    }
+
+    pub fn any_live(&self) -> bool {
+        self.pop.alive_count() > 0
+    }
+
+    /// Indices of live nodes, ascending (evaluation subsampling).
+    pub fn live_indices(&self) -> Vec<usize> {
+        self.pop.alive_ids()
+    }
+
+    /// The node that records round starts: the lowest live id (node 0
+    /// unless churn killed it). `None` during a total outage.
+    pub fn recorder(&self) -> Option<usize> {
+        self.pop.lowest_alive()
+    }
+
+    /// Highest round recorded so far.
+    pub fn started(&self) -> Round {
+        self.started
+    }
+
+    /// Bootstrap: the caller recorded `round` itself (e.g. round 1 at
+    /// t=0); pin the monotone guard there.
+    pub fn force_started(&mut self, round: Round) {
+        self.started = round;
+    }
+
+    /// True exactly when `node` is the current recorder and `round`
+    /// advances the trace; updates the guard so each round is recorded
+    /// once. The caller then calls `ctx.record_round_start(round)`.
+    pub fn should_record(&mut self, node: NodeId, round: Round) -> bool {
+        if self.recorder() == Some(node as usize) && round > self.started {
+            self.started = round;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Minimum of `rounds` over live nodes (the session's `final_round`);
+    /// 0 during a total outage. `rounds` must iterate node-table order.
+    pub fn min_live_round<I: IntoIterator<Item = Round>>(&self, rounds: I) -> Round {
+        rounds
+            .into_iter()
+            .enumerate()
+            .filter(|&(i, _)| self.pop.is_alive(i))
+            .map(|(_, r)| r)
+            .min()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // ----------------------------------------------------------- Population
+
+    #[test]
+    fn prefix_construction_and_counts() {
+        let p = Population::new(5, 3);
+        assert_eq!(p.len(), 5);
+        assert_eq!(p.alive_count(), 3);
+        assert!(p.is_alive(0) && p.is_alive(2));
+        assert!(!p.is_alive(3) && !p.is_alive(4));
+        assert!(!p.is_alive(99), "out-of-table ids are not alive");
+        assert_eq!(p.status(3), Some(Status::NotJoined));
+        assert_eq!(p.status(99), None);
+        assert_eq!(p.alive_ids(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn rank_and_select_track_mutations() {
+        let mut p = Population::new(8, 8);
+        assert_eq!(p.rank(8), 8);
+        assert_eq!(p.select(0), 0);
+        assert_eq!(p.select(7), 7);
+        assert!(p.mark_dead(3));
+        assert!(!p.mark_dead(3), "already dead");
+        assert!(p.mark_dead(0));
+        assert_eq!(p.alive_count(), 6);
+        // alive = [1, 2, 4, 5, 6, 7]
+        assert_eq!(p.rank(0), 0);
+        assert_eq!(p.rank(4), 2);
+        assert_eq!(p.rank(8), 6);
+        assert_eq!(p.select(0), 1);
+        assert_eq!(p.select(2), 4);
+        assert_eq!(p.select(5), 7);
+        assert!(p.mark_alive(0));
+        assert!(!p.mark_alive(0), "already alive");
+        assert_eq!(p.select(0), 0);
+        assert_eq!(p.lowest_alive(), Some(0));
+    }
+
+    #[test]
+    fn not_joined_placeholders_join_and_die() {
+        let mut p = Population::new(4, 2);
+        assert!(p.mark_alive(3), "join from NotJoined");
+        assert_eq!(p.alive_ids(), vec![0, 1, 3]);
+        // Crash of a NotJoined placeholder turns it Dead without touching
+        // the counter (historical harness semantics).
+        assert!(!p.mark_dead(2));
+        assert_eq!(p.status(2), Some(Status::Dead));
+        assert_eq!(p.alive_count(), 3);
+        // Out-of-table mutations are no-ops.
+        assert!(!p.mark_alive(17));
+        assert!(!p.mark_dead(17));
+        assert_eq!(p.alive_count(), 3);
+    }
+
+    #[test]
+    fn total_outage_and_empty_tables() {
+        let mut p = Population::new(2, 2);
+        p.mark_dead(0);
+        p.mark_dead(1);
+        assert_eq!(p.alive_count(), 0);
+        assert_eq!(p.lowest_alive(), None);
+        assert!(p.alive_ids().is_empty());
+        let empty = Population::new(0, 0);
+        assert!(empty.is_empty());
+        assert_eq!(empty.lowest_alive(), None);
+    }
+
+    #[test]
+    fn alive_peers_matches_filter_on_both_paths() {
+        // All-alive fast path.
+        let p = Population::new(6, 6);
+        assert_eq!(p.alive_peers(2), vec![0, 1, 3, 4, 5]);
+        // Churned slow path.
+        let mut p = Population::new(6, 6);
+        p.mark_dead(1);
+        p.mark_dead(4);
+        assert_eq!(p.alive_peers(2), vec![0, 3, 5]);
+        assert_eq!(p.alive_peers(1), vec![0, 2, 3, 5], "dead `of` excludes nothing");
+        // Out-of-range `of` on the all-alive table falls back to the full
+        // alive list.
+        let p = Population::new(3, 3);
+        assert_eq!(p.alive_peers(9), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn churned_sample_is_valid_and_deterministic() {
+        let mut p = Population::new(50, 50);
+        for i in [0usize, 3, 7, 8, 9, 20, 21, 33, 49] {
+            p.mark_dead(i);
+        }
+        for version in [SamplingVersion::V1Shuffle, SamplingVersion::V2Partial] {
+            let mut a = SimRng::new(77);
+            let mut b = SimRng::new(77);
+            let sa = p.sample_alive_excluding(&mut a, version, 5, 10);
+            let sb = p.sample_alive_excluding(&mut b, version, 5, 10);
+            assert_eq!(sa, sb, "same seed, same draw");
+            assert_eq!(sa.len(), 10);
+            let mut sorted = sa.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 10, "duplicates in {sa:?}");
+            for &x in &sa {
+                assert!(p.is_alive(x as usize), "dead peer {x} in {sa:?}");
+                assert_ne!(x, 5, "excluded peer sampled");
+            }
+        }
+    }
+
+    #[test]
+    fn sample_caps_k_and_handles_empty_sets() {
+        let mut p = Population::new(4, 4);
+        p.mark_dead(1);
+        p.mark_dead(2);
+        let mut rng = SimRng::new(3);
+        // Only node 3 remains besides the excluded node 0.
+        let s = p.sample_alive_excluding(&mut rng, SamplingVersion::V2Partial, 0, 10);
+        assert_eq!(s, vec![3]);
+        p.mark_dead(3);
+        let before = rng.draw_count();
+        let s = p.sample_alive_excluding(&mut rng, SamplingVersion::V2Partial, 0, 10);
+        assert!(s.is_empty());
+        assert_eq!(rng.draw_count(), before, "empty candidate set spends no entropy");
+    }
+
+    // ------------------------------------------------------- LivenessMirror
+
+    #[test]
+    fn prefix_construction_marks_joiners_dead() {
+        let m = LivenessMirror::with_live_prefix(5, 3);
+        assert_eq!(m.len(), 5);
+        assert!(!m.is_dead(0) && !m.is_dead(2));
+        assert!(m.is_dead(3) && m.is_dead(4));
+        assert!(m.is_dead(99), "out-of-table ids are dead");
+        assert_eq!(m.live_indices(), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn recorder_is_lowest_live_and_hands_off_on_crash() {
+        let mut m = LivenessMirror::all_live(4);
+        assert_eq!(m.recorder(), Some(0));
+        m.set_dead(0);
+        assert_eq!(m.recorder(), Some(1));
+        m.set_dead(1);
+        m.set_dead(2);
+        m.set_dead(3);
+        assert_eq!(m.recorder(), None);
+        assert!(!m.any_live());
+        m.set_live(2); // revival
+        assert_eq!(m.recorder(), Some(2));
+    }
+
+    #[test]
+    fn trace_stays_monotone_across_recorder_handoff() {
+        // The exact crash/leave/revival sequence the gossip churn tests
+        // exercise: node 0 records 1..3, crashes, node 1 takes over — but
+        // must not re-record a round <= 3; a revival of node 0 reclaims
+        // the role with the guard intact.
+        let mut m = LivenessMirror::all_live(3);
+        assert!(m.should_record(0, 1));
+        assert!(m.should_record(0, 2));
+        assert!(m.should_record(0, 3));
+        assert!(!m.should_record(1, 4), "non-recorder must not record");
+        m.set_dead(0);
+        assert!(!m.should_record(1, 3), "stale round after handoff");
+        assert!(m.should_record(1, 4));
+        m.set_live(0); // recover: lowest live again
+        assert!(!m.should_record(1, 5), "role returned to node 0");
+        assert!(m.should_record(0, 5));
+        assert_eq!(m.started(), 5);
+    }
+
+    #[test]
+    fn repeated_rounds_record_once() {
+        let mut m = LivenessMirror::all_live(2);
+        assert!(m.should_record(0, 1));
+        assert!(!m.should_record(0, 1));
+        assert!(m.should_record(0, 2));
+    }
+
+    #[test]
+    fn force_started_pins_bootstrap_round() {
+        let mut m = LivenessMirror::all_live(2);
+        m.force_started(1);
+        assert!(!m.should_record(0, 1));
+        assert!(m.should_record(0, 2));
+    }
+
+    #[test]
+    fn min_live_round_filters_dead_nodes() {
+        let mut m = LivenessMirror::all_live(4);
+        let rounds = [7u64, 3, 9, 5];
+        assert_eq!(m.min_live_round(rounds.iter().copied()), 3);
+        m.set_dead(1); // the slowest node dies: min moves to a live one
+        assert_eq!(m.min_live_round(rounds.iter().copied()), 5);
+        m.set_dead(0);
+        m.set_dead(2);
+        m.set_dead(3);
+        assert_eq!(m.min_live_round(rounds.iter().copied()), 0);
+    }
+
+    #[test]
+    fn join_sequence_extends_live_set() {
+        let mut m = LivenessMirror::with_live_prefix(4, 2);
+        assert_eq!(m.live_indices(), vec![0, 1]);
+        m.set_live(2); // scripted Join fires
+        m.set_dead(0); // then the original recorder leaves
+        assert_eq!(m.live_indices(), vec![1, 2]);
+        assert_eq!(m.recorder(), Some(1));
+    }
+}

@@ -11,10 +11,15 @@
 //!   warmup, adaptive iteration counts, and mean/p50/p95 reporting.
 //! * [`trend`] — cross-PR comparison of `BENCH_hotpaths.json` snapshots
 //!   (the CI `bench-diff` regression gate).
+//! * [`rows`]  — shared CSV trace-file scaffolding (comment/header
+//!   tolerance, line-numbered errors) for bandwidth and availability
+//!   traces.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod rows;
 pub mod trend;
 
 pub use json::Json;
+pub use rows::parse_trace_rows;

@@ -1,0 +1,98 @@
+//! Shared scaffolding for CSV trace files.
+//!
+//! Both trace formats the simulator plays back — per-node bandwidth
+//! capacities (`scenario::network`) and per-node offline intervals
+//! (`scenario::availability`) — share the same subtle envelope rules, and
+//! the queued city-latency trace playback (ROADMAP) will be a third
+//! consumer. [`parse_trace_rows`] implements them once:
+//!
+//! * blank lines and `#` comments are skipped;
+//! * an unparseable row is tolerated as a **header** only before the
+//!   first data row AND only when it leads with an ascii letter — a
+//!   typoed first *data* row ("1O.0,100") must error, not be silently
+//!   dropped and shift every subsequent node's assignment by one;
+//! * parse failures surface with 1-based line numbers.
+
+use anyhow::{bail, Result};
+
+/// Drive `parse_row` over the data rows of `text`, calling `on_row` with
+/// the 1-based line number for each parsed row (validation/collection
+/// happens there; its errors propagate as-is). Returns whether any data
+/// row parsed, so callers can reject empty traces with their own message.
+pub fn parse_trace_rows<T>(
+    text: &str,
+    parse_row: impl Fn(&str) -> Result<T>,
+    mut on_row: impl FnMut(usize, T) -> Result<()>,
+) -> Result<bool> {
+    let mut saw_data = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        match parse_row(line) {
+            Ok(row) => {
+                saw_data = true;
+                on_row(lineno + 1, row)?;
+            }
+            Err(_)
+                if !saw_data
+                    && line.chars().next().is_some_and(|c| c.is_ascii_alphabetic()) => {}
+            Err(e) => bail!("trace line {}: {e}", lineno + 1),
+        }
+    }
+    Ok(saw_data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::anyhow;
+
+    fn parse_num(line: &str) -> Result<f64> {
+        line.parse().map_err(|e| anyhow!("bad number: {e}"))
+    }
+
+    fn collect(text: &str) -> Result<(bool, Vec<(usize, f64)>)> {
+        let mut rows = Vec::new();
+        let saw = parse_trace_rows(text, parse_num, |lineno, v| {
+            rows.push((lineno, v));
+            Ok(())
+        })?;
+        Ok((saw, rows))
+    }
+
+    #[test]
+    fn skips_comments_blanks_and_one_leading_header() {
+        let (saw, rows) = collect("# c\n\nvalue\n1.5\n2.5\n").unwrap();
+        assert!(saw);
+        assert_eq!(rows, vec![(4, 1.5), (5, 2.5)]);
+    }
+
+    #[test]
+    fn header_tolerance_ends_at_the_first_data_row() {
+        // A letter-leading junk row AFTER data must error with its line.
+        let err = collect("1.0\nvalue\n2.0\n").unwrap_err();
+        assert!(err.to_string().contains("trace line 2"), "{err:#}");
+    }
+
+    #[test]
+    fn typoed_first_data_row_is_not_a_header() {
+        // Leads with a digit, fails to parse: error, not silent drop.
+        assert!(collect("1O.0\n2.0\n").is_err());
+    }
+
+    #[test]
+    fn on_row_errors_propagate() {
+        let out = parse_trace_rows("1.0\n-1.0\n", parse_num, |lineno, v| {
+            anyhow::ensure!(v >= 0.0, "negative on line {lineno}");
+            Ok(())
+        });
+        assert!(out.unwrap_err().to_string().contains("line 2"));
+    }
+
+    #[test]
+    fn empty_traces_report_no_data() {
+        assert!(!collect("# nothing\n").unwrap().0);
+    }
+}

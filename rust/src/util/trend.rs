@@ -158,6 +158,25 @@ mod tests {
     }
 
     #[test]
+    fn churned_sample_rows_are_guarded() {
+        // The churned-path rows added with the Population/Fenwick work sit
+        // under the `sample/` prefix and must trip the gate like the
+        // all-alive rows — a regression back to O(alive) materialization
+        // at n=100k is exactly what this gate exists to catch.
+        let base = snapshot(&[
+            ("sample/churned-v2/n=100000,k=10", 3_000),
+            ("sample/churned-v1/n=100000,k=10", 900_000),
+        ]);
+        let new = snapshot(&[
+            ("sample/churned-v2/n=100000,k=10", 12_000),
+            ("sample/churned-v1/n=100000,k=10", 950_000),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "sample/churned-v2/n=100000,k=10");
+    }
+
+    #[test]
     fn sample_and_fanout_rows_are_guarded() {
         let base = snapshot(&[
             ("sample/v2-partial/n=100000,k=10", 2_000),

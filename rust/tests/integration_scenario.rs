@@ -4,8 +4,8 @@
 
 use modest_dl::metrics::SessionMetrics;
 use modest_dl::net::TrafficLedger;
-use modest_dl::scenario::{run_scenario, ProtocolRegistry, ScenarioSpec};
-use modest_dl::sim::ChurnSchedule;
+use modest_dl::scenario::{run_scenario, AvailabilityModel, ProtocolRegistry, ScenarioSpec};
+use modest_dl::sim::{ChurnEvent, ChurnKind, ChurnSchedule, SimTime};
 
 fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
     (
@@ -72,9 +72,149 @@ fn nested_json_roundtrip_preserves_every_field() {
     spec.run.target_metric = Some(0.9);
     spec.run.seed = 1234;
     spec.run.sampling = modest_dl::sim::SamplingVersion::V2Partial;
+    spec.population.availability = Some(modest_dl::scenario::AvailabilitySpec {
+        model: AvailabilityModel::Step,
+        amplitude: 0.4,
+        period_s: 120.0,
+        seed: Some(5),
+        trace_file: None,
+    });
     let text = spec.to_json().to_string();
     let back = ScenarioSpec::from_json(&text).unwrap();
     assert_eq!(spec, back);
+}
+
+#[test]
+fn availability_section_drives_real_churn_deterministically() {
+    // The same gossip scenario with and without a diurnal availability
+    // section: with it, ~amplitude of the population crashes/recovers over
+    // the run, so the session fingerprint must diverge from the all-alive
+    // run — proving the compiled schedule actually reaches the harness —
+    // while two same-seed availability runs replay bit-identically.
+    let mk = |availability: bool| {
+        let av = if availability {
+            r#", "availability": {"model": "diurnal", "amplitude": 0.4,
+                                  "period_s": 10.0, "seed": 3}"#
+        } else {
+            ""
+        };
+        let spec = ScenarioSpec::from_json(&format!(
+            r#"{{
+                "workload": {{"dataset": "mock"}},
+                "population": {{"nodes": 24{av}}},
+                "protocol": {{"name": "gossip", "params": {{"fanout": 2}}}},
+                "run": {{"max_time_s": 150.0, "max_rounds": 12,
+                         "eval_interval_s": 10.0, "seed": 11}}
+            }}"#
+        ))
+        .unwrap();
+        assert_eq!(spec.population.availability.is_some(), availability);
+        let (m, t) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        assert!(t.is_conserved());
+        fingerprint(&m, &t)
+    };
+    let a = mk(true);
+    let b = mk(true);
+    assert_eq!(a, b, "availability churn is not deterministic");
+    let plain = mk(false);
+    assert_ne!(
+        a, plain,
+        "availability section did not change the session — the compiled \
+         schedule is not reaching the harness"
+    );
+}
+
+#[test]
+fn availability_runs_on_every_registered_protocol() {
+    // The registry compiles availability churn once for all protocols —
+    // including D-SGD, whose builder historically rejected every non-crash
+    // script (it now accepts recover) and FedAvg's fixed-server emulation.
+    let registry = ProtocolRegistry::builtins();
+    for name in registry.names() {
+        let mut spec = short_mock(name);
+        // A short period so crash AND recover windows land inside the few
+        // virtual seconds a budgeted mock session actually runs (D-SGD's
+        // recovery rejoin gets exercised end-to-end here).
+        spec.population.availability = Some(modest_dl::scenario::AvailabilitySpec {
+            model: AvailabilityModel::Diurnal,
+            amplitude: 0.25,
+            period_s: 4.0,
+            seed: Some(7),
+            trace_file: None,
+        });
+        let (m, t) = registry
+            .build(&spec, None, ChurnSchedule::empty())
+            .unwrap_or_else(|e| panic!("{name} rejected availability churn: {e:#}"))
+            .run();
+        assert!(m.events > 0, "{name} processed no events under availability churn");
+        assert!(t.is_conserved(), "{name} leaked traffic under availability churn");
+    }
+}
+
+#[test]
+fn trace_availability_plays_back_offline_intervals() {
+    let dir = std::env::temp_dir().join("modest_dl_avail_trace_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("offline.csv");
+    // Intervals inside the first virtual seconds, so the budgeted mock
+    // session actually lives through them.
+    std::fs::write(
+        &path,
+        "# node,offline_from_s,offline_until_s\n3,2.0,6.0\n5,3.0,8.0\n",
+    )
+    .unwrap();
+    let spec = ScenarioSpec::from_json(&format!(
+        r#"{{
+            "workload": {{"dataset": "mock"}},
+            "population": {{"nodes": 12,
+                "availability": {{"model": "trace", "trace_file": {:?}}}}},
+            "protocol": {{"name": "gossip"}},
+            "run": {{"max_time_s": 120.0, "max_rounds": 10,
+                     "eval_interval_s": 10.0, "seed": 4}}
+        }}"#,
+        path.to_string_lossy()
+    ))
+    .unwrap();
+    let churn = spec.availability_churn().unwrap();
+    assert_eq!(churn.events().len(), 4, "two crash/recover pairs");
+    let (m, t) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+    assert!(m.final_round >= 8, "stalled at {}", m.final_round);
+    assert!(t.is_conserved());
+}
+
+#[test]
+fn never_joining_churn_targets_fail_at_build_not_runtime() {
+    // The parse-time churn-validation satellite: a script that crashes a
+    // node id outside the population (with no Join for it) must be
+    // rejected by the registry with a pointed error for EVERY protocol —
+    // MoDeST historically let this straight through to the session.
+    let registry = ProtocolRegistry::builtins();
+    for name in registry.names() {
+        let spec = short_mock(name);
+        let churn = ChurnSchedule::new(vec![ChurnEvent {
+            at: SimTime::from_secs_f64(5.0),
+            node: 9_999,
+            kind: ChurnKind::Crash,
+        }]);
+        // (`.err()` rather than `unwrap_err`: the Ok side is a type-erased
+        // session with no Debug impl.)
+        let err = registry
+            .build(&spec, None, churn)
+            .err()
+            .unwrap_or_else(|| panic!("{name} accepted an orphan crash"));
+        assert!(
+            err.to_string().contains("never joins"),
+            "{name}: wrong error: {err:#}"
+        );
+    }
+    // The same id WITH a Join event is legitimate (for protocols that
+    // admit joiners) and passes spec-level validation.
+    let spec = short_mock("gossip");
+    let churn = ChurnSchedule::new(vec![
+        ChurnEvent { at: SimTime::from_secs_f64(2.0), node: 30, kind: ChurnKind::Join },
+        ChurnEvent { at: SimTime::from_secs_f64(5.0), node: 30, kind: ChurnKind::Crash },
+    ]);
+    assert!(registry.build(&spec, None, churn).is_ok());
 }
 
 #[test]

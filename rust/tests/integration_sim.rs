@@ -5,7 +5,7 @@
 use modest_dl::metrics::SessionMetrics;
 use modest_dl::net::TrafficLedger;
 use modest_dl::scenario::{run_scenario, ScenarioSpec};
-use modest_dl::sim::{ChurnSchedule, SimTime};
+use modest_dl::sim::{ChurnEvent, ChurnKind, ChurnSchedule, SimTime};
 
 fn mock_spec(protocol: &str) -> ScenarioSpec {
     let mut spec = ScenarioSpec::new("mock", protocol);
@@ -137,23 +137,35 @@ fn staggered_joins_propagate_to_all_initial_nodes() {
 }
 
 #[test]
-fn churnless_protocols_reject_churn_scripts() {
-    // The registry surfaces a clear error instead of silently dropping the
-    // schedule (the old enum dispatch just ignored it for D-SGD).
-    let churn = ChurnSchedule::mass_crash(
-        16,
-        8,
-        2,
-        SimTime::from_secs_f64(10.0),
-        SimTime::from_secs_f64(10.0),
-    );
-    for protocol in ["dsgd", "gossip"] {
+fn invalid_churn_scripts_are_rejected_at_build() {
+    // Stale-proofed from the PR 2 era (when D-SGD/gossip rejected every
+    // churn script — both tolerate crash/leave since PR 3): what must be
+    // rejected TODAY is (a) crash/leave of a node id that never joins —
+    // now a spec-level build error for every protocol — and (b) fresh-id
+    // joins into D-SGD's fixed one-peer topology.
+    let orphan = ChurnSchedule::new(vec![ChurnEvent {
+        at: SimTime::from_secs_f64(5.0),
+        node: 99,
+        kind: ChurnKind::Crash,
+    }]);
+    for protocol in ["modest", "fedavg", "dsgd", "gossip"] {
         let spec = mock_spec(protocol);
+        let err = run_scenario(&spec, None, orphan.clone()).unwrap_err();
         assert!(
-            run_scenario(&spec, None, churn.clone()).is_err(),
-            "{protocol} accepted a churn script"
+            err.to_string().contains("never joins"),
+            "{protocol}: wrong orphan-crash error: {err:#}"
         );
     }
+    let join = ChurnSchedule::staggered_joins(
+        16,
+        2,
+        SimTime::from_secs_f64(5.0),
+        SimTime::from_secs_f64(5.0),
+    );
+    assert!(
+        run_scenario(&mock_spec("dsgd"), None, join).is_err(),
+        "d-sgd accepted fresh joiners into its fixed topology"
+    );
 }
 
 #[test]

@@ -9,7 +9,7 @@ use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::{candidate_order, sample_hash};
 use modest_dl::modest::{ActivityClock, Registry, View};
 use modest_dl::net::{BandwidthConfig, LatencyMatrix, MsgKind, NetworkFabric};
-use modest_dl::sim::{EventQueue, SimRng, SimTime};
+use modest_dl::sim::{EventQueue, Population, SimRng, SimTime};
 use modest_dl::NodeId;
 
 const CASES: u64 = 300;
@@ -399,6 +399,58 @@ fn prop_view_merge_preserves_knowledge() {
         a.merge(&b);
         for n in known_before {
             assert!(a.registry.knows(n), "seed {seed} lost node {n}");
+        }
+    }
+}
+
+// -------------------------------------------------------------- population
+
+#[test]
+fn prop_population_fenwick_matches_bitset_oracle() {
+    // The Fenwick alive index against a naive bitset through randomized
+    // join/leave/crash/recover sequences: alive_count, is_alive, rank,
+    // select, alive_ids, and alive_peers must all agree at every step —
+    // the structural invariant behind O(k log n) churned peer sampling
+    // (the sampling stream itself is pinned separately in
+    // tests/sampling_differential.rs).
+    for seed in 0..120u64 {
+        let mut rng = SimRng::new(seed ^ 0xF3A1);
+        let total = 2 + rng.gen_range(64) as usize;
+        let initial = rng.gen_range(total as u64 + 1) as usize;
+        let mut pop = Population::new(total, initial);
+        let mut oracle: Vec<bool> = (0..total).map(|i| i < initial).collect();
+        for step in 0..60 {
+            let i = rng.gen_range(total as u64) as usize;
+            match rng.gen_range(4) {
+                // Crash and Leave both land on mark_dead; Join and
+                // Recover both land on mark_alive — exactly the harness's
+                // churn application.
+                0 | 1 => {
+                    pop.mark_dead(i);
+                    oracle[i] = false;
+                }
+                _ => {
+                    pop.mark_alive(i);
+                    oracle[i] = true;
+                }
+            }
+            let alive: Vec<usize> = (0..total).filter(|&j| oracle[j]).collect();
+            assert_eq!(pop.alive_count(), alive.len(), "seed {seed} step {step}");
+            for j in 0..total {
+                assert_eq!(pop.is_alive(j), oracle[j], "seed {seed} step {step} node {j}");
+            }
+            for probe in [0, i, total / 2, total] {
+                let expect = alive.iter().filter(|&&x| x < probe).count();
+                assert_eq!(pop.rank(probe), expect, "seed {seed} step {step} rank({probe})");
+            }
+            for (r, &id) in alive.iter().enumerate() {
+                assert_eq!(pop.select(r), id, "seed {seed} step {step} select({r})");
+            }
+            assert_eq!(pop.alive_ids(), alive, "seed {seed} step {step}");
+            let of = rng.gen_range(total as u64) as u32;
+            let expect_peers: Vec<u32> =
+                alive.iter().map(|&x| x as u32).filter(|&x| x != of).collect();
+            assert_eq!(pop.alive_peers(of), expect_peers, "seed {seed} step {step} of={of}");
         }
     }
 }

@@ -6,7 +6,7 @@
 //! default `v1` untouched.
 
 use modest_dl::scenario::{run_scenario, ScenarioSpec};
-use modest_dl::sim::{ChurnSchedule, SamplingVersion, SimRng};
+use modest_dl::sim::{ChurnSchedule, Population, SamplingVersion, SimRng};
 
 /// Both versions must return k distinct in-range indices for arbitrary
 /// (n, k) schedules, including the k = n and k = 0 edges.
@@ -115,6 +115,101 @@ fn v2_draw_complexity_is_o_k_at_n_100k() {
     assert!(
         v1_draws >= 99_999,
         "v1's frozen stream changed: {v1_draws} draws"
+    );
+}
+
+/// The churned-path fingerprint guarantee: `Population`'s Fenwick
+/// rank/`select` sampling must be draw-for-draw AND peer-for-peer
+/// identical to the historical materialize-the-alive-list-then-index slow
+/// path, for both stream versions, across randomized churn states
+/// (including dead `excluded` nodes, out-of-range `excluded`, k > alive,
+/// and all-alive tables that take the no-materialization fast path). This
+/// is what lets every recorded same-seed churn fingerprint (gossip, D-SGD,
+/// MoDeST) replay bit-identically across the Population refactor.
+#[test]
+fn churned_sampling_matches_the_materialized_list_oracle() {
+    let mut sched = SimRng::new(0xFE0C);
+    for case in 0..300u64 {
+        let n = 2 + sched.gen_range(180) as usize;
+        let mut pop = Population::new(n, n);
+        let flips = sched.gen_range(2 * n as u64 + 1) as usize;
+        for _ in 0..flips {
+            let i = sched.gen_range(n as u64) as usize;
+            if sched.gen_range(2) == 0 {
+                pop.mark_dead(i);
+            } else {
+                pop.mark_alive(i);
+            }
+        }
+        let of = sched.gen_range(n as u64 + 2) as usize; // sometimes out of range
+        let k = 1 + sched.gen_range(12) as usize;
+        for version in [SamplingVersion::V1Shuffle, SamplingVersion::V2Partial] {
+            let seed = 0x5eed ^ (case << 8);
+            let mut fenwick_rng = SimRng::new(seed);
+            let mut oracle_rng = SimRng::new(seed);
+            let got = pop.sample_alive_excluding(&mut fenwick_rng, version, of, k);
+            // The pre-Population slow path, verbatim: materialize the
+            // alive list minus `of`, sample positions, index into it.
+            let peers: Vec<u32> = (0..n as u32)
+                .filter(|&j| j as usize != of && pop.is_alive(j as usize))
+                .collect();
+            let expect: Vec<u32> = if peers.is_empty() {
+                Vec::new()
+            } else {
+                let kk = k.min(peers.len());
+                oracle_rng
+                    .sample_indices_versioned(version, peers.len(), kk)
+                    .into_iter()
+                    .map(|p| peers[p])
+                    .collect()
+            };
+            assert_eq!(got, expect, "case {case} {version:?} (n={n}, of={of}, k={k})");
+            assert_eq!(
+                fenwick_rng.draw_count(),
+                oracle_rng.draw_count(),
+                "case {case} {version:?}: draw streams diverged"
+            );
+        }
+    }
+}
+
+/// The tentpole churned complexity bound: at n = 100k with 30% of the
+/// population dead, a V2 fan-out draw consumes O(k) raw RNG draws — the
+/// Fenwick `select` mapping spends no entropy and materializes no
+/// alive-peer list, so the whole churned draw is O(k log n) work. V1's
+/// frozen stream still burns alive-1 draws by contract (which is exactly
+/// why the churned 100k CI smoke runs under `--sampling v2`).
+#[test]
+fn churned_v2_draw_complexity_is_o_k_at_n_100k() {
+    let n = 100_000;
+    let mut pop = Population::new(n, n);
+    let mut killer = SimRng::new(0xDEAD);
+    for i in killer.sample_indices_v2(n, 30_000) {
+        pop.mark_dead(i);
+    }
+    assert_eq!(pop.alive_count(), 70_000);
+    let of = pop.select(0); // a known-alive node
+    let mut rng = SimRng::new(9);
+    let before = rng.draw_count();
+    let s = pop.sample_alive_excluding(&mut rng, SamplingVersion::V2Partial, of, 10);
+    let v2_draws = rng.draw_count() - before;
+    assert_eq!(s.len(), 10);
+    for &x in &s {
+        assert!(pop.is_alive(x as usize), "dead peer {x} sampled");
+        assert_ne!(x as usize, of);
+    }
+    assert!(
+        v2_draws <= 40,
+        "churned v2 consumed {v2_draws} draws for k=10 — not O(k)"
+    );
+
+    let mut rng = SimRng::new(9);
+    let before = rng.draw_count();
+    pop.sample_alive_excluding(&mut rng, SamplingVersion::V1Shuffle, of, 10);
+    let v1_draws = rng.draw_count() - before;
+    assert!(
+        v1_draws >= 69_000,
+        "v1's frozen churned stream changed: {v1_draws} draws"
     );
 }
 
