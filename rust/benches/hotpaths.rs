@@ -12,16 +12,23 @@
 //!   plus the churned path (30% dead) through the Population's Fenwick
 //!   rank/select index — O(k log n) under v2, no alive-list
 //!   materialization,
-//! * registry/view merge, and view wire-size computation.
+//! * registry/view merge, and view wire-size computation,
+//! * the **memory budget**: live heap bytes per node for a fully-built
+//!   gossip session at n ∈ {10k, 100k, 1M}, counted by a wrapping global
+//!   allocator (bench binary only) and recorded as `mem/bytes-per-node/*`
+//!   value rows — guarded by the CI bench-diff gate like the timings.
 //!
 //! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
 //! Results are also written machine-readable to `BENCH_hotpaths.json`
 //! (override the path with `BENCH_JSON=...`) so future PRs can track the
 //! trajectory.
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use modest_dl::learning::{aggregate_native, Model};
+use modest_dl::gossip::{GossipConfig, GossipSession};
+use modest_dl::learning::{aggregate_native, ComputeModel, MockTask, Model};
 use modest_dl::modest::node::{Msg, ViewRef};
 use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::candidate_order;
@@ -30,10 +37,59 @@ use modest_dl::net::{LatencyMatrix, MsgKind, NetworkFabric, SizeModel};
 #[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
 use modest_dl::sim::{
-    CalendarEventQueue, HeapEventQueue, Population, SamplingVersion, SimRng, SimTime,
+    CalendarEventQueue, ChurnSchedule, HeapEventQueue, Population, SamplingVersion, SimRng,
+    SimTime,
 };
 use modest_dl::util::bench::{black_box, Bencher};
 use modest_dl::NodeId;
+
+/// Live-heap-byte counter wrapping the system allocator. Only the bench
+/// binary pays the two relaxed atomics per (de)allocation; the library and
+/// the test suite run on the plain system allocator.
+struct CountingAlloc;
+
+static LIVE_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            LIVE_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        }
+        p
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            LIVE_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            LIVE_BYTES.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+        }
+        p
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn live_bytes() -> u64 {
+    LIVE_BYTES.load(Ordering::Relaxed)
+}
+
+/// A fully-assembled no-churn gossip session at `n` nodes (mock task,
+/// dim-8 models): what the `mem/bytes-per-node` budget rows measure.
+fn mem_probe_session(n: usize) -> GossipSession {
+    let cfg = GossipConfig { max_rounds: 3, ..GossipConfig::default() };
+    let mut rng = SimRng::new(cfg.seed);
+    let task = MockTask::new(n, 8, 0.5, cfg.seed);
+    let latency = LatencyMatrix::synthetic(&Default::default(), n, &mut rng);
+    let fabric = NetworkFabric::uniform(latency, 50e6, n);
+    let compute = ComputeModel::uniform(n, 0.05);
+    GossipSession::new(cfg, n, Box::new(task), compute, fabric, ChurnSchedule::empty())
+}
 
 /// Naive baseline: per-element indexed accumulation (what the optimized
 /// `aggregate_native` is measured against).
@@ -294,6 +350,22 @@ fn main() {
                 10,
             ));
         });
+    }
+
+    // ---- memory budget: live heap bytes per node for a fully-built
+    // gossip session. Recorded as guarded value rows — the bench-diff
+    // gate fails the build if the per-node footprint more than doubles
+    // (the SoA NodeTable / arena-queue / compact-ledger diet quietly
+    // regrowing). The 1M point is one-shot session *construction*, not a
+    // run, so it stays cheap enough for the BENCH_FAST smoke too.
+    for n in [10_000usize, 100_000, 1_000_000] {
+        let before = live_bytes();
+        let session = mem_probe_session(n);
+        let after = live_bytes();
+        black_box(&session);
+        drop(session);
+        let per_node = after.saturating_sub(before) / n as u64;
+        b.record_value(&format!("mem/bytes-per-node/n={n}"), per_node);
     }
 
     // ---- view merge + wire size at population 500 (celeba scale)

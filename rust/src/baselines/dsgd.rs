@@ -20,7 +20,7 @@ use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, LivenessMirror,
-    Protocol, SamplingVersion, SimHarness, SimTime,
+    NodeTable, Protocol, SamplingVersion, SimHarness, SimTime,
 };
 use crate::{NodeId, Round};
 
@@ -81,33 +81,31 @@ pub struct DsgdMsg {
     pub model: Arc<Model>,
 }
 
-struct DsgdNode {
-    round: Round,
-    model: Model,
-    /// Own trained model for the current round, once finished.
-    trained: Option<Model>,
-    /// Early-arrived neighbour models per round.
-    inbox: HashMap<Round, Arc<Model>>,
-    /// The round this node jumped to when it last recovered from a crash
-    /// (0 = never recovered). Rounds below this were skipped while dead:
-    /// the node never trains them, so an out-neighbour's pairwise barrier
-    /// must not wait on them, and the recovery round itself runs
-    /// barrier-free (the in-neighbour's model for it may have been
-    /// dropped at the dead node).
-    resumed_at: Round,
-    /// Monotone training sequence, bumped at every `start_training` and at
-    /// recovery. Completions carry it, so a pre-crash in-flight completion
-    /// cannot be mistaken for post-recovery training when the rejoin round
-    /// equals the crash-time round (the node must not "train through" its
-    /// own downtime).
-    seq: u64,
-}
-
 /// The D-SGD state machine (drives through [`SimHarness`]).
 pub struct DsgdProtocol {
     cfg: DsgdConfig,
     graph: OnePeerExpGraph,
-    nodes: Vec<DsgdNode>,
+    /// Hot per-node counters in SoA columns:
+    /// * `rounds` — the per-node training round;
+    /// * `seqs` — monotone training sequence, bumped at every
+    ///   `start_training` and at recovery. Completions carry it, so a
+    ///   pre-crash in-flight completion cannot be mistaken for
+    ///   post-recovery training when the rejoin round equals the
+    ///   crash-time round (the node must not "train through" its own
+    ///   downtime);
+    /// * `epochs` — the round the node jumped to when it last recovered
+    ///   from a crash (0 = never recovered). Rounds below it were skipped
+    ///   while dead: the node never trains them, so an out-neighbour's
+    ///   pairwise barrier must not wait on them, and the recovery round
+    ///   itself runs barrier-free (the in-neighbour's model for it may
+    ///   have been dropped at the dead node).
+    nodes: NodeTable,
+    /// Cold per-node state, parallel to the columns above.
+    models: Vec<Model>,
+    /// Own trained model for the current round, once finished.
+    trained: Vec<Option<Model>>,
+    /// Early-arrived neighbour models per round.
+    inboxes: Vec<HashMap<Round, Arc<Model>>>,
     /// Liveness mirror for churn tolerance: a node whose in-neighbour died
     /// advances without the dead trainer's model instead of deadlocking on
     /// the pairwise barrier. Shared bookkeeping with gossip-DL (recorder
@@ -139,9 +137,7 @@ impl DsgdProtocol {
         // ever valid, and recovery invalidates in-flight pre-crash jobs by
         // bumping past them (the round alone cannot, since a rejoin may
         // land on the crash-time round number).
-        let n = &mut self.nodes[node as usize];
-        n.seq += 1;
-        let seq = n.seq;
+        let seq = self.nodes.bump_seq(node as usize);
         ctx.schedule_train_done(dur, node, seq);
     }
 
@@ -167,39 +163,33 @@ impl DsgdProtocol {
     /// neighbour is dead or skipped this round while crashed — skip the
     /// missing trainer), average and move to the next round.
     fn try_advance(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId) {
-        let round = self.nodes[node as usize].round;
+        let i = node as usize;
+        let round = self.nodes.round(i);
         let in_nb = self.graph.in_neighbor(node, round) as usize;
         // The round's model can never arrive when the in-neighbour is
         // dead, or recovered past this round (it skipped it while down),
         // or when this IS the node's own barrier-free recovery round (its
         // in-neighbour may have sent while this node was dead — dropped).
         let never_arrives = self.live.is_dead(in_nb)
-            || self.nodes.get(in_nb).is_some_and(|nb| nb.resumed_at > round)
-            || self.nodes[node as usize].resumed_at == round;
-        let ready = {
-            let n = &self.nodes[node as usize];
-            n.trained.is_some() && (n.inbox.contains_key(&round) || never_arrives)
-        };
+            || (in_nb < self.nodes.len() && self.nodes.epoch(in_nb) > round)
+            || self.nodes.epoch(i) == round;
+        let ready =
+            self.trained[i].is_some() && (self.inboxes[i].contains_key(&round) || never_arrives);
         if !ready {
             return;
         }
-        let (own, incoming) = {
-            let n = &mut self.nodes[node as usize];
-            (n.trained.take().unwrap(), n.inbox.remove(&round))
-        };
+        let own = self.trained[i].take().unwrap();
+        let incoming = self.inboxes[i].remove(&round);
         let avg = match &incoming {
             Some(inc) => ctx.task.aggregate(&[&own, inc.as_ref()]).expect("aggregate"),
             // The round's in-neighbour crashed before its model arrived:
             // proceed with the local model alone.
             None => own,
         };
-        {
-            let n = &mut self.nodes[node as usize];
-            n.model = avg;
-            n.round = round + 1;
-            // Drop stale early arrivals of long-past rounds.
-            n.inbox.retain(|&k, _| k >= round);
-        }
+        self.models[i] = avg;
+        self.nodes.set_round(i, round + 1);
+        // Drop stale early arrivals of long-past rounds.
+        self.inboxes[i].retain(|&k, _| k >= round);
         self.top_round = self.top_round.max(round + 1);
         // Record from the lowest live node (node 0 unless churn killed it),
         // keeping the round trace monotone across recorder handoffs.
@@ -226,25 +216,25 @@ impl Protocol for DsgdProtocol {
     }
 
     fn on_deliver(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, to: NodeId, msg: DsgdMsg) {
-        self.nodes[to as usize].inbox.insert(msg.round, msg.model);
+        self.inboxes[to as usize].insert(msg.round, msg.model);
         self.try_advance(ctx, to);
     }
 
     fn on_train_done(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId, seq: u64) {
-        if self.nodes[node as usize].seq != seq {
+        if self.nodes.seq(node as usize) != seq {
             return; // stale (a newer job superseded it, or recovery did)
         }
         // The node's round cannot have moved since this job was scheduled
         // (advancing requires taking this very completion's `trained`), so
         // it is the round the training was for.
-        let round = self.nodes[node as usize].round;
+        let round = self.nodes.round(node as usize);
         let seed = self.seed_for(node, round);
-        let model = self.nodes[node as usize].model.clone();
+        let model = self.models[node as usize].clone();
         let (updated, _loss, _b) =
             ctx.task.local_update(&model, node, seed).expect("local_update");
         let out = self.graph.out_neighbor(node, round);
         let arc = Arc::new(updated.clone());
-        self.nodes[node as usize].trained = Some(updated);
+        self.trained[node as usize] = Some(updated);
         if !self.live.is_dead(out as usize) {
             self.send_model(ctx, node, out, round, arc);
         }
@@ -304,17 +294,14 @@ impl Protocol for DsgdProtocol {
                     return;
                 }
                 self.live.set_live(i);
-                let rejoin = self.top_round.max(self.nodes[i].round);
-                {
-                    let n = &mut self.nodes[i];
-                    n.round = rejoin;
-                    n.resumed_at = rejoin;
-                    n.trained = None;
-                    // Invalidate any pre-crash in-flight completion even
-                    // when the rejoin round equals the crash-time round.
-                    n.seq += 1;
-                    n.inbox.retain(|&k, _| k >= rejoin);
-                }
+                let rejoin = self.top_round.max(self.nodes.round(i));
+                self.nodes.set_round(i, rejoin);
+                self.nodes.set_epoch(i, rejoin);
+                self.trained[i] = None;
+                // Invalidate any pre-crash in-flight completion even
+                // when the rejoin round equals the crash-time round.
+                self.nodes.bump_seq(i);
+                self.inboxes[i].retain(|&k, _| k >= rejoin);
                 if !ctx.round_budget_exceeded(rejoin) {
                     self.start_training(ctx, ev.node);
                 }
@@ -328,9 +315,9 @@ impl Protocol for DsgdProtocol {
         let live = self.live.live_indices();
         let n = live.len().max(1);
         let (metric, loss, std) = if self.cfg.eval_avg_model {
-            let models: Vec<&Model> = live.iter().map(|&i| &self.nodes[i].model).collect();
+            let models: Vec<&Model> = live.iter().map(|&i| &self.models[i]).collect();
             let avg = if models.is_empty() {
-                self.nodes[0].model.clone()
+                self.models[0].clone()
             } else {
                 task.aggregate(&models)?
             };
@@ -344,7 +331,7 @@ impl Protocol for DsgdProtocol {
             let mut losses = Vec::with_capacity(k);
             for j in 0..k {
                 let idx = live.get(j * n / k).copied().unwrap_or(0);
-                let model = self.nodes[idx].model.clone();
+                let model = self.models[idx].clone();
                 let e = task.evaluate(&model)?;
                 metrics.push(e.metric);
                 losses.push(e.loss);
@@ -359,7 +346,7 @@ impl Protocol for DsgdProtocol {
     }
 
     fn final_round(&self) -> Round {
-        self.live.min_live_round(self.nodes.iter().map(|x| x.round))
+        self.live.min_live_round(self.nodes.rounds())
     }
 }
 
@@ -381,21 +368,18 @@ impl DsgdSession {
         churn: ChurnSchedule,
     ) -> DsgdSession {
         let init = task.init_model();
-        let nodes = (0..n)
-            .map(|_| DsgdNode {
-                round: 1,
-                model: init.clone(),
-                trained: None,
-                inbox: HashMap::new(),
-                resumed_at: 0,
-                seq: 0,
-            })
-            .collect();
+        let nodes = NodeTable::new(n).with_rounds(1).with_seqs().with_epochs();
+        let models = (0..n).map(|_| init.clone()).collect();
+        let trained = (0..n).map(|_| None).collect();
+        let inboxes = (0..n).map(|_| HashMap::new()).collect();
         let hcfg = cfg.harness_config();
         let protocol = DsgdProtocol {
             cfg,
             graph: OnePeerExpGraph::new(n as u32),
             nodes,
+            models,
+            trained,
+            inboxes,
             live: LivenessMirror::all_live(n),
             top_round: 1,
             sizes: SizeModel::default(),

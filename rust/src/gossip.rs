@@ -25,7 +25,7 @@ use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, LivenessMirror,
-    Protocol, SamplingVersion, SimHarness, SimRng, SimTime,
+    NodeTable, Protocol, SamplingVersion, SimHarness, SimRng, SimTime,
 };
 use crate::{NodeId, Round};
 
@@ -65,18 +65,18 @@ pub struct GossipMsg {
     pub model: Arc<Model>,
 }
 
-struct GossipNode {
-    /// Local epoch counter (the protocol's only notion of a round).
-    round: Round,
-    /// Shared so pushing to `fanout` peers and keeping the local copy
-    /// never duplicate the model buffer.
-    model: Arc<Model>,
-}
-
 /// The gossip-DL state machine (drives through [`SimHarness`]).
 pub struct GossipProtocol {
     cfg: GossipConfig,
-    nodes: Vec<GossipNode>,
+    /// Hot per-node counters in SoA columns: the local epoch (`rounds` —
+    /// the protocol's only notion of a round, and the budget the session
+    /// stops on) and the training sequence (`seqs` — bumped per dispatched
+    /// job and on recovery, so exactly one in-flight completion is valid).
+    nodes: NodeTable,
+    /// Cold per-node state: each node's current model, Arc-shared so
+    /// pushing to `fanout` peers and keeping the local copy never
+    /// duplicate the model buffer.
+    models: Vec<Arc<Model>>,
     /// Protocol-side liveness mirror (the harness drops events at dead
     /// nodes; this keeps evaluation, the round-start trace, and the round
     /// budget to live replicas). Shared bookkeeping with D-SGD.
@@ -96,12 +96,14 @@ impl GossipProtocol {
             .wrapping_add(round)
     }
 
-    fn start_training(&self, ctx: &mut Ctx<'_, GossipMsg>, node: NodeId) {
+    fn start_training(&mut self, ctx: &mut Ctx<'_, GossipMsg>, node: NodeId) {
         let batches = ctx.task.batches_per_epoch(node);
         let dur = ctx.compute.train_time(node, batches);
-        let round = self.nodes[node as usize].round;
-        // The local epoch counter doubles as the training sequence id.
-        ctx.schedule_train_done(dur, node, round);
+        // A fresh per-job sequence id (D-SGD's pattern): only the newest
+        // dispatched job's completion is ever accepted, and the budgeted
+        // round counter stays out of staleness bookkeeping entirely.
+        let seq = self.nodes.bump_seq(node as usize);
+        ctx.schedule_train_done(dur, node, seq);
     }
 
     fn push_model(&self, ctx: &mut Ctx<'_, GossipMsg>, from: NodeId, model: Arc<Model>) {
@@ -124,12 +126,12 @@ impl GossipProtocol {
     /// of round budget (with `max_rounds == 0` this is never true).
     fn all_live_done(&self, ctx: &Ctx<'_, GossipMsg>) -> bool {
         let mut any_live = false;
-        for (i, x) in self.nodes.iter().enumerate() {
+        for i in 0..self.nodes.len() {
             if self.live.is_dead(i) {
                 continue;
             }
             any_live = true;
-            if !ctx.round_budget_exceeded(x.round) {
+            if !ctx.round_budget_exceeded(self.nodes.round(i)) {
                 return false;
             }
         }
@@ -164,27 +166,27 @@ impl Protocol for GossipProtocol {
     fn on_deliver(&mut self, ctx: &mut Ctx<'_, GossipMsg>, to: NodeId, msg: GossipMsg) {
         // Epidemic merge: average the incoming model into the local one.
         let merged = {
-            let local = self.nodes[to as usize].model.as_ref();
+            let local = self.models[to as usize].as_ref();
             ctx.task
                 .aggregate(&[local, msg.model.as_ref()])
                 .expect("aggregate")
         };
-        self.nodes[to as usize].model = Arc::new(merged);
+        self.models[to as usize] = Arc::new(merged);
     }
 
     fn on_train_done(&mut self, ctx: &mut Ctx<'_, GossipMsg>, node: NodeId, seq: u64) {
-        if self.nodes[node as usize].round != seq {
-            return; // stale
+        if self.nodes.seq(node as usize) != seq {
+            return; // stale: a newer dispatch or a recovery superseded it
         }
-        let round = seq;
+        let round = self.nodes.round(node as usize);
         let seed = self.seed_for(node, round);
-        let input = self.nodes[node as usize].model.clone();
+        let input = self.models[node as usize].clone();
         let (updated, _loss, _batches) =
             ctx.task.local_update(&input, node, seed).expect("local_update");
         let arc = Arc::new(updated);
-        self.nodes[node as usize].model = arc.clone();
+        self.models[node as usize] = arc.clone();
         self.push_model(ctx, node, arc);
-        self.nodes[node as usize].round = round + 1;
+        self.nodes.set_round(node as usize, round + 1);
         self.record_round(ctx, node, round + 1);
         // Rounds are purely local, so the budget is per node: a node that
         // hits it just stops training while slower replicas catch up.
@@ -206,8 +208,8 @@ impl Protocol for GossipProtocol {
     /// Crashes/leaves only flip the liveness mirror — the harness already
     /// drops the dead node's in-flight deliveries and pending train
     /// completions, and `sample_peers` excludes it from future fan-outs.
-    /// Joins/recoveries bump the local epoch (invalidating any stale
-    /// pre-crash completion) and restart training.
+    /// Joins/recoveries bump the training sequence (invalidating any stale
+    /// pre-crash completion) and restart the round the node was in.
     fn on_churn(&mut self, ctx: &mut Ctx<'_, GossipMsg>, ev: ChurnEvent) {
         let i = ev.node as usize;
         if i >= self.nodes.len() {
@@ -217,8 +219,14 @@ impl Protocol for GossipProtocol {
             ChurnKind::Join | ChurnKind::Recover => {
                 self.pending_revivals = self.pending_revivals.saturating_sub(1);
                 self.live.set_live(i);
-                self.nodes[i].round += 1;
-                if !ctx.round_budget_exceeded(self.nodes[i].round) {
+                // Staleness is the seq column's job, not the round's:
+                // offline/online cycles alone must never consume
+                // `max_rounds` (the node resumes the round it was in).
+                // The bump matters even when training does not restart —
+                // a node over budget can still have a pre-crash
+                // completion land inside this alive window.
+                self.nodes.bump_seq(i);
+                if !ctx.round_budget_exceeded(self.nodes.round(i)) {
                     self.start_training(ctx, ev.node);
                 }
             }
@@ -253,7 +261,7 @@ impl Protocol for GossipProtocol {
         let mut losses = Vec::with_capacity(k);
         for j in 0..k {
             let idx = live.get(j * n / k).copied().unwrap_or(0);
-            let e = task.evaluate(&self.nodes[idx].model)?;
+            let e = task.evaluate(&self.models[idx])?;
             metrics.push(e.metric);
             losses.push(e.loss);
         }
@@ -269,7 +277,7 @@ impl Protocol for GossipProtocol {
     }
 
     fn final_round(&self) -> Round {
-        self.live.min_live_round(self.nodes.iter().map(|x| x.round))
+        self.live.min_live_round(self.nodes.rounds())
     }
 }
 
@@ -291,7 +299,8 @@ impl GossipSession {
     ) -> GossipSession {
         let max_node = churn.node_extent().max(n);
         let init = Arc::new(task.init_model());
-        let nodes = (0..max_node).map(|_| GossipNode { round: 1, model: init.clone() }).collect();
+        let nodes = NodeTable::new(max_node).with_rounds(1).with_seqs();
+        let models = (0..max_node).map(|_| init.clone()).collect();
         let live = LivenessMirror::with_live_prefix(max_node, n);
         let pending_revivals = churn
             .events()
@@ -312,6 +321,7 @@ impl GossipSession {
         let protocol = GossipProtocol {
             cfg,
             nodes,
+            models,
             live,
             pending_revivals,
             sizes: SizeModel::default(),
@@ -617,6 +627,54 @@ mod tests {
         assert_eq!(a.events, b.events);
         assert_eq!(a.final_round, b.final_round);
         assert_eq!(ta.total(), tb.total());
+    }
+
+    #[test]
+    fn offline_online_cycles_do_not_exhaust_the_round_budget() {
+        use crate::sim::{ChurnEvent, ChurnKind};
+        // Node 3 flaps 25 times with 50ms alive windows — far too short to
+        // finish a 300ms training round — all before any peer can burn
+        // through the 12-round budget (12 × 300ms = 3.6s at uniform
+        // compute). The staleness epoch used to ride on the budgeted round
+        // counter, so 25 rejoins alone would blow past `max_rounds` and
+        // permanently silence the node; with the per-node seq column the
+        // node must resume the round it was in and still complete the full
+        // budget.
+        let mut events = Vec::new();
+        for c in 0..25u64 {
+            let crash = 500_000 + 100_000 * c;
+            events.push(ChurnEvent {
+                at: SimTime::from_micros(crash),
+                node: 3,
+                kind: ChurnKind::Crash,
+            });
+            events.push(ChurnEvent {
+                at: SimTime::from_micros(crash + 50_000),
+                node: 3,
+                kind: ChurnKind::Recover,
+            });
+        }
+        let churn = ChurnSchedule::new(events);
+        let cfg = GossipConfig {
+            max_time: SimTime::from_secs_f64(600.0),
+            max_rounds: 12,
+            eval_interval: SimTime::from_secs_f64(10.0),
+            ..Default::default()
+        };
+        let session = session_with_churn(6, cfg, churn);
+        let (m, _traffic, p) = session.harness.run_into_parts();
+        // Every node — the flapper included — completes exactly the
+        // 12-round budget; rejoins moved the seq column, not the round.
+        for i in 0..6 {
+            assert_eq!(p.nodes.round(i), 13, "node {i} round");
+        }
+        assert_eq!(m.final_round, 13);
+        // The flapper's staleness seq advanced on every recover and every
+        // dispatch (>= 2 per cycle), decoupled from its 13 rounds.
+        assert!(p.nodes.seq(3) > 40, "seq {}", p.nodes.seq(3));
+        // The session ends when the flapper finishes its budget (~6.3s
+        // virtual), not by idling to max_time.
+        assert!(m.duration_s < 60.0, "idled to {}s", m.duration_s);
     }
 
     #[test]

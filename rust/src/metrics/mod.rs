@@ -92,9 +92,38 @@ pub struct SessionMetrics {
     pub duration_s: f64,
     /// DES events processed (simulator throughput accounting).
     pub events: u64,
+    /// Reservoir decimation stride for `samples` (0/1 = keep everything
+    /// until the cap is first hit).
+    sample_stride: u64,
+    /// Sampling operations offered to `record_sample`, retained or not.
+    sample_seen: u64,
 }
 
 impl SessionMetrics {
+    /// Hard cap on retained [`SampleTiming`] entries: a million-node run
+    /// offers hundreds of millions of sampling ops, and an unbounded
+    /// `samples` vector would dwarf the rest of the session state.
+    pub const MAX_SAMPLES: usize = 16_384;
+
+    /// A metrics sink with its per-round vectors sized from the session
+    /// budget, so long runs never reallocate them mid-session. `probes` is
+    /// the number of evaluation ticks the harness will schedule.
+    pub fn with_budget(max_rounds: Round, probes: usize) -> SessionMetrics {
+        // An unlimited budget (0) or an absurd one still gets a sane
+        // allocation: growth past this point falls back to doubling.
+        const MAX_PREALLOC: usize = 1 << 16;
+        let rounds = if max_rounds > 0 {
+            (max_rounds as usize).saturating_add(2).min(MAX_PREALLOC)
+        } else {
+            0
+        };
+        let mut m = SessionMetrics::default();
+        m.curve.reserve_exact(probes.min(MAX_PREALLOC));
+        m.round_starts.reserve_exact(rounds);
+        m.samples.reserve_exact(rounds.min(Self::MAX_SAMPLES));
+        m
+    }
+
     pub fn record_eval(
         &mut self,
         now: SimTime,
@@ -113,6 +142,28 @@ impl SessionMetrics {
     }
 
     pub fn record_sample(&mut self, now: SimTime, started: SimTime, round: Round, retries: u32) {
+        // Deterministic bounded reservoir: keep every `stride`-th offered
+        // sample; when the cap fills, drop every other retained entry and
+        // double the stride. No RNG is touched, so same-seed sessions
+        // retain the identical subset, and memory is O(MAX_SAMPLES) no
+        // matter how long the session runs.
+        self.sample_seen += 1;
+        let stride = self.sample_stride.max(1);
+        if (self.sample_seen - 1) % stride != 0 {
+            return;
+        }
+        if self.samples.len() == Self::MAX_SAMPLES {
+            let mut i = 0usize;
+            self.samples.retain(|_| {
+                let keep = i % 2 == 0;
+                i += 1;
+                keep
+            });
+            self.sample_stride = stride * 2;
+            if (self.sample_seen - 1) % (stride * 2) != 0 {
+                return;
+            }
+        }
         self.samples.push(SampleTiming {
             completed_at_s: now.as_secs_f64(),
             duration_s: (now.saturating_sub(started)).as_secs_f64(),
@@ -230,6 +281,55 @@ mod tests {
             missing: vec![(60.0, 90), (120.0, 40), (300.0, 0)],
         };
         assert_eq!(t.full_propagation_s(), Some(240.0));
+    }
+
+    #[test]
+    fn sample_reservoir_caps_memory_deterministically() {
+        let run = |total: usize| {
+            let mut m = SessionMetrics::default();
+            for i in 0..total {
+                m.record_sample(SimTime::from_micros(i as u64 + 1), SimTime::ZERO, 1, 0);
+            }
+            m
+        };
+        let total = SessionMetrics::MAX_SAMPLES * 4 + 123;
+        let m = run(total);
+        assert!(m.samples.len() <= SessionMetrics::MAX_SAMPLES);
+        assert!(m.samples.len() > SessionMetrics::MAX_SAMPLES / 4, "{}", m.samples.len());
+        // Decimation keeps the earliest sample and preserves time order.
+        assert_eq!(m.samples[0].completed_at_s, 1e-6);
+        assert!(m
+            .samples
+            .windows(2)
+            .all(|w| w[0].completed_at_s < w[1].completed_at_s));
+        // Same offer stream, same retained subset: the reservoir draws no
+        // randomness.
+        let b = run(total);
+        assert_eq!(m.samples.len(), b.samples.len());
+        assert_eq!(
+            m.samples.last().unwrap().completed_at_s.to_bits(),
+            b.samples.last().unwrap().completed_at_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn small_sessions_keep_every_sample() {
+        let mut m = SessionMetrics::default();
+        for i in 0..100u64 {
+            m.record_sample(SimTime::from_micros(i + 1), SimTime::ZERO, 1, 0);
+        }
+        assert_eq!(m.samples.len(), 100);
+    }
+
+    #[test]
+    fn with_budget_preallocates_from_the_round_budget() {
+        let m = SessionMetrics::with_budget(100, 32);
+        assert!(m.curve.capacity() >= 32);
+        assert!(m.round_starts.capacity() >= 102);
+        assert!(m.curve.is_empty() && m.samples.is_empty());
+        // Unlimited budgets must not preallocate the round vectors at all.
+        let u = SessionMetrics::with_budget(0, 8);
+        assert_eq!(u.round_starts.capacity(), 0);
     }
 
     #[test]

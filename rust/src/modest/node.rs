@@ -1,9 +1,11 @@
 //! Per-node protocol state (Alg. 4) — pure state transitions.
 //!
-//! `ModestNode` holds everything a MoDeST participant keeps between
-//! messages: its view, its membership counter, the two task-round cursors
-//! (`k_agg`, `k_train`), the accumulating model list `Θ`, the per-round
-//! pong lists `L[k]`, and any in-flight sampling operations. Methods here
+//! `ModestNode` holds the cold per-node state a MoDeST participant keeps
+//! between messages: its view, the two task-round cursors (`k_agg`,
+//! `k_train`), the accumulating model list `Θ`, the per-round pong lists
+//! `L[k]`, and any in-flight sampling operations. The hot flat counters
+//! (membership counter, sampling-op sequence, last-activity timestamp)
+//! live in the session's `sim::NodeTable` columns instead. Methods here
 //! are pure state transitions returning what the caller (the event-driven
 //! [`super::session`]) must do next; no I/O happens in this module, which
 //! is what makes the protocol unit- and property-testable in isolation.
@@ -14,6 +16,8 @@ use std::sync::Arc;
 use crate::learning::Model;
 use crate::sim::SimTime;
 use crate::{NodeId, Round};
+// (Membership counters, op sequences, and activity timers are SoA columns
+// in the session's `sim::NodeTable`, not fields here.)
 
 use super::view::View;
 
@@ -87,12 +91,10 @@ pub enum NodeAction {
     Nothing,
 }
 
-/// Per-node protocol state.
+/// Per-node protocol state (cold fields only — see module docs).
 pub struct ModestNode {
     pub id: NodeId,
     pub view: View,
-    /// Persistent membership counter `c_i` (Alg. 2).
-    pub counter: u64,
     /// Last aggregation round `k_agg` (Alg. 4).
     pub k_agg: Round,
     /// Accumulated models `Θ` for round `k_agg`.
@@ -109,10 +111,6 @@ pub struct ModestNode {
     pub pongs: HashMap<Round, Vec<NodeId>>,
     /// In-flight sampling operations.
     pub ops: Vec<SampleOp>,
-    pub next_op: u64,
-    /// Virtual time this node last received a train/aggregate message —
-    /// drives the §3.5 auto-rejoin when it stops being sampled.
-    pub last_active: SimTime,
 }
 
 impl ModestNode {
@@ -120,7 +118,6 @@ impl ModestNode {
         ModestNode {
             id,
             view: View::default(),
-            counter: 0,
             k_agg: 0,
             theta: Vec::new(),
             agg_dispatched: 0,
@@ -129,8 +126,6 @@ impl ModestNode {
             train_seq: 0,
             pongs: HashMap::new(),
             ops: Vec::new(),
-            next_op: 0,
-            last_active: SimTime::ZERO,
         }
     }
 

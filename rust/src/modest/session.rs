@@ -29,7 +29,7 @@ use crate::learning::{ComputeModel, Model, Task};
 use crate::metrics::{JoinTrace, SessionMetrics};
 use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
 use crate::sim::{
-    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, Protocol,
+    ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, NodeTable, Protocol,
     SamplingVersion, SimHarness, SimRng, SimTime,
 };
 use crate::{NodeId, Round};
@@ -109,6 +109,12 @@ impl ModestConfig {
 pub struct ModestProtocol {
     cfg: ModestConfig,
     nodes: Vec<ModestNode>,
+    /// Hot flat per-node counters in SoA columns, parallel to `nodes`:
+    /// `counters` = the persistent membership counter `c_i` (Alg. 2),
+    /// `seqs` = the sampling-op id sequence, `timers` = the virtual time
+    /// the node last received a train/aggregate message (drives the §3.5
+    /// auto-rejoin when it stops being sampled).
+    hot: NodeTable,
     sizes: SizeModel,
     /// Latest aggregated model dispatched by any aggregator (shared with
     /// the train messages that carried it — never deep-copied).
@@ -194,13 +200,13 @@ impl ModestProtocol {
             return;
         }
 
-        let op_id = {
+        let op_id = self.hot.bump_seq(node as usize);
+        {
             let n = &mut self.nodes[node as usize];
-            n.next_op += 1;
             let candidates = n.view.candidates(round, self.cfg.dk);
             let order = candidate_order(round, &candidates);
-            let op = SampleOp {
-                id: n.next_op,
+            n.ops.push(SampleOp {
+                id: op_id,
                 round,
                 need,
                 purpose,
@@ -210,10 +216,8 @@ impl ModestProtocol {
                 done: false,
                 started: ctx.now(),
                 retries: 0,
-            };
-            n.ops.push(op);
-            n.next_op
-        };
+            });
+        }
         self.pump_sample(ctx, node, op_id, true);
     }
 
@@ -374,20 +378,19 @@ impl ModestProtocol {
             if !ctx.is_alive(i as NodeId) {
                 continue;
             }
-            let idle = now.saturating_sub(self.nodes[i].last_active);
+            let idle = now.saturating_sub(self.hot.timer(i));
             if idle > horizon {
                 rejoiners.push(i as NodeId);
             }
         }
         for node in rejoiners {
-            let c = {
-                let n = &mut self.nodes[node as usize];
-                n.counter += 1;
-                let c = n.counter;
-                n.view.registry.update(node, c, MembershipEvent::Joined);
-                n.last_active = now; // throttle: try again after another horizon
-                c
-            };
+            let c = self.hot.bump_counter(node as usize);
+            self.nodes[node as usize]
+                .view
+                .registry
+                .update(node, c, MembershipEvent::Joined);
+            // Throttle: try again only after another full horizon.
+            self.hot.set_timer(node as usize, now);
             // `Ctx::sample_peers` draws the alive peer set through the
             // Population (all-alive fast path or Fenwick rank/select; no
             // peer-list materialization on either path); RNG-stream
@@ -437,7 +440,7 @@ impl Protocol for ModestProtocol {
                 self.nodes[to as usize].on_membership(node, counter, false);
             }
             Msg::Aggregate { round, model, view } => {
-                self.nodes[to as usize].last_active = ctx.now();
+                self.hot.set_timer(to as usize, ctx.now());
                 let act = self.nodes[to as usize].on_aggregate(
                     round,
                     model,
@@ -455,7 +458,7 @@ impl Protocol for ModestProtocol {
                 }
             }
             Msg::Train { round, model, view } => {
-                self.nodes[to as usize].last_active = ctx.now();
+                self.hot.set_timer(to as usize, ctx.now());
                 let act = self.nodes[to as usize].on_train(round, model, &view);
                 if let NodeAction::BeginTraining { round, seq } = act {
                     if ctx.round_budget_exceeded(round) {
@@ -489,14 +492,12 @@ impl Protocol for ModestProtocol {
     fn on_churn(&mut self, ctx: &mut Ctx<'_, Msg>, ev: ChurnEvent) {
         match ev.kind {
             ChurnKind::Join | ChurnKind::Recover => {
-                let c = {
+                let c = self.hot.bump_counter(ev.node as usize);
+                {
                     let node = &mut self.nodes[ev.node as usize];
-                    node.counter += 1;
-                    let c = node.counter;
                     node.view.registry.update(ev.node, c, MembershipEvent::Joined);
                     node.view.activity.update(ev.node, 0);
-                    c
-                };
+                }
                 // Advertise to s random alive peers (bootstrap set P).
                 for p in ctx.sample_peers(ev.node, self.cfg.s) {
                     self.send(ctx, ev.node, p, Msg::Joined { node: ev.node, counter: c });
@@ -521,13 +522,11 @@ impl Protocol for ModestProtocol {
                 }
             }
             ChurnKind::Leave => {
-                let c = {
-                    let node = &mut self.nodes[ev.node as usize];
-                    node.counter += 1;
-                    let c = node.counter;
-                    node.view.registry.update(ev.node, c, MembershipEvent::Left);
-                    c
-                };
+                let c = self.hot.bump_counter(ev.node as usize);
+                self.nodes[ev.node as usize]
+                    .view
+                    .registry
+                    .update(ev.node, c, MembershipEvent::Left);
                 for p in ctx.sample_peers(ev.node, self.cfg.s) {
                     self.send(ctx, ev.node, p, Msg::Left { node: ev.node, counter: c });
                 }
@@ -601,10 +600,11 @@ impl ModestSession {
         let mut rng = SimRng::new(cfg.seed ^ 0x6d6f6465_73740001);
         let max_node = churn.node_extent().max(n_initial);
         let mut nodes: Vec<ModestNode> = (0..max_node as NodeId).map(ModestNode::new).collect();
+        let mut hot = NodeTable::new(max_node).with_seqs().with_counters().with_timers();
 
         // Initial population: registered with counter 1, activity 0.
-        for node in nodes.iter_mut().take(n_initial) {
-            node.counter = 1;
+        for i in 0..n_initial {
+            hot.set_counter(i, 1);
         }
         for i in 0..n_initial {
             for j in 0..n_initial {
@@ -629,6 +629,7 @@ impl ModestSession {
         let protocol = ModestProtocol {
             cfg,
             nodes,
+            hot,
             sizes: SizeModel::default(),
             latest_global,
             latest_round: 0,

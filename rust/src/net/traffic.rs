@@ -8,11 +8,20 @@
 use super::message::MsgKind;
 use crate::NodeId;
 
+/// Index of the sent counter in a per-node usage record.
+const SENT: usize = 0;
+/// Index of the received counter in a per-node usage record.
+const RECV: usize = 1;
+
 /// Mutable traffic ledger for one session.
+///
+/// Bookkeeping is one fixed-width `[sent, received]` integer record per
+/// node in a single flat allocation — 16 bytes/node, no per-transfer heap
+/// work (wire parts travel as stack slices), and both counters of a node
+/// share a cache line.
 #[derive(Debug, Clone)]
 pub struct TrafficLedger {
-    sent: Vec<u64>,
-    received: Vec<u64>,
+    usage: Vec<[u64; 2]>,
     by_kind: [u64; 4],
     messages: u64,
 }
@@ -29,8 +38,7 @@ fn kind_idx(kind: MsgKind) -> usize {
 impl TrafficLedger {
     pub fn new(nodes: usize) -> Self {
         TrafficLedger {
-            sent: vec![0; nodes],
-            received: vec![0; nodes],
+            usage: vec![[0; 2]; nodes],
             by_kind: [0; 4],
             messages: 0,
         }
@@ -38,9 +46,8 @@ impl TrafficLedger {
 
     /// Grow the ledger when nodes join beyond the initial population.
     pub fn ensure_nodes(&mut self, nodes: usize) {
-        if nodes > self.sent.len() {
-            self.sent.resize(nodes, 0);
-            self.received.resize(nodes, 0);
+        if nodes > self.usage.len() {
+            self.usage.resize(nodes, [0; 2]);
         }
     }
 
@@ -55,8 +62,8 @@ impl TrafficLedger {
         }
         let total: u64 = parts.iter().map(|(_, b)| b).sum();
         self.ensure_nodes((from.max(to) + 1) as usize);
-        self.sent[from as usize] += total;
-        self.received[to as usize] += total;
+        self.usage[from as usize][SENT] += total;
+        self.usage[to as usize][RECV] += total;
         for &(kind, bytes) in parts {
             self.by_kind[kind_idx(kind)] += bytes;
         }
@@ -74,12 +81,13 @@ impl TrafficLedger {
 
     /// In+out bytes for one node (the paper's per-node network usage).
     pub fn node_usage(&self, node: NodeId) -> u64 {
-        self.sent[node as usize] + self.received[node as usize]
+        let u = self.usage[node as usize];
+        u[SENT] + u[RECV]
     }
 
     /// Total bytes transferred (each message counted once).
     pub fn total(&self) -> u64 {
-        self.sent.iter().sum()
+        self.usage.iter().map(|u| u[SENT]).sum()
     }
 
     /// Bytes attributed to one traffic class.
@@ -109,8 +117,8 @@ impl TrafficLedger {
     pub fn min_max_usage(&self, n: usize) -> (u64, u64) {
         let mut min = u64::MAX;
         let mut max = 0;
-        for i in 0..n.min(self.sent.len()) {
-            let u = self.sent[i] + self.received[i];
+        for u in self.usage.iter().take(n) {
+            let u = u[SENT] + u[RECV];
             if u > 0 {
                 min = min.min(u);
                 max = max.max(u);
@@ -124,7 +132,8 @@ impl TrafficLedger {
 
     /// Conservation check: every sent byte was received exactly once.
     pub fn is_conserved(&self) -> bool {
-        self.sent.iter().sum::<u64>() == self.received.iter().sum::<u64>()
+        self.usage.iter().map(|u| u[SENT]).sum::<u64>()
+            == self.usage.iter().map(|u| u[RECV]).sum::<u64>()
     }
 }
 

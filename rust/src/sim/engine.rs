@@ -19,6 +19,18 @@
 //!   in lockstep) and selectable crate-wide via the `queue-heap` cargo
 //!   feature.
 //!
+//! Both backends store event payloads in an [`EventArena`]: a slab of
+//! fixed-size records recycled through a free list and addressed by `u32`
+//! handles. Buckets and heaps then hold only small fixed-width entries
+//! (`(time, seq, handle)` — the sort key is copied next to the handle so
+//! ordering never needs to chase into the slab), payloads are written once
+//! and moved once on pop (never shuffled during rebalances), and the
+//! arena's footprint is bounded by the *peak live* event count instead of
+//! growing with bucket slack. Handle reuse cannot perturb ordering —
+//! handles are identity only, never part of the sort key — so every
+//! same-seed fingerprint replays bit-identically (pinned by
+//! `tests/queue_differential.rs`).
+//!
 //! Both pop strictly by `(time, insertion seq)`, so swapping backends never
 //! changes a session's fingerprint.
 
@@ -28,6 +40,10 @@ use std::collections::{BinaryHeap, VecDeque};
 use super::time::SimTime;
 
 /// An event scheduled at a virtual time, ordered for a min-heap.
+///
+/// This is the public statement of the ordering contract — earliest
+/// `(at, seq)` pops first. The queue backends themselves keep payloads in
+/// an internal arena and order fixed-width `(at, seq, handle)` entries.
 #[derive(Debug)]
 pub struct ScheduledEvent<E> {
     pub at: SimTime,
@@ -66,6 +82,115 @@ pub type EventQueue<E> = CalendarEventQueue<E>;
 #[cfg(feature = "queue-heap")]
 pub type EventQueue<E> = HeapEventQueue<E>;
 
+// -------------------------------------------------------------- event arena
+
+/// One fixed-size arena record: the `(at, seq)` sort key plus the payload.
+/// `event` is `None` exactly while the slot sits on the free list.
+struct Slot<E> {
+    at: SimTime,
+    seq: u64,
+    event: Option<E>,
+}
+
+/// Slab/free-list arena of scheduled events, addressed by `u32` handles.
+///
+/// Slots are allocated once and recycled LIFO through `free`; the slab
+/// never shrinks, so its high-water mark equals the peak number of
+/// simultaneously live events — the natural working set of a session —
+/// rather than the total events ever scheduled.
+struct EventArena<E> {
+    slots: Vec<Slot<E>>,
+    free: Vec<u32>,
+}
+
+impl<E> EventArena<E> {
+    fn new() -> Self {
+        EventArena { slots: Vec::new(), free: Vec::new() }
+    }
+
+    /// Store an event, reusing a free slot when one exists.
+    fn insert(&mut self, at: SimTime, seq: u64, event: E) -> u32 {
+        if let Some(h) = self.free.pop() {
+            let s = &mut self.slots[h as usize];
+            debug_assert!(s.event.is_none(), "free-listed slot still occupied");
+            s.at = at;
+            s.seq = seq;
+            s.event = Some(event);
+            h
+        } else {
+            let h = u32::try_from(self.slots.len())
+                .expect("event arena: more than u32::MAX simultaneously live events");
+            self.slots.push(Slot { at, seq, event: Some(event) });
+            h
+        }
+    }
+
+    /// Take the event out of slot `h` and recycle the slot.
+    fn remove(&mut self, h: u32) -> (SimTime, E) {
+        let s = &mut self.slots[h as usize];
+        let event = s.event.take().expect("event slot already freed");
+        self.free.push(h);
+        (s.at, event)
+    }
+
+    #[inline]
+    fn at(&self, h: u32) -> SimTime {
+        self.slots[h as usize].at
+    }
+
+    /// The `(at µs, seq)` sort key of slot `h`.
+    #[inline]
+    fn key(&self, h: u32) -> (u64, u64) {
+        let s = &self.slots[h as usize];
+        (s.at.0, s.seq)
+    }
+
+    /// A fixed-width heap entry for slot `h` (key copied out of the slab).
+    fn entry(&self, h: u32) -> QueueEntry {
+        let s = &self.slots[h as usize];
+        QueueEntry { at: s.at, seq: s.seq, handle: h }
+    }
+
+    /// Slots ever allocated (the arena's high-water mark).
+    fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Fixed-width ordered entry: the `(at, seq)` key is duplicated beside the
+/// handle because `BinaryHeap` comparisons cannot borrow the arena. The
+/// handle is identity only — it never participates in ordering, so slot
+/// reuse cannot perturb pop order.
+#[derive(Debug, Clone, Copy)]
+struct QueueEntry {
+    at: SimTime,
+    seq: u64,
+    handle: u32,
+}
+
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl Eq for QueueEntry {}
+
+impl PartialOrd for QueueEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueueEntry {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reversed: BinaryHeap is a max-heap, we want earliest-first.
+        other
+            .at
+            .cmp(&self.at)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
 // --------------------------------------------------------------- heap shim
 
 /// Min-heap event queue with a virtual clock (the pre-calendar backend).
@@ -73,7 +198,8 @@ pub type EventQueue<E> = HeapEventQueue<E>;
 /// Invariant: `pop()` never returns an event earlier than the last popped
 /// one (time is monotone), and events at equal times pop in push order.
 pub struct HeapEventQueue<E> {
-    heap: BinaryHeap<ScheduledEvent<E>>,
+    arena: EventArena<E>,
+    heap: BinaryHeap<QueueEntry>,
     now: SimTime,
     seq: u64,
     popped: u64,
@@ -88,6 +214,7 @@ impl<E> Default for HeapEventQueue<E> {
 impl<E> HeapEventQueue<E> {
     pub fn new() -> Self {
         HeapEventQueue {
+            arena: EventArena::new(),
             heap: BinaryHeap::new(),
             now: SimTime::ZERO,
             seq: 0,
@@ -113,6 +240,12 @@ impl<E> HeapEventQueue<E> {
         self.heap.is_empty()
     }
 
+    /// Event slots ever allocated (the arena's high-water mark: peak
+    /// simultaneously live events, not total events scheduled).
+    pub fn arena_capacity(&self) -> usize {
+        self.arena.capacity()
+    }
+
     /// Schedule `event` at absolute virtual time `at`.
     ///
     /// Scheduling in the past (before `now`) is clamped to `now`: it models
@@ -121,7 +254,8 @@ impl<E> HeapEventQueue<E> {
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        self.heap.push(ScheduledEvent { at, seq, event });
+        let handle = self.arena.insert(at, seq, event);
+        self.heap.push(QueueEntry { at, seq, handle });
     }
 
     /// Schedule `event` after a virtual delay from now.
@@ -131,11 +265,12 @@ impl<E> HeapEventQueue<E> {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
-        let ev = self.heap.pop()?;
-        debug_assert!(ev.at >= self.now, "event queue went back in time");
-        self.now = ev.at;
+        let entry = self.heap.pop()?;
+        let (at, event) = self.arena.remove(entry.handle);
+        debug_assert!(at >= self.now, "event queue went back in time");
+        self.now = at;
         self.popped += 1;
-        Some((ev.at, ev.event))
+        Some((at, event))
     }
 
     /// Peek at the next event time without popping.
@@ -167,10 +302,17 @@ const REBALANCE_LEN: usize = 512;
 /// both O(1). Far-future events spill into a min-heap and are drained into
 /// buckets when the window re-anchors past them. Pop order is exactly
 /// `(time, insertion seq)` — bit-identical to [`HeapEventQueue`].
+///
+/// Payloads live once in the shared [`EventArena`]; buckets hold only
+/// 4-byte handles and the far heap 24-byte keyed entries, so rebalances
+/// and window hops shuffle handles, never event payloads, and per-bucket
+/// slack costs 4 bytes per slot instead of a full event record.
 pub struct CalendarEventQueue<E> {
+    /// Slab storage for every scheduled event's payload and key.
+    arena: EventArena<E>,
     /// `buckets[i]` covers `[win_start + i*width, win_start + (i+1)*width)`
     /// µs, sorted ascending by `(at, seq)` (front = earliest).
-    buckets: Vec<VecDeque<ScheduledEvent<E>>>,
+    buckets: Vec<VecDeque<u32>>,
     /// Bucket width in µs (adapts at each re-anchor).
     width: u64,
     /// Absolute µs covered by `buckets[0]`'s left edge.
@@ -179,9 +321,9 @@ pub struct CalendarEventQueue<E> {
     cursor: usize,
     /// Events currently in buckets.
     near_len: usize,
-    /// Events at or beyond the window end (min-first via `ScheduledEvent`'s
+    /// Events at or beyond the window end (min-first via [`QueueEntry`]'s
     /// reversed `Ord`).
-    far: BinaryHeap<ScheduledEvent<E>>,
+    far: BinaryHeap<QueueEntry>,
     now: SimTime,
     seq: u64,
     popped: u64,
@@ -203,6 +345,7 @@ impl<E> Default for CalendarEventQueue<E> {
 impl<E> CalendarEventQueue<E> {
     pub fn new() -> Self {
         CalendarEventQueue {
+            arena: EventArena::new(),
             buckets: (0..BUCKETS).map(|_| VecDeque::new()).collect(),
             width: 256,
             win_start: 0,
@@ -235,33 +378,41 @@ impl<E> CalendarEventQueue<E> {
         self.near_len == 0 && self.far.is_empty()
     }
 
+    /// Event slots ever allocated (the arena's high-water mark: peak
+    /// simultaneously live events, not total events scheduled).
+    pub fn arena_capacity(&self) -> usize {
+        self.arena.capacity()
+    }
+
     fn win_end(&self) -> u64 {
         self.win_start.saturating_add(self.width * BUCKETS as u64)
     }
 
-    /// Insert into the right near bucket; returns the bucket index so
-    /// [`CalendarEventQueue::schedule_at`] can watch for overflow.
-    fn insert_near(&mut self, ev: ScheduledEvent<E>) -> usize {
+    /// Insert handle `h` into the right near bucket; returns the bucket
+    /// index so [`CalendarEventQueue::schedule_at`] can watch for overflow.
+    fn insert_near(&mut self, h: u32) -> usize {
+        let (at_us, seq) = self.arena.key(h);
         // When the window was just (re-)anchored ahead of `now` (idle jump
         // to a distant first event), a push may land before `win_start`;
         // clamp it into the cursor bucket. Every earlier bucket is empty
         // and every event in or after the cursor bucket has a larger
         // (at, seq) key — in-bucket sorted insertion keeps the global pop
         // order exact.
-        let idx = if ev.at.0 <= self.win_start {
+        let idx = if at_us <= self.win_start {
             self.cursor
         } else {
-            (((ev.at.0 - self.win_start) / self.width) as usize).max(self.cursor)
+            (((at_us - self.win_start) / self.width) as usize).max(self.cursor)
         };
         debug_assert!(idx < BUCKETS, "near insert outside window");
+        let arena = &self.arena;
         let b = &mut self.buckets[idx];
-        let key = (ev.at.0, ev.seq);
+        let key = (at_us, seq);
         // Hot path: events arrive mostly in increasing (at, seq) — append.
-        if !b.back().is_some_and(|e| (e.at.0, e.seq) > key) {
-            b.push_back(ev);
+        if !b.back().is_some_and(|&e| arena.key(e) > key) {
+            b.push_back(h);
         } else {
-            let pos = b.partition_point(|e| (e.at.0, e.seq) < key);
-            b.insert(pos, ev);
+            let pos = b.partition_point(|&e| arena.key(e) < key);
+            b.insert(pos, h);
         }
         self.near_len += 1;
         idx
@@ -272,22 +423,25 @@ impl<E> CalendarEventQueue<E> {
     /// past [`REBALANCE_LEN`] — a stale over-coarse width after an idle
     /// stretch (probe-only traffic inflates the gap estimate; `rewindow`
     /// can only fix it once the near window drains, which a steady-state
-    /// session never does). Pop order is untouched: events are re-placed
-    /// in canonical `(at, seq)` order.
+    /// session never does). Pop order is untouched: handles are re-placed
+    /// in canonical `(at, seq)` order, payloads never move.
     fn rebalance(&mut self) {
-        let mut all: Vec<ScheduledEvent<E>> = Vec::with_capacity(self.near_len);
+        let mut all: Vec<u32> = Vec::with_capacity(self.near_len);
         for b in &mut self.buckets[self.cursor..] {
             all.extend(b.drain(..));
         }
-        all.sort_unstable_by(|a, b| (a.at.0, a.seq).cmp(&(b.at.0, b.seq)));
+        {
+            let arena = &self.arena;
+            all.sort_unstable_by_key(|&h| arena.key(h));
+        }
         if all.is_empty() {
             return;
         }
         // Width from the 99th-percentile span so one straggler far ahead
         // (a probe tick past a dense burst) cannot keep the width coarse;
         // events beyond the resulting window spill to the far heap.
-        let lo = all[0].at.0;
-        let p99 = all[(all.len() * 99) / 100].at.0;
+        let lo = self.arena.key(all[0]).0;
+        let p99 = self.arena.key(all[(all.len() * 99) / 100]).0;
         let span = (p99 - lo).max(1);
         let per_event = span as f64 * TARGET_PER_BUCKET / all.len() as f64;
         self.width = (per_event.ceil() as u64).clamp(1, MAX_WIDTH_US);
@@ -296,12 +450,12 @@ impl<E> CalendarEventQueue<E> {
         self.cursor = 0;
         self.near_len = 0;
         let end = self.win_end();
-        for ev in all {
-            if ev.at.0 < end {
+        for h in all {
+            if self.arena.key(h).0 < end {
                 // Sorted order → the append fast path, O(1) each.
-                self.insert_near(ev);
+                self.insert_near(h);
             } else {
-                self.far.push(ev);
+                self.far.push(self.arena.entry(h));
             }
         }
         // The new window may END LATER than the old one (a width increase):
@@ -312,8 +466,8 @@ impl<E> CalendarEventQueue<E> {
             if e.at.0 >= end {
                 break;
             }
-            let ev = self.far.pop().expect("peeked event vanished");
-            self.insert_near(ev);
+            let e = self.far.pop().expect("peeked event vanished");
+            self.insert_near(e.handle);
         }
     }
 
@@ -331,8 +485,8 @@ impl<E> CalendarEventQueue<E> {
             if e.at.0 >= end {
                 break;
             }
-            let ev = self.far.pop().expect("peeked event vanished");
-            self.insert_near(ev);
+            let e = self.far.pop().expect("peeked event vanished");
+            self.insert_near(e.handle);
         }
     }
 
@@ -344,18 +498,18 @@ impl<E> CalendarEventQueue<E> {
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
-        let ev = ScheduledEvent { at, seq, event };
+        let handle = self.arena.insert(at, seq, event);
         if self.near_len == 0 && self.far.is_empty() {
             // Empty queue: re-anchor the window directly at this event so a
             // long idle jump (e.g. the gap to the next probe tick) never
             // forces a far-heap round trip.
             self.win_start = (at.0 / self.width) * self.width;
             self.cursor = 0;
-            self.insert_near(ev);
+            self.insert_near(handle);
             return;
         }
         if at.0 < self.win_end() {
-            let idx = self.insert_near(ev);
+            let idx = self.insert_near(handle);
             self.since_rebalance += 1;
             // An over-coarse width piles everything into one bucket and
             // degrades the sorted insert; rebuild with a fresh width. At
@@ -369,7 +523,7 @@ impl<E> CalendarEventQueue<E> {
                 self.since_rebalance = 0;
             }
         } else {
-            self.far.push(ev);
+            self.far.push(QueueEntry { at, seq, handle });
         }
     }
 
@@ -390,26 +544,27 @@ impl<E> CalendarEventQueue<E> {
             self.cursor += 1;
             debug_assert!(self.cursor < BUCKETS, "near events lost");
         }
-        let ev = self.buckets[self.cursor].pop_front().expect("non-empty bucket");
+        let h = self.buckets[self.cursor].pop_front().expect("non-empty bucket");
         self.near_len -= 1;
-        debug_assert!(ev.at >= self.now, "event queue went back in time");
+        let (at, event) = self.arena.remove(h);
+        debug_assert!(at >= self.now, "event queue went back in time");
         // Clamp the sample so one idle jump (a probe tick after traffic
         // went quiet) cannot blow the gap estimate — and hence the next
         // window's bucket width — up by orders of magnitude. A genuinely
         // coarser workload still converges (≤16x growth per sample).
-        let gap = ((ev.at.0 - self.now.0) as f64).min(self.gap_ema * 16.0);
+        let gap = ((at.0 - self.now.0) as f64).min(self.gap_ema * 16.0);
         self.gap_ema = 0.9 * self.gap_ema + 0.1 * gap;
-        self.now = ev.at;
+        self.now = at;
         self.popped += 1;
-        Some((ev.at, ev.event))
+        Some((at, event))
     }
 
     /// Peek at the next event time without popping.
     pub fn peek_time(&self) -> Option<SimTime> {
         if self.near_len > 0 {
             for b in &self.buckets[self.cursor..] {
-                if let Some(e) = b.front() {
-                    return Some(e.at);
+                if let Some(&h) = b.front() {
+                    return Some(self.arena.at(h));
                 }
             }
         }
@@ -516,6 +671,45 @@ mod tests {
                     assert_eq!(q.len(), 100);
                     q.pop();
                     assert_eq!(q.len(), 99);
+                }
+
+                #[test]
+                fn arena_capacity_tracks_peak_live_not_total() {
+                    // Five full drain cycles of 1000 events each: the slab
+                    // must recycle freed slots instead of growing per push.
+                    let mut q = $q::new();
+                    for wave in 0..5u64 {
+                        for i in 0..1_000u64 {
+                            let at = SimTime::from_micros(q.now().0 + 1 + i);
+                            q.schedule_at(at, wave * 1_000 + i);
+                        }
+                        let mut last = q.now();
+                        while let Some((t, _)) = q.pop() {
+                            assert!(t >= last, "reuse broke time order");
+                            last = t;
+                        }
+                    }
+                    assert_eq!(
+                        q.arena_capacity(),
+                        1_000,
+                        "freed slots must be recycled across drain cycles"
+                    );
+                }
+
+                #[test]
+                fn reused_slots_keep_time_seq_order() {
+                    let mut q = $q::new();
+                    q.schedule_at(SimTime::from_micros(100), "a");
+                    q.schedule_at(SimTime::from_micros(50), "b");
+                    assert_eq!(q.pop().unwrap().1, "b");
+                    // "c" reuses b's freed slot but carries a later time
+                    // than "d": handle identity must not leak into order.
+                    q.schedule_at(SimTime::from_micros(70), "c");
+                    q.schedule_at(SimTime::from_micros(60), "d");
+                    assert_eq!(q.pop().unwrap().1, "d");
+                    assert_eq!(q.pop().unwrap().1, "c");
+                    assert_eq!(q.pop().unwrap().1, "a");
+                    assert!(q.pop().is_none());
                 }
             }
         };

@@ -284,6 +284,15 @@ impl<P: Protocol> SimHarness<P> {
         let population = Population::new(total_nodes, initial_alive);
         fabric.ensure_nodes(total_nodes);
         let rng = SimRng::new(cfg.seed ^ 0x5b_4841_524e_4553); // "HARNES"
+        // Size the metrics sink up front: the probe schedule and the round
+        // budget bound the curve/round-start growth exactly, so long runs
+        // never reallocate those vectors mid-session.
+        let probes = if cfg.eval_interval > SimTime::ZERO {
+            (cfg.max_time.0 / cfg.eval_interval.0) as usize + 2
+        } else {
+            2
+        };
+        let metrics = SessionMetrics::with_budget(cfg.max_rounds, probes);
         SimHarness {
             cfg,
             protocol,
@@ -294,7 +303,7 @@ impl<P: Protocol> SimHarness<P> {
             compute,
             churn,
             rng,
-            metrics: SessionMetrics::default(),
+            metrics,
             done: false,
         }
     }
@@ -368,7 +377,14 @@ impl<P: Protocol> SimHarness<P> {
     }
 
     /// Run to completion; returns the collected metrics and the ledger.
-    pub fn run(mut self) -> (SessionMetrics, TrafficLedger) {
+    pub fn run(self) -> (SessionMetrics, TrafficLedger) {
+        let (metrics, ledger, _) = self.run_into_parts();
+        (metrics, ledger)
+    }
+
+    /// Like [`SimHarness::run`], but also hands the terminal protocol state
+    /// back so tests can assert per-node columns (rounds, seqs) directly.
+    pub fn run_into_parts(mut self) -> (SessionMetrics, TrafficLedger, P) {
         for (i, ev) in self.churn.events().iter().enumerate() {
             self.queue.schedule_at(ev.at, HarnessEvent::Churn(i));
         }
@@ -420,7 +436,7 @@ impl<P: Protocol> SimHarness<P> {
         let nodes = self.population.len();
         let ledger = self.fabric.into_ledger();
         self.metrics.traffic = TrafficSummary::from_ledger(&ledger, nodes);
-        (self.metrics, ledger)
+        (self.metrics, ledger, self.protocol)
     }
 }
 

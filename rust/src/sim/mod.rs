@@ -13,12 +13,14 @@
 pub mod churn;
 pub mod engine;
 pub mod harness;
+pub mod node_table;
 pub mod population;
 pub mod rng;
 pub mod time;
 
 pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent};
+pub use node_table::NodeTable;
 pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness};
 pub use population::{LivenessMirror, Population, Status};
 pub use rng::{SamplingVersion, SimRng};

@@ -1,0 +1,228 @@
+//! Struct-of-arrays storage for hot per-node protocol state.
+//!
+//! At million-node scale the binding constraint is bytes, not cycles:
+//! an array-of-structs `Vec<Node>` pays for every field of every node on
+//! every cache line it touches, and padding + cold payload (models,
+//! inboxes) pushed the per-node footprint far past what the counters
+//! themselves need. `NodeTable` splits the *hot* fields — round counters,
+//! training sequence numbers, staleness epochs, activity timers — into
+//! parallel flat arrays alongside [`super::Population`], so protocol
+//! structs keep only cold/aggregate state and the per-event accesses
+//! (round check, seq check) stream through dense homogeneous columns.
+//!
+//! Columns are opt-in: a protocol enables exactly the columns it uses via
+//! the `with_*` builders and the rest stay unallocated (`Vec::new()`), so
+//! gossip does not pay for MoDeST's activity timers and vice versa.
+//! Accessing a column that was never enabled panics on the out-of-bounds
+//! index — a programming error, not a runtime condition.
+
+use super::time::SimTime;
+use crate::Round;
+
+/// Parallel flat columns of hot per-node state (see module docs).
+///
+/// All columns are indexed by node id; enabled columns always have
+/// exactly `len()` entries.
+#[derive(Debug, Clone, Default)]
+pub struct NodeTable {
+    len: usize,
+    /// Per-node protocol round counter.
+    rounds: Vec<Round>,
+    /// Per-node training/staleness sequence: bumped on every dispatched
+    /// job and on churn recovery, so exactly one in-flight completion is
+    /// ever valid per node.
+    seqs: Vec<u64>,
+    /// Per-node epoch marker (e.g. D-SGD's `resumed_at` rejoin round).
+    epochs: Vec<Round>,
+    /// Per-node activity timestamp (e.g. MoDeST's `last_active`).
+    timers: Vec<SimTime>,
+    /// Per-node generic counter (e.g. MoDeST's membership counter).
+    counters: Vec<u64>,
+}
+
+impl NodeTable {
+    /// An empty table for `len` nodes; enable columns with `with_*`.
+    pub fn new(len: usize) -> NodeTable {
+        NodeTable { len, ..NodeTable::default() }
+    }
+
+    /// Enable the round column, every node starting at `init`.
+    pub fn with_rounds(mut self, init: Round) -> NodeTable {
+        self.rounds = vec![init; self.len];
+        self
+    }
+
+    /// Enable the sequence column (zeroed).
+    pub fn with_seqs(mut self) -> NodeTable {
+        self.seqs = vec![0; self.len];
+        self
+    }
+
+    /// Enable the epoch column (zeroed).
+    pub fn with_epochs(mut self) -> NodeTable {
+        self.epochs = vec![0; self.len];
+        self
+    }
+
+    /// Enable the timer column (all `SimTime::ZERO`).
+    pub fn with_timers(mut self) -> NodeTable {
+        self.timers = vec![SimTime::ZERO; self.len];
+        self
+    }
+
+    /// Enable the counter column (zeroed).
+    pub fn with_counters(mut self) -> NodeTable {
+        self.counters = vec![0; self.len];
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    // ------------------------------------------------------------- rounds
+
+    #[inline]
+    pub fn round(&self, i: usize) -> Round {
+        self.rounds[i]
+    }
+
+    #[inline]
+    pub fn set_round(&mut self, i: usize, round: Round) {
+        self.rounds[i] = round;
+    }
+
+    /// All rounds in node order (e.g. for
+    /// [`super::population::LivenessMirror::min_live_round`]).
+    pub fn rounds(&self) -> impl Iterator<Item = Round> + '_ {
+        self.rounds.iter().copied()
+    }
+
+    // -------------------------------------------------------------- seqs
+
+    #[inline]
+    pub fn seq(&self, i: usize) -> u64 {
+        self.seqs[i]
+    }
+
+    /// Advance node `i`'s sequence and return the new value: the freshly
+    /// dispatched job's id, invalidating every older in-flight completion.
+    #[inline]
+    pub fn bump_seq(&mut self, i: usize) -> u64 {
+        self.seqs[i] += 1;
+        self.seqs[i]
+    }
+
+    // ------------------------------------------------------------ epochs
+
+    #[inline]
+    pub fn epoch(&self, i: usize) -> Round {
+        self.epochs[i]
+    }
+
+    #[inline]
+    pub fn set_epoch(&mut self, i: usize, epoch: Round) {
+        self.epochs[i] = epoch;
+    }
+
+    // ------------------------------------------------------------ timers
+
+    #[inline]
+    pub fn timer(&self, i: usize) -> SimTime {
+        self.timers[i]
+    }
+
+    #[inline]
+    pub fn set_timer(&mut self, i: usize, at: SimTime) {
+        self.timers[i] = at;
+    }
+
+    // ---------------------------------------------------------- counters
+
+    #[inline]
+    pub fn counter(&self, i: usize) -> u64 {
+        self.counters[i]
+    }
+
+    #[inline]
+    pub fn set_counter(&mut self, i: usize, value: u64) {
+        self.counters[i] = value;
+    }
+
+    /// Advance node `i`'s counter and return the new value.
+    #[inline]
+    pub fn bump_counter(&mut self, i: usize) -> u64 {
+        self.counters[i] += 1;
+        self.counters[i]
+    }
+
+    /// Heap bytes held by the enabled columns (memory-budget accounting).
+    pub fn heap_bytes(&self) -> usize {
+        self.rounds.capacity() * std::mem::size_of::<Round>()
+            + self.seqs.capacity() * std::mem::size_of::<u64>()
+            + self.epochs.capacity() * std::mem::size_of::<Round>()
+            + self.timers.capacity() * std::mem::size_of::<SimTime>()
+            + self.counters.capacity() * std::mem::size_of::<u64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn columns_initialize_and_mutate() {
+        let mut t = NodeTable::new(4).with_rounds(1).with_seqs();
+        assert_eq!(t.len(), 4);
+        assert!(!t.is_empty());
+        assert_eq!(t.round(3), 1);
+        t.set_round(3, 9);
+        assert_eq!(t.round(3), 9);
+        assert_eq!(t.round(0), 1, "other rows untouched");
+        assert_eq!(t.seq(2), 0);
+        assert_eq!(t.bump_seq(2), 1);
+        assert_eq!(t.bump_seq(2), 2);
+        assert_eq!(t.seq(2), 2);
+        assert_eq!(t.rounds().collect::<Vec<_>>(), vec![1, 1, 1, 9]);
+    }
+
+    #[test]
+    fn epoch_timer_and_counter_columns() {
+        let mut t = NodeTable::new(2).with_epochs().with_timers().with_counters();
+        assert_eq!(t.epoch(0), 0);
+        t.set_epoch(0, 7);
+        assert_eq!(t.epoch(0), 7);
+        assert_eq!(t.timer(1), SimTime::ZERO);
+        t.set_timer(1, SimTime::from_millis(250));
+        assert_eq!(t.timer(1), SimTime::from_millis(250));
+        t.set_counter(1, 5);
+        assert_eq!(t.bump_counter(1), 6);
+        assert_eq!(t.counter(0), 0);
+    }
+
+    #[test]
+    fn unused_columns_stay_unallocated() {
+        let t = NodeTable::new(1_000).with_rounds(1);
+        // Only the round column costs memory: the diet depends on it.
+        assert_eq!(t.heap_bytes(), 1_000 * std::mem::size_of::<Round>());
+    }
+
+    #[test]
+    #[should_panic]
+    fn disabled_column_access_panics() {
+        let t = NodeTable::new(8).with_rounds(1);
+        let _ = t.seq(0);
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = NodeTable::new(0);
+        assert!(t.is_empty());
+        assert_eq!(t.heap_bytes(), 0);
+        assert_eq!(t.rounds().count(), 0);
+    }
+}

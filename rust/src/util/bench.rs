@@ -142,6 +142,28 @@ impl Bencher {
         self.results.last().unwrap()
     }
 
+    /// Record a raw measured value (bytes, counts, ...) as a one-iteration
+    /// row. The value lands in the `*_ns` JSON fields so the trend gate
+    /// compares it exactly like a timing row — `mem/bytes-per-node/...`
+    /// rows ride the same snapshot diff as the hot-path timings.
+    pub fn record_value(&mut self, name: &str, value: u64) -> &BenchResult {
+        let d = Duration::from_nanos(value);
+        let result = BenchResult {
+            name: name.to_string(),
+            iterations: 1,
+            mean: d,
+            p50: d,
+            p95: d,
+        };
+        println!(
+            "{:<44} {:>10} value",
+            format!("{}/{}", self.group, result.name),
+            value
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -236,6 +258,17 @@ mod tests {
         assert!(j.contains("\"mean_ns\""));
         // Exactly one trailing entry without a comma.
         assert_eq!(j.matches("},").count(), 1);
+    }
+
+    #[test]
+    fn record_value_round_trips_through_json() {
+        let mut b = Bencher::new("vtest");
+        let r = b.record_value("mem/bytes-per-node/n=100000", 184).clone();
+        assert_eq!(r.iterations, 1);
+        assert_eq!(r.p50.as_nanos(), 184);
+        let j = b.to_json();
+        assert!(j.contains("\"name\": \"mem/bytes-per-node/n=100000\""));
+        assert!(j.contains("\"p50_ns\": 184"));
     }
 
     #[test]

@@ -15,7 +15,7 @@ use super::json::Json;
 
 /// Bench-name prefixes whose regression fails the build. Everything else
 /// (aggregation kernels, view merges, ...) is tracked but advisory.
-pub const GUARDED_PREFIXES: &[&str] = &["des/queue/", "fanout/", "sample/"];
+pub const GUARDED_PREFIXES: &[&str] = &["des/queue/", "fanout/", "sample/", "mem/"];
 
 /// Guarded rows faster than this in BOTH snapshots are exempt from the
 /// ratio gate: a 2x swing on a tens-of-nanoseconds row is scheduler noise
@@ -189,6 +189,26 @@ mod tests {
         let bad = regressions(&compare_trend(&base, &new), 2.0);
         assert_eq!(bad.len(), 1, "1.75x fan-out drift must not fail");
         assert_eq!(bad[0].name, "sample/v2-partial/n=100000,k=10");
+    }
+
+    #[test]
+    fn mem_budget_rows_are_guarded() {
+        // The byte-budget rows from the memory-diet work are value rows
+        // (bytes parked in the ns fields) under the `mem/` prefix; a node
+        // struct quietly regrowing past 2x per node must fail the build
+        // exactly like a hot-path slowdown.
+        let base = snapshot(&[
+            ("mem/bytes-per-node/n=100000", 320),
+            ("mem/bytes-per-node/n=10000", 410),
+        ]);
+        let new = snapshot(&[
+            ("mem/bytes-per-node/n=100000", 980),
+            ("mem/bytes-per-node/n=10000", 430),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "mem/bytes-per-node/n=100000");
+        assert!(bad[0].guarded);
     }
 
     #[test]

@@ -182,6 +182,79 @@ fn batch_push_then_drain_is_fully_sorted() {
     assert_eq!(a, b);
 }
 
+#[test]
+fn slab_reuse_storms_keep_backends_in_lockstep() {
+    // The arena-allocator stress: waves of pushes alternating with full
+    // and half drains, so event slots are freed and recycled thousands of
+    // times. Recycled slots must never leak a stale (time, seq) — pop
+    // order stays bit-identical to the heap shim through every wave.
+    let mut rng = SimRng::new(0x51ab);
+    let mut cal = CalendarEventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    let mut label = 0u64;
+    for wave in 0..40u64 {
+        let width = 100 + (wave * 137) % 1_900;
+        for _ in 0..width {
+            let at = cal.now() + SimTime::from_micros(1 + rng.gen_range(50_000));
+            cal.schedule_at(at, label);
+            heap.schedule_at(at, label);
+            label += 1;
+        }
+        // Odd waves drain fully (arena empties, free list holds every
+        // slot); even waves drain half (live and recycled slots mix).
+        let drain = if wave % 2 == 1 { cal.len() } else { cal.len() / 2 };
+        for i in 0..drain {
+            let a = cal.pop();
+            let b = heap.pop();
+            assert_eq!(a, b, "wave {wave} pop {i} diverged");
+            assert!(a.is_some(), "wave {wave} under-filled at pop {i}");
+        }
+        assert_eq!(cal.len(), heap.len(), "wave {wave} len diverged");
+    }
+    loop {
+        match (cal.pop(), heap.pop()) {
+            (None, None) => break,
+            (a, b) => assert_eq!(a, b, "tail diverged"),
+        }
+    }
+    assert_eq!(cal.events_processed(), heap.events_processed());
+}
+
+#[test]
+fn slab_reuse_bounds_arena_growth_to_peak_live() {
+    // Forty full fill/drain cycles push 40x more events than are ever
+    // live at once. The free list must recycle slots: the arena ends no
+    // larger than the peak resident set, on both backends.
+    let mut rng = SimRng::new(0xa3e4);
+    let mut cal = CalendarEventQueue::new();
+    let mut heap = HeapEventQueue::new();
+    let mut label = 0u64;
+    let mut peak = 0usize;
+    for _ in 0..40u64 {
+        for _ in 0..2_000 {
+            let at = cal.now() + SimTime::from_micros(1 + rng.gen_range(10_000));
+            cal.schedule_at(at, label);
+            heap.schedule_at(at, label);
+            label += 1;
+        }
+        peak = peak.max(cal.len());
+        while let Some(a) = cal.pop() {
+            assert_eq!(Some(a), heap.pop());
+        }
+        assert_eq!(heap.pop(), None);
+    }
+    assert!(
+        cal.arena_capacity() <= peak,
+        "calendar arena grew past peak live: {} > {peak}",
+        cal.arena_capacity()
+    );
+    assert!(
+        heap.arena_capacity() <= peak,
+        "heap arena grew past peak live: {} > {peak}",
+        heap.arena_capacity()
+    );
+}
+
 // ------------------------------------------------------------ fingerprints
 
 fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
