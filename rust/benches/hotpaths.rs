@@ -16,7 +16,11 @@
 //! * the **memory budget**: live heap bytes per node for a fully-built
 //!   gossip session at n ∈ {10k, 100k, 1M}, counted by a wrapping global
 //!   allocator (bench binary only) and recorded as `mem/bytes-per-node/*`
-//!   value rows — guarded by the CI bench-diff gate like the timings.
+//!   value rows — guarded by the CI bench-diff gate like the timings,
+//! * **checkpoint/restore** at n=100k — full-session snapshot
+//!   serialization (`snapshot/write`), the complete resume path
+//!   (`snapshot/read`), and the on-disk size (`snapshot/bytes`), all
+//!   guarded rows.
 //!
 //! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
 //! Results are also written machine-readable to `BENCH_hotpaths.json`
@@ -34,6 +38,7 @@ use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::candidate_order;
 use modest_dl::modest::View;
 use modest_dl::net::{LatencyMatrix, MsgKind, NetworkFabric, SizeModel};
+use modest_dl::scenario::{resume_session, run_scenario, ScenarioSpec};
 #[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
 use modest_dl::sim::{
@@ -366,6 +371,43 @@ fn main() {
         drop(session);
         let per_node = after.saturating_sub(before) / n as u64;
         b.record_value(&format!("mem/bytes-per-node/n={n}"), per_node);
+    }
+
+    // ---- snapshot: checkpoint/restore cost at the 100k-node scale point
+    // (guarded rows — the `snapshot/` prefix is in the CI bench-diff
+    // gate). The session is the CI smoke shape — mock gossip, sampling
+    // v2 — snapshotted 5 sim-seconds in, so the captured state has live
+    // fan-out traffic, interned Arc models, and a populated event arena.
+    // `write` is the in-memory serialization of the full session; `read`
+    // is the complete resume path (rebuild the statics from the embedded
+    // spec, replay the dynamic state); `bytes` is the on-disk size, parked
+    // in the ns field like the mem/ budget rows and guarded the same way.
+    {
+        let spec = ScenarioSpec::from_json(
+            r#"{
+                "workload": {"dataset": "mock"},
+                "population": {"nodes": 100000},
+                "protocol": {"name": "gossip"},
+                "run": {"max_time_s": 40.0, "max_rounds": 2,
+                        "eval_interval_s": 10.0, "seed": 77, "sampling": "v2"}
+            }"#,
+        )
+        .unwrap();
+        let path = std::env::temp_dir().join("bench_snapshot_100k.snap");
+        let mut ck = spec;
+        ck.run.checkpoint_at_s = Some(5.0);
+        ck.run.checkpoint_out = Some(path.to_string_lossy().into_owned());
+        let _ = run_scenario(&ck, None, ChurnSchedule::empty()).unwrap();
+        let bytes = std::fs::read(&path).expect("checkpoint never written");
+        let _ = std::fs::remove_file(&path);
+        b.record_value("snapshot/bytes/n=100k", bytes.len() as u64);
+        let (_, session) = resume_session(&bytes, None, None, None).unwrap();
+        b.bench_once("snapshot/write/n=100k", || {
+            black_box(session.snapshot_bytes().unwrap());
+        });
+        b.bench_once("snapshot/read/n=100k", || {
+            black_box(resume_session(black_box(&bytes), None, None, None).unwrap());
+        });
     }
 
     // ---- view merge + wire size at population 500 (celeba scale)

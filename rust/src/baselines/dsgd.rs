@@ -20,7 +20,8 @@ use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, LivenessMirror,
-    NodeTable, Protocol, SamplingVersion, SimHarness, SimTime,
+    NodeTable, Protocol, ResumeOptions, SamplingVersion, SimHarness, SimTime, SnapshotReader,
+    SnapshotWriter,
 };
 use crate::{NodeId, Round};
 
@@ -44,6 +45,13 @@ pub struct DsgdConfig {
     /// Peer-sampling stream version. D-SGD itself samples no peers (fixed
     /// topology), but the harness plumbing carries the session-wide choice.
     pub sampling: SamplingVersion,
+    /// Canonical scenario JSON embedded into snapshots (None = session not
+    /// built from a spec; checkpointing disabled).
+    pub spec_json: Option<String>,
+    /// Write a snapshot and stop once the clock reaches this instant.
+    pub checkpoint_at: Option<SimTime>,
+    /// Snapshot file path for `checkpoint_at`.
+    pub checkpoint_out: Option<String>,
 }
 
 impl Default for DsgdConfig {
@@ -57,6 +65,9 @@ impl Default for DsgdConfig {
             target_metric: None,
             seed: 42,
             sampling: SamplingVersion::default(),
+            spec_json: None,
+            checkpoint_at: None,
+            checkpoint_out: None,
         }
     }
 }
@@ -71,6 +82,9 @@ impl DsgdConfig {
             target_metric: self.target_metric,
             seed: self.seed,
             sampling: self.sampling,
+            spec_json: self.spec_json.clone(),
+            checkpoint_at: self.checkpoint_at,
+            checkpoint_out: self.checkpoint_out.clone(),
         }
     }
 }
@@ -348,6 +362,82 @@ impl Protocol for DsgdProtocol {
     fn final_round(&self) -> Round {
         self.live.min_live_round(self.nodes.rounds())
     }
+
+    // Dynamic state only: `cfg`, `graph` (fixed topology), and `sizes` are
+    // rebuilt from the spec. Inbox maps are written in sorted round order so
+    // iteration order never leaks into the bytes (HashMap order is seeded
+    // per process); inbox models go through Arc interning.
+    fn snapshot(&self, w: &mut SnapshotWriter) -> Result<()> {
+        self.nodes.write_into(w);
+        w.write_usize(self.models.len());
+        for m in &self.models {
+            w.write_model_plain(m);
+        }
+        w.write_usize(self.trained.len());
+        for t in &self.trained {
+            match t {
+                Some(m) => {
+                    w.write_bool(true);
+                    w.write_model_plain(m);
+                }
+                None => w.write_bool(false),
+            }
+        }
+        w.write_usize(self.inboxes.len());
+        for inbox in &self.inboxes {
+            let mut rounds: Vec<Round> = inbox.keys().copied().collect();
+            rounds.sort_unstable();
+            w.write_usize(rounds.len());
+            for r in rounds {
+                w.write_u64(r);
+                w.write_model(&inbox[&r]);
+            }
+        }
+        self.live.write_into(w);
+        w.write_u64(self.top_round);
+        Ok(())
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader) -> Result<()> {
+        self.nodes = NodeTable::read_from(r)?;
+        let n = r.read_usize()?;
+        let mut models = Vec::with_capacity(n);
+        for _ in 0..n {
+            models.push(r.read_model_plain()?);
+        }
+        self.models = models;
+        let n = r.read_usize()?;
+        let mut trained = Vec::with_capacity(n);
+        for _ in 0..n {
+            trained.push(if r.read_bool()? { Some(r.read_model_plain()?) } else { None });
+        }
+        self.trained = trained;
+        let n = r.read_usize()?;
+        let mut inboxes = Vec::with_capacity(n);
+        for _ in 0..n {
+            let k = r.read_usize()?;
+            let mut inbox = HashMap::with_capacity(k);
+            for _ in 0..k {
+                let round = r.read_u64()?;
+                inbox.insert(round, r.read_model()?);
+            }
+            inboxes.push(inbox);
+        }
+        self.inboxes = inboxes;
+        self.live = LivenessMirror::read_from(r)?;
+        self.top_round = r.read_u64()?;
+        Ok(())
+    }
+
+    fn write_msg(&self, w: &mut SnapshotWriter, msg: &DsgdMsg) -> Result<()> {
+        w.write_u64(msg.round);
+        w.write_model(&msg.model);
+        Ok(())
+    }
+
+    fn read_msg(&self, r: &mut SnapshotReader) -> Result<DsgdMsg> {
+        Ok(DsgdMsg { round: r.read_u64()?, model: r.read_model()? })
+    }
 }
 
 /// Assembly facade: builds a [`DsgdProtocol`] and its [`SimHarness`].
@@ -398,6 +488,14 @@ impl Session for DsgdSession {
     fn run(self: Box<Self>) -> (SessionMetrics, TrafficLedger) {
         DsgdSession::run(*self)
     }
+
+    fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        self.harness.snapshot_bytes()
+    }
+
+    fn resume(&mut self, r: &mut SnapshotReader, opts: &ResumeOptions) -> Result<()> {
+        self.harness.restore_from(r, opts)
+    }
 }
 
 /// Derive the D-SGD protocol config from a scenario spec.
@@ -413,6 +511,9 @@ pub fn dsgd_config(spec: &ScenarioSpec) -> DsgdConfig {
         target_metric: spec.run.target_metric,
         seed: spec.run.seed,
         sampling: spec.run.sampling,
+        spec_json: Some(spec.snapshot_json()),
+        checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
+        checkpoint_out: spec.run.checkpoint_out.clone(),
     }
 }
 

@@ -25,7 +25,8 @@ use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, LivenessMirror,
-    NodeTable, Protocol, SamplingVersion, SimHarness, SimRng, SimTime,
+    NodeTable, Protocol, ResumeOptions, SamplingVersion, SimHarness, SimRng, SimTime,
+    SnapshotReader, SnapshotWriter,
 };
 use crate::{NodeId, Round};
 
@@ -43,6 +44,13 @@ pub struct GossipConfig {
     pub seed: u64,
     /// Peer-sampling stream version (v1 = frozen full shuffle, v2 = O(k)).
     pub sampling: SamplingVersion,
+    /// Canonical scenario JSON embedded into snapshots (None = session not
+    /// built from a spec; checkpointing disabled).
+    pub spec_json: Option<String>,
+    /// Write a snapshot and stop once the clock reaches this instant.
+    pub checkpoint_at: Option<SimTime>,
+    /// Snapshot file path for `checkpoint_at`.
+    pub checkpoint_out: Option<String>,
 }
 
 impl Default for GossipConfig {
@@ -56,6 +64,9 @@ impl Default for GossipConfig {
             target_metric: None,
             seed: 42,
             sampling: SamplingVersion::default(),
+            spec_json: None,
+            checkpoint_at: None,
+            checkpoint_out: None,
         }
     }
 }
@@ -279,6 +290,43 @@ impl Protocol for GossipProtocol {
     fn final_round(&self) -> Round {
         self.live.min_live_round(self.nodes.rounds())
     }
+
+    // Dynamic state only: `cfg` and `sizes` are rebuilt from the spec. The
+    // model vector goes through the writer's Arc interning, so the shared
+    // init model (and every post-merge sharing pattern) survives a
+    // write→read→write round trip byte-identically.
+    fn snapshot(&self, w: &mut SnapshotWriter) -> Result<()> {
+        self.nodes.write_into(w);
+        w.write_usize(self.models.len());
+        for m in &self.models {
+            w.write_model(m);
+        }
+        self.live.write_into(w);
+        w.write_usize(self.pending_revivals);
+        Ok(())
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader) -> Result<()> {
+        self.nodes = NodeTable::read_from(r)?;
+        let n = r.read_usize()?;
+        let mut models = Vec::with_capacity(n);
+        for _ in 0..n {
+            models.push(r.read_model()?);
+        }
+        self.models = models;
+        self.live = LivenessMirror::read_from(r)?;
+        self.pending_revivals = r.read_usize()?;
+        Ok(())
+    }
+
+    fn write_msg(&self, w: &mut SnapshotWriter, msg: &GossipMsg) -> Result<()> {
+        w.write_model(&msg.model);
+        Ok(())
+    }
+
+    fn read_msg(&self, r: &mut SnapshotReader) -> Result<GossipMsg> {
+        Ok(GossipMsg { model: r.read_model()? })
+    }
 }
 
 /// Assembly facade: builds a [`GossipProtocol`] and its [`SimHarness`].
@@ -317,6 +365,9 @@ impl GossipSession {
             target_metric: cfg.target_metric,
             seed: cfg.seed,
             sampling: cfg.sampling,
+            spec_json: cfg.spec_json.clone(),
+            checkpoint_at: cfg.checkpoint_at,
+            checkpoint_out: cfg.checkpoint_out.clone(),
         };
         let protocol = GossipProtocol {
             cfg,
@@ -341,6 +392,14 @@ impl GossipSession {
 impl Session for GossipSession {
     fn run(self: Box<Self>) -> (SessionMetrics, TrafficLedger) {
         GossipSession::run(*self)
+    }
+
+    fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        self.harness.snapshot_bytes()
+    }
+
+    fn resume(&mut self, r: &mut SnapshotReader, opts: &ResumeOptions) -> Result<()> {
+        self.harness.restore_from(r, opts)
     }
 }
 
@@ -410,6 +469,9 @@ impl SessionBuilder for GossipBuilder {
             target_metric: spec.run.target_metric,
             seed: spec.run.seed,
             sampling: spec.run.sampling,
+            spec_json: Some(spec.snapshot_json()),
+            checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
+            checkpoint_out: spec.run.checkpoint_out.clone(),
         };
         Ok(Box::new(GossipSession::new(cfg, n, task, compute, fabric, churn)))
     }

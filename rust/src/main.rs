@@ -33,8 +33,12 @@ repro — MoDeST: decentralized learning with client sampling
 
 USAGE:
   repro run   [--config scenario.json] [--protocol NAME] [--dataset D]
-              [--s N] [--a N] [--sf F] [--nodes N] [common flags]
+              [--s N] [--a N] [--sf F] [--nodes N]
+              [--checkpoint-at S --checkpoint-out FILE] [common flags]
               (`repro train ...` is an alias)
+  repro resume --snapshot FILE [--config overlay.json] [--fork LABEL]
+              [--out DIR]  (what-if branching: the overlay is a partial
+              scenario JSON merged over the spec embedded in the snapshot)
   repro exp fig3   [--datasets cifar10,celeba,femnist,movielens]
                    [--protocols fedavg,dsgd,modest] [common]
   repro exp table4 [--datasets ...] [common]
@@ -172,6 +176,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(v) = args.get_opt("sampling") {
         spec.run.sampling = SamplingVersion::parse(&v)?;
     }
+    if let Some(t) = args.get_opt("checkpoint-at") {
+        spec.run.checkpoint_at_s = Some(
+            t.parse::<f64>()
+                .map_err(|e| anyhow::anyhow!("--checkpoint-at {t:?}: {e}"))?,
+        );
+    }
+    if let Some(p) = args.get_opt("checkpoint-out") {
+        spec.run.checkpoint_out = Some(p);
+    }
+    if spec.run.checkpoint_at_s.is_some() != spec.run.checkpoint_out.is_some() {
+        bail!("--checkpoint-at and --checkpoint-out must be given together");
+    }
     args.reject_unknown()?;
 
     let registry = ProtocolRegistry::builtins();
@@ -198,6 +214,12 @@ fn cmd_run(args: &Args) -> Result<()> {
         "finished: round {} after {:.0}s virtual, {} DES events",
         metrics.final_round, metrics.duration_s, metrics.events
     );
+    if let Some(out) = &spec.run.checkpoint_out {
+        match std::fs::metadata(out) {
+            Ok(meta) => println!("checkpoint written to {out} ({} bytes)", meta.len()),
+            Err(e) => bail!("checkpoint was requested but {out} is missing: {e}"),
+        }
+    }
     let tail: Vec<_> = metrics.curve.iter().rev().take(5).collect();
     for p in tail.iter().rev() {
         println!(
@@ -218,6 +240,59 @@ fn cmd_run(args: &Args) -> Result<()> {
     let csv = opts
         .out_dir
         .join(format!("run_{}_{}.csv", spec.workload.dataset, meta.csv_tag()));
+    metrics.write_curve_csv(&csv)?;
+    println!("curve written to {}", csv.display());
+    Ok(())
+}
+
+fn cmd_resume(args: &Args) -> Result<()> {
+    let snap_path = args
+        .get_opt("snapshot")
+        .ok_or_else(|| anyhow::anyhow!("resume needs --snapshot FILE\n{USAGE}"))?;
+    let overlay = match args.get_opt("config") {
+        Some(p) => Some(std::fs::read_to_string(&p)?),
+        None => None,
+    };
+    let fork = args.get_opt("fork");
+    let out_dir = PathBuf::from(args.get_str("out", "results"));
+    args.reject_unknown()?;
+
+    let bytes = std::fs::read(&snap_path)?;
+    // The overlay may not change the workload (the snapshot's model state
+    // is dataset-shaped), so the embedded spec decides the runtime.
+    let preview = modest_dl::scenario::embedded_spec(&bytes)?;
+    let runtime = if preview.workload.dataset == "mock" {
+        None
+    } else {
+        Some(XlaRuntime::load(&preview.workload.artifacts_dir)?)
+    };
+    let (spec, session) =
+        modest_dl::scenario::resume_session(&bytes, overlay.as_deref(), fork, runtime.as_ref())?;
+    let registry = ProtocolRegistry::builtins();
+    let meta = registry.get(&spec.protocol.name)?.meta();
+    println!(
+        "resuming {} with {} from {snap_path} ({} bytes)",
+        spec.workload.dataset,
+        meta.label,
+        bytes.len()
+    );
+    let (metrics, traffic) = session.run();
+    println!(
+        "finished: round {} after {:.0}s virtual, {} DES events",
+        metrics.final_round, metrics.duration_s, metrics.events
+    );
+    let t = &metrics.traffic;
+    println!(
+        "traffic: total={} min={} max={} overhead={:.1}% conserved={}",
+        fmt_bytes(t.total),
+        fmt_bytes(t.min_node),
+        fmt_bytes(t.max_node),
+        100.0 * t.overhead_fraction,
+        traffic.is_conserved()
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    let csv =
+        out_dir.join(format!("resume_{}_{}.csv", spec.workload.dataset, meta.csv_tag()));
     metrics.write_curve_csv(&csv)?;
     println!("curve written to {}", csv.display());
     Ok(())
@@ -311,6 +386,7 @@ fn main() -> Result<()> {
     match args.positionals.first().map(|s| s.as_str()) {
         // `train` kept as an alias for the pre-scenario CLI.
         Some("run") | Some("train") => cmd_run(&args),
+        Some("resume") => cmd_resume(&args),
         Some("exp") => {
             let which = args
                 .positionals

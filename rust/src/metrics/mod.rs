@@ -178,6 +178,105 @@ impl SessionMetrics {
         }
     }
 
+    /// Serialize everything recorded so far, including the reservoir's
+    /// stride/seen counters — a resumed session must decimate future
+    /// samples exactly where the checkpointed one would have, or the
+    /// retained subset (and the session fingerprint) drifts.
+    pub fn write_into(&self, w: &mut crate::sim::SnapshotWriter) {
+        w.write_usize(self.curve.len());
+        for p in &self.curve {
+            w.write_f64(p.time_s);
+            w.write_u64(p.round);
+            w.write_f64(p.metric);
+            w.write_f64(p.loss);
+            w.write_f64(p.metric_std);
+        }
+        w.write_usize(self.samples.len());
+        for s in &self.samples {
+            w.write_f64(s.completed_at_s);
+            w.write_f64(s.duration_s);
+            w.write_u64(s.round);
+            w.write_u32(s.retries);
+        }
+        w.write_usize(self.round_starts.len());
+        for &(round, t) in &self.round_starts {
+            w.write_u64(round);
+            w.write_f64(t);
+        }
+        w.write_usize(self.joins.len());
+        for j in &self.joins {
+            w.write_u32(j.joiner);
+            w.write_f64(j.joined_at_s);
+            w.write_usize(j.missing.len());
+            for &(t, m) in &j.missing {
+                w.write_f64(t);
+                w.write_usize(m);
+            }
+        }
+        w.write_u64(self.traffic.total);
+        w.write_u64(self.traffic.min_node);
+        w.write_u64(self.traffic.max_node);
+        w.write_u64(self.traffic.overhead);
+        w.write_f64(self.traffic.overhead_fraction);
+        w.write_u64(self.traffic.messages);
+        w.write_u64(self.final_round);
+        w.write_f64(self.duration_s);
+        w.write_u64(self.events);
+        w.write_u64(self.sample_stride);
+        w.write_u64(self.sample_seen);
+    }
+
+    pub fn read_from(r: &mut crate::sim::SnapshotReader) -> Result<SessionMetrics> {
+        let mut m = SessionMetrics::default();
+        for _ in 0..r.read_usize()? {
+            m.curve.push(CurvePoint {
+                time_s: r.read_f64()?,
+                round: r.read_u64()?,
+                metric: r.read_f64()?,
+                loss: r.read_f64()?,
+                metric_std: r.read_f64()?,
+            });
+        }
+        for _ in 0..r.read_usize()? {
+            m.samples.push(SampleTiming {
+                completed_at_s: r.read_f64()?,
+                duration_s: r.read_f64()?,
+                round: r.read_u64()?,
+                retries: r.read_u32()?,
+            });
+        }
+        for _ in 0..r.read_usize()? {
+            let round = r.read_u64()?;
+            let t = r.read_f64()?;
+            m.round_starts.push((round, t));
+        }
+        for _ in 0..r.read_usize()? {
+            let joiner = r.read_u32()?;
+            let joined_at_s = r.read_f64()?;
+            let mut missing = Vec::new();
+            for _ in 0..r.read_usize()? {
+                let t = r.read_f64()?;
+                let n = r.read_usize()?;
+                missing.push((t, n));
+            }
+            m.joins.push(JoinTrace { joiner, joined_at_s, missing });
+        }
+        m.traffic = TrafficSummary {
+            total: r.read_u64()?,
+            min_node: r.read_u64()?,
+            max_node: r.read_u64()?,
+            overhead: r.read_u64()?,
+            overhead_fraction: r.read_f64()?,
+            messages: r.read_u64()?,
+        };
+        m.final_round = r.read_u64()?;
+        m.duration_s = r.read_f64()?;
+        m.events = r.read_u64()?;
+        m.sample_stride = r.read_u64()?;
+        m.sample_seen = r.read_u64()?;
+        Ok(m)
+    }
+
     /// First virtual time at which `metric` crossed `target` (accuracy) or
     /// dropped below it (MSE), with the round it happened in.
     pub fn time_to_target(&self, target: f64, higher_is_better: bool) -> Option<(f64, Round)> {
@@ -330,6 +429,54 @@ mod tests {
         // Unlimited budgets must not preallocate the round vectors at all.
         let u = SessionMetrics::with_budget(0, 8);
         assert_eq!(u.round_starts.capacity(), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_the_reservoir_mid_decimation() {
+        use crate::sim::{SnapshotReader, SnapshotWriter};
+        // Fill past the cap so stride-doubling has happened, snapshot,
+        // then keep offering to both the original and the restored sink:
+        // the retained subsets must stay identical (reservoir continuity
+        // is part of the fingerprint contract).
+        let mut m = SessionMetrics::default();
+        for i in 0..(SessionMetrics::MAX_SAMPLES as u64 * 2 + 7) {
+            m.record_sample(SimTime::from_micros(i + 1), SimTime::ZERO, 1, 0);
+        }
+        m.record_eval(SimTime::from_secs_f64(3.0), 2, 0.5, 1.25, 0.0);
+        m.record_round_start(2, SimTime::from_secs_f64(2.5));
+        m.joins.push(JoinTrace {
+            joiner: 9,
+            joined_at_s: 1.0,
+            missing: vec![(1.0, 4), (2.0, 0)],
+        });
+        m.events = 12345;
+        let mut w = SnapshotWriter::new();
+        w.begin_section("metrics");
+        m.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("metrics").unwrap();
+        let mut back = SessionMetrics::read_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.curve.len(), 1);
+        assert_eq!(back.curve[0].loss.to_bits(), 1.25f64.to_bits());
+        assert_eq!(back.round_starts, m.round_starts);
+        assert_eq!(back.joins.len(), 1);
+        assert_eq!(back.joins[0].missing, m.joins[0].missing);
+        assert_eq!(back.events, 12345);
+        assert_eq!(back.samples.len(), m.samples.len());
+        for i in 0..(SessionMetrics::MAX_SAMPLES as u64 * 3) {
+            let t = SimTime::from_micros(1_000_000 + i);
+            m.record_sample(t, SimTime::ZERO, 3, 1);
+            back.record_sample(t, SimTime::ZERO, 3, 1);
+        }
+        assert_eq!(m.samples.len(), back.samples.len(), "reservoir desynced after restore");
+        for (a, b) in m.samples.iter().zip(&back.samples) {
+            assert_eq!(a.completed_at_s.to_bits(), b.completed_at_s.to_bits());
+            assert_eq!(a.round, b.round);
+        }
     }
 
     #[test]

@@ -5,7 +5,7 @@ use anyhow::Result;
 
 use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
-use crate::sim::{ChurnSchedule, SimTime};
+use crate::sim::{ChurnSchedule, ResumeOptions, SimTime, SnapshotReader};
 
 use super::session::{ModestConfig, ModestSession};
 
@@ -24,6 +24,9 @@ pub fn modest_config(spec: &ScenarioSpec) -> Result<ModestConfig> {
         seed: spec.run.seed,
         sampling: spec.run.sampling,
         fedavg_server: None,
+        spec_json: Some(spec.snapshot_json()),
+        checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
+        checkpoint_out: spec.run.checkpoint_out.clone(),
     })
 }
 
@@ -54,6 +57,14 @@ pub fn assemble_modest(
 impl Session for ModestSession {
     fn run(self: Box<Self>) -> (crate::metrics::SessionMetrics, crate::net::TrafficLedger) {
         ModestSession::run(*self)
+    }
+
+    fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        ModestSession::snapshot_bytes(self)
+    }
+
+    fn resume(&mut self, r: &mut SnapshotReader, opts: &ResumeOptions) -> Result<()> {
+        ModestSession::resume(self, r, opts)
     }
 }
 

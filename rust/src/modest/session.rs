@@ -30,13 +30,14 @@ use crate::metrics::{JoinTrace, SessionMetrics};
 use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, NodeTable, Protocol,
-    SamplingVersion, SimHarness, SimRng, SimTime,
+    ResumeOptions, SamplingVersion, SimHarness, SimRng, SimTime, SnapshotReader, SnapshotWriter,
 };
 use crate::{NodeId, Round};
 
 use super::node::{ModelRef, ModestNode, Msg, NodeAction, Purpose, SampleOp, ViewRef};
 use super::registry::MembershipEvent;
 use super::sampler::candidate_order;
+use super::view::View;
 
 /// MoDeST parameters (paper Table 2) plus session plumbing. Bandwidth is no
 /// longer here: per-node capacities belong to the [`NetworkFabric`].
@@ -70,6 +71,13 @@ pub struct ModestConfig {
     /// sampling pings toward it; the session grants it unlimited fabric
     /// capacity.
     pub fedavg_server: Option<NodeId>,
+    /// Canonical scenario JSON embedded into snapshots (None = session not
+    /// built from a spec; checkpointing disabled).
+    pub spec_json: Option<String>,
+    /// Write a snapshot and stop once the clock reaches this instant.
+    pub checkpoint_at: Option<SimTime>,
+    /// Snapshot file path for `checkpoint_at`.
+    pub checkpoint_out: Option<String>,
 }
 
 impl Default for ModestConfig {
@@ -87,6 +95,9 @@ impl Default for ModestConfig {
             seed: 42,
             sampling: SamplingVersion::default(),
             fedavg_server: None,
+            spec_json: None,
+            checkpoint_at: None,
+            checkpoint_out: None,
         }
     }
 }
@@ -101,8 +112,47 @@ impl ModestConfig {
             target_metric: self.target_metric,
             seed: self.seed,
             sampling: self.sampling,
+            spec_json: self.spec_json.clone(),
+            checkpoint_at: self.checkpoint_at,
+            checkpoint_out: self.checkpoint_out.clone(),
         }
     }
+}
+
+/// Views serialize inline (no interning): a view is two sorted CRDT maps,
+/// so equal views produce equal bytes and the write→read→write round trip
+/// stays byte-identical even though shared `ViewRef`s are not re-shared on
+/// restore (only memory is lost, never determinism).
+fn write_view(w: &mut SnapshotWriter, v: &View) {
+    w.write_usize(v.registry.len());
+    for (node, counter, e) in v.registry.iter() {
+        w.write_u32(node);
+        w.write_u64(counter);
+        w.write_bool(e == MembershipEvent::Joined);
+    }
+    w.write_usize(v.activity.len());
+    for (node, round) in v.activity.iter() {
+        w.write_u32(node);
+        w.write_u64(round);
+    }
+}
+
+fn read_view(r: &mut SnapshotReader) -> Result<View> {
+    let mut v = View::default();
+    let regs = r.read_usize()?;
+    for _ in 0..regs {
+        let node = r.read_u32()?;
+        let counter = r.read_u64()?;
+        let e = if r.read_bool()? { MembershipEvent::Joined } else { MembershipEvent::Left };
+        v.registry.update(node, counter, e);
+    }
+    let acts = r.read_usize()?;
+    for _ in 0..acts {
+        let node = r.read_u32()?;
+        let round = r.read_u64()?;
+        v.activity.update(node, round);
+    }
+    Ok(v)
 }
 
 /// The MoDeST protocol state machine (drives through [`SimHarness`]).
@@ -578,6 +628,207 @@ impl Protocol for ModestProtocol {
     fn final_round(&self) -> Round {
         self.latest_round
     }
+
+    // Dynamic state only: `cfg`, `sizes` and `initial_nodes` are rebuilt
+    // from the embedded spec. Model payloads (`theta`, in-flight training,
+    // op payloads, `latest_global`) go through the writer's Arc interning,
+    // so the extensive model sharing of the MoDeST fan-out survives a
+    // write→read→write round trip byte-identically.
+    fn snapshot(&self, w: &mut SnapshotWriter) -> Result<()> {
+        w.write_usize(self.nodes.len());
+        for n in &self.nodes {
+            w.write_u32(n.id);
+            write_view(w, &n.view);
+            w.write_u64(n.k_agg);
+            w.write_usize(n.theta.len());
+            for m in &n.theta {
+                w.write_model(m);
+            }
+            w.write_u64(n.agg_dispatched);
+            w.write_u64(n.k_train);
+            match &n.training {
+                Some((round, seq, model)) => {
+                    w.write_bool(true);
+                    w.write_u64(*round);
+                    w.write_u64(*seq);
+                    w.write_model(model);
+                }
+                None => w.write_bool(false),
+            }
+            w.write_u64(n.train_seq);
+            let mut rounds: Vec<Round> = n.pongs.keys().copied().collect();
+            rounds.sort_unstable();
+            w.write_usize(rounds.len());
+            for k in rounds {
+                w.write_u64(k);
+                let list = &n.pongs[&k];
+                w.write_usize(list.len());
+                for &j in list {
+                    w.write_u32(j);
+                }
+            }
+            w.write_usize(n.ops.len());
+            for op in &n.ops {
+                w.write_u64(op.id);
+                w.write_u64(op.round);
+                w.write_usize(op.need);
+                w.write_u8(match op.purpose {
+                    Purpose::Aggregators => 0,
+                    Purpose::Participants => 1,
+                });
+                w.write_model(&op.payload);
+                w.write_usize(op.order.len());
+                for &j in &op.order {
+                    w.write_u32(j);
+                }
+                w.write_usize(op.next_tail);
+                w.write_bool(op.done);
+                w.write_time(op.started);
+                w.write_u32(op.retries);
+            }
+        }
+        self.hot.write_into(w);
+        w.write_model(&self.latest_global);
+        w.write_u64(self.latest_round);
+        w.write_usize(self.join_watch.len());
+        for &(node, at_s) in &self.join_watch {
+            w.write_u32(node);
+            w.write_f64(at_s);
+        }
+        Ok(())
+    }
+
+    fn restore(&mut self, r: &mut SnapshotReader) -> Result<()> {
+        let n_nodes = r.read_usize()?;
+        let mut nodes = Vec::with_capacity(n_nodes);
+        for _ in 0..n_nodes {
+            let mut node = ModestNode::new(r.read_u32()?);
+            node.view = read_view(r)?;
+            node.k_agg = r.read_u64()?;
+            let t = r.read_usize()?;
+            node.theta.reserve(t);
+            for _ in 0..t {
+                node.theta.push(r.read_model()?);
+            }
+            node.agg_dispatched = r.read_u64()?;
+            node.k_train = r.read_u64()?;
+            node.training = if r.read_bool()? {
+                Some((r.read_u64()?, r.read_u64()?, r.read_model()?))
+            } else {
+                None
+            };
+            node.train_seq = r.read_u64()?;
+            let n_rounds = r.read_usize()?;
+            for _ in 0..n_rounds {
+                let k = r.read_u64()?;
+                let len = r.read_usize()?;
+                let mut list = Vec::with_capacity(len);
+                for _ in 0..len {
+                    list.push(r.read_u32()?);
+                }
+                node.pongs.insert(k, list);
+            }
+            let n_ops = r.read_usize()?;
+            for _ in 0..n_ops {
+                let id = r.read_u64()?;
+                let round = r.read_u64()?;
+                let need = r.read_usize()?;
+                let purpose = match r.read_u8()? {
+                    0 => Purpose::Aggregators,
+                    1 => Purpose::Participants,
+                    t => anyhow::bail!("unknown sample-op purpose tag {t}"),
+                };
+                let payload = r.read_model()?;
+                let olen = r.read_usize()?;
+                let mut order = Vec::with_capacity(olen);
+                for _ in 0..olen {
+                    order.push(r.read_u32()?);
+                }
+                node.ops.push(SampleOp {
+                    id,
+                    round,
+                    need,
+                    purpose,
+                    payload,
+                    order,
+                    next_tail: r.read_usize()?,
+                    done: r.read_bool()?,
+                    started: r.read_time()?,
+                    retries: r.read_u32()?,
+                });
+            }
+            nodes.push(node);
+        }
+        self.nodes = nodes;
+        self.hot = NodeTable::read_from(r)?;
+        self.latest_global = r.read_model()?;
+        self.latest_round = r.read_u64()?;
+        let watches = r.read_usize()?;
+        let mut join_watch = Vec::with_capacity(watches);
+        for _ in 0..watches {
+            join_watch.push((r.read_u32()?, r.read_f64()?));
+        }
+        self.join_watch = join_watch;
+        Ok(())
+    }
+
+    fn write_msg(&self, w: &mut SnapshotWriter, msg: &Msg) -> Result<()> {
+        match msg {
+            Msg::Ping { round, from } => {
+                w.write_u8(0);
+                w.write_u64(*round);
+                w.write_u32(*from);
+            }
+            Msg::Pong { round, from } => {
+                w.write_u8(1);
+                w.write_u64(*round);
+                w.write_u32(*from);
+            }
+            Msg::Joined { node, counter } => {
+                w.write_u8(2);
+                w.write_u32(*node);
+                w.write_u64(*counter);
+            }
+            Msg::Left { node, counter } => {
+                w.write_u8(3);
+                w.write_u32(*node);
+                w.write_u64(*counter);
+            }
+            Msg::Aggregate { round, model, view } => {
+                w.write_u8(4);
+                w.write_u64(*round);
+                w.write_model(model);
+                write_view(w, view);
+            }
+            Msg::Train { round, model, view } => {
+                w.write_u8(5);
+                w.write_u64(*round);
+                w.write_model(model);
+                write_view(w, view);
+            }
+        }
+        Ok(())
+    }
+
+    fn read_msg(&self, r: &mut SnapshotReader) -> Result<Msg> {
+        Ok(match r.read_u8()? {
+            0 => Msg::Ping { round: r.read_u64()?, from: r.read_u32()? },
+            1 => Msg::Pong { round: r.read_u64()?, from: r.read_u32()? },
+            2 => Msg::Joined { node: r.read_u32()?, counter: r.read_u64()? },
+            3 => Msg::Left { node: r.read_u32()?, counter: r.read_u64()? },
+            4 => Msg::Aggregate {
+                round: r.read_u64()?,
+                model: r.read_model()?,
+                view: Arc::new(read_view(r)?),
+            },
+            5 => Msg::Train {
+                round: r.read_u64()?,
+                model: r.read_model()?,
+                view: Arc::new(read_view(r)?),
+            },
+            t => anyhow::bail!("unknown modest message tag {t}"),
+        })
+    }
 }
 
 /// Assembly facade: builds a [`ModestProtocol`] and its [`SimHarness`].
@@ -652,6 +903,17 @@ impl ModestSession {
     /// Run to completion; returns the collected metrics.
     pub fn run(self) -> (SessionMetrics, TrafficLedger) {
         self.harness.run()
+    }
+
+    /// Serialize the complete session state (see [`crate::sim::snapshot`]).
+    pub fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        self.harness.snapshot_bytes()
+    }
+
+    /// Restore state from a snapshot produced by [`Self::snapshot_bytes`]
+    /// onto a freshly spec-built session.
+    pub fn resume(&mut self, r: &mut SnapshotReader, opts: &ResumeOptions) -> Result<()> {
+        self.harness.restore_from(r, opts)
     }
 }
 

@@ -264,6 +264,46 @@ impl NetworkFabric {
         SimTime::from_secs_f64(((bytes as f64 * 8.0) / bps).min(MAX_TRANSFER_SECS))
     }
 
+    /// Serialize the fabric's *dynamic* state: per-node capacities (they
+    /// can include growth-sampled and `set_unlimited`-overridden entries,
+    /// so the spec alone cannot reproduce them), the FIFO link clocks, the
+    /// charged-bytes counter, the growth RNG stream, and the ledger. The
+    /// latency matrix and bandwidth config are static — rebuilt from the
+    /// scenario spec on restore.
+    pub fn write_into(&self, w: &mut crate::sim::SnapshotWriter) {
+        w.write_usize(self.up_bps.len());
+        for i in 0..self.up_bps.len() {
+            w.write_f64(self.up_bps[i]);
+            w.write_f64(self.down_bps[i]);
+            w.write_time(self.up_free[i]);
+            w.write_time(self.down_free[i]);
+        }
+        w.write_u64(self.charged);
+        w.write_rng(&self.growth_rng);
+        self.ledger.write_into(w);
+    }
+
+    /// Overwrite the dynamic state of a freshly spec-built fabric with a
+    /// snapshot's. The latency matrix and bandwidth config of `self` are
+    /// kept (they are derived from the same spec embedded in the snapshot).
+    pub fn restore_from(&mut self, r: &mut crate::sim::SnapshotReader) -> anyhow::Result<()> {
+        let n = r.read_usize()?;
+        self.up_bps.clear();
+        self.down_bps.clear();
+        self.up_free.clear();
+        self.down_free.clear();
+        for _ in 0..n {
+            self.up_bps.push(r.read_f64()?);
+            self.down_bps.push(r.read_f64()?);
+            self.up_free.push(r.read_time()?);
+            self.down_free.push(r.read_time()?);
+        }
+        self.charged = r.read_u64()?;
+        self.growth_rng = r.read_rng()?;
+        self.ledger = TrafficLedger::read_from(r)?;
+        Ok(())
+    }
+
     /// Schedule `bytes` from `from` to `to` starting no earlier than `now`,
     /// advancing both FIFO link queues. An unlimited-capacity side (the
     /// FedAvg server override) has zero occupancy: it neither waits on nor
@@ -505,6 +545,53 @@ mod tests {
         }]);
         let mut rng = SimRng::new(1);
         let _ = NetworkFabric::new(latency, &bw, 4, &mut rng);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_link_clocks_and_growth_stream() {
+        use crate::sim::{SnapshotReader, SnapshotWriter};
+        let bw = BandwidthConfig::LogNormal { median_bps: 10e6, sigma: 0.5 };
+        let build = || {
+            let latency = LatencyMatrix::uniform(16, SimTime::from_millis(5));
+            let mut rng = SimRng::new(99);
+            NetworkFabric::new(latency, &bw, 4, &mut rng)
+        };
+        let mut a = build();
+        a.set_unlimited(1);
+        a.transfer(SimTime::ZERO, 0, 1, &[(MsgKind::ModelPayload, 40_000)]);
+        a.transfer(SimTime::from_millis(2), 2, 3, &[(MsgKind::Control, 500)]);
+        a.ensure_nodes(7); // growth RNG consumed mid-session
+        let mut w = SnapshotWriter::new();
+        w.begin_section("fabric");
+        a.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+
+        // Restore onto a freshly spec-built fabric, as the resume path does.
+        let mut b = build();
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("fabric").unwrap();
+        b.restore_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+        assert_eq!(b.nodes(), a.nodes());
+        for n in 0..a.nodes() as u32 {
+            assert_eq!(a.up_bps(n).to_bits(), b.up_bps(n).to_bits(), "node {n} up");
+            assert_eq!(a.down_bps(n).to_bits(), b.down_bps(n).to_bits(), "node {n} down");
+        }
+        assert!(b.up_bps(1).is_infinite(), "unlimited override lost");
+        assert_eq!(b.charged_bytes(), a.charged_bytes());
+        assert_eq!(b.ledger().total(), a.ledger().total());
+        assert_eq!(b.ledger().messages(), a.ledger().messages());
+        // Identical future behaviour: FIFO clocks AND the growth stream
+        // (a post-restore joiner must sample the same capacity).
+        let pa = a.plan(SimTime::from_millis(3), 0, 3, 9_000);
+        let pb = b.plan(SimTime::from_millis(3), 0, 3, 9_000);
+        assert_eq!(pa.delivered, pb.delivered);
+        assert_eq!(pa.up_start, pb.up_start);
+        a.ensure_nodes(9);
+        b.ensure_nodes(9);
+        assert_eq!(a.up_bps(8).to_bits(), b.up_bps(8).to_bits(), "growth stream diverged");
     }
 
     #[test]

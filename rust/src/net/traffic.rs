@@ -130,6 +130,37 @@ impl TrafficLedger {
         (min, max)
     }
 
+    /// Serialize the full ledger: per-node usage records, per-kind totals,
+    /// and the message count. All state here is dynamic — there is nothing
+    /// to re-derive on restore.
+    pub fn write_into(&self, w: &mut crate::sim::SnapshotWriter) {
+        w.write_usize(self.usage.len());
+        for u in &self.usage {
+            w.write_u64(u[SENT]);
+            w.write_u64(u[RECV]);
+        }
+        for &k in &self.by_kind {
+            w.write_u64(k);
+        }
+        w.write_u64(self.messages);
+    }
+
+    pub fn read_from(r: &mut crate::sim::SnapshotReader) -> anyhow::Result<TrafficLedger> {
+        let n = r.read_usize()?;
+        let mut usage = Vec::with_capacity(n);
+        for _ in 0..n {
+            let sent = r.read_u64()?;
+            let recv = r.read_u64()?;
+            usage.push([sent, recv]);
+        }
+        let mut by_kind = [0u64; 4];
+        for k in &mut by_kind {
+            *k = r.read_u64()?;
+        }
+        let messages = r.read_u64()?;
+        Ok(TrafficLedger { usage, by_kind, messages })
+    }
+
     /// Conservation check: every sent byte was received exactly once.
     pub fn is_conserved(&self) -> bool {
         self.usage.iter().map(|u| u[SENT]).sum::<u64>()

@@ -23,6 +23,7 @@
 pub mod availability;
 pub mod network;
 pub mod registry;
+pub mod resume;
 pub mod spec;
 
 pub use availability::{AvailabilityModel, AvailabilitySpec};
@@ -30,4 +31,5 @@ pub use network::{LatencySpec, NetworkSpec, TierSpec};
 pub use registry::{
     run_scenario, ProtocolMeta, ProtocolRegistry, Session, SessionBuilder,
 };
+pub use resume::{embedded_spec, resume_session};
 pub use spec::{PopulationSpec, ProtocolSpec, RunSpec, ScenarioSpec, WorkloadSpec};

@@ -12,7 +12,7 @@ use anyhow::{bail, Result};
 use crate::metrics::SessionMetrics;
 use crate::net::TrafficLedger;
 use crate::runtime::XlaRuntime;
-use crate::sim::ChurnSchedule;
+use crate::sim::{ChurnSchedule, ResumeOptions, SnapshotReader};
 
 use super::spec::ScenarioSpec;
 
@@ -21,6 +21,18 @@ pub trait Session {
     /// Drive the session to its budget; returns the collected metrics and
     /// the traffic ledger.
     fn run(self: Box<Self>) -> (SessionMetrics, TrafficLedger);
+
+    /// Serialize the complete session state into snapshot bytes. Protocols
+    /// opt in; the default bails loudly instead of writing a partial file.
+    fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        bail!("this protocol does not support checkpointing")
+    }
+
+    /// Restore state from a snapshot positioned after its "spec" section,
+    /// onto a freshly spec-built session (see `scenario::resume`).
+    fn resume(&mut self, _r: &mut SnapshotReader, _opts: &ResumeOptions) -> Result<()> {
+        bail!("this protocol does not support checkpointing")
+    }
 }
 
 /// Static metadata a protocol publishes through the registry.

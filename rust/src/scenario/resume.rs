@@ -1,0 +1,116 @@
+//! Resume a session from snapshot bytes, with optional what-if branching.
+//!
+//! A snapshot embeds the canonical scenario JSON it was taken under (its
+//! `spec` section), so resuming needs nothing but the file: the spec
+//! rebuilds every static — task data, latency geography, bandwidth config,
+//! calendar-queue geometry — and the snapshot replays the dynamic state on
+//! top. What-if branching layers a partial scenario JSON *overlay* over the
+//! embedded spec (overlay wins per key, recursively), e.g. a different
+//! `population.availability` future; the branch diverges only after the
+//! checkpoint instant because the harness RNG is the sole runtime stream
+//! and its state resumes exactly. An overlay that extends `run.max_time_s`
+//! does not add probe/eval ticks before the restored horizon — queued
+//! `Probe` events are restored as-is.
+
+use anyhow::{Context, Result};
+
+use crate::runtime::XlaRuntime;
+use crate::sim::{ChurnSchedule, ResumeOptions, SnapshotReader};
+use crate::util::Json;
+
+use super::registry::{ProtocolRegistry, Session};
+use super::spec::ScenarioSpec;
+
+/// Recursive object merge: `overlay` wins on leaves and non-object values;
+/// keys absent from `base` are appended in overlay order.
+fn merge_json(base: &Json, overlay: &Json) -> Json {
+    match (base, overlay) {
+        (Json::Obj(b), Json::Obj(o)) => {
+            let mut out = b.clone();
+            for (k, v) in o {
+                match out.iter_mut().find(|(ek, _)| ek == k) {
+                    Some((_, ev)) => *ev = merge_json(ev, v),
+                    None => out.push((k.clone(), v.clone())),
+                }
+            }
+            Json::Obj(out)
+        }
+        (_, o) => o.clone(),
+    }
+}
+
+/// Peek at the scenario spec a snapshot embeds without building anything —
+/// launchers use this to decide whether the dataset needs an XLA runtime
+/// before committing to session assembly.
+pub fn embedded_spec(bytes: &[u8]) -> Result<ScenarioSpec> {
+    let mut r = SnapshotReader::new(bytes)?;
+    r.begin_section("spec")?;
+    let embedded = r.read_str()?;
+    r.end_section()?;
+    ScenarioSpec::from_json(&embedded)
+        .context("parsing the scenario spec embedded in the snapshot")
+}
+
+/// Rebuild a session from snapshot bytes and restore its state, ready to
+/// `run()`. `overlay_json` is an optional partial scenario JSON for what-if
+/// branching; `fork` relabels the RNG stream at the resume point so two
+/// branches of the same snapshot diverge even under an identical future.
+/// Returns the effective (merged) spec alongside the session, for labels
+/// and output naming.
+pub fn resume_session(
+    bytes: &[u8],
+    overlay_json: Option<&str>,
+    fork: Option<String>,
+    runtime: Option<&XlaRuntime>,
+) -> Result<(ScenarioSpec, Box<dyn Session>)> {
+    let mut r = SnapshotReader::new(bytes)?;
+    r.begin_section("spec")?;
+    let embedded = r.read_str()?;
+    r.end_section()?;
+    let base = ScenarioSpec::from_json(&embedded)
+        .context("parsing the scenario spec embedded in the snapshot")?;
+    let spec = match overlay_json {
+        Some(text) => {
+            let overlay = Json::parse(text).context("parsing the what-if overlay")?;
+            let merged = merge_json(&base.to_json(), &overlay);
+            ScenarioSpec::from_json(&merged.to_string())
+                .context("applying the what-if overlay to the embedded spec")?
+        }
+        None => base.clone(),
+    };
+    // A changed availability future invalidates the snapshot's queued churn
+    // (it indexes the old script); the harness drops it and schedules the
+    // freshly compiled script instead. An unchanged future replays the
+    // snapshot's own schedule verbatim for bit-identical resumption.
+    let reschedule_churn = spec.population.availability != base.population.availability;
+    let mut session =
+        ProtocolRegistry::builtins().build(&spec, runtime, ChurnSchedule::empty())?;
+    session.resume(&mut r, &ResumeOptions { fork, reschedule_churn })?;
+    r.finish()?;
+    Ok((spec, session))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_overlay_wins_recursively() {
+        let base = Json::parse(r#"{"a": {"x": 1, "y": 2}, "b": 3}"#).unwrap();
+        let over = Json::parse(r#"{"a": {"y": 9, "z": 8}, "c": 4}"#).unwrap();
+        let m = merge_json(&base, &over);
+        assert_eq!(m.to_string(), r#"{"a":{"x":1,"y":9,"z":8},"b":3,"c":4}"#);
+    }
+
+    #[test]
+    fn merge_replaces_non_objects_wholesale() {
+        let base = Json::parse(r#"{"a": {"x": 1}}"#).unwrap();
+        let over = Json::parse(r#"{"a": null}"#).unwrap();
+        assert_eq!(merge_json(&base, &over).to_string(), r#"{"a":null}"#);
+    }
+
+    #[test]
+    fn garbage_bytes_fail_loudly() {
+        assert!(resume_session(b"not a snapshot", None, None, None).is_err());
+    }
+}

@@ -134,6 +134,11 @@ pub struct RunSpec {
     /// fingerprint bit-identical; `v2` draws the same set distribution in
     /// O(k) per fan-out for large populations.
     pub sampling: SamplingVersion,
+    /// Write a snapshot and stop once the virtual clock reaches this
+    /// instant (seconds); requires `checkpoint_out`.
+    pub checkpoint_at_s: Option<f64>,
+    /// Snapshot file path for `checkpoint_at_s`.
+    pub checkpoint_out: Option<String>,
 }
 
 impl Default for RunSpec {
@@ -145,6 +150,8 @@ impl Default for RunSpec {
             target_metric: None,
             seed: 42,
             sampling: SamplingVersion::default(),
+            checkpoint_at_s: None,
+            checkpoint_out: None,
         }
     }
 }
@@ -247,6 +254,20 @@ impl ScenarioSpec {
                             "seed" => spec.run.seed = val.as_u64()?,
                             "sampling" => {
                                 spec.run.sampling = SamplingVersion::parse(val.as_str()?)?
+                            }
+                            "checkpoint_at_s" => {
+                                spec.run.checkpoint_at_s = if *val == Json::Null {
+                                    None
+                                } else {
+                                    Some(val.as_f64()?)
+                                }
+                            }
+                            "checkpoint_out" => {
+                                spec.run.checkpoint_out = if *val == Json::Null {
+                                    None
+                                } else {
+                                    Some(val.as_str()?.to_string())
+                                }
                             }
                             other => bail!("unknown run key {other:?}"),
                         }
@@ -361,9 +382,35 @@ impl ScenarioSpec {
                     ),
                     ("seed", Json::Num(self.run.seed as f64)),
                     ("sampling", Json::Str(self.run.sampling.as_str().to_string())),
+                    (
+                        "checkpoint_at_s",
+                        match self.run.checkpoint_at_s {
+                            Some(t) => Json::Num(t),
+                            None => Json::Null,
+                        },
+                    ),
+                    (
+                        "checkpoint_out",
+                        match &self.run.checkpoint_out {
+                            Some(p) => Json::Str(p.clone()),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
         ])
+    }
+
+    /// The canonical JSON a snapshot embeds: this spec with the checkpoint
+    /// trigger cleared, so a resumed session re-runs to its budget instead
+    /// of immediately re-checkpointing over its own input file. Lossless
+    /// for everything else — `from_json(snapshot_json(spec))` rebuilds the
+    /// identical substrate (same seeds, fabric, churn compilation).
+    pub fn snapshot_json(&self) -> String {
+        let mut clean = self.clone();
+        clean.run.checkpoint_at_s = None;
+        clean.run.checkpoint_out = None;
+        clean.to_json().to_string()
     }
 
     // ----------------------------------------------------------- resolvers

@@ -155,6 +155,58 @@ impl<E> EventArena<E> {
     fn capacity(&self) -> usize {
         self.slots.len()
     }
+
+    /// Iterate the live (scheduled, not yet popped) records in slot order.
+    /// Snapshot serialization sorts these by `(at, seq)` — slot order is an
+    /// allocation artifact and must never leak into a snapshot's bytes.
+    fn live(&self) -> impl Iterator<Item = (SimTime, u64, &E)> {
+        self.slots
+            .iter()
+            .filter_map(|s| s.event.as_ref().map(|e| (s.at, s.seq, e)))
+    }
+}
+
+/// Validate a snapshot's queue section before rebuilding a backend from it.
+/// Shared by both backends so `queue-heap` sessions reject the same corrupt
+/// inputs. `events` must arrive sorted ascending by `(at, seq)`.
+fn validate_restore<E>(
+    now: SimTime,
+    seq: u64,
+    peak_capacity: usize,
+    events: &[(SimTime, u64, E)],
+) -> anyhow::Result<()> {
+    if events.len() > peak_capacity {
+        anyhow::bail!(
+            "queue restore: {} live events exceed the snapshot's peak-live arena bound {} \
+             (corrupt snapshot, or the capacity-tracks-peak invariant was broken at write time)",
+            events.len(),
+            peak_capacity
+        );
+    }
+    let mut prev: Option<(u64, u64)> = None;
+    for &(at, s, _) in events {
+        if at < now {
+            anyhow::bail!(
+                "queue restore: event (at={}µs, seq={s}) is earlier than the restored clock \
+                 {}µs — the snapshot violates time monotonicity",
+                at.0,
+                now.0
+            );
+        }
+        if s >= seq {
+            anyhow::bail!(
+                "queue restore: event seq {s} is not below the restored seq counter {seq}"
+            );
+        }
+        if prev.is_some_and(|p| p >= (at.0, s)) {
+            anyhow::bail!(
+                "queue restore: events not strictly ascending by (at, seq) at (at={}µs, seq={s})",
+                at.0
+            );
+        }
+        prev = Some((at.0, s));
+    }
+    Ok(())
 }
 
 /// Fixed-width ordered entry: the `(at, seq)` key is duplicated beside the
@@ -254,6 +306,12 @@ impl<E> HeapEventQueue<E> {
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
+        self.schedule_raw(at, seq, event);
+    }
+
+    /// Insert an event with an already-assigned `(at, seq)` key — the
+    /// restore path, which replays keys minted before the snapshot.
+    fn schedule_raw(&mut self, at: SimTime, seq: u64, event: E) {
         let handle = self.arena.insert(at, seq, event);
         self.heap.push(QueueEntry { at, seq, handle });
     }
@@ -261,6 +319,50 @@ impl<E> HeapEventQueue<E> {
     /// Schedule `event` after a virtual delay from now.
     pub fn schedule_in(&mut self, delay: SimTime, event: E) {
         self.schedule_at(self.now + delay, event);
+    }
+
+    /// The next insertion sequence number (snapshot state: restored events
+    /// all carry seqs below it, and post-resume pushes continue from it).
+    pub fn seq_counter(&self) -> u64 {
+        self.seq
+    }
+
+    /// Every live scheduled event, sorted by `(at, seq)` — the canonical
+    /// pop order, independent of arena slot allocation history. This is
+    /// what a snapshot serializes.
+    pub fn live_events(&self) -> Vec<(SimTime, u64, &E)> {
+        let mut v: Vec<_> = self.arena.live().collect();
+        v.sort_unstable_by_key(|&(at, seq, _)| (at.0, seq));
+        v
+    }
+
+    /// Rebuild a queue from snapshot state. `events` must be sorted
+    /// ascending by `(at, seq)` (the [`HeapEventQueue::live_events`]
+    /// order); `peak_capacity` is the writing queue's arena high-water
+    /// mark, and the rebuilt arena is bounded by it — live events can
+    /// never exceed the peak-live bound, so a violation means corruption
+    /// and fails loudly rather than silently over-allocating.
+    pub fn restore(
+        now: SimTime,
+        seq: u64,
+        popped: u64,
+        peak_capacity: usize,
+        events: Vec<(SimTime, u64, E)>,
+    ) -> anyhow::Result<Self> {
+        validate_restore(now, seq, peak_capacity, &events)?;
+        let mut q = HeapEventQueue::new();
+        q.now = now;
+        q.seq = seq;
+        q.popped = popped;
+        q.arena.slots.reserve_exact(events.len());
+        for (at, s, event) in events {
+            q.schedule_raw(at, s, event);
+        }
+        assert!(
+            q.arena.capacity() <= peak_capacity,
+            "restored arena over-allocated past the snapshot's peak-live bound"
+        );
+        Ok(q)
     }
 
     /// Pop the earliest event, advancing the clock to its timestamp.
@@ -498,6 +600,13 @@ impl<E> CalendarEventQueue<E> {
         let at = at.max(self.now);
         let seq = self.seq;
         self.seq += 1;
+        self.schedule_raw(at, seq, event);
+    }
+
+    /// Insert an event with an already-assigned `(at, seq)` key — shared by
+    /// `schedule_at` (which mints the key) and the restore path (which
+    /// replays keys minted before the snapshot).
+    fn schedule_raw(&mut self, at: SimTime, seq: u64, event: E) {
         let handle = self.arena.insert(at, seq, event);
         if self.near_len == 0 && self.far.is_empty() {
             // Empty queue: re-anchor the window directly at this event so a
@@ -530,6 +639,58 @@ impl<E> CalendarEventQueue<E> {
     /// Schedule `event` after a virtual delay from now.
     pub fn schedule_in(&mut self, delay: SimTime, event: E) {
         self.schedule_at(self.now + delay, event);
+    }
+
+    /// The next insertion sequence number (snapshot state: restored events
+    /// all carry seqs below it, and post-resume pushes continue from it).
+    pub fn seq_counter(&self) -> u64 {
+        self.seq
+    }
+
+    /// Every live scheduled event, sorted by `(at, seq)` — the canonical
+    /// pop order, independent of bucket/heap placement and arena slot
+    /// allocation history. This is what a snapshot serializes, which is why
+    /// the calendar geometry (window anchor, adaptive width, gap EMA) never
+    /// appears in a snapshot: it is performance state, re-derived on
+    /// restore, and pop order does not depend on it.
+    pub fn live_events(&self) -> Vec<(SimTime, u64, &E)> {
+        let mut v: Vec<_> = self.arena.live().collect();
+        v.sort_unstable_by_key(|&(at, seq, _)| (at.0, seq));
+        v
+    }
+
+    /// Rebuild a queue from snapshot state. `events` must be sorted
+    /// ascending by `(at, seq)` (the [`CalendarEventQueue::live_events`]
+    /// order); `peak_capacity` is the writing queue's arena high-water
+    /// mark, and the rebuilt arena is bounded by it — live events can
+    /// never exceed the peak-live bound, so a violation means corruption
+    /// and fails loudly rather than silently over-allocating. Bucket width
+    /// and window anchor start from defaults and re-adapt; pop order is
+    /// geometry-independent, so the resumed stream stays bit-identical to
+    /// an uninterrupted run (and to the heap backend).
+    pub fn restore(
+        now: SimTime,
+        seq: u64,
+        popped: u64,
+        peak_capacity: usize,
+        events: Vec<(SimTime, u64, E)>,
+    ) -> anyhow::Result<Self> {
+        validate_restore(now, seq, peak_capacity, &events)?;
+        let mut q = CalendarEventQueue::new();
+        q.now = now;
+        q.seq = seq;
+        q.popped = popped;
+        q.arena.slots.reserve_exact(events.len());
+        // Ascending insertion hits the in-bucket append fast path, so the
+        // rebuild is O(live) plus far-heap pushes.
+        for (at, s, event) in events {
+            q.schedule_raw(at, s, event);
+        }
+        assert!(
+            q.arena.capacity() <= peak_capacity,
+            "restored arena over-allocated past the snapshot's peak-live bound"
+        );
+        Ok(q)
     }
 
     /// Pop the earliest event, advancing the clock to its timestamp.
@@ -694,6 +855,79 @@ mod tests {
                         1_000,
                         "freed slots must be recycled across drain cycles"
                     );
+                }
+
+                #[test]
+                fn restore_preserves_order_and_respects_peak_capacity() {
+                    // Build up a peak (50 live), free some slots, then
+                    // rebuild from the snapshot view: the restored queue
+                    // must pop identically AND its arena must stay within
+                    // the recorded peak-live bound — a rebuilt arena
+                    // silently outgrowing the snapshot's working set is
+                    // the over-allocation bug this case pins down.
+                    let mut q = $q::new();
+                    for i in 0..50u64 {
+                        q.schedule_at(SimTime::from_micros(100 + (i * 37) % 90), i);
+                    }
+                    for _ in 0..20 {
+                        q.pop();
+                    }
+                    let peak = q.arena_capacity();
+                    assert_eq!(peak, 50);
+                    let live: Vec<(SimTime, u64, u64)> = q
+                        .live_events()
+                        .into_iter()
+                        .map(|(t, s, &e)| (t, s, e))
+                        .collect();
+                    assert_eq!(live.len(), 30);
+                    let mut r = $q::restore(
+                        q.now(),
+                        q.seq_counter(),
+                        q.events_processed(),
+                        peak,
+                        live.clone(),
+                    )
+                    .expect("valid restore");
+                    assert!(
+                        r.arena_capacity() <= peak,
+                        "restored arena {} exceeds peak-live bound {peak}",
+                        r.arena_capacity()
+                    );
+                    assert_eq!(r.now(), q.now());
+                    assert_eq!(r.events_processed(), q.events_processed());
+                    assert_eq!(r.len(), q.len());
+                    // Post-restore pushes must interleave exactly like
+                    // pushes on the original (seq counter continuity).
+                    q.schedule_at(SimTime::from_micros(130), 999);
+                    r.schedule_at(SimTime::from_micros(130), 999);
+                    loop {
+                        match (q.pop(), r.pop()) {
+                            (None, None) => break,
+                            (a, b) => assert_eq!(a, b, "restored pop order diverged"),
+                        }
+                    }
+                    // More live events than the recorded peak = corruption:
+                    // the restore must fail loudly, not over-allocate.
+                    let err = $q::restore(
+                        SimTime::ZERO,
+                        u64::MAX,
+                        0,
+                        live.len() - 1,
+                        live.clone(),
+                    )
+                    .expect_err("over-peak restore accepted");
+                    assert!(err.to_string().contains("peak-live"), "{err}");
+                    // Events before the restored clock violate monotonicity.
+                    assert!($q::restore(
+                        SimTime::from_micros(10_000),
+                        u64::MAX,
+                        0,
+                        live.len(),
+                        live.clone(),
+                    )
+                    .is_err());
+                    // Event seqs at/above the seq counter are inconsistent.
+                    assert!($q::restore(SimTime::ZERO, 1, 0, live.len(), live).is_err());
                 }
 
                 #[test]

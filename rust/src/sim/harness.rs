@@ -30,6 +30,7 @@ use super::churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 use super::engine::EventQueue;
 use super::population::Population;
 use super::rng::{SamplingVersion, SimRng};
+use super::snapshot::{SnapshotReader, SnapshotWriter};
 use super::time::SimTime;
 
 pub use super::population::Status;
@@ -51,6 +52,31 @@ pub struct HarnessConfig {
     /// Which peer-sampling stream [`Ctx::sample_peers`] draws from
     /// (`V1Shuffle` = the frozen historical stream, `V2Partial` = O(k)).
     pub sampling: SamplingVersion,
+    /// Canonical scenario-spec JSON embedded into snapshots so a resume can
+    /// rebuild the static substrate (latency, bandwidth config, task) from
+    /// the exact spec the checkpointing run used. `None` disables
+    /// checkpointing (snapshot requests fail loudly).
+    pub spec_json: Option<String>,
+    /// Write a snapshot and stop once the next event's time reaches this
+    /// instant (the snapshot is taken *between* events, so the resumed run
+    /// replays the identical event stream).
+    pub checkpoint_at: Option<SimTime>,
+    /// Where the checkpoint snapshot file goes.
+    pub checkpoint_out: Option<String>,
+}
+
+/// How a snapshot is replayed into a freshly built harness.
+#[derive(Debug, Clone, Default)]
+pub struct ResumeOptions {
+    /// Fork the restored harness RNG under this label: the what-if branch
+    /// keeps the snapshot's past but diverges randomly from the branch
+    /// point (the harness RNG is the only runtime stream).
+    pub fork: Option<String>,
+    /// The resume overlay changed the churn script: drop the snapshot's
+    /// queued churn events and schedule the freshly compiled script's
+    /// future events instead. When `false`, the snapshot's script is
+    /// installed verbatim so queued `Churn(i)` indices stay valid.
+    pub reschedule_churn: bool,
 }
 
 /// Internal DES events; `M` is the protocol's wire-message type.
@@ -228,6 +254,35 @@ pub trait Protocol {
 
     /// The final round reached (for [`SessionMetrics::final_round`]).
     fn final_round(&self) -> Round;
+
+    // ------------------------------------------------- checkpoint/restore
+    //
+    // Protocols that support deterministic checkpointing serialize their
+    // *dynamic* state (models, inboxes, per-node tables, in-flight ops) —
+    // anything rebuilt from the scenario spec (configs, static graphs,
+    // payload-size tables) stays out of the snapshot. The defaults fail
+    // loudly so snapshot-oblivious protocols still compile but cannot
+    // silently produce an unresumable file.
+
+    /// Serialize the protocol's dynamic state into the open section.
+    fn snapshot(&self, _w: &mut SnapshotWriter) -> Result<()> {
+        anyhow::bail!("this protocol does not support checkpointing")
+    }
+
+    /// Overwrite a freshly built protocol's dynamic state from a snapshot.
+    fn restore(&mut self, _r: &mut SnapshotReader) -> Result<()> {
+        anyhow::bail!("this protocol does not support checkpointing")
+    }
+
+    /// Serialize one in-flight wire message (a queued `Deliver` payload).
+    fn write_msg(&self, _w: &mut SnapshotWriter, _msg: &Self::Msg) -> Result<()> {
+        anyhow::bail!("this protocol does not support checkpointing")
+    }
+
+    /// Deserialize one in-flight wire message.
+    fn read_msg(&self, _r: &mut SnapshotReader) -> Result<Self::Msg> {
+        anyhow::bail!("this protocol does not support checkpointing")
+    }
 }
 
 /// Build a [`Ctx`] over disjoint fields of a harness (kept as a macro so
@@ -265,6 +320,10 @@ pub struct SimHarness<P: Protocol> {
     rng: SimRng,
     metrics: SessionMetrics,
     done: bool,
+    /// Set by [`SimHarness::restore_from`]: the run loop skips the t=0
+    /// prologue (churn/probe scheduling, bootstrap, baseline probe) —
+    /// everything it would schedule is already in the restored queue.
+    resumed: bool,
 }
 
 impl<P: Protocol> SimHarness<P> {
@@ -305,6 +364,7 @@ impl<P: Protocol> SimHarness<P> {
             rng,
             metrics,
             done: false,
+            resumed: false,
         }
     }
 
@@ -314,6 +374,193 @@ impl<P: Protocol> SimHarness<P> {
 
     pub fn fabric(&self) -> &NetworkFabric {
         &self.fabric
+    }
+
+    // ------------------------------------------------- checkpoint/restore
+
+    /// Serialize the complete dynamic session state into a snapshot blob.
+    ///
+    /// Section order (write order == read order): `spec` (the canonical
+    /// scenario JSON the resume path rebuilds the static substrate from),
+    /// `rng`, `pop`, `churn`, `fabric`, `metrics`, `protocol`, `queue`.
+    /// Everything re-derivable from the spec — latency matrix, bandwidth
+    /// config, task data, static graphs, calendar-queue geometry — is
+    /// rebuilt on restore and never serialized.
+    pub fn snapshot_bytes(&self) -> Result<Vec<u8>> {
+        let spec = self.cfg.spec_json.as_deref().ok_or_else(|| {
+            anyhow::anyhow!("harness was built without an embedded scenario spec; cannot snapshot")
+        })?;
+        let mut w = SnapshotWriter::new();
+        w.begin_section("spec");
+        w.write_str(spec);
+        w.end_section();
+        w.begin_section("rng");
+        w.write_rng(&self.rng);
+        w.end_section();
+        w.begin_section("pop");
+        self.population.write_into(&mut w);
+        w.end_section();
+        w.begin_section("churn");
+        let churn = self.churn.events();
+        w.write_usize(churn.len());
+        for ev in churn {
+            w.write_time(ev.at);
+            w.write_u32(ev.node);
+            w.write_u8(match ev.kind {
+                ChurnKind::Join => 0,
+                ChurnKind::Leave => 1,
+                ChurnKind::Crash => 2,
+                ChurnKind::Recover => 3,
+            });
+        }
+        w.end_section();
+        w.begin_section("fabric");
+        self.fabric.write_into(&mut w);
+        w.end_section();
+        w.begin_section("metrics");
+        self.metrics.write_into(&mut w);
+        w.end_section();
+        w.begin_section("protocol");
+        self.protocol.snapshot(&mut w)?;
+        w.end_section();
+        w.begin_section("queue");
+        w.write_time(self.queue.now());
+        w.write_u64(self.queue.seq_counter());
+        w.write_u64(self.queue.events_processed());
+        w.write_usize(self.queue.arena_capacity());
+        let live = self.queue.live_events();
+        w.write_usize(live.len());
+        for (at, seq, ev) in live {
+            w.write_time(at);
+            w.write_u64(seq);
+            match ev {
+                HarnessEvent::Deliver { to, msg } => {
+                    w.write_u8(0);
+                    w.write_u32(*to);
+                    self.protocol.write_msg(&mut w, msg)?;
+                }
+                HarnessEvent::Timer { node, id } => {
+                    w.write_u8(1);
+                    w.write_u32(*node);
+                    w.write_u64(*id);
+                }
+                HarnessEvent::TrainDone { node, seq } => {
+                    w.write_u8(2);
+                    w.write_u32(*node);
+                    w.write_u64(*seq);
+                }
+                HarnessEvent::Churn(i) => {
+                    w.write_u8(3);
+                    w.write_usize(*i);
+                }
+                HarnessEvent::Probe => w.write_u8(4),
+            }
+        }
+        w.end_section();
+        Ok(w.finish())
+    }
+
+    /// Overwrite this freshly built harness's dynamic state from a snapshot.
+    ///
+    /// The reader must be positioned just past the `spec` section (the
+    /// resume helper consumes it to rebuild the session). The protocol,
+    /// task, compute model, and fabric statics were already rebuilt from
+    /// that spec; this replays the dynamic state on top.
+    pub fn restore_from(&mut self, r: &mut SnapshotReader, opts: &ResumeOptions) -> Result<()> {
+        r.begin_section("rng")?;
+        self.rng = r.read_rng()?;
+        r.end_section()?;
+        if let Some(label) = opts.fork.as_deref() {
+            // Branch the what-if run's randomness at the resume point; the
+            // harness RNG is the only runtime stream, so every divergence
+            // is strictly after the branch.
+            self.rng = self.rng.fork(label);
+        }
+        r.begin_section("pop")?;
+        self.population = Population::read_from(r)?;
+        r.end_section()?;
+        r.begin_section("churn")?;
+        let n = r.read_usize()?;
+        let mut churn = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = r.read_time()?;
+            let node = r.read_u32()?;
+            let kind = match r.read_u8()? {
+                0 => ChurnKind::Join,
+                1 => ChurnKind::Leave,
+                2 => ChurnKind::Crash,
+                3 => ChurnKind::Recover,
+                k => anyhow::bail!("snapshot: unknown churn kind tag {k}"),
+            };
+            churn.push(ChurnEvent { at, node, kind });
+        }
+        r.end_section()?;
+        if !opts.reschedule_churn {
+            // Install the snapshot's script verbatim: queued `Churn(i)`
+            // events index into it. (Under an overlay the session keeps
+            // its freshly compiled script instead.)
+            self.churn = ChurnSchedule::new(churn);
+        }
+        r.begin_section("fabric")?;
+        self.fabric.restore_from(r)?;
+        r.end_section()?;
+        r.begin_section("metrics")?;
+        self.metrics = SessionMetrics::read_from(r)?;
+        r.end_section()?;
+        r.begin_section("protocol")?;
+        self.protocol.restore(r)?;
+        r.end_section()?;
+        r.begin_section("queue")?;
+        let now = r.read_time()?;
+        let seq = r.read_u64()?;
+        let popped = r.read_u64()?;
+        let peak = r.read_usize()?;
+        let n = r.read_usize()?;
+        let mut events = Vec::with_capacity(n);
+        for _ in 0..n {
+            let at = r.read_time()?;
+            let s = r.read_u64()?;
+            let ev = match r.read_u8()? {
+                0 => {
+                    let to = r.read_u32()?;
+                    let msg = self.protocol.read_msg(r)?;
+                    HarnessEvent::Deliver { to, msg }
+                }
+                1 => {
+                    let node = r.read_u32()?;
+                    let id = r.read_u64()?;
+                    HarnessEvent::Timer { node, id }
+                }
+                2 => {
+                    let node = r.read_u32()?;
+                    let seq = r.read_u64()?;
+                    HarnessEvent::TrainDone { node, seq }
+                }
+                3 => HarnessEvent::Churn(r.read_usize()?),
+                4 => HarnessEvent::Probe,
+                t => anyhow::bail!("snapshot: unknown harness event tag {t}"),
+            };
+            events.push((at, s, ev));
+        }
+        r.end_section()?;
+        if opts.reschedule_churn {
+            // The snapshot's queued churn points into the *old* script;
+            // drop it and schedule the overlay script's future events with
+            // fresh seqs (the what-if future differs by design).
+            events.retain(|(_, _, e)| !matches!(e, HarnessEvent::Churn(_)));
+        }
+        self.queue = EventQueue::restore(now, seq, popped, peak, events)?;
+        if opts.reschedule_churn {
+            for i in 0..self.churn.events().len() {
+                let ev = self.churn.events()[i];
+                if ev.at >= now {
+                    self.queue.schedule_at(ev.at, HarnessEvent::Churn(i));
+                }
+            }
+        }
+        self.done = false;
+        self.resumed = true;
+        Ok(())
     }
 
     /// Liveness check used by event dispatch: ids outside the node table
@@ -385,22 +632,41 @@ impl<P: Protocol> SimHarness<P> {
     /// Like [`SimHarness::run`], but also hands the terminal protocol state
     /// back so tests can assert per-node columns (rounds, seqs) directly.
     pub fn run_into_parts(mut self) -> (SessionMetrics, TrafficLedger, P) {
-        for (i, ev) in self.churn.events().iter().enumerate() {
-            self.queue.schedule_at(ev.at, HarnessEvent::Churn(i));
+        if !self.resumed {
+            for (i, ev) in self.churn.events().iter().enumerate() {
+                self.queue.schedule_at(ev.at, HarnessEvent::Churn(i));
+            }
+            let mut t = self.cfg.eval_interval;
+            while t <= self.cfg.max_time {
+                self.queue.schedule_at(t, HarnessEvent::Probe);
+                t += self.cfg.eval_interval;
+            }
+            {
+                let mut ctx = harness_ctx!(self);
+                self.protocol.bootstrap(&mut ctx);
+            }
+            // Baseline evaluation of the initial model at t=0.
+            self.probe();
         }
-        let mut t = self.cfg.eval_interval;
-        while t <= self.cfg.max_time {
-            self.queue.schedule_at(t, HarnessEvent::Probe);
-            t += self.cfg.eval_interval;
-        }
-        {
-            let mut ctx = harness_ctx!(self);
-            self.protocol.bootstrap(&mut ctx);
-        }
-        // Baseline evaluation of the initial model at t=0.
-        self.probe();
 
-        while let Some((now, ev)) = self.queue.pop() {
+        loop {
+            // Checkpoint *between* events, before the trigger-crossing event
+            // pops: the snapshot captures the queue with that event still
+            // live, so the resumed run replays the identical stream. Taken
+            // before the terminal probe below, which would otherwise
+            // pollute the snapshot (it consumes protocol/metrics state).
+            if let (Some(ck), Some(out)) =
+                (self.cfg.checkpoint_at, self.cfg.checkpoint_out.as_deref())
+            {
+                let due = !self.done && self.queue.peek_time().is_some_and(|t| t >= ck);
+                if due {
+                    let bytes = self.snapshot_bytes().expect("snapshot serialization failed");
+                    std::fs::write(out, &bytes)
+                        .unwrap_or_else(|e| panic!("writing checkpoint {out}: {e}"));
+                    break;
+                }
+            }
+            let Some((now, ev)) = self.queue.pop() else { break };
             if now > self.cfg.max_time || self.done {
                 break;
             }
@@ -513,6 +779,9 @@ mod tests {
                 target_metric: None,
                 seed: 9,
                 sampling: SamplingVersion::default(),
+                spec_json: None,
+                checkpoint_at: None,
+                checkpoint_out: None,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -565,6 +834,13 @@ mod tests {
     }
 
     #[test]
+    fn snapshot_without_embedded_spec_fails_loudly() {
+        let h = ring_harness(3, 0);
+        let err = h.snapshot_bytes().expect_err("no spec_json configured");
+        assert!(err.to_string().contains("embedded scenario spec"), "{err}");
+    }
+
+    #[test]
     fn dead_nodes_drop_deliveries() {
         use crate::sim::churn::{ChurnEvent, ChurnKind};
         let n = 4;
@@ -585,6 +861,9 @@ mod tests {
                 target_metric: None,
                 seed: 9,
                 sampling: SamplingVersion::default(),
+                spec_json: None,
+                checkpoint_at: None,
+                checkpoint_out: None,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,

@@ -16,12 +16,14 @@ pub mod harness;
 pub mod node_table;
 pub mod population;
 pub mod rng;
+pub mod snapshot;
 pub mod time;
 
 pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent};
 pub use node_table::NodeTable;
-pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, SimHarness};
+pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, ResumeOptions, SimHarness};
 pub use population::{LivenessMirror, Population, Status};
 pub use rng::{SamplingVersion, SimRng};
+pub use snapshot::{SnapshotReader, SnapshotWriter, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 pub use time::SimTime;

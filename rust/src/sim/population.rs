@@ -21,6 +21,7 @@
 use crate::{NodeId, Round};
 
 use super::rng::{SamplingVersion, SimRng};
+use super::snapshot::{SnapshotReader, SnapshotWriter};
 
 /// Liveness status of a simulated node process.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -56,12 +57,22 @@ impl Population {
         for s in status.iter_mut().take(initial_alive) {
             *s = Status::Alive;
         }
+        Population::from_status(status)
+    }
+
+    /// Rebuild a population from a bare status table (the snapshot-restore
+    /// path): the alive counter and the Fenwick index are derived state and
+    /// are reconstructed in O(n), so they can never disagree with the table.
+    pub fn from_status(status: Vec<Status>) -> Population {
+        let total = status.len();
         // O(n) in-place Fenwick build: each node's bit lands in tree[i],
         // then i's finished total is pushed up to its parent once.
         let mut tree = vec![0u32; total + 1];
+        let mut alive = 0usize;
         for i in 1..=total {
-            if i - 1 < initial_alive {
+            if status[i - 1] == Status::Alive {
                 tree[i] += 1;
+                alive += 1;
             }
             let parent = i + (i & i.wrapping_neg());
             if parent <= total {
@@ -69,7 +80,35 @@ impl Population {
                 tree[parent] += v;
             }
         }
-        Population { status, tree, alive: initial_alive }
+        Population { status, tree, alive }
+    }
+
+    /// Serialize the status table. Only the table travels: the alive count
+    /// and Fenwick tree are re-derived by [`Population::from_status`], so a
+    /// snapshot can never carry an index that disagrees with its statuses.
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        w.write_usize(self.status.len());
+        for &s in &self.status {
+            w.write_u8(match s {
+                Status::Alive => 0,
+                Status::Dead => 1,
+                Status::NotJoined => 2,
+            });
+        }
+    }
+
+    pub fn read_from(r: &mut SnapshotReader) -> anyhow::Result<Population> {
+        let n = r.read_usize()?;
+        let mut status = Vec::with_capacity(n);
+        for i in 0..n {
+            status.push(match r.read_u8()? {
+                0 => Status::Alive,
+                1 => Status::Dead,
+                2 => Status::NotJoined,
+                other => anyhow::bail!("snapshot: invalid node status byte {other} for node {i}"),
+            });
+        }
+        Ok(Population::from_status(status))
     }
 
     /// Size of the node table (initial population + scripted joiners).
@@ -373,6 +412,16 @@ impl LivenessMirror {
         }
     }
 
+    /// Serialize mirror state (status table + monotone round guard).
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        self.pop.write_into(w);
+        w.write_u64(self.started);
+    }
+
+    pub fn read_from(r: &mut SnapshotReader) -> anyhow::Result<LivenessMirror> {
+        Ok(LivenessMirror { pop: Population::read_from(r)?, started: r.read_u64()? })
+    }
+
     /// Minimum of `rounds` over live nodes (the session's `final_round`);
     /// 0 during a total outage. `rounds` must iterate node-table order.
     pub fn min_live_round<I: IntoIterator<Item = Round>>(&self, rounds: I) -> Round {
@@ -512,6 +561,63 @@ mod tests {
         let s = p.sample_alive_excluding(&mut rng, SamplingVersion::V2Partial, 0, 10);
         assert!(s.is_empty());
         assert_eq!(rng.draw_count(), before, "empty candidate set spends no entropy");
+    }
+
+    #[test]
+    fn snapshot_roundtrip_rebuilds_identical_index() {
+        let mut p = Population::new(40, 30);
+        for i in [0usize, 7, 12, 29] {
+            p.mark_dead(i);
+        }
+        p.mark_alive(35); // a joiner
+        p.mark_dead(31); // a dead placeholder
+        let mut w = SnapshotWriter::new();
+        w.begin_section("pop");
+        p.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("pop").unwrap();
+        let q = Population::read_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        assert_eq!(q.len(), p.len());
+        assert_eq!(q.alive_count(), p.alive_count());
+        for i in 0..p.len() {
+            assert_eq!(q.status(i), p.status(i), "node {i}");
+            assert_eq!(q.rank(i), p.rank(i), "rank {i} (Fenwick rebuild drift)");
+        }
+        for rk in 0..p.alive_count() {
+            assert_eq!(q.select(rk), p.select(rk), "select {rk}");
+        }
+        // The restored table must draw the identical sampling stream.
+        let mut ra = SimRng::new(9);
+        let mut rb = SimRng::new(9);
+        assert_eq!(
+            p.sample_alive_excluding(&mut ra, SamplingVersion::V2Partial, 3, 8),
+            q.sample_alive_excluding(&mut rb, SamplingVersion::V2Partial, 3, 8),
+        );
+    }
+
+    #[test]
+    fn mirror_snapshot_roundtrip_keeps_guard_and_recorder() {
+        let mut m = LivenessMirror::with_live_prefix(6, 4);
+        assert!(m.should_record(0, 1));
+        m.set_dead(0);
+        m.set_live(4);
+        let mut w = SnapshotWriter::new();
+        w.begin_section("m");
+        m.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("m").unwrap();
+        let mut back = LivenessMirror::read_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        assert_eq!(back.started(), 1);
+        assert_eq!(back.recorder(), m.recorder());
+        assert_eq!(back.live_indices(), m.live_indices());
+        assert!(!back.should_record(1, 1), "monotone guard lost in restore");
+        assert!(back.should_record(1, 2));
     }
 
     // ------------------------------------------------------- LivenessMirror

@@ -1,0 +1,495 @@
+//! Versioned binary snapshot codec: deterministic checkpoint/restore.
+//!
+//! A snapshot freezes the **complete** state of a running session — RNG
+//! streams, `Population` status, `NodeTable` columns, the live event-queue
+//! slots, `TrafficLedger`, `SessionMetrics` (including the bounded
+//! reservoir's stride state), and per-protocol state via the
+//! `Protocol::snapshot`/`Protocol::restore` hooks — such that resuming from
+//! the snapshot replays the rest of the session **bit-identically** to an
+//! uninterrupted run (the oracle in `tests/snapshot_differential.rs`).
+//!
+//! Format discipline mirrors `util/json.rs`: no serde, no derives — every
+//! byte is written and read by hand so the wire layout is an explicit,
+//! reviewable contract. Layout:
+//!
+//! ```text
+//! magic "MDSTSNAP" (8 bytes) | format version (u32 LE)
+//! section*  :=  name (len-prefixed str) | body length (u64 LE) | body
+//! ```
+//!
+//! Sections are length-prefixed so a reader can verify it consumed exactly
+//! the bytes the writer produced (truncation and drift are loud errors, not
+//! silent misreads), and so future format versions can skip sections they
+//! do not understand. **Version policy:** any change to a section's byte
+//! layout bumps [`SNAPSHOT_VERSION`]; readers reject versions they were not
+//! built for — resuming across format versions is never silently attempted.
+//!
+//! Only *dynamic* state is serialized. Anything deterministically
+//! re-derivable from the scenario spec (latency matrix, bandwidth config,
+//! topology graphs, calendar-queue bucket geometry, Fenwick trees) is
+//! rebuilt on restore — that keeps snapshots small and means performance
+//! tuning of derived structures can never invalidate old snapshots.
+//!
+//! Model payloads (`Arc<Vec<f32>>`) are **interned**: the first write of an
+//! `Arc` emits its contents and registers the pointer; later writes of the
+//! same `Arc` emit a 4-byte back-reference. The reader rebuilds the same
+//! `Arc` graph, so sharing (and therefore memory footprint *and* a
+//! write→read→write byte-identical round trip) survives restore.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::learning::Model;
+
+use super::rng::SimRng;
+use super::time::SimTime;
+
+/// First 8 bytes of every snapshot file.
+pub const SNAPSHOT_MAGIC: [u8; 8] = *b"MDSTSNAP";
+/// Current snapshot format version. Bump on ANY wire-layout change.
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Sentinel model index meaning "inline payload follows" (vs a back-ref).
+const MODEL_INLINE: u32 = u32::MAX;
+
+// ---------------------------------------------------------------- writer
+
+/// Append-only snapshot builder. Sections must be closed in LIFO order;
+/// [`SnapshotWriter::finish`] panics on an unbalanced section stack (a
+/// programming error, not an I/O condition).
+pub struct SnapshotWriter {
+    buf: Vec<u8>,
+    /// Byte offsets of the open sections' length placeholders.
+    open: Vec<usize>,
+    /// Arc-pointer → intern index for already-written models.
+    models: HashMap<usize, u32>,
+}
+
+impl Default for SnapshotWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SnapshotWriter {
+    pub fn new() -> Self {
+        let mut buf = Vec::with_capacity(4096);
+        buf.extend_from_slice(&SNAPSHOT_MAGIC);
+        buf.extend_from_slice(&SNAPSHOT_VERSION.to_le_bytes());
+        SnapshotWriter { buf, open: Vec::new(), models: HashMap::new() }
+    }
+
+    /// Open a named, length-prefixed section. The length is patched in by
+    /// the matching [`SnapshotWriter::end_section`].
+    pub fn begin_section(&mut self, name: &str) {
+        self.write_str(name);
+        self.open.push(self.buf.len());
+        self.buf.extend_from_slice(&0u64.to_le_bytes());
+    }
+
+    pub fn end_section(&mut self) {
+        let start = self.open.pop().expect("end_section without begin_section");
+        let body_len = (self.buf.len() - start - 8) as u64;
+        self.buf[start..start + 8].copy_from_slice(&body_len.to_le_bytes());
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        assert!(self.open.is_empty(), "snapshot finished with an open section");
+        self.buf
+    }
+
+    pub fn write_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn write_bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn write_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// `usize` travels as u64 so 32- and 64-bit builds agree on the wire.
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Bit-exact: f64 travels as its IEEE-754 bits, never through text.
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_time(&mut self, t: SimTime) {
+        self.write_u64(t.0);
+    }
+
+    pub fn write_str(&mut self, s: &str) {
+        self.write_u64(s.len() as u64);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    /// An RNG stream: the four xoshiro words + the draw counter
+    /// ([`SimRng::state`] is the complete state — no hidden spare).
+    pub fn write_rng(&mut self, rng: &SimRng) {
+        let (s, draws) = rng.state();
+        for word in s {
+            self.write_u64(word);
+        }
+        self.write_u64(draws);
+    }
+
+    /// A plain (unshared) model payload: length + raw f32 bits.
+    pub fn write_model_plain(&mut self, m: &Model) {
+        self.write_u64(m.len() as u64);
+        for &w in m {
+            self.buf.extend_from_slice(&w.to_bits().to_le_bytes());
+        }
+    }
+
+    /// An `Arc`-shared model: back-reference if this exact `Arc` was
+    /// already written, inline payload (then registered) otherwise. The
+    /// reader reconstructs identical sharing, which is what makes a
+    /// write→read→write round trip byte-identical.
+    pub fn write_model(&mut self, m: &Arc<Model>) {
+        let key = Arc::as_ptr(m) as usize;
+        if let Some(&idx) = self.models.get(&key) {
+            self.write_u32(idx);
+        } else {
+            let idx = u32::try_from(self.models.len())
+                .expect("snapshot: more than u32::MAX - 1 distinct models");
+            assert!(idx != MODEL_INLINE, "model intern table overflow");
+            self.write_u32(MODEL_INLINE);
+            self.write_model_plain(m);
+            self.models.insert(key, idx);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- reader
+
+/// Positioned snapshot reader. Every decode error carries the byte offset
+/// so corruption reports point at the damage.
+pub struct SnapshotReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    /// End offset of the currently open sections (LIFO).
+    open: Vec<usize>,
+    /// Intern table: models in first-write order.
+    models: Vec<Arc<Model>>,
+}
+
+impl<'a> SnapshotReader<'a> {
+    /// Validate magic + version and position the cursor at the first
+    /// section. Rejects foreign files and unsupported format versions
+    /// loudly — a snapshot is never "best-effort" decoded.
+    pub fn new(buf: &'a [u8]) -> Result<Self> {
+        if buf.len() < 12 {
+            bail!("snapshot truncated: {} bytes is shorter than the 12-byte header", buf.len());
+        }
+        if buf[..8] != SNAPSHOT_MAGIC {
+            bail!(
+                "not a snapshot: bad magic {:02x?} (expected {:02x?} = \"MDSTSNAP\")",
+                &buf[..8],
+                SNAPSHOT_MAGIC
+            );
+        }
+        let version = u32::from_le_bytes(buf[8..12].try_into().unwrap());
+        if version != SNAPSHOT_VERSION {
+            bail!(
+                "unsupported snapshot format version {version} (this build reads version \
+                 {SNAPSHOT_VERSION}); re-create the snapshot with a matching build"
+            );
+        }
+        Ok(SnapshotReader { buf, pos: 12, open: Vec::new(), models: Vec::new() })
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = if let Some(&limit) = self.open.last() { limit } else { self.buf.len() };
+        if self.pos + n > end {
+            bail!(
+                "snapshot truncated: need {n} bytes at offset {}, only {} available \
+                 (corrupted or incomplete file)",
+                self.pos,
+                end - self.pos
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Enter the named section; errors if the next section has a different
+    /// name (layout drift between writer and reader builds).
+    pub fn begin_section(&mut self, name: &str) -> Result<()> {
+        let at = self.pos;
+        let got = self.read_str().with_context(|| format!("reading section name at offset {at}"))?;
+        if got != name {
+            bail!("snapshot section mismatch at offset {at}: expected {name:?}, found {got:?}");
+        }
+        let len = self.read_u64()? as usize;
+        let end = self.pos + len;
+        if end > self.buf.len() {
+            bail!(
+                "snapshot truncated: section {name:?} claims {len} bytes at offset {} but only \
+                 {} remain",
+                self.pos,
+                self.buf.len() - self.pos
+            );
+        }
+        self.open.push(end);
+        Ok(())
+    }
+
+    /// Leave the current section; errors unless its body was consumed
+    /// exactly (any slack means writer/reader disagree on the layout).
+    pub fn end_section(&mut self) -> Result<()> {
+        let end = self.open.pop().expect("end_section without begin_section");
+        if self.pos != end {
+            bail!(
+                "snapshot section not fully consumed: reader at offset {}, section ends at {end} \
+                 ({} bytes of drift)",
+                self.pos,
+                end as i64 - self.pos as i64
+            );
+        }
+        Ok(())
+    }
+
+    /// Verify the whole buffer was consumed (no trailing garbage).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!(
+                "snapshot has {} trailing bytes after the last section (offset {})",
+                self.buf.len() - self.pos,
+                self.pos
+            );
+        }
+        Ok(())
+    }
+
+    pub fn read_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn read_bool(&mut self) -> Result<bool> {
+        let at = self.pos;
+        match self.read_u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => bail!("snapshot: invalid bool byte {other} at offset {at}"),
+        }
+    }
+
+    pub fn read_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn read_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn read_usize(&mut self) -> Result<usize> {
+        let at = self.pos;
+        let v = self.read_u64()?;
+        usize::try_from(v).map_err(|_| {
+            anyhow::anyhow!("snapshot: length {v} at offset {at} exceeds this platform's usize")
+        })
+    }
+
+    pub fn read_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.read_u64()?))
+    }
+
+    pub fn read_time(&mut self) -> Result<SimTime> {
+        Ok(SimTime(self.read_u64()?))
+    }
+
+    pub fn read_str(&mut self) -> Result<String> {
+        let at = self.pos;
+        let len = self.read_usize()?;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .with_context(|| format!("snapshot: non-UTF-8 string at offset {at}"))
+    }
+
+    pub fn read_rng(&mut self) -> Result<SimRng> {
+        let mut s = [0u64; 4];
+        for word in &mut s {
+            *word = self.read_u64()?;
+        }
+        let draws = self.read_u64()?;
+        Ok(SimRng::from_state(s, draws))
+    }
+
+    pub fn read_model_plain(&mut self) -> Result<Model> {
+        let len = self.read_usize()?;
+        let mut m = Vec::with_capacity(len);
+        for _ in 0..len {
+            m.push(f32::from_bits(u32::from_le_bytes(self.take(4)?.try_into().unwrap())));
+        }
+        Ok(m)
+    }
+
+    pub fn read_model(&mut self) -> Result<Arc<Model>> {
+        let at = self.pos;
+        let tag = self.read_u32()?;
+        if tag == MODEL_INLINE {
+            let m = Arc::new(self.read_model_plain()?);
+            self.models.push(Arc::clone(&m));
+            Ok(m)
+        } else {
+            self.models.get(tag as usize).cloned().ok_or_else(|| {
+                anyhow::anyhow!(
+                    "snapshot: dangling model back-reference {tag} at offset {at} \
+                     (only {} models seen)",
+                    self.models.len()
+                )
+            })
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitives_round_trip() {
+        let mut w = SnapshotWriter::new();
+        w.begin_section("prims");
+        w.write_u8(7);
+        w.write_bool(true);
+        w.write_bool(false);
+        w.write_u32(0xDEADBEEF);
+        w.write_u64(u64::MAX - 3);
+        w.write_usize(123_456);
+        w.write_f64(-0.0); // signed zero must survive (bit-exact contract)
+        w.write_f64(f64::NAN);
+        w.write_time(SimTime::from_micros(42));
+        w.write_str("hällo");
+        w.end_section();
+        let bytes = w.finish();
+
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("prims").unwrap();
+        assert_eq!(r.read_u8().unwrap(), 7);
+        assert!(r.read_bool().unwrap());
+        assert!(!r.read_bool().unwrap());
+        assert_eq!(r.read_u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(r.read_u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.read_usize().unwrap(), 123_456);
+        assert_eq!(r.read_f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert!(r.read_f64().unwrap().is_nan());
+        assert_eq!(r.read_time().unwrap(), SimTime::from_micros(42));
+        assert_eq!(r.read_str().unwrap(), "hällo");
+        r.end_section().unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn model_interning_preserves_sharing_and_bytes() {
+        let shared = Arc::new(vec![1.0f32, 2.5, -3.25]);
+        let other = Arc::new(vec![9.0f32]);
+        let mut w = SnapshotWriter::new();
+        w.begin_section("m");
+        w.write_model(&shared);
+        w.write_model(&other);
+        w.write_model(&shared); // back-ref, 4 bytes
+        w.end_section();
+        let bytes = w.finish();
+
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("m").unwrap();
+        let a = r.read_model().unwrap();
+        let b = r.read_model().unwrap();
+        let c = r.read_model().unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+        assert_eq!(*a, vec![1.0f32, 2.5, -3.25]);
+        assert_eq!(*b, vec![9.0f32]);
+        assert!(Arc::ptr_eq(&a, &c), "sharing lost across restore");
+        assert!(!Arc::ptr_eq(&a, &b));
+
+        // Re-writing the restored graph reproduces the exact bytes: the
+        // write→read→write fixpoint the differential test relies on.
+        let mut w2 = SnapshotWriter::new();
+        w2.begin_section("m");
+        w2.write_model(&a);
+        w2.write_model(&b);
+        w2.write_model(&c);
+        w2.end_section();
+        assert_eq!(w2.finish(), bytes);
+    }
+
+    #[test]
+    fn corrupt_headers_fail_loudly() {
+        let mut w = SnapshotWriter::new();
+        w.begin_section("s");
+        w.write_u64(1);
+        w.end_section();
+        let bytes = w.finish();
+
+        // Truncated anywhere: loud error, never a partial decode.
+        for cut in [0, 4, 11, bytes.len() - 1] {
+            let err = match SnapshotReader::new(&bytes[..cut]) {
+                Err(e) => e.to_string(),
+                Ok(mut r) => {
+                    let e = r
+                        .begin_section("s")
+                        .and_then(|_| r.read_u64().map(|_| ()))
+                        .and_then(|_| r.end_section())
+                        .expect_err("truncated snapshot decoded");
+                    e.to_string()
+                }
+            };
+            assert!(err.contains("truncated"), "cut at {cut}: {err}");
+        }
+
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] ^= 0xFF;
+        assert!(SnapshotReader::new(&bad).unwrap_err().to_string().contains("bad magic"));
+
+        // Future format version.
+        let mut future = bytes.clone();
+        future[8..12].copy_from_slice(&(SNAPSHOT_VERSION + 1).to_le_bytes());
+        let err = SnapshotReader::new(&future).unwrap_err().to_string();
+        assert!(err.contains("unsupported snapshot format version"), "{err}");
+
+        // Wrong section name = layout drift.
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        let err = r.begin_section("other").unwrap_err().to_string();
+        assert!(err.contains("section mismatch"), "{err}");
+
+        // Under-consuming a section is drift too.
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("s").unwrap();
+        let err = r.end_section().unwrap_err().to_string();
+        assert!(err.contains("not fully consumed"), "{err}");
+    }
+
+    #[test]
+    fn section_reads_cannot_cross_section_ends() {
+        // A read inside a section must not silently consume the next
+        // section's bytes even when the buffer physically continues.
+        let mut w = SnapshotWriter::new();
+        w.begin_section("a");
+        w.write_u32(5);
+        w.end_section();
+        w.begin_section("b");
+        w.write_u64(99);
+        w.end_section();
+        let bytes = w.finish();
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("a").unwrap();
+        let err = r.read_u64().unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+}

@@ -15,7 +15,8 @@ use super::json::Json;
 
 /// Bench-name prefixes whose regression fails the build. Everything else
 /// (aggregation kernels, view merges, ...) is tracked but advisory.
-pub const GUARDED_PREFIXES: &[&str] = &["des/queue/", "fanout/", "sample/", "mem/"];
+pub const GUARDED_PREFIXES: &[&str] =
+    &["des/queue/", "fanout/", "sample/", "mem/", "snapshot/"];
 
 /// Guarded rows faster than this in BOTH snapshots are exempt from the
 /// ratio gate: a 2x swing on a tens-of-nanoseconds row is scheduler noise
@@ -208,6 +209,26 @@ mod tests {
         let bad = regressions(&compare_trend(&base, &new), 2.0);
         assert_eq!(bad.len(), 1);
         assert_eq!(bad[0].name, "mem/bytes-per-node/n=100000");
+        assert!(bad[0].guarded);
+    }
+
+    #[test]
+    fn snapshot_rows_are_guarded() {
+        // Checkpoint write/read at n=100k and the on-disk byte size are
+        // guarded like the other hot paths: a 2x blowup in snapshot cost
+        // (an accidental deep copy per node, interning silently disabled)
+        // must fail the build, not scroll past as trivia.
+        let base = snapshot(&[
+            ("snapshot/write/n=100k", 40_000_000),
+            ("snapshot/bytes/n=100k", 9_000_000),
+        ]);
+        let new = snapshot(&[
+            ("snapshot/write/n=100k", 110_000_000),
+            ("snapshot/bytes/n=100k", 9_100_000),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "snapshot/write/n=100k");
         assert!(bad[0].guarded);
     }
 

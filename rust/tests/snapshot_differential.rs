@@ -1,0 +1,197 @@
+//! Differential tests for the checkpoint/restore subsystem: for every
+//! registered protocol, a run that checkpoints at time T and resumes from
+//! the file must produce a final fingerprint bit-identical to the same
+//! scenario run uninterrupted — metrics curve bits, event counts, and
+//! traffic ledger bytes all included. Runs under both queue backends via
+//! the CI feature matrix (`--features queue-heap` swaps the backend under
+//! the same test body). Also pinned here: the write→read→write byte
+//! round trip, loud failures on corrupted snapshots, and what-if branching
+//! (fork label / availability overlay) diverging only after the branch
+//! point.
+
+use modest_dl::metrics::SessionMetrics;
+use modest_dl::net::TrafficLedger;
+use modest_dl::scenario::{resume_session, run_scenario, ProtocolRegistry, ScenarioSpec};
+use modest_dl::sim::ChurnSchedule;
+
+fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
+    (
+        m.final_round,
+        m.events,
+        m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect(),
+        t.total(),
+    )
+}
+
+/// A churned mock scenario small enough to run 4x per protocol: the step
+/// availability model takes a slice of the population down and up again,
+/// so snapshots cover dead nodes, queued churn events, and mid-flight
+/// revival state — not just the happy path.
+fn churned_spec(protocol: &str) -> ScenarioSpec {
+    ScenarioSpec::from_json(&format!(
+        r#"{{
+            "workload": {{"dataset": "mock"}},
+            "population": {{"nodes": 14, "availability": {{
+                "model": "step", "amplitude": 0.3, "period_s": 50.0, "seed": 5}}}},
+            "protocol": {{"name": "{protocol}", "s": 4, "a": 2}},
+            "run": {{"max_time_s": 150.0, "max_rounds": 18,
+                     "eval_interval_s": 10.0, "seed": 4242}}
+        }}"#
+    ))
+    .unwrap()
+}
+
+fn snap_path(tag: &str) -> std::path::PathBuf {
+    let backend = if cfg!(feature = "queue-heap") { "heap" } else { "cal" };
+    std::env::temp_dir().join(format!("snapshot_diff_{tag}_{backend}.snap"))
+}
+
+/// Run `spec` to completion with a checkpoint at `at_s`, returning the
+/// snapshot bytes (the interrupted run's own metrics are discarded — the
+/// oracle is the resumed continuation).
+fn checkpoint_run(spec: &ScenarioSpec, at_s: f64, tag: &str) -> Vec<u8> {
+    let path = snap_path(tag);
+    let mut ck = spec.clone();
+    ck.run.checkpoint_at_s = Some(at_s);
+    ck.run.checkpoint_out = Some(path.to_string_lossy().into_owned());
+    let _ = run_scenario(&ck, None, ChurnSchedule::empty()).unwrap();
+    let bytes = std::fs::read(&path).unwrap_or_else(|e| {
+        panic!("checkpoint at t={at_s}s was never written ({tag}): {e}")
+    });
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+#[test]
+fn resume_matches_uninterrupted_for_every_protocol() {
+    for name in ProtocolRegistry::builtins().names() {
+        let spec = churned_spec(name);
+        let (m0, t0) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        assert!(m0.events > 0 && t0.total() > 0, "{name} did nothing");
+        let want = fingerprint(&m0, &t0);
+        // Checkpoint instants as fixed fractions of the session's actual
+        // span: early (mid-bootstrap traffic), middle (first churn step
+        // has landed), late (most rounds done). Each must land before the
+        // run's end for the trigger to fire.
+        for (i, frac) in [0.2, 0.45, 0.8].into_iter().enumerate() {
+            let at_s = m0.duration_s * frac;
+            let bytes = checkpoint_run(&spec, at_s, &format!("{name}_{i}"));
+            let (_, session) = resume_session(&bytes, None, None, None).unwrap();
+            let (m1, t1) = session.run();
+            assert_eq!(
+                fingerprint(&m1, &t1),
+                want,
+                "{name}: resume from t={at_s:.1}s diverged from the uninterrupted run"
+            );
+        }
+    }
+}
+
+#[test]
+fn snapshot_write_read_write_is_byte_identical() {
+    for name in ProtocolRegistry::builtins().names() {
+        let spec = churned_spec(name);
+        let (m0, _) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        let bytes = checkpoint_run(&spec, m0.duration_s * 0.5, &format!("{name}_rt"));
+        let (_, session) = resume_session(&bytes, None, None, None).unwrap();
+        let rewritten = session.snapshot_bytes().unwrap();
+        assert_eq!(
+            rewritten, bytes,
+            "{name}: restored session re-serialized differently ({} vs {} bytes)",
+            rewritten.len(),
+            bytes.len()
+        );
+    }
+}
+
+#[test]
+fn corrupted_snapshots_fail_loudly() {
+    let spec = churned_spec("gossip");
+    let (m0, _) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+    let bytes = checkpoint_run(&spec, m0.duration_s * 0.5, "gossip_corrupt");
+
+    // Truncation at any coarse cut must error, never mis-restore.
+    for cut in [7, bytes.len() / 3, bytes.len() - 1] {
+        let err = resume_session(&bytes[..cut], None, None, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("truncated") || msg.contains("section"),
+            "cut at {cut}: unhelpful error {msg:?}"
+        );
+    }
+    // Wrong magic.
+    let mut bad = bytes.clone();
+    bad[0] ^= 0xff;
+    let msg = format!("{:#}", resume_session(&bad, None, None, None).unwrap_err());
+    assert!(msg.contains("magic"), "{msg:?}");
+    // Unsupported future format version.
+    let mut bad = bytes.clone();
+    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let msg = format!("{:#}", resume_session(&bad, None, None, None).unwrap_err());
+    assert!(msg.contains("version"), "{msg:?}");
+}
+
+#[test]
+fn fork_branch_shares_history_and_diverges_after_the_checkpoint() {
+    let spec = churned_spec("gossip");
+    let (m0, t0) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+    let at_s = m0.duration_s * 0.4;
+    let bytes = checkpoint_run(&spec, at_s, "gossip_fork");
+
+    let (_, session_a) = resume_session(&bytes, None, None, None).unwrap();
+    let (ma, ta) = session_a.run();
+    let (_, session_b) = resume_session(&bytes, None, Some("branch-b".into()), None).unwrap();
+    let (mb, _) = session_b.run();
+
+    // Branch A replays the original future exactly.
+    assert_eq!(fingerprint(&ma, &ta), fingerprint(&m0, &t0));
+    // Branch B shares every eval point before the checkpoint bit-for-bit
+    // (restored state, not re-computed)...
+    let prefix = |m: &SessionMetrics| -> Vec<(u64, u64)> {
+        m.curve
+            .iter()
+            .filter(|p| p.time_s < at_s)
+            .map(|p| (p.round, p.metric.to_bits()))
+            .collect()
+    };
+    assert_eq!(prefix(&ma), prefix(&mb), "history diverged before the branch point");
+    assert!(!prefix(&ma).is_empty(), "checkpoint landed before the first eval");
+    // ...and diverges afterwards: the fork relabels the only runtime RNG
+    // stream, so peer draws — and through them the mixing trajectory —
+    // must differ somewhere after the branch.
+    let curve_bits = |m: &SessionMetrics| -> Vec<(u64, u64)> {
+        m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect()
+    };
+    assert_ne!(curve_bits(&ma), curve_bits(&mb), "fork label did not branch the future");
+}
+
+#[test]
+fn availability_overlay_rewrites_the_future_churn() {
+    let spec = churned_spec("modest");
+    let (m0, t0) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+    let at_s = m0.duration_s * 0.4;
+    let bytes = checkpoint_run(&spec, at_s, "modest_whatif");
+
+    // What-if: from the checkpoint on, nobody churns (availability removed).
+    let overlay = r#"{"population": {"availability": null}}"#;
+    let (spec2, session) = resume_session(&bytes, Some(overlay), None, None).unwrap();
+    assert!(spec2.population.availability.is_none(), "overlay did not apply");
+    let (mw, tw) = session.run();
+    assert!(mw.final_round >= m0.final_round.min(1), "what-if branch made no progress");
+    // Pre-branch history is shared verbatim.
+    let prefix = |m: &SessionMetrics| -> Vec<(u64, u64)> {
+        m.curve
+            .iter()
+            .filter(|p| p.time_s < at_s)
+            .map(|p| (p.round, p.metric.to_bits()))
+            .collect()
+    };
+    assert_eq!(prefix(&m0), prefix(&mw), "history diverged before the branch point");
+    // A churn-free future is a different world: the full fingerprints must
+    // not collide with the churned original.
+    assert_ne!(
+        fingerprint(&mw, &tw),
+        fingerprint(&m0, &t0),
+        "removing all future churn changed nothing — overlay ineffective?"
+    );
+}
