@@ -17,6 +17,10 @@
 //!   gossip session at n ∈ {10k, 100k, 1M}, counted by a wrapping global
 //!   allocator (bench binary only) and recorded as `mem/bytes-per-node/*`
 //!   value rows — guarded by the CI bench-diff gate like the timings,
+//! * **loss fault injection** — the per-transfer drop decision under the
+//!   Gilbert–Elliott burst model at n ∈ {10k, 100k} (`loss/decide/*`),
+//!   plus a full 64-node lossy gossip sweep exercising the reliable
+//!   outbox end-to-end (`reliability/retransmit-sweep/*`) — both guarded,
 //! * **checkpoint/restore** at n=100k — full-session snapshot
 //!   serialization (`snapshot/write`), the complete resume path
 //!   (`snapshot/read`), and the on-disk size (`snapshot/bytes`), all
@@ -37,13 +41,13 @@ use modest_dl::modest::node::{Msg, ViewRef};
 use modest_dl::modest::registry::MembershipEvent;
 use modest_dl::modest::sampler::candidate_order;
 use modest_dl::modest::View;
-use modest_dl::net::{LatencyMatrix, MsgKind, NetworkFabric, SizeModel};
+use modest_dl::net::{LatencyMatrix, LossLayer, LossModel, MsgKind, NetworkFabric, SizeModel};
 use modest_dl::scenario::{resume_session, run_scenario, ScenarioSpec};
 #[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
 use modest_dl::sim::{
-    CalendarEventQueue, ChurnSchedule, HeapEventQueue, Population, SamplingVersion, SimRng,
-    SimTime,
+    CalendarEventQueue, ChurnSchedule, HeapEventQueue, Population, ReliabilityConfig,
+    SamplingVersion, SimRng, SimTime,
 };
 use modest_dl::util::bench::{black_box, Bencher};
 use modest_dl::NodeId;
@@ -251,6 +255,8 @@ fn main() {
         b.bench("fanout/arc-msgs/8-of-1.75M", || {
             let msgs: Vec<Msg> = (0..8)
                 .map(|_| Msg::Train {
+                    seq: 0,
+                    from: 0,
                     round: 7,
                     model: black_box(&model).clone(),
                     view: black_box(&view).clone(),
@@ -270,6 +276,8 @@ fn main() {
         b.bench("fanout/arc-msgs/10k-of-1.75M", || {
             let msgs: Vec<Msg> = (0..10_000)
                 .map(|_| Msg::Train {
+                    seq: 0,
+                    from: 0,
                     round: 7,
                     model: black_box(&model).clone(),
                     view: black_box(&view).clone(),
@@ -296,6 +304,60 @@ fn main() {
                 last = fabric.transfer(now, 0, to, &[(MsgKind::ModelPayload, 1_000)]);
             }
             black_box(last);
+        });
+    }
+
+    // ---- loss fault injection: the per-transfer drop decision on the
+    // fabric hot path. Burst (Gilbert–Elliott) is the worst case — every
+    // decision advances the receiver's two-state channel — so these rows
+    // bound what `network.loss` adds to every try_transfer. Guarded
+    // (`loss/` prefix in the CI bench-diff gate): the decision must stay
+    // O(1) per transfer with no allocation.
+    for n in [10_000usize, 100_000] {
+        let mut layer = LossLayer::new(
+            LossModel::Burst { p_good: 0.01, p_bad: 0.5, good_mean_s: 10.0, bad_mean_s: 1.0 },
+            SimRng::new(0x1055),
+        );
+        let mut t = 0u64;
+        b.bench(&format!("loss/decide/n={n}"), || {
+            t += 250_000;
+            let now = SimTime::from_micros(t);
+            let mut drops = 0u32;
+            for to in 1..n {
+                drops += layer.decide(now, 0, to, 0, 0) as u32;
+            }
+            black_box(drops);
+        });
+    }
+
+    // ---- reliability: a full lossy session sweep — 64-node gossip under
+    // 30% uniform loss, exercising track/ack bookkeeping, timer routing,
+    // and the retransmit path end-to-end. Guarded (`reliability/` prefix)
+    // so outbox overhead regressions surface in CI.
+    {
+        let mk = || {
+            let n = 64usize;
+            let cfg = GossipConfig {
+                max_rounds: 6,
+                reliability: Some(ReliabilityConfig {
+                    timeout: SimTime::from_secs_f64(2.0),
+                    backoff: 2.0,
+                    max_timeout: SimTime::from_secs_f64(8.0),
+                    retries: 3,
+                }),
+                ..GossipConfig::default()
+            };
+            let mut srng = SimRng::new(cfg.seed);
+            let task = MockTask::new(n, 8, 0.5, cfg.seed);
+            let latency = LatencyMatrix::synthetic(&Default::default(), n, &mut srng);
+            let mut fabric = NetworkFabric::uniform(latency, 50e6, n);
+            fabric.set_loss(LossModel::Uniform { p: 0.3 }, srng.fork("loss"));
+            let compute = ComputeModel::uniform(n, 0.05);
+            GossipSession::new(cfg, n, Box::new(task), compute, fabric, ChurnSchedule::empty())
+        };
+        b.bench_once("reliability/retransmit-sweep/n=64,p=0.3", || {
+            let (_, ledger) = mk().run();
+            black_box(ledger.retransmitted_bytes());
         });
     }
 

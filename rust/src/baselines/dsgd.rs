@@ -20,8 +20,8 @@ use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, LivenessMirror,
-    NodeTable, Protocol, ResumeOptions, SamplingVersion, SimHarness, SimTime, SnapshotReader,
-    SnapshotWriter,
+    NodeTable, Protocol, ReliabilityConfig, ReliableOutbox, ResumeOptions, SamplingVersion,
+    SimHarness, SimTime, SnapshotReader, SnapshotWriter, TimerVerdict,
 };
 use crate::{NodeId, Round};
 
@@ -52,6 +52,10 @@ pub struct DsgdConfig {
     pub checkpoint_at: Option<SimTime>,
     /// Snapshot file path for `checkpoint_at`.
     pub checkpoint_out: Option<String>,
+    /// Ack/timeout/retransmit contract; `Some` exactly when the session's
+    /// network is lossy. `None` keeps every send a plain fire-and-forget
+    /// [`Ctx::send`] with zero extra events or state.
+    pub reliability: Option<ReliabilityConfig>,
 }
 
 impl Default for DsgdConfig {
@@ -68,6 +72,7 @@ impl Default for DsgdConfig {
             spec_json: None,
             checkpoint_at: None,
             checkpoint_out: None,
+            reliability: None,
         }
     }
 }
@@ -89,10 +94,19 @@ impl DsgdConfig {
     }
 }
 
-/// The single D-SGD wire message: a neighbour's trained model for a round.
-pub struct DsgdMsg {
-    pub round: Round,
-    pub model: Arc<Model>,
+/// Timer ids with this bit set are barrier backstops: the low bits carry
+/// the round whose pairwise barrier the node was stuck on. Disjoint from
+/// [`crate::sim::RELIABLE_TIMER_BIT`] (bit 63), which the shared outbox
+/// owns.
+const DSGD_BACKSTOP_BIT: u64 = 1 << 62;
+
+/// D-SGD wire messages: a neighbour's trained model for a round, and —
+/// under a lossy network — the ack closing the reliable-delivery loop.
+/// `seq == 0` marks an untracked (lossless-session) model send.
+#[derive(Clone)]
+pub enum DsgdMsg {
+    Model { seq: u64, from: NodeId, round: Round, model: Arc<Model> },
+    Ack { seq: u64 },
 }
 
 /// The D-SGD state machine (drives through [`SimHarness`]).
@@ -133,6 +147,13 @@ pub struct DsgdProtocol {
     /// Recover event.
     top_round: Round,
     sizes: SizeModel,
+    /// Retransmit ledger for model sends; `Some` exactly in lossy sessions.
+    outbox: Option<ReliableOutbox<DsgdMsg>>,
+    /// Per-node round whose pairwise barrier was waived by a fired
+    /// backstop (0 = none): the in-neighbour's model never landed within
+    /// the full retransmit window, so the node aggregates without it
+    /// instead of deadlocking. Only ever set in lossy sessions.
+    waived: Vec<Round>,
 }
 
 impl DsgdProtocol {
@@ -156,7 +177,7 @@ impl DsgdProtocol {
     }
 
     fn send_model(
-        &self,
+        &mut self,
         ctx: &mut Ctx<'_, DsgdMsg>,
         from: NodeId,
         to: NodeId,
@@ -165,12 +186,18 @@ impl DsgdProtocol {
     ) {
         let model_b = ctx.task.model_bytes();
         let total = self.sizes.model_transfer_bytes(model_b, 0);
-        ctx.send(
-            from,
-            to,
-            &[(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)],
-            DsgdMsg { round, model },
-        );
+        let parts = [(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)];
+        match &mut self.outbox {
+            Some(ob) => {
+                ob.track(ctx, from, to, &parts, |seq| DsgdMsg::Model {
+                    seq,
+                    from,
+                    round,
+                    model,
+                });
+            }
+            None => ctx.send(from, to, &parts, DsgdMsg::Model { seq: 0, from, round, model }),
+        }
     }
 
     /// If node finished training and has its neighbour's model (or that
@@ -186,7 +213,8 @@ impl DsgdProtocol {
         // in-neighbour may have sent while this node was dead — dropped).
         let never_arrives = self.live.is_dead(in_nb)
             || (in_nb < self.nodes.len() && self.nodes.epoch(in_nb) > round)
-            || self.nodes.epoch(i) == round;
+            || self.nodes.epoch(i) == round
+            || self.waived[i] == round;
         let ready =
             self.trained[i].is_some() && (self.inboxes[i].contains_key(&round) || never_arrives);
         if !ready {
@@ -230,8 +258,28 @@ impl Protocol for DsgdProtocol {
     }
 
     fn on_deliver(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, to: NodeId, msg: DsgdMsg) {
-        self.inboxes[to as usize].insert(msg.round, msg.model);
-        self.try_advance(ctx, to);
+        match msg {
+            DsgdMsg::Model { seq, from, round, model } => {
+                // Duplicate deliveries (a retransmit raced the ack)
+                // re-insert the same round model — idempotent — and re-ack,
+                // because the first ack may itself have been dropped.
+                self.inboxes[to as usize].insert(round, model);
+                if seq != 0 {
+                    ctx.send(
+                        to,
+                        from,
+                        &[(MsgKind::Control, self.sizes.ping_bytes())],
+                        DsgdMsg::Ack { seq },
+                    );
+                }
+                self.try_advance(ctx, to);
+            }
+            DsgdMsg::Ack { seq } => {
+                if let Some(ob) = &mut self.outbox {
+                    ob.ack(seq);
+                }
+            }
+        }
     }
 
     fn on_train_done(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId, seq: u64) {
@@ -252,7 +300,40 @@ impl Protocol for DsgdProtocol {
         if !self.live.is_dead(out as usize) {
             self.send_model(ctx, node, out, round, arc);
         }
+        // Lossy sessions arm a barrier backstop: if the in-neighbour's
+        // round model still hasn't landed once its full retransmit window
+        // (plus one max deadline of margin for training skew) has passed,
+        // the barrier is waived rather than deadlocked. Armed
+        // unconditionally — a fired backstop for an already-advanced round
+        // is recognised as stale and ignored.
+        if let Some(ob) = &self.outbox {
+            let delay = ob.cfg().expiry_window() + ob.cfg().max_timeout;
+            ctx.schedule_timer(delay, node, DSGD_BACKSTOP_BIT | round);
+        }
         self.try_advance(ctx, node);
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, node: NodeId, id: u64) {
+        if let Some(ob) = &mut self.outbox {
+            match ob.on_timer(ctx, id) {
+                // Expiry needs no sender-side action: the degradation is
+                // the receiver's backstop, which waives the barrier.
+                TimerVerdict::Handled | TimerVerdict::Expired(_) => return,
+                TimerVerdict::NotOurs => {}
+            }
+        }
+        if id & DSGD_BACKSTOP_BIT != 0 {
+            let round = id & !DSGD_BACKSTOP_BIT;
+            let i = node as usize;
+            if self.live.is_dead(i) || self.nodes.round(i) != round {
+                return; // stale: the barrier already cleared
+            }
+            if self.inboxes[i].contains_key(&round) {
+                return; // the model landed; the normal path owns the advance
+            }
+            self.waived[i] = round;
+            self.try_advance(ctx, node);
+        }
     }
 
     fn on_churn(&mut self, ctx: &mut Ctx<'_, DsgdMsg>, ev: ChurnEvent) {
@@ -395,6 +476,14 @@ impl Protocol for DsgdProtocol {
         }
         self.live.write_into(w);
         w.write_u64(self.top_round);
+        w.write_usize(self.waived.len());
+        for &r in &self.waived {
+            w.write_u64(r);
+        }
+        w.write_bool(self.outbox.is_some());
+        if let Some(ob) = &self.outbox {
+            ob.write_into(w, |w, m| self.write_msg(w, m))?;
+        }
         Ok(())
     }
 
@@ -426,17 +515,58 @@ impl Protocol for DsgdProtocol {
         self.inboxes = inboxes;
         self.live = LivenessMirror::read_from(r)?;
         self.top_round = r.read_u64()?;
+        let n = r.read_usize()?;
+        let mut waived = Vec::with_capacity(n);
+        for _ in 0..n {
+            waived.push(r.read_u64()?);
+        }
+        self.waived = waived;
+        // Tolerate a loss-config overlay flip across the checkpoint: a
+        // snapshot taken lossy restores into a lossless session by reading
+        // and discarding the ledger; the reverse keeps the fresh outbox.
+        if r.read_bool()? {
+            let cfg = self.cfg.reliability.unwrap_or(ReliabilityConfig {
+                timeout: SimTime::from_secs_f64(1.0),
+                backoff: 1.0,
+                max_timeout: SimTime::from_secs_f64(1.0),
+                retries: 1,
+            });
+            let ob = ReliableOutbox::read_from(r, cfg, |r| self.read_msg(r))?;
+            if self.cfg.reliability.is_some() {
+                self.outbox = Some(ob);
+            }
+        }
         Ok(())
     }
 
     fn write_msg(&self, w: &mut SnapshotWriter, msg: &DsgdMsg) -> Result<()> {
-        w.write_u64(msg.round);
-        w.write_model(&msg.model);
+        match msg {
+            DsgdMsg::Model { seq, from, round, model } => {
+                w.write_u8(0);
+                w.write_u64(*seq);
+                w.write_u32(*from);
+                w.write_u64(*round);
+                w.write_model(model);
+            }
+            DsgdMsg::Ack { seq } => {
+                w.write_u8(1);
+                w.write_u64(*seq);
+            }
+        }
         Ok(())
     }
 
     fn read_msg(&self, r: &mut SnapshotReader) -> Result<DsgdMsg> {
-        Ok(DsgdMsg { round: r.read_u64()?, model: r.read_model()? })
+        match r.read_u8()? {
+            0 => Ok(DsgdMsg::Model {
+                seq: r.read_u64()?,
+                from: r.read_u32()?,
+                round: r.read_u64()?,
+                model: r.read_model()?,
+            }),
+            1 => Ok(DsgdMsg::Ack { seq: r.read_u64()? }),
+            t => anyhow::bail!("unknown d-sgd message tag {t}"),
+        }
     }
 }
 
@@ -463,6 +593,7 @@ impl DsgdSession {
         let trained = (0..n).map(|_| None).collect();
         let inboxes = (0..n).map(|_| HashMap::new()).collect();
         let hcfg = cfg.harness_config();
+        let outbox = cfg.reliability.map(ReliableOutbox::new);
         let protocol = DsgdProtocol {
             cfg,
             graph: OnePeerExpGraph::new(n as u32),
@@ -473,6 +604,8 @@ impl DsgdSession {
             live: LivenessMirror::all_live(n),
             top_round: 1,
             sizes: SizeModel::default(),
+            outbox,
+            waived: vec![0; n],
         };
         DsgdSession {
             harness: SimHarness::new(hcfg, protocol, n, n, task, compute, fabric, churn),
@@ -514,6 +647,7 @@ pub fn dsgd_config(spec: &ScenarioSpec) -> DsgdConfig {
         spec_json: Some(spec.snapshot_json()),
         checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
         checkpoint_out: spec.run.checkpoint_out.clone(),
+        reliability: spec.network.reliability(),
     }
 }
 
@@ -758,6 +892,57 @@ mod tests {
             .err()
             .expect("fresh join must be rejected");
         assert!(err.to_string().contains("fresh joiners"), "{err:#}");
+    }
+
+    #[test]
+    fn lossy_links_time_out_instead_of_deadlocking() {
+        use crate::net::LossModel;
+        // 20% uniform loss on every link. Without the reliable outbox plus
+        // the barrier backstop a dropped model deadlocks the pairwise
+        // barrier within a few rounds; with them the session keeps
+        // advancing, retransmitted bytes show up in the wire/goodput split,
+        // and the attempt-level ledger still conserves.
+        let mk = || {
+            let cfg = DsgdConfig {
+                max_time: SimTime::from_secs_f64(900.0),
+                max_rounds: 20,
+                eval_interval: SimTime::from_secs_f64(30.0),
+                reliability: Some(ReliabilityConfig {
+                    timeout: SimTime::from_secs_f64(3.0),
+                    backoff: 2.0,
+                    max_timeout: SimTime::from_secs_f64(10.0),
+                    retries: 4,
+                }),
+                ..Default::default()
+            };
+            let n = 8;
+            let mut rng = SimRng::new(cfg.seed);
+            let task = MockTask::new(n, 16, 0.5, cfg.seed);
+            let latency =
+                LatencyMatrix::synthetic(&LatencyParams::default(), n, &mut rng.fork("lat"));
+            let mut fabric = NetworkFabric::new(
+                latency,
+                &BandwidthConfig::uniform_mbps(50.0),
+                n,
+                &mut rng.fork("bw"),
+            );
+            fabric.set_loss(LossModel::Uniform { p: 0.2 }, rng.fork("loss"));
+            let compute = ComputeModel::uniform(n, 0.05);
+            DsgdSession::new(cfg, n, Box::new(task), compute, fabric, ChurnSchedule::empty())
+                .run()
+        };
+        let (m, traffic) = mk();
+        assert!(m.final_round >= 10, "lossy barrier stalled at round {}", m.final_round);
+        assert!(traffic.dropped_bytes() > 0, "20% loss dropped nothing");
+        assert!(traffic.retransmitted_bytes() > 0, "no retransmissions under loss");
+        assert!(traffic.goodput() < traffic.total());
+        assert!(traffic.is_conserved());
+        // Same seed, same fault injection: bit-identical replay.
+        let (b, tb) = mk();
+        assert_eq!(m.events, b.events);
+        assert_eq!(m.final_round, b.final_round);
+        assert_eq!(traffic.total(), tb.total());
+        assert_eq!(traffic.dropped_bytes(), tb.dropped_bytes());
     }
 
     #[test]

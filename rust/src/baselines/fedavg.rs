@@ -20,6 +20,13 @@ use crate::sim::{ChurnSchedule, SimTime};
 /// through the harness `Population` (see `modest::session`), so a churned
 /// population — e.g. one driven by a `population.availability` section —
 /// samples only live clients without materializing a candidate list.
+///
+/// Under a lossy network (`network.loss`), FedAvg inherits the MoDeST
+/// reliability stack via `..base.clone()`: model uploads/downloads ride
+/// the reliable outbox, and the server — a fixed aggregator — arms the
+/// aggregator deadline, so a participant whose upload expired is simply
+/// replaced by the next round's fresh uniform draw instead of stalling
+/// the round.
 pub fn fedavg_config(base: &ModestConfig, latency: &LatencyMatrix, n: usize) -> ModestConfig {
     let server = latency.best_connected(n);
     ModestConfig {

@@ -25,8 +25,8 @@ use crate::runtime::XlaRuntime;
 use crate::scenario::{ProtocolMeta, ScenarioSpec, Session, SessionBuilder};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, LivenessMirror,
-    NodeTable, Protocol, ResumeOptions, SamplingVersion, SimHarness, SimRng, SimTime,
-    SnapshotReader, SnapshotWriter,
+    NodeTable, Protocol, ReliabilityConfig, ReliableOutbox, ResumeOptions, SamplingVersion,
+    SimHarness, SimRng, SimTime, SnapshotReader, SnapshotWriter, TimerVerdict,
 };
 use crate::{NodeId, Round};
 
@@ -51,6 +51,9 @@ pub struct GossipConfig {
     pub checkpoint_at: Option<SimTime>,
     /// Snapshot file path for `checkpoint_at`.
     pub checkpoint_out: Option<String>,
+    /// Ack/retransmit contract; `Some` exactly when the session's fabric
+    /// injects loss (lossless sessions run the pre-loss code path).
+    pub reliability: Option<ReliabilityConfig>,
 }
 
 impl Default for GossipConfig {
@@ -67,13 +70,19 @@ impl Default for GossipConfig {
             spec_json: None,
             checkpoint_at: None,
             checkpoint_out: None,
+            reliability: None,
         }
     }
 }
 
-/// The single wire message: a peer's current model.
-pub struct GossipMsg {
-    pub model: Arc<Model>,
+/// Wire messages. `seq` 0 means untracked (lossless session): the receiver
+/// merges without acking, exactly the pre-loss behaviour.
+#[derive(Clone)]
+pub enum GossipMsg {
+    /// A peer's current model.
+    Push { seq: u64, from: NodeId, model: Arc<Model> },
+    /// Reliability ack for a tracked push (unreliable itself).
+    Ack { seq: u64 },
 }
 
 /// The gossip-DL state machine (drives through [`SimHarness`]).
@@ -96,6 +105,9 @@ pub struct GossipProtocol {
     /// outage with revivals still pending must not finish the session.
     pending_revivals: usize,
     sizes: SizeModel,
+    /// Retransmit ledger for lossy sessions; `None` = lossless, zero
+    /// bookkeeping, bit-identical pre-loss event stream.
+    outbox: Option<ReliableOutbox<GossipMsg>>,
 }
 
 impl GossipProtocol {
@@ -117,7 +129,7 @@ impl GossipProtocol {
         ctx.schedule_train_done(dur, node, seq);
     }
 
-    fn push_model(&self, ctx: &mut Ctx<'_, GossipMsg>, from: NodeId, model: Arc<Model>) {
+    fn push_model(&mut self, ctx: &mut Ctx<'_, GossipMsg>, from: NodeId, model: Arc<Model>) {
         let model_b = ctx.task.model_bytes();
         let total = self.sizes.model_transfer_bytes(model_b, 0);
         let parts = [(MsgKind::ModelPayload, model_b), (MsgKind::Control, total - model_b)];
@@ -129,7 +141,21 @@ impl GossipProtocol {
         // the session fingerprint — are unchanged from the pre-helper
         // code.
         for to in ctx.sample_peers(from, self.cfg.fanout) {
-            ctx.send(from, to, &parts, GossipMsg { model: model.clone() });
+            match &mut self.outbox {
+                Some(ob) => {
+                    let m = model.clone();
+                    ob.track(ctx, from, to, &parts, |seq| GossipMsg::Push {
+                        seq,
+                        from,
+                        model: m,
+                    });
+                }
+                None => ctx.send(from, to, &parts, GossipMsg::Push {
+                    seq: 0,
+                    from,
+                    model: model.clone(),
+                }),
+            }
         }
     }
 
@@ -175,14 +201,42 @@ impl Protocol for GossipProtocol {
     }
 
     fn on_deliver(&mut self, ctx: &mut Ctx<'_, GossipMsg>, to: NodeId, msg: GossipMsg) {
-        // Epidemic merge: average the incoming model into the local one.
-        let merged = {
-            let local = self.models[to as usize].as_ref();
-            ctx.task
-                .aggregate(&[local, msg.model.as_ref()])
-                .expect("aggregate")
-        };
-        self.models[to as usize] = Arc::new(merged);
+        match msg {
+            GossipMsg::Push { seq, from, model } => {
+                // Epidemic merge: average the incoming model into the
+                // local one. A duplicate (retransmit whose original
+                // arrived) re-merges — averaging is idempotent enough for
+                // an epidemic, and the ack must be repeated anyway in case
+                // the first ack was the casualty.
+                let merged = {
+                    let local = self.models[to as usize].as_ref();
+                    ctx.task
+                        .aggregate(&[local, model.as_ref()])
+                        .expect("aggregate")
+                };
+                self.models[to as usize] = Arc::new(merged);
+                if seq != 0 {
+                    let parts = [(MsgKind::Control, self.sizes.ping_bytes())];
+                    ctx.send(to, from, &parts, GossipMsg::Ack { seq });
+                }
+            }
+            GossipMsg::Ack { seq } => {
+                if let Some(ob) = &mut self.outbox {
+                    ob.ack(seq); // stale acks fall out silently
+                }
+            }
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx<'_, GossipMsg>, _node: NodeId, id: u64) {
+        if let Some(ob) = &mut self.outbox {
+            match ob.on_timer(ctx, id) {
+                // Epidemic redundancy is the degradation: a push that
+                // exhausted its retries is simply lost fan-out.
+                TimerVerdict::Expired(_) | TimerVerdict::Handled => {}
+                TimerVerdict::NotOurs => {}
+            }
+        }
     }
 
     fn on_train_done(&mut self, ctx: &mut Ctx<'_, GossipMsg>, node: NodeId, seq: u64) {
@@ -303,6 +357,10 @@ impl Protocol for GossipProtocol {
         }
         self.live.write_into(w);
         w.write_usize(self.pending_revivals);
+        w.write_bool(self.outbox.is_some());
+        if let Some(ob) = &self.outbox {
+            ob.write_into(w, |w, m| self.write_msg(w, m))?;
+        }
         Ok(())
     }
 
@@ -316,16 +374,50 @@ impl Protocol for GossipProtocol {
         self.models = models;
         self.live = LivenessMirror::read_from(r)?;
         self.pending_revivals = r.read_usize()?;
+        if r.read_bool()? {
+            // Snapshot carries in-flight retransmit state. If a resume
+            // overlay turned loss off, the entries are consumed and
+            // dropped (the branch is deliberately diverging).
+            let cfg = self.cfg.reliability.unwrap_or(ReliabilityConfig {
+                timeout: SimTime::from_secs_f64(1.0),
+                backoff: 1.0,
+                max_timeout: SimTime::from_secs_f64(1.0),
+                retries: 1,
+            });
+            let ob = ReliableOutbox::read_from(r, cfg, |r| self.read_msg(r))?;
+            if self.cfg.reliability.is_some() {
+                self.outbox = Some(ob);
+            }
+        }
         Ok(())
     }
 
     fn write_msg(&self, w: &mut SnapshotWriter, msg: &GossipMsg) -> Result<()> {
-        w.write_model(&msg.model);
+        match msg {
+            GossipMsg::Push { seq, from, model } => {
+                w.write_u8(0);
+                w.write_u64(*seq);
+                w.write_u32(*from);
+                w.write_model(model);
+            }
+            GossipMsg::Ack { seq } => {
+                w.write_u8(1);
+                w.write_u64(*seq);
+            }
+        }
         Ok(())
     }
 
     fn read_msg(&self, r: &mut SnapshotReader) -> Result<GossipMsg> {
-        Ok(GossipMsg { model: r.read_model()? })
+        Ok(match r.read_u8()? {
+            0 => GossipMsg::Push {
+                seq: r.read_u64()?,
+                from: r.read_u32()?,
+                model: r.read_model()?,
+            },
+            1 => GossipMsg::Ack { seq: r.read_u64()? },
+            other => anyhow::bail!("unknown gossip message tag {other}"),
+        })
     }
 }
 
@@ -369,6 +461,7 @@ impl GossipSession {
             checkpoint_at: cfg.checkpoint_at,
             checkpoint_out: cfg.checkpoint_out.clone(),
         };
+        let outbox = cfg.reliability.map(ReliableOutbox::new);
         let protocol = GossipProtocol {
             cfg,
             nodes,
@@ -376,6 +469,7 @@ impl GossipSession {
             live,
             pending_revivals,
             sizes: SizeModel::default(),
+            outbox,
         };
         GossipSession {
             harness: SimHarness::new(
@@ -472,6 +566,7 @@ impl SessionBuilder for GossipBuilder {
             spec_json: Some(spec.snapshot_json()),
             checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
             checkpoint_out: spec.run.checkpoint_out.clone(),
+            reliability: spec.network.reliability(),
         };
         Ok(Box::new(GossipSession::new(cfg, n, task, compute, fabric, churn)))
     }

@@ -55,12 +55,19 @@ impl JoinTrace {
 /// Network usage summary in the shape of the paper's Tables 1 and 4.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct TrafficSummary {
+    /// True wire cost: every delivery attempt, including drops/retransmits.
     pub total: u64,
     pub min_node: u64,
     pub max_node: u64,
     pub overhead: u64,
     pub overhead_fraction: f64,
     pub messages: u64,
+    /// Useful first-delivery bytes (the Fig. 3 communication volume).
+    pub goodput: u64,
+    /// Bytes lost in flight to fault injection.
+    pub dropped: u64,
+    /// Bytes of delivered retransmissions.
+    pub retransmitted: u64,
 }
 
 impl TrafficSummary {
@@ -73,6 +80,9 @@ impl TrafficSummary {
             overhead: ledger.overhead(),
             overhead_fraction: ledger.overhead_fraction(),
             messages: ledger.messages(),
+            goodput: ledger.goodput(),
+            dropped: ledger.dropped_bytes(),
+            retransmitted: ledger.retransmitted_bytes(),
         }
     }
 }
@@ -219,6 +229,9 @@ impl SessionMetrics {
         w.write_u64(self.traffic.overhead);
         w.write_f64(self.traffic.overhead_fraction);
         w.write_u64(self.traffic.messages);
+        w.write_u64(self.traffic.goodput);
+        w.write_u64(self.traffic.dropped);
+        w.write_u64(self.traffic.retransmitted);
         w.write_u64(self.final_round);
         w.write_f64(self.duration_s);
         w.write_u64(self.events);
@@ -268,6 +281,9 @@ impl SessionMetrics {
             overhead: r.read_u64()?,
             overhead_fraction: r.read_f64()?,
             messages: r.read_u64()?,
+            goodput: r.read_u64()?,
+            dropped: r.read_u64()?,
+            retransmitted: r.read_u64()?,
         };
         m.final_round = r.read_u64()?;
         m.duration_s = r.read_f64()?;

@@ -41,10 +41,15 @@ pub enum Msg {
     Joined { node: NodeId, counter: u64 },
     /// Graceful-leave advertisement (Alg. 2).
     Left { node: NodeId, counter: u64 },
-    /// Participant -> aggregators of the next sample (Alg. 4).
-    Aggregate { round: Round, model: ModelRef, view: ViewRef },
+    /// Participant -> aggregators of the next sample (Alg. 4). `seq != 0`
+    /// marks a reliably-tracked copy the receiver must ack to `from`.
+    Aggregate { seq: u64, from: NodeId, round: Round, model: ModelRef, view: ViewRef },
     /// Aggregator -> participants of its sample (Alg. 4).
-    Train { round: Round, model: ModelRef, view: ViewRef },
+    Train { seq: u64, from: NodeId, round: Round, model: ModelRef, view: ViewRef },
+    /// Reliable-delivery ack for a tracked `Train`/`Aggregate` (lossy
+    /// sessions only). Sent unreliably: a dropped ack just provokes a
+    /// retransmit, which the receiver re-acks.
+    Ack { seq: u64 },
 }
 
 /// Why a sampling operation is running (continuation on completion).
@@ -99,6 +104,10 @@ pub struct ModestNode {
     pub k_agg: Round,
     /// Accumulated models `Θ` for round `k_agg`.
     pub theta: Vec<ModelRef>,
+    /// Senders of the models in `theta`, parallel to it: a retransmitted
+    /// `aggregate` (its ack was dropped) must not count the same trainer's
+    /// model twice toward the `sf·s` threshold.
+    pub theta_from: Vec<NodeId>,
     /// Last round for which this node dispatched train messages, so a
     /// second threshold crossing in the same round cannot double-send.
     pub agg_dispatched: Round,
@@ -107,6 +116,10 @@ pub struct ModestNode {
     /// In-flight local training: (round, seq, received model).
     pub training: Option<(Round, u64, ModelRef)>,
     pub train_seq: u64,
+    /// Last round whose local training COMPLETED: a duplicate `train`
+    /// (retransmit, or a second aggregator's slow copy) arriving after the
+    /// round's update already ran must not restart it.
+    pub k_done: Round,
     /// `L[k]`: pong lists per round (Alg. 1), deduplicated, arrival order.
     pub pongs: HashMap<Round, Vec<NodeId>>,
     /// In-flight sampling operations.
@@ -120,10 +133,12 @@ impl ModestNode {
             view: View::default(),
             k_agg: 0,
             theta: Vec::new(),
+            theta_from: Vec::new(),
             agg_dispatched: 0,
             k_train: 0,
             training: None,
             train_seq: 0,
+            k_done: 0,
             pongs: HashMap::new(),
             ops: Vec::new(),
         }
@@ -160,10 +175,13 @@ impl ModestNode {
         self.view.activity.update(node, k_hat);
     }
 
-    /// Alg. 4 `upon aggregate(k, θ_j, V_j)`. `s` and `sf` come from config.
+    /// Alg. 4 `upon aggregate(k, θ_j, V_j)`. `s` and `sf` come from config;
+    /// `from` is the sending trainer, deduplicated so retransmits cannot
+    /// inflate `Θ`.
     pub fn on_aggregate(
         &mut self,
         round: Round,
+        from: NodeId,
         model: ModelRef,
         view: &View,
         s: usize,
@@ -174,9 +192,15 @@ impl ModestNode {
         if round > self.k_agg {
             self.k_agg = round;
             self.theta.clear();
+            self.theta_from.clear();
             self.theta.push(model);
+            self.theta_from.push(from);
         } else if round == self.k_agg {
+            if self.theta_from.contains(&from) {
+                return NodeAction::Nothing; // duplicate delivery of a retransmit
+            }
             self.theta.push(model);
+            self.theta_from.push(from);
         } else {
             return NodeAction::Nothing; // stale: a later round already ran
         }
@@ -196,7 +220,7 @@ impl ModestNode {
             self.k_train = round;
             self.training = None; // CANCEL(θ̄): stale attempt invalidated
         }
-        if round == self.k_train && self.training.is_none() {
+        if round == self.k_train && self.training.is_none() && round > self.k_done {
             self.train_seq += 1;
             let seq = self.train_seq;
             self.training = Some((round, seq, model));
@@ -291,35 +315,51 @@ mod tests {
         let mut n = ModestNode::new(0);
         let v = View::default();
         // s=4, sf=0.75 -> threshold 3
-        assert_eq!(n.on_aggregate(2, model(), &v, 4, 0.75), NodeAction::Nothing);
-        assert_eq!(n.on_aggregate(2, model(), &v, 4, 0.75), NodeAction::Nothing);
+        assert_eq!(n.on_aggregate(2, 1, model(), &v, 4, 0.75), NodeAction::Nothing);
+        assert_eq!(n.on_aggregate(2, 2, model(), &v, 4, 0.75), NodeAction::Nothing);
         assert_eq!(
-            n.on_aggregate(2, model(), &v, 4, 0.75),
+            n.on_aggregate(2, 3, model(), &v, 4, 0.75),
             NodeAction::BeginParticipantSample { round: 2 }
         );
         // a 4th model in the same round must NOT double-dispatch
-        assert_eq!(n.on_aggregate(2, model(), &v, 4, 0.75), NodeAction::Nothing);
+        assert_eq!(n.on_aggregate(2, 4, model(), &v, 4, 0.75), NodeAction::Nothing);
         assert_eq!(n.theta.len(), 4);
+    }
+
+    #[test]
+    fn duplicate_sender_does_not_inflate_theta() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        // s=2, sf=1.0 -> threshold 2. A retransmitted copy of trainer 1's
+        // model (its ack was dropped) must not cross the threshold alone.
+        assert_eq!(n.on_aggregate(2, 1, model(), &v, 2, 1.0), NodeAction::Nothing);
+        assert_eq!(n.on_aggregate(2, 1, model(), &v, 2, 1.0), NodeAction::Nothing);
+        assert_eq!(n.theta.len(), 1);
+        assert_eq!(
+            n.on_aggregate(2, 7, model(), &v, 2, 1.0),
+            NodeAction::BeginParticipantSample { round: 2 }
+        );
     }
 
     #[test]
     fn higher_round_resets_theta() {
         let mut n = ModestNode::new(0);
         let v = View::default();
-        n.on_aggregate(2, model(), &v, 10, 1.0);
-        n.on_aggregate(2, model(), &v, 10, 1.0);
+        n.on_aggregate(2, 1, model(), &v, 10, 1.0);
+        n.on_aggregate(2, 2, model(), &v, 10, 1.0);
         assert_eq!(n.theta.len(), 2);
-        n.on_aggregate(3, model(), &v, 10, 1.0);
+        n.on_aggregate(3, 1, model(), &v, 10, 1.0);
         assert_eq!(n.k_agg, 3);
         assert_eq!(n.theta.len(), 1);
+        assert_eq!(n.theta_from, vec![1]);
     }
 
     #[test]
     fn stale_aggregate_ignored() {
         let mut n = ModestNode::new(0);
         let v = View::default();
-        n.on_aggregate(5, model(), &v, 1, 1.0); // dispatches round 5
-        assert_eq!(n.on_aggregate(4, model(), &v, 1, 1.0), NodeAction::Nothing);
+        n.on_aggregate(5, 1, model(), &v, 1, 1.0); // dispatches round 5
+        assert_eq!(n.on_aggregate(4, 2, model(), &v, 1, 1.0), NodeAction::Nothing);
         assert_eq!(n.theta.len(), 1);
     }
 
@@ -344,6 +384,23 @@ mod tests {
         assert!(n.training_valid(1).is_none(), "seq 1 must be canceled");
         assert!(n.training_valid(2).is_some());
         assert_eq!(n.k_train, 3);
+    }
+
+    #[test]
+    fn duplicate_train_after_completion_does_not_retrain() {
+        let mut n = ModestNode::new(0);
+        let v = View::default();
+        assert!(matches!(n.on_train(3, model(), &v), NodeAction::BeginTraining { .. }));
+        // The session records completion and clears the in-flight slot.
+        n.training = None;
+        n.k_done = 3;
+        // A retransmitted copy of the same round's train must be inert.
+        assert_eq!(n.on_train(3, model(), &v), NodeAction::Nothing);
+        // The next round still trains normally.
+        assert!(matches!(
+            n.on_train(4, model(), &v),
+            NodeAction::BeginTraining { round: 4, .. }
+        ));
     }
 
     #[test]

@@ -30,7 +30,8 @@ use crate::metrics::{JoinTrace, SessionMetrics};
 use crate::net::{MsgKind, NetworkFabric, SizeModel, TrafficLedger};
 use crate::sim::{
     ChurnEvent, ChurnKind, ChurnSchedule, Ctx, EvalPoint, HarnessConfig, NodeTable, Protocol,
-    ResumeOptions, SamplingVersion, SimHarness, SimRng, SimTime, SnapshotReader, SnapshotWriter,
+    ReliabilityConfig, ReliableOutbox, ResumeOptions, SamplingVersion, SimHarness, SimRng,
+    SimTime, SnapshotReader, SnapshotWriter, TimerVerdict,
 };
 use crate::{NodeId, Round};
 
@@ -78,6 +79,11 @@ pub struct ModestConfig {
     pub checkpoint_at: Option<SimTime>,
     /// Snapshot file path for `checkpoint_at`.
     pub checkpoint_out: Option<String>,
+    /// Ack/timeout/retransmit contract for model-bearing messages; `Some`
+    /// exactly when the session's network is lossy. Pings, pongs, and
+    /// membership advertisements keep their native best-effort semantics
+    /// (Alg. 1's candidate walk already retries on its own Δt clock).
+    pub reliability: Option<ReliabilityConfig>,
 }
 
 impl Default for ModestConfig {
@@ -98,6 +104,7 @@ impl Default for ModestConfig {
             spec_json: None,
             checkpoint_at: None,
             checkpoint_out: None,
+            reliability: None,
         }
     }
 }
@@ -155,6 +162,13 @@ fn read_view(r: &mut SnapshotReader) -> Result<View> {
     Ok(v)
 }
 
+/// Timer ids with this bit set are aggregator deadlines: the low bits
+/// carry the round. An aggregator stuck with a partial `Θ` (the missing
+/// trainers' uploads expired) force-dispatches with what arrived instead
+/// of stalling the round. Disjoint from both the sampling-op id space
+/// (small sequence counters) and [`crate::sim::RELIABLE_TIMER_BIT`].
+const MODEST_AGG_DEADLINE_BIT: u64 = 1 << 62;
+
 /// The MoDeST protocol state machine (drives through [`SimHarness`]).
 pub struct ModestProtocol {
     cfg: ModestConfig,
@@ -173,6 +187,9 @@ pub struct ModestProtocol {
     /// Size of the initial population (observers for join traces).
     initial_nodes: usize,
     join_watch: Vec<(NodeId, f64)>,
+    /// Retransmit ledger for train/aggregate sends; `Some` exactly in
+    /// lossy sessions.
+    outbox: Option<ReliableOutbox<Msg>>,
 }
 
 impl ModestProtocol {
@@ -187,13 +204,13 @@ impl ModestProtocol {
     /// Compute the wire parts for `msg` and hand it to the fabric via `ctx`
     /// (self-sends are loopback: no traffic, no latency). Parts live on the
     /// stack — the fan-out hot path performs no per-send allocation.
-    fn send(&self, ctx: &mut Ctx<'_, Msg>, from: NodeId, to: NodeId, msg: Msg) {
+    fn send(&mut self, ctx: &mut Ctx<'_, Msg>, from: NodeId, to: NodeId, msg: Msg) {
         if from == to {
             ctx.deliver_local(to, msg);
             return;
         }
         let (parts, used): ([(MsgKind, u64); 2], usize) = match &msg {
-            Msg::Ping { .. } | Msg::Pong { .. } => {
+            Msg::Ping { .. } | Msg::Pong { .. } | Msg::Ack { .. } => {
                 ([(MsgKind::Control, self.sizes.ping_bytes()), (MsgKind::Control, 0)], 1)
             }
             Msg::Joined { .. } | Msg::Left { .. } => (
@@ -210,7 +227,31 @@ impl ModestProtocol {
                 )
             }
         };
-        ctx.send(from, to, &parts[..used], msg);
+        // Lossy sessions track model-bearing messages through the reliable
+        // outbox (the closure embeds the allocated seq so the receiver can
+        // ack); everything else — and every lossless send — stays a plain
+        // fire-and-forget.
+        match (&mut self.outbox, msg) {
+            (Some(ob), Msg::Train { round, model, view, .. }) => {
+                ob.track(ctx, from, to, &parts[..used], |seq| Msg::Train {
+                    seq,
+                    from,
+                    round,
+                    model,
+                    view,
+                });
+            }
+            (Some(ob), Msg::Aggregate { round, model, view, .. }) => {
+                ob.track(ctx, from, to, &parts[..used], |seq| Msg::Aggregate {
+                    seq,
+                    from,
+                    round,
+                    model,
+                    view,
+                });
+            }
+            (_, msg) => ctx.send(from, to, &parts[..used], msg),
+        }
     }
 
     // ------------------------------------------------------------- sampling
@@ -364,7 +405,13 @@ impl ModestProtocol {
                         ctx,
                         node,
                         j,
-                        Msg::Aggregate { round, model: payload.clone(), view: view.clone() },
+                        Msg::Aggregate {
+                            seq: 0,
+                            from: node,
+                            round,
+                            model: payload.clone(),
+                            view: view.clone(),
+                        },
                     );
                 }
             }
@@ -379,6 +426,7 @@ impl ModestProtocol {
                     Arc::new(ctx.task.aggregate(&models).expect("aggregate"))
                 };
                 self.nodes[node as usize].theta.clear();
+                self.nodes[node as usize].theta_from.clear();
                 // Track the freshest global model for evaluation (shared,
                 // not copied: the Arc already owns the buffer).
                 if round > self.latest_round {
@@ -392,7 +440,13 @@ impl ModestProtocol {
                         ctx,
                         node,
                         j,
-                        Msg::Train { round, model: avg.clone(), view: view.clone() },
+                        Msg::Train {
+                            seq: 0,
+                            from: node,
+                            round,
+                            model: avg.clone(),
+                            view: view.clone(),
+                        },
                     );
                 }
                 let _ = payload; // participants' payload slot unused (avg built here)
@@ -464,7 +518,10 @@ impl Protocol for ModestProtocol {
         let order = candidate_order(1, &candidates);
         let view: ViewRef = Arc::new(self.nodes[0].view.clone());
         for &i in order.iter().take(self.cfg.s.min(order.len())) {
-            ctx.deliver_local(i, Msg::Train { round: 1, model: init.clone(), view: view.clone() });
+            ctx.deliver_local(
+                i,
+                Msg::Train { seq: 0, from: i, round: 1, model: init.clone(), view: view.clone() },
+            );
         }
         ctx.record_round_start(1);
     }
@@ -489,10 +546,19 @@ impl Protocol for ModestProtocol {
             Msg::Left { node, counter } => {
                 self.nodes[to as usize].on_membership(node, counter, false);
             }
-            Msg::Aggregate { round, model, view } => {
+            Msg::Aggregate { seq, from, round, model, view } => {
                 self.hot.set_timer(to as usize, ctx.now());
+                // Ack before processing: duplicates (the first ack was
+                // dropped) are deduplicated inside `on_aggregate` but must
+                // still be re-acked to stop the sender's retransmits.
+                if seq != 0 {
+                    self.send(ctx, to, from, Msg::Ack { seq });
+                }
+                let first_of_round =
+                    self.outbox.is_some() && round > self.nodes[to as usize].k_agg;
                 let act = self.nodes[to as usize].on_aggregate(
                     round,
+                    from,
                     model,
                     &view,
                     self.cfg.s,
@@ -505,10 +571,22 @@ impl Protocol for ModestProtocol {
                     // Aggregator samples the round's participants (Alg. 4 l.19).
                     let dummy = Arc::new(Vec::new());
                     self.start_sample(ctx, to, round, self.cfg.s, Purpose::Participants, dummy);
+                } else if first_of_round {
+                    // Lossy degradation: the round's first upload arms a
+                    // deadline sized past the full retransmit window. If
+                    // the remaining trainers' uploads all expire, the
+                    // aggregator force-dispatches with what arrived
+                    // instead of stalling the round forever.
+                    let ob = self.outbox.as_ref().expect("first_of_round implies outbox");
+                    let delay = ob.cfg().expiry_window() + ob.cfg().max_timeout;
+                    ctx.schedule_timer(delay, to, MODEST_AGG_DEADLINE_BIT | round);
                 }
             }
-            Msg::Train { round, model, view } => {
+            Msg::Train { seq, from, round, model, view } => {
                 self.hot.set_timer(to as usize, ctx.now());
+                if seq != 0 {
+                    self.send(ctx, to, from, Msg::Ack { seq });
+                }
                 let act = self.nodes[to as usize].on_train(round, model, &view);
                 if let NodeAction::BeginTraining { round, seq } = act {
                     if ctx.round_budget_exceeded(round) {
@@ -520,10 +598,38 @@ impl Protocol for ModestProtocol {
                     ctx.schedule_train_done(dur, to, seq);
                 }
             }
+            Msg::Ack { seq } => {
+                if let Some(ob) = &mut self.outbox {
+                    ob.ack(seq);
+                }
+            }
         }
     }
 
     fn on_timer(&mut self, ctx: &mut Ctx<'_, Msg>, node: NodeId, id: u64) {
+        if let Some(ob) = &mut self.outbox {
+            match ob.on_timer(ctx, id) {
+                // Sender-side expiry needs no action: a lost upload is
+                // absorbed by the aggregator deadline, a lost train by the
+                // next round's fresh participant sample.
+                TimerVerdict::Handled | TimerVerdict::Expired(_) => return,
+                TimerVerdict::NotOurs => {}
+            }
+        }
+        if id & MODEST_AGG_DEADLINE_BIT != 0 {
+            let round = id & !MODEST_AGG_DEADLINE_BIT;
+            let i = node as usize;
+            let stuck = {
+                let n = &self.nodes[i];
+                n.k_agg == round && n.agg_dispatched < round && !n.theta.is_empty()
+            };
+            if stuck {
+                self.nodes[i].agg_dispatched = round;
+                let dummy = Arc::new(Vec::new());
+                self.start_sample(ctx, node, round, self.cfg.s, Purpose::Participants, dummy);
+            }
+            return;
+        }
         self.pump_sample(ctx, node, id, false);
     }
 
@@ -535,6 +641,7 @@ impl Protocol for ModestProtocol {
         let (updated, _loss, _batches) =
             ctx.task.local_update(&input, node, seed).expect("local_update");
         self.nodes[node as usize].training = None;
+        self.nodes[node as usize].k_done = round;
         // Push to the aggregators of round+1 (Alg. 4 lines 33-37).
         self.start_sample(ctx, node, round + 1, self.cfg.a, Purpose::Aggregators, Arc::new(updated));
     }
@@ -644,6 +751,9 @@ impl Protocol for ModestProtocol {
             for m in &n.theta {
                 w.write_model(m);
             }
+            for &f in &n.theta_from {
+                w.write_u32(f);
+            }
             w.write_u64(n.agg_dispatched);
             w.write_u64(n.k_train);
             match &n.training {
@@ -656,6 +766,7 @@ impl Protocol for ModestProtocol {
                 None => w.write_bool(false),
             }
             w.write_u64(n.train_seq);
+            w.write_u64(n.k_done);
             let mut rounds: Vec<Round> = n.pongs.keys().copied().collect();
             rounds.sort_unstable();
             w.write_usize(rounds.len());
@@ -695,6 +806,10 @@ impl Protocol for ModestProtocol {
             w.write_u32(node);
             w.write_f64(at_s);
         }
+        w.write_bool(self.outbox.is_some());
+        if let Some(ob) = &self.outbox {
+            ob.write_into(w, |w, m| self.write_msg(w, m))?;
+        }
         Ok(())
     }
 
@@ -710,6 +825,10 @@ impl Protocol for ModestProtocol {
             for _ in 0..t {
                 node.theta.push(r.read_model()?);
             }
+            node.theta_from.reserve(t);
+            for _ in 0..t {
+                node.theta_from.push(r.read_u32()?);
+            }
             node.agg_dispatched = r.read_u64()?;
             node.k_train = r.read_u64()?;
             node.training = if r.read_bool()? {
@@ -718,6 +837,7 @@ impl Protocol for ModestProtocol {
                 None
             };
             node.train_seq = r.read_u64()?;
+            node.k_done = r.read_u64()?;
             let n_rounds = r.read_usize()?;
             for _ in 0..n_rounds {
                 let k = r.read_u64()?;
@@ -769,6 +889,21 @@ impl Protocol for ModestProtocol {
             join_watch.push((r.read_u32()?, r.read_f64()?));
         }
         self.join_watch = join_watch;
+        // Tolerate a loss-config overlay flip across the checkpoint: a
+        // snapshot taken lossy restores into a lossless session by reading
+        // and discarding the ledger; the reverse keeps the fresh outbox.
+        if r.read_bool()? {
+            let cfg = self.cfg.reliability.unwrap_or(ReliabilityConfig {
+                timeout: SimTime::from_secs_f64(1.0),
+                backoff: 1.0,
+                max_timeout: SimTime::from_secs_f64(1.0),
+                retries: 1,
+            });
+            let ob = ReliableOutbox::read_from(r, cfg, |r| self.read_msg(r))?;
+            if self.cfg.reliability.is_some() {
+                self.outbox = Some(ob);
+            }
+        }
         Ok(())
     }
 
@@ -794,17 +929,25 @@ impl Protocol for ModestProtocol {
                 w.write_u32(*node);
                 w.write_u64(*counter);
             }
-            Msg::Aggregate { round, model, view } => {
+            Msg::Aggregate { seq, from, round, model, view } => {
                 w.write_u8(4);
+                w.write_u64(*seq);
+                w.write_u32(*from);
                 w.write_u64(*round);
                 w.write_model(model);
                 write_view(w, view);
             }
-            Msg::Train { round, model, view } => {
+            Msg::Train { seq, from, round, model, view } => {
                 w.write_u8(5);
+                w.write_u64(*seq);
+                w.write_u32(*from);
                 w.write_u64(*round);
                 w.write_model(model);
                 write_view(w, view);
+            }
+            Msg::Ack { seq } => {
+                w.write_u8(6);
+                w.write_u64(*seq);
             }
         }
         Ok(())
@@ -817,15 +960,20 @@ impl Protocol for ModestProtocol {
             2 => Msg::Joined { node: r.read_u32()?, counter: r.read_u64()? },
             3 => Msg::Left { node: r.read_u32()?, counter: r.read_u64()? },
             4 => Msg::Aggregate {
+                seq: r.read_u64()?,
+                from: r.read_u32()?,
                 round: r.read_u64()?,
                 model: r.read_model()?,
                 view: Arc::new(read_view(r)?),
             },
             5 => Msg::Train {
+                seq: r.read_u64()?,
+                from: r.read_u32()?,
                 round: r.read_u64()?,
                 model: r.read_model()?,
                 view: Arc::new(read_view(r)?),
             },
+            6 => Msg::Ack { seq: r.read_u64()? },
             t => anyhow::bail!("unknown modest message tag {t}"),
         })
     }
@@ -877,6 +1025,7 @@ impl ModestSession {
         }
 
         let hcfg = cfg.harness_config();
+        let outbox = cfg.reliability.map(ReliableOutbox::new);
         let protocol = ModestProtocol {
             cfg,
             nodes,
@@ -886,6 +1035,7 @@ impl ModestSession {
             latest_round: 0,
             initial_nodes: n_initial,
             join_watch: Vec::new(),
+            outbox,
         };
         ModestSession {
             harness: SimHarness::new(
@@ -1009,6 +1159,50 @@ mod tests {
         let server = traffic.node_usage(0);
         let max_other = (1..12).map(|i| traffic.node_usage(i)).max().unwrap();
         assert!(server > 2 * max_other, "server {server} vs {max_other}");
+    }
+
+    #[test]
+    fn lossy_network_degrades_gracefully() {
+        use crate::net::LossModel;
+        use crate::sim::ReliabilityConfig;
+        // 20% uniform loss on every link. Train/aggregate ride the
+        // reliable outbox; a stuck aggregator force-dispatches at its
+        // deadline. Rounds must keep advancing and the replay must be
+        // bit-identical.
+        let mk = || {
+            let cfg = ModestConfig {
+                s: 4,
+                a: 2,
+                sf: 1.0,
+                max_time: SimTime::from_secs_f64(900.0),
+                max_rounds: 30,
+                eval_interval: SimTime::from_secs_f64(30.0),
+                reliability: Some(ReliabilityConfig {
+                    timeout: SimTime::from_secs_f64(3.0),
+                    backoff: 2.0,
+                    max_timeout: SimTime::from_secs_f64(10.0),
+                    retries: 4,
+                }),
+                ..Default::default()
+            };
+            let n = 12;
+            let task = MockTask::new(n, 16, 0.5, cfg.seed);
+            let compute = ComputeModel::uniform(n, 0.05);
+            let mut fabric = quick_fabric(n, cfg.seed);
+            let mut rng = SimRng::new(cfg.seed);
+            fabric.set_loss(LossModel::Uniform { p: 0.2 }, rng.fork("loss"));
+            ModestSession::new(cfg, n, Box::new(task), compute, fabric, ChurnSchedule::empty())
+                .run()
+        };
+        let (m, traffic) = mk();
+        assert!(m.final_round >= 10, "lossy session stalled at round {}", m.final_round);
+        assert!(traffic.dropped_bytes() > 0, "20% loss dropped nothing");
+        assert!(traffic.retransmitted_bytes() > 0, "no retransmissions under loss");
+        assert!(traffic.is_conserved());
+        let (b, tb) = mk();
+        assert_eq!(m.events, b.events);
+        assert_eq!(m.final_round, b.final_round);
+        assert_eq!(traffic.total(), tb.total());
     }
 
     #[test]

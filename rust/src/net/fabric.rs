@@ -40,6 +40,7 @@
 //! finite peer still pays.
 
 use super::latency::LatencyMatrix;
+use super::loss::{LossLayer, LossModel};
 use super::message::MsgKind;
 use super::traffic::TrafficLedger;
 use crate::sim::{SimRng, SimTime};
@@ -85,14 +86,16 @@ impl BandwidthConfig {
 
     /// Capacity of node `idx` under this config, drawing from `rng` where
     /// the config is stochastic. Callers must invoke this once per node in
-    /// index order for reproducibility.
-    fn sample_one(&self, idx: usize, rng: &mut SimRng) -> (f64, f64) {
+    /// index order for reproducibility. The third element is the chosen
+    /// class-tier index (0 for non-`Classes` configs) — the `classes` loss
+    /// model keys its per-tier drop rates off it.
+    fn sample_one(&self, idx: usize, rng: &mut SimRng) -> (f64, f64, u32) {
         match self {
-            BandwidthConfig::Uniform { bps } => (*bps, *bps),
+            BandwidthConfig::Uniform { bps } => (*bps, *bps, 0),
             BandwidthConfig::LogNormal { median_bps, sigma } => {
                 let f = (sigma * rng.next_gaussian()).exp().clamp(0.1, 10.0);
                 let bps = median_bps * f;
-                (bps, bps)
+                (bps, bps, 0)
             }
             BandwidthConfig::Classes(classes) => {
                 assert!(!classes.is_empty(), "empty bandwidth class list");
@@ -110,14 +113,14 @@ impl BandwidthConfig {
                     total += c.weight;
                 }
                 let mut pick = rng.next_f64() * total;
-                for c in classes {
+                for (i, c) in classes.iter().enumerate() {
                     pick -= c.weight;
                     if pick <= 0.0 {
-                        return (c.up_bps, c.down_bps);
+                        return (c.up_bps, c.down_bps, i as u32);
                     }
                 }
                 let last = classes.last().unwrap();
-                (last.up_bps, last.down_bps)
+                (last.up_bps, last.down_bps, classes.len() as u32 - 1)
             }
             BandwidthConfig::PerNode { up_bps, down_bps } => {
                 assert!(
@@ -126,7 +129,7 @@ impl BandwidthConfig {
                 );
                 let up = *up_bps.get(idx).unwrap_or(up_bps.last().unwrap());
                 let down = *down_bps.get(idx).unwrap_or(down_bps.last().unwrap());
-                (up, down)
+                (up, down, 0)
             }
         }
     }
@@ -150,12 +153,17 @@ pub struct NetworkFabric {
     cfg: BandwidthConfig,
     up_bps: Vec<f64>,
     down_bps: Vec<f64>,
+    /// Bandwidth-class tier each node sampled (0 outside `Classes`).
+    tier: Vec<u32>,
     up_free: Vec<SimTime>,
     down_free: Vec<SimTime>,
     /// Bytes charged against link capacity (invariant: equals ledger total).
     charged: u64,
     /// RNG stream for capacities of nodes joining after construction.
     growth_rng: SimRng,
+    /// Fault injection; [`LossLayer::disabled`] unless the scenario
+    /// configures `network.loss`.
+    loss: LossLayer,
 }
 
 impl NetworkFabric {
@@ -170,10 +178,12 @@ impl NetworkFabric {
         let growth_rng = rng.fork("fabric-growth");
         let mut up_bps = Vec::with_capacity(nodes);
         let mut down_bps = Vec::with_capacity(nodes);
+        let mut tier = Vec::with_capacity(nodes);
         for i in 0..nodes {
-            let (u, d) = bw.sample_one(i, rng);
+            let (u, d, t) = bw.sample_one(i, rng);
             up_bps.push(u);
             down_bps.push(d);
+            tier.push(t);
         }
         NetworkFabric {
             latency,
@@ -181,11 +191,31 @@ impl NetworkFabric {
             cfg: bw.clone(),
             up_bps,
             down_bps,
+            tier,
             up_free: vec![SimTime::ZERO; nodes],
             down_free: vec![SimTime::ZERO; nodes],
             charged: 0,
             growth_rng,
+            loss: LossLayer::disabled(),
         }
+    }
+
+    /// Install a fault-injection model with its dedicated RNG stream (the
+    /// scenario layer forks `"loss"` off the run seed). Absent this call
+    /// the fabric delivers exactly once, bit-identical to pre-loss builds.
+    pub fn set_loss(&mut self, model: LossModel, rng: SimRng) {
+        self.loss = LossLayer::new(model, rng);
+    }
+
+    /// Whether fault injection is active (drives whether protocols arm
+    /// their reliability layer).
+    pub fn has_loss(&self) -> bool {
+        self.loss.enabled()
+    }
+
+    /// The bandwidth-class tier `node` sampled (0 outside `Classes`).
+    pub fn tier(&self, node: NodeId) -> u32 {
+        self.tier[node as usize]
     }
 
     /// Uniform-capacity convenience constructor (tests, benches).
@@ -223,9 +253,10 @@ impl NetworkFabric {
         }
         while self.up_bps.len() < nodes {
             let idx = self.up_bps.len();
-            let (u, d) = self.cfg.sample_one(idx, &mut self.growth_rng);
+            let (u, d, t) = self.cfg.sample_one(idx, &mut self.growth_rng);
             self.up_bps.push(u);
             self.down_bps.push(d);
+            self.tier.push(t);
             self.up_free.push(SimTime::ZERO);
             self.down_free.push(SimTime::ZERO);
         }
@@ -275,12 +306,14 @@ impl NetworkFabric {
         for i in 0..self.up_bps.len() {
             w.write_f64(self.up_bps[i]);
             w.write_f64(self.down_bps[i]);
+            w.write_u32(self.tier[i]);
             w.write_time(self.up_free[i]);
             w.write_time(self.down_free[i]);
         }
         w.write_u64(self.charged);
         w.write_rng(&self.growth_rng);
         self.ledger.write_into(w);
+        self.loss.write_into(w);
     }
 
     /// Overwrite the dynamic state of a freshly spec-built fabric with a
@@ -290,17 +323,20 @@ impl NetworkFabric {
         let n = r.read_usize()?;
         self.up_bps.clear();
         self.down_bps.clear();
+        self.tier.clear();
         self.up_free.clear();
         self.down_free.clear();
         for _ in 0..n {
             self.up_bps.push(r.read_f64()?);
             self.down_bps.push(r.read_f64()?);
+            self.tier.push(r.read_u32()?);
             self.up_free.push(r.read_time()?);
             self.down_free.push(r.read_time()?);
         }
         self.charged = r.read_u64()?;
         self.growth_rng = r.read_rng()?;
         self.ledger = TrafficLedger::read_from(r)?;
+        self.loss.restore_from(r)?;
         Ok(())
     }
 
@@ -337,7 +373,9 @@ impl NetworkFabric {
     }
 
     /// Account `parts` in the ledger and schedule the transfer; returns the
-    /// absolute virtual time of delivery.
+    /// absolute virtual time of delivery. Loss-exempt: tests, benches, and
+    /// invariant props that reason about exactly-once delivery use this
+    /// directly; session traffic goes through [`NetworkFabric::try_transfer`].
     pub fn transfer(
         &mut self,
         now: SimTime,
@@ -351,6 +389,51 @@ impl NetworkFabric {
         let plan = self.plan(now, from, to, bytes);
         self.ledger.record_parts(from, to, parts);
         plan.delivered
+    }
+
+    /// Occupy the sender's uplink for a transfer that is lost in flight:
+    /// the bytes left the sender (wire cost, FIFO occupancy, charge) but
+    /// never reach `to`'s downlink.
+    fn plan_dropped(&mut self, now: SimTime, from: NodeId, bytes: u64) {
+        let f = from as usize;
+        if self.up_bps[f].is_finite() {
+            let up_start = now.max(self.up_free[f]);
+            self.up_free[f] = up_start + Self::tx_time(bytes, self.up_bps[f]);
+        }
+        self.charged += bytes;
+    }
+
+    /// Schedule `parts` under fault injection: consult the loss layer and
+    /// either deliver (Some(delivery time)) or drop in flight (None). With
+    /// no loss model installed this is byte- and draw-identical to
+    /// [`NetworkFabric::transfer`]. `retransmit` tags the attempt for the
+    /// ledger's goodput split.
+    pub fn try_transfer(
+        &mut self,
+        now: SimTime,
+        from: NodeId,
+        to: NodeId,
+        parts: &[(MsgKind, u64)],
+        retransmit: bool,
+    ) -> Option<SimTime> {
+        if !self.loss.enabled() {
+            let bytes: u64 = parts.iter().map(|(_, b)| b).sum();
+            let plan = self.plan(now, from, to, bytes);
+            self.ledger.record_attempt(from, to, parts, retransmit, true);
+            return Some(plan.delivered);
+        }
+        self.ensure_nodes(from.max(to) as usize + 1);
+        let (ft, tt) = (self.tier[from as usize], self.tier[to as usize]);
+        if self.loss.decide(now, from as usize, to as usize, ft, tt) {
+            let bytes: u64 = parts.iter().map(|(_, b)| b).sum();
+            self.plan_dropped(now, from, bytes);
+            self.ledger.record_attempt(from, to, parts, retransmit, false);
+            return None;
+        }
+        let bytes: u64 = parts.iter().map(|(_, b)| b).sum();
+        let plan = self.plan(now, from, to, bytes);
+        self.ledger.record_attempt(from, to, parts, retransmit, true);
+        Some(plan.delivered)
     }
 }
 
@@ -592,6 +675,129 @@ mod tests {
         a.ensure_nodes(9);
         b.ensure_nodes(9);
         assert_eq!(a.up_bps(8).to_bits(), b.up_bps(8).to_bits(), "growth stream diverged");
+    }
+
+    #[test]
+    fn try_transfer_without_loss_matches_transfer() {
+        let mut a = flat_fabric(4, 1e6);
+        let mut b = flat_fabric(4, 1e6);
+        let parts = [(MsgKind::ModelPayload, 12_500u64)];
+        let ta = a.transfer(SimTime::ZERO, 0, 1, &parts);
+        let tb = b.try_transfer(SimTime::ZERO, 0, 1, &parts, false).unwrap();
+        assert_eq!(ta, tb);
+        assert_eq!(a.ledger().total(), b.ledger().total());
+        assert_eq!(b.ledger().dropped_bytes(), 0);
+        assert_eq!(b.ledger().goodput(), 12_500);
+    }
+
+    #[test]
+    fn total_loss_drops_everything_but_still_charges_uplink() {
+        let mut f = flat_fabric(3, 1e6);
+        f.set_loss(LossModel::Uniform { p: 1.0 }, SimRng::new(1).fork("loss"));
+        assert!(f.has_loss());
+        let parts = [(MsgKind::ModelPayload, 12_500u64)];
+        assert!(f.try_transfer(SimTime::ZERO, 0, 1, &parts, false).is_none());
+        assert!(f.try_transfer(SimTime::ZERO, 0, 2, &parts, false).is_none());
+        assert_eq!(f.ledger().dropped_bytes(), 25_000);
+        assert_eq!(f.ledger().goodput(), 0);
+        assert_eq!(f.charged_bytes(), 25_000);
+        assert!(f.ledger().is_conserved());
+        // Both attempts serialized on node 0's uplink: a third, delivered
+        // send must queue behind 200ms of occupancy.
+        f.set_loss(LossModel::Uniform { p: 0.0 }, SimRng::new(1).fork("loss"));
+        let at = f.try_transfer(SimTime::ZERO, 0, 1, &parts, false).unwrap();
+        assert_eq!(at, SimTime::from_millis(310));
+    }
+
+    #[test]
+    fn dropped_transfers_leave_receiver_downlink_idle() {
+        let mut f = flat_fabric(3, 1e6);
+        f.set_loss(LossModel::Uniform { p: 1.0 }, SimRng::new(2).fork("loss"));
+        let parts = [(MsgKind::ModelPayload, 125_000u64)]; // 1s of occupancy
+        assert!(f.try_transfer(SimTime::ZERO, 0, 1, &parts, false).is_none());
+        f.set_loss(LossModel::Uniform { p: 0.0 }, SimRng::new(2).fork("loss"));
+        // Node 2's send to the same receiver is not queued behind the
+        // ghost of the dropped transfer.
+        let at = f.try_transfer(SimTime::ZERO, 2, 1, &parts, false).unwrap();
+        assert_eq!(at, SimTime::from_millis(1010));
+    }
+
+    #[test]
+    fn classes_loss_uses_sampled_tiers() {
+        let latency = LatencyMatrix::uniform(32, SimTime::ZERO);
+        let bw = BandwidthConfig::Classes(vec![
+            BandwidthClass { weight: 1.0, up_bps: 5e6, down_bps: 20e6 },
+            BandwidthClass { weight: 1.0, up_bps: 50e6, down_bps: 100e6 },
+        ]);
+        let mut rng = SimRng::new(11);
+        let mut f = NetworkFabric::new(latency, &bw, 32, &mut rng);
+        // Tier indices line up with the sampled capacities.
+        for n in 0..32u32 {
+            let want = if f.up_bps(n) == 5e6 { 0 } else { 1 };
+            assert_eq!(f.tier(n), want, "node {n}");
+        }
+        // Tier 0 lossless, tier 1 always drops: a transfer touching any
+        // tier-1 endpoint dies, tier-0 pairs always deliver.
+        f.set_loss(
+            LossModel::Classes { tier_p: vec![0.0, 1.0] },
+            SimRng::new(11).fork("loss"),
+        );
+        let slow: Vec<u32> = (0..32u32).filter(|&n| f.tier(n) == 0).collect();
+        let fast: Vec<u32> = (0..32u32).filter(|&n| f.tier(n) == 1).collect();
+        let parts = [(MsgKind::Control, 100u64)];
+        assert!(f.try_transfer(SimTime::ZERO, slow[0], slow[1], &parts, false).is_some());
+        assert!(f.try_transfer(SimTime::ZERO, slow[0], fast[0], &parts, false).is_none());
+        assert!(f.try_transfer(SimTime::ZERO, fast[0], slow[0], &parts, false).is_none());
+    }
+
+    #[test]
+    fn loss_rides_fabric_snapshots() {
+        use crate::sim::{SnapshotReader, SnapshotWriter};
+        let build = || {
+            let latency = LatencyMatrix::uniform(8, SimTime::from_millis(5));
+            let mut rng = SimRng::new(7);
+            let mut f = NetworkFabric::new(
+                latency,
+                &BandwidthConfig::Uniform { bps: 1e6 },
+                8,
+                &mut rng,
+            );
+            f.set_loss(
+                LossModel::Burst { p_good: 0.05, p_bad: 0.8, good_mean_s: 4.0, bad_mean_s: 1.0 },
+                SimRng::new(7).fork("loss"),
+            );
+            f
+        };
+        let mut a = build();
+        let parts = [(MsgKind::ModelPayload, 4_000u64)];
+        for i in 0..200u64 {
+            let t = SimTime::from_millis(i * 37);
+            a.try_transfer(t, (i % 8) as u32, ((i + 3) % 8) as u32, &parts, false);
+        }
+        let mut w = SnapshotWriter::new();
+        w.begin_section("fabric");
+        a.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+
+        let mut b = build();
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("fabric").unwrap();
+        b.restore_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+        assert_eq!(a.ledger().dropped_bytes(), b.ledger().dropped_bytes());
+        // Identical future drop decisions: the loss RNG and every burst
+        // channel resumed exactly.
+        for i in 200..400u64 {
+            let t = SimTime::from_millis(i * 37);
+            let (from, to) = ((i % 8) as u32, ((i + 3) % 8) as u32);
+            assert_eq!(
+                a.try_transfer(t, from, to, &parts, false).is_some(),
+                b.try_transfer(t, from, to, &parts, false).is_some(),
+                "decision diverged at attempt {i}"
+            );
+        }
     }
 
     #[test]

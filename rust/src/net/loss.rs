@@ -1,0 +1,390 @@
+//! Deterministic per-message fault injection for [`super::NetworkFabric`].
+//!
+//! Drop decisions come from a dedicated `fork("loss")` RNG stream owned by
+//! [`LossLayer`], so sessions without a loss model (the `disabled` layer)
+//! consume zero draws and perturb nothing — `loss = 0` and absent-section
+//! scenarios replay pre-loss same-seed fingerprints bit-identically.
+//!
+//! Three models, compiled from `network.loss` by the scenario layer:
+//!
+//! - `Uniform`: one flat drop probability on every transfer.
+//! - `Classes`: a per-tier drop probability riding the bandwidth tiers; a
+//!   transfer survives only if *both* endpoints' tiers keep it
+//!   (`p = 1 − (1−p_from)·(1−p_to)` folded into independent rolls).
+//! - `Burst`: a two-state Gilbert–Elliott channel per *receiver* —
+//!   exponentially-distributed dwell times in a good and a bad state, each
+//!   with its own drop probability. Receiver-side state models last-mile
+//!   outages: every sender talking to a node in a bad spell suffers
+//!   together, which is what makes loss bursty rather than i.i.d.
+
+use anyhow::Result;
+
+use crate::sim::snapshot::{SnapshotReader, SnapshotWriter};
+use crate::sim::{SimRng, SimTime};
+
+/// Runtime drop model, compiled from `scenario::LossSpec` (which owns
+/// parsing/validation; every probability here is already in `[0, 1]` and
+/// every dwell mean is finite and positive).
+#[derive(Debug, Clone, PartialEq)]
+pub enum LossModel {
+    Uniform { p: f64 },
+    Classes { tier_p: Vec<f64> },
+    Burst { p_good: f64, p_bad: f64, good_mean_s: f64, bad_mean_s: f64 },
+}
+
+/// Per-receiver Gilbert–Elliott channel state, advanced lazily: a channel
+/// is materialized on its first decide and caught up through all dwell
+/// periods that elapsed since it was last consulted. Catch-up draws depend
+/// only on (receiver, now), so decide order between *different* receivers
+/// never changes a channel's trajectory.
+#[derive(Debug)]
+pub struct LossLayer {
+    model: Option<LossModel>,
+    rng: SimRng,
+    /// Burst state, indexed by receiver: in the bad state?
+    state_bad: Vec<bool>,
+    /// Time at which the current dwell period ends.
+    until: Vec<SimTime>,
+    /// Whether the channel has been materialized yet.
+    init: Vec<bool>,
+}
+
+impl LossLayer {
+    /// The no-op layer: no model, a placeholder RNG that is never drawn
+    /// from, zero per-node state.
+    pub fn disabled() -> Self {
+        LossLayer {
+            model: None,
+            rng: SimRng::new(0),
+            state_bad: Vec::new(),
+            until: Vec::new(),
+            init: Vec::new(),
+        }
+    }
+
+    /// Install `model` with its dedicated RNG stream (the caller forks
+    /// `"loss"` off the run seed so this stream is independent of every
+    /// other consumer).
+    pub fn new(model: LossModel, rng: SimRng) -> Self {
+        LossLayer { model: Some(model), rng, state_bad: Vec::new(), until: Vec::new(), init: Vec::new() }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.model.is_some()
+    }
+
+    fn ensure_node(&mut self, node: usize) {
+        if node >= self.init.len() {
+            self.state_bad.resize(node + 1, false);
+            self.until.resize(node + 1, SimTime::ZERO);
+            self.init.resize(node + 1, false);
+        }
+    }
+
+    /// Roll a drop with probability `p`. Degenerate probabilities consume
+    /// no RNG draw, so e.g. a `tiers: [0.0, 0.3]` classes model draws once
+    /// per lossy endpoint, not twice per transfer.
+    fn roll(&mut self, p: f64) -> bool {
+        if p <= 0.0 {
+            false
+        } else if p >= 1.0 {
+            true
+        } else {
+            self.rng.next_f64() < p
+        }
+    }
+
+    fn exp_dwell(&mut self, mean_s: f64) -> SimTime {
+        // Clamp to one microsecond so a tiny draw can't quantize to a
+        // zero-length dwell and stall the catch-up loop.
+        SimTime::from_micros((self.rng.next_exp(mean_s) * 1e6).max(1.0) as u64)
+    }
+
+    /// Advance `node`'s Gilbert–Elliott channel to `now` and return its
+    /// current drop probability.
+    fn burst_p(&mut self, node: usize, now: SimTime) -> f64 {
+        let (p_good, p_bad, good_mean_s, bad_mean_s) = match &self.model {
+            Some(LossModel::Burst { p_good, p_bad, good_mean_s, bad_mean_s }) => {
+                (*p_good, *p_bad, *good_mean_s, *bad_mean_s)
+            }
+            _ => unreachable!("burst_p called without a burst model"),
+        };
+        self.ensure_node(node);
+        if !self.init[node] {
+            self.init[node] = true;
+            self.state_bad[node] = false;
+            let dwell = self.exp_dwell(good_mean_s);
+            self.until[node] = dwell; // first dwell measured from t = 0
+        }
+        while self.until[node] <= now {
+            let bad = !self.state_bad[node];
+            self.state_bad[node] = bad;
+            let mean = if bad { bad_mean_s } else { good_mean_s };
+            let dwell = self.exp_dwell(mean);
+            self.until[node] += dwell;
+        }
+        if self.state_bad[node] { p_bad } else { p_good }
+    }
+
+    /// Decide whether the transfer `from → to` starting at `now` is lost.
+    /// `from_tier`/`to_tier` are the endpoints' bandwidth-class indices
+    /// (0 for non-Classes bandwidth configs). Returns `true` to drop.
+    pub fn decide(
+        &mut self,
+        now: SimTime,
+        _from: usize,
+        to: usize,
+        from_tier: u32,
+        to_tier: u32,
+    ) -> bool {
+        match &self.model {
+            None => false,
+            Some(LossModel::Uniform { p }) => {
+                let p = *p;
+                self.roll(p)
+            }
+            Some(LossModel::Classes { tier_p }) => {
+                // Independent loss at each endpoint's tier; either roll
+                // dropping loses the transfer.
+                let p_from = tier_p.get(from_tier as usize).copied().unwrap_or(0.0);
+                let p_to = tier_p.get(to_tier as usize).copied().unwrap_or(0.0);
+                let lost = self.roll(p_from);
+                // Always evaluate the receiver roll too so the draw count
+                // per transfer is a function of the tier pair alone, not of
+                // the sender roll's outcome.
+                let lost_rx = self.roll(p_to);
+                lost || lost_rx
+            }
+            Some(LossModel::Burst { .. }) => {
+                let p = self.burst_p(to, now);
+                self.roll(p)
+            }
+        }
+    }
+
+    /// Serialize mutable state (RNG position + burst channels). The model
+    /// itself is *not* written — it is recompiled from the scenario spec on
+    /// restore, so what-if overlays may change the loss config.
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        w.write_bool(self.enabled());
+        if !self.enabled() {
+            return;
+        }
+        w.write_rng(&self.rng);
+        w.write_usize(self.init.len());
+        for i in 0..self.init.len() {
+            w.write_bool(self.init[i]);
+            w.write_bool(self.state_bad[i]);
+            w.write_time(self.until[i]);
+        }
+    }
+
+    /// Restore mutable state. When the snapshot and the (possibly
+    /// overlaid) current config disagree on whether loss is enabled, the
+    /// snapshot's loss state is discarded and the freshly-built layer
+    /// stands — the branch is deliberately diverging.
+    pub fn restore_from(&mut self, r: &mut SnapshotReader) -> Result<()> {
+        let was_enabled = r.read_bool()?;
+        if !was_enabled {
+            return Ok(());
+        }
+        let rng = r.read_rng()?;
+        let n = r.read_usize()?;
+        let mut init = Vec::with_capacity(n);
+        let mut state_bad = Vec::with_capacity(n);
+        let mut until = Vec::with_capacity(n);
+        for _ in 0..n {
+            init.push(r.read_bool()?);
+            state_bad.push(r.read_bool()?);
+            until.push(r.read_time()?);
+        }
+        if self.enabled() {
+            self.rng = rng;
+            self.init = init;
+            self.state_bad = state_bad;
+            self.until = until;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn loss_rng() -> SimRng {
+        SimRng::new(42).fork("loss")
+    }
+
+    fn snapshot_of(layer: &LossLayer) -> Vec<u8> {
+        let mut w = SnapshotWriter::new();
+        w.begin_section("loss");
+        layer.write_into(&mut w);
+        w.end_section();
+        w.finish()
+    }
+
+    fn restore_into(layer: &mut LossLayer, bytes: &[u8]) {
+        let mut r = SnapshotReader::new(bytes).unwrap();
+        r.begin_section("loss").unwrap();
+        layer.restore_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn disabled_layer_never_drops_and_never_draws() {
+        let mut layer = LossLayer::disabled();
+        assert!(!layer.enabled());
+        for i in 0..1000usize {
+            assert!(!layer.decide(SimTime::from_millis(i as u64), i % 7, i % 5, 0, 0));
+        }
+        // The RNG is untouched: it still matches a fresh seed-0 stream.
+        assert_eq!(layer.rng.state(), SimRng::new(0).state());
+    }
+
+    #[test]
+    fn uniform_extremes_skip_rng_draws() {
+        let mut never = LossLayer::new(LossModel::Uniform { p: 0.0 }, loss_rng());
+        let mut always = LossLayer::new(LossModel::Uniform { p: 1.0 }, loss_rng());
+        for i in 0..100u64 {
+            assert!(!never.decide(SimTime::from_millis(i), 0, 1, 0, 0));
+            assert!(always.decide(SimTime::from_millis(i), 0, 1, 0, 0));
+        }
+        assert_eq!(never.rng.state(), loss_rng().state());
+        assert_eq!(always.rng.state(), loss_rng().state());
+    }
+
+    #[test]
+    fn uniform_drop_rate_tracks_p() {
+        let mut layer = LossLayer::new(LossModel::Uniform { p: 0.3 }, loss_rng());
+        let drops = (0..20_000)
+            .filter(|&i| layer.decide(SimTime::from_millis(i), 0, 1, 0, 0))
+            .count();
+        let rate = drops as f64 / 20_000.0;
+        assert!((rate - 0.3).abs() < 0.02, "observed drop rate {rate}");
+    }
+
+    #[test]
+    fn classes_respects_tier_pair() {
+        let model = LossModel::Classes { tier_p: vec![0.0, 0.4] };
+        // Tier-0 <-> tier-0: never drops, never draws.
+        let mut layer = LossLayer::new(model.clone(), loss_rng());
+        for i in 0..100u64 {
+            assert!(!layer.decide(SimTime::from_millis(i), 0, 1, 0, 0));
+        }
+        assert_eq!(layer.rng.state(), loss_rng().state());
+        // A lossy endpoint on either side drops at ~its tier rate.
+        for (ft, tt) in [(1u32, 0u32), (0, 1)] {
+            let mut layer = LossLayer::new(model.clone(), loss_rng());
+            let drops = (0..20_000)
+                .filter(|&i| layer.decide(SimTime::from_millis(i), 0, 1, ft, tt))
+                .count();
+            let rate = drops as f64 / 20_000.0;
+            assert!((rate - 0.4).abs() < 0.02, "tier ({ft},{tt}) drop rate {rate}");
+        }
+        // Both endpoints lossy: combined 1-(1-p)^2 = 0.64.
+        let mut layer = LossLayer::new(model, loss_rng());
+        let drops = (0..20_000)
+            .filter(|&i| layer.decide(SimTime::from_millis(i), 0, 1, 1, 1))
+            .count();
+        let rate = drops as f64 / 20_000.0;
+        assert!((rate - 0.64).abs() < 0.02, "two-lossy-tier drop rate {rate}");
+    }
+
+    #[test]
+    fn burst_channel_alternates_and_is_receiver_scoped() {
+        let model = LossModel::Burst {
+            p_good: 0.0,
+            p_bad: 1.0,
+            good_mean_s: 10.0,
+            bad_mean_s: 10.0,
+        };
+        let mut layer = LossLayer::new(model, loss_rng());
+        // With p_good=0 / p_bad=1 the decide outcome *is* the channel
+        // state. Sample a long horizon: both states must occur, and the
+        // drop fraction should hover near the 50% duty cycle.
+        let mut drops = 0;
+        let samples = 4000u64;
+        for i in 0..samples {
+            if layer.decide(SimTime::from_secs_f64(i as f64 * 0.5), 0, 1, 0, 0) {
+                drops += 1;
+            }
+        }
+        let frac = drops as f64 / samples as f64;
+        assert!(frac > 0.2 && frac < 0.8, "bad-state duty cycle {frac}");
+        // A different receiver gets an independent, freshly-drawn channel.
+        let before = layer.rng.state().1;
+        let _ = layer.decide(SimTime::from_secs_f64(1.0), 0, 2, 0, 0);
+        assert!(layer.rng.state().1 > before, "second receiver drew no dwell samples");
+    }
+
+    #[test]
+    fn burst_catch_up_is_time_driven_not_call_driven() {
+        // Two layers with identical streams queried at the same final
+        // instant land in the same channel state regardless of how many
+        // intermediate decides happened (p=0/0 ensures no drop rolls).
+        let model = LossModel::Burst {
+            p_good: 0.0,
+            p_bad: 0.0,
+            good_mean_s: 5.0,
+            bad_mean_s: 5.0,
+        };
+        let mut sparse = LossLayer::new(model.clone(), loss_rng());
+        let mut dense = LossLayer::new(model, loss_rng());
+        let end = SimTime::from_secs_f64(200.0);
+        sparse.decide(end, 0, 1, 0, 0);
+        for i in 0..50u64 {
+            dense.decide(SimTime::from_secs_f64(i as f64 * 4.0), 0, 1, 0, 0);
+        }
+        dense.decide(end, 0, 1, 0, 0);
+        assert_eq!(sparse.state_bad[1], dense.state_bad[1]);
+        assert_eq!(sparse.until[1], dense.until[1]);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_resumes_stream_and_channels() {
+        let model = LossModel::Burst {
+            p_good: 0.1,
+            p_bad: 0.9,
+            good_mean_s: 3.0,
+            bad_mean_s: 1.0,
+        };
+        let mut layer = LossLayer::new(model.clone(), loss_rng());
+        for i in 0..500u64 {
+            layer.decide(SimTime::from_millis(i * 97), 0, (i % 5) as usize, 0, 0);
+        }
+        let bytes = snapshot_of(&layer);
+
+        let mut restored = LossLayer::new(model, loss_rng());
+        restore_into(&mut restored, &bytes);
+        for i in 500..1000u64 {
+            let t = SimTime::from_millis(i * 97);
+            let to = (i % 5) as usize;
+            assert_eq!(layer.decide(t, 0, to, 0, 0), restored.decide(t, 0, to, 0, 0));
+        }
+        assert_eq!(layer.rng.state(), restored.rng.state());
+    }
+
+    #[test]
+    fn restore_tolerates_enabled_flag_mismatch() {
+        // Snapshot written with loss on, restored into a lossless branch:
+        // the loss bytes are consumed and dropped.
+        let mut lossy = LossLayer::new(LossModel::Uniform { p: 0.5 }, loss_rng());
+        for i in 0..100u64 {
+            lossy.decide(SimTime::from_millis(i), 0, 1, 0, 0);
+        }
+        let bytes = snapshot_of(&lossy);
+        let mut off = LossLayer::disabled();
+        restore_into(&mut off, &bytes);
+        assert!(!off.enabled());
+
+        // Snapshot written lossless, restored into a lossy branch: the
+        // fresh layer stands untouched.
+        let bytes = snapshot_of(&LossLayer::disabled());
+        let mut on = LossLayer::new(LossModel::Uniform { p: 0.5 }, loss_rng());
+        restore_into(&mut on, &bytes);
+        assert!(on.enabled());
+        assert_eq!(on.rng.state(), loss_rng().state());
+    }
+}

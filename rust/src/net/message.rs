@@ -21,6 +21,28 @@ pub enum MsgKind {
     Membership,
 }
 
+impl MsgKind {
+    /// Stable wire tag for snapshots (in-flight retransmit state).
+    pub fn tag(self) -> u8 {
+        match self {
+            MsgKind::ModelPayload => 0,
+            MsgKind::ViewPayload => 1,
+            MsgKind::Control => 2,
+            MsgKind::Membership => 3,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> anyhow::Result<MsgKind> {
+        Ok(match tag {
+            0 => MsgKind::ModelPayload,
+            1 => MsgKind::ViewPayload,
+            2 => MsgKind::Control,
+            3 => MsgKind::Membership,
+            other => anyhow::bail!("unknown MsgKind tag {other}"),
+        })
+    }
+}
+
 /// Byte-size model for protocol messages.
 #[derive(Debug, Clone)]
 pub struct SizeModel {

@@ -12,10 +12,12 @@
 
 pub mod fabric;
 pub mod latency;
+pub mod loss;
 pub mod message;
 pub mod traffic;
 
 pub use fabric::{BandwidthClass, BandwidthConfig, NetworkFabric, TransferPlan};
 pub use latency::{LatencyMatrix, LatencyParams};
+pub use loss::{LossLayer, LossModel};
 pub use message::{MsgKind, SizeModel};
 pub use traffic::TrafficLedger;

@@ -24,6 +24,13 @@ pub struct TrafficLedger {
     usage: Vec<[u64; 2]>,
     by_kind: [u64; 4],
     messages: u64,
+    /// Bytes lost in flight (fault injection): charged at the sender,
+    /// never received.
+    dropped: u64,
+    /// Bytes of *delivered* retransmissions — real wire cost, but not
+    /// goodput (the payload already counted on its first delivery attempt
+    /// or is a duplicate the receiver discards).
+    retrans: u64,
 }
 
 fn kind_idx(kind: MsgKind) -> usize {
@@ -41,6 +48,8 @@ impl TrafficLedger {
             usage: vec![[0; 2]; nodes],
             by_kind: [0; 4],
             messages: 0,
+            dropped: 0,
+            retrans: 0,
         }
     }
 
@@ -57,13 +66,37 @@ impl TrafficLedger {
     /// message is counted (callers composing part lists dynamically may
     /// legitimately end up with none).
     pub fn record_parts(&mut self, from: NodeId, to: NodeId, parts: &[(MsgKind, u64)]) {
+        self.record_attempt(from, to, parts, false, true);
+    }
+
+    /// Record one delivery *attempt* under fault injection. Every attempt
+    /// is wire cost: the sender's uplink carried it, so `sent`, the kind
+    /// columns, and the message count always advance. A delivered attempt
+    /// credits the receiver (and, when it was a retransmission, the
+    /// retransmitted column); a dropped attempt lands in the dropped
+    /// column instead — the wire carried it, nobody got it.
+    pub fn record_attempt(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        parts: &[(MsgKind, u64)],
+        retransmit: bool,
+        delivered: bool,
+    ) {
         if parts.is_empty() {
             return;
         }
         let total: u64 = parts.iter().map(|(_, b)| b).sum();
         self.ensure_nodes((from.max(to) + 1) as usize);
         self.usage[from as usize][SENT] += total;
-        self.usage[to as usize][RECV] += total;
+        if delivered {
+            self.usage[to as usize][RECV] += total;
+            if retransmit {
+                self.retrans += total;
+            }
+        } else {
+            self.dropped += total;
+        }
         for &(kind, bytes) in parts {
             self.by_kind[kind_idx(kind)] += bytes;
         }
@@ -85,9 +118,27 @@ impl TrafficLedger {
         u[SENT] + u[RECV]
     }
 
-    /// Total bytes transferred (each message counted once).
+    /// Total wire bytes: every attempt counted once at the sender,
+    /// including dropped and retransmitted traffic.
     pub fn total(&self) -> u64 {
         self.usage.iter().map(|u| u[SENT]).sum()
+    }
+
+    /// Bytes lost in flight to fault injection.
+    pub fn dropped_bytes(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Bytes of delivered retransmissions.
+    pub fn retransmitted_bytes(&self) -> u64 {
+        self.retrans
+    }
+
+    /// Useful first-delivery bytes: wire total minus in-flight losses and
+    /// retransmissions. This is the Fig. 3-style communication-volume
+    /// number; [`Self::total`] remains the true wire cost.
+    pub fn goodput(&self) -> u64 {
+        self.total().saturating_sub(self.dropped).saturating_sub(self.retrans)
     }
 
     /// Bytes attributed to one traffic class.
@@ -143,6 +194,8 @@ impl TrafficLedger {
             w.write_u64(k);
         }
         w.write_u64(self.messages);
+        w.write_u64(self.dropped);
+        w.write_u64(self.retrans);
     }
 
     pub fn read_from(r: &mut crate::sim::SnapshotReader) -> anyhow::Result<TrafficLedger> {
@@ -158,13 +211,16 @@ impl TrafficLedger {
             *k = r.read_u64()?;
         }
         let messages = r.read_u64()?;
-        Ok(TrafficLedger { usage, by_kind, messages })
+        let dropped = r.read_u64()?;
+        let retrans = r.read_u64()?;
+        Ok(TrafficLedger { usage, by_kind, messages, dropped, retrans })
     }
 
-    /// Conservation check: every sent byte was received exactly once.
+    /// Conservation check: every sent byte was either received exactly
+    /// once or accounted as dropped in flight.
     pub fn is_conserved(&self) -> bool {
         self.usage.iter().map(|u| u[SENT]).sum::<u64>()
-            == self.usage.iter().map(|u| u[RECV]).sum::<u64>()
+            == self.usage.iter().map(|u| u[RECV]).sum::<u64>() + self.dropped
     }
 }
 
@@ -264,6 +320,57 @@ mod tests {
         assert!(t.is_conserved());
         let (min, max) = t.min_max_usage(8);
         assert!(min > 0 && max >= min);
+    }
+
+    #[test]
+    fn dropped_attempts_split_from_goodput() {
+        let mut t = TrafficLedger::new(3);
+        // First attempt dropped, retransmission delivered.
+        t.record_attempt(0, 1, &[(MsgKind::ModelPayload, 1000)], false, false);
+        t.record_attempt(0, 1, &[(MsgKind::ModelPayload, 1000)], true, true);
+        // An untouched plain delivery.
+        t.record(2, 1, MsgKind::Control, 50);
+        assert_eq!(t.total(), 2050, "wire cost counts every attempt");
+        assert_eq!(t.dropped_bytes(), 1000);
+        assert_eq!(t.retransmitted_bytes(), 1000);
+        assert_eq!(t.goodput(), 50);
+        assert_eq!(t.messages(), 3);
+        // Receiver saw only delivered bytes; sender paid for all attempts.
+        assert_eq!(t.node_usage(0), 2000);
+        assert_eq!(t.node_usage(1), 1050);
+        assert!(t.is_conserved());
+    }
+
+    #[test]
+    fn conservation_detects_unaccounted_loss() {
+        let mut t = TrafficLedger::new(2);
+        t.record_attempt(0, 1, &[(MsgKind::Control, 10)], false, false);
+        assert!(t.is_conserved(), "dropped bytes are accounted");
+        // A duplicate delivered retransmission that never lost its original
+        // still conserves: retrans is a sub-classification of received.
+        t.record_attempt(0, 1, &[(MsgKind::Control, 10)], true, true);
+        assert!(t.is_conserved());
+        assert_eq!(t.goodput(), 0);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_loss_columns() {
+        let mut t = TrafficLedger::new(2);
+        t.record_attempt(0, 1, &[(MsgKind::ModelPayload, 700)], false, false);
+        t.record_attempt(0, 1, &[(MsgKind::ModelPayload, 700)], true, true);
+        let mut w = crate::sim::SnapshotWriter::new();
+        w.begin_section("ledger");
+        t.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+        let mut r = crate::sim::SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("ledger").unwrap();
+        let back = TrafficLedger::read_from(&mut r).unwrap();
+        assert_eq!(back.dropped_bytes(), 700);
+        assert_eq!(back.retransmitted_bytes(), 700);
+        assert_eq!(back.goodput(), 0);
+        assert_eq!(back.total(), t.total());
+        assert!(back.is_conserved());
     }
 
     #[test]

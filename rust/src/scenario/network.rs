@@ -28,7 +28,8 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::net::{BandwidthClass, BandwidthConfig, LatencyParams};
+use crate::net::{BandwidthClass, BandwidthConfig, LatencyParams, LossModel};
+use crate::sim::{ReliabilityConfig, SimTime};
 use crate::util::Json;
 
 /// The `network.latency` section: knobs of the synthetic WAN geography
@@ -178,6 +179,217 @@ impl TierSpec {
     }
 }
 
+/// Which fault-injection model the `network.loss` section describes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LossModelSpec {
+    /// Flat per-message drop probability on every link.
+    Uniform { p: f64 },
+    /// Per-tier drop probabilities riding the `network.classes` bandwidth
+    /// tiers (entry `i` applies to nodes assigned tier `i`); a transfer is
+    /// dropped when either endpoint's tier loses it.
+    Classes { tiers: Vec<f64> },
+    /// Two-state Gilbert–Elliott channel per receiver: exponential dwell
+    /// times in a good and a bad state, each with its own drop probability.
+    Burst { p_good: f64, p_bad: f64, good_s: f64, bad_s: f64 },
+}
+
+/// The `network.loss` section: deterministic per-message fault injection
+/// plus the timeout/retransmit/backoff contract every protocol's
+/// reliability layer runs under.
+///
+/// ```json
+/// "loss": {"model": "burst", "p_good": 0.01, "p_bad": 0.5,
+///          "good_s": 10.0, "bad_s": 2.0,
+///          "timeout_s": 2.0, "backoff": 2.0, "max_timeout_s": 30.0,
+///          "retries": 3}
+/// ```
+///
+/// A lossless section (`p = 0` everywhere) compiles to *no* loss layer and
+/// *no* reliability layer, so such sessions replay pre-loss same-seed
+/// fingerprints bit-identically.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LossSpec {
+    pub model: LossModelSpec,
+    /// Ack timeout (seconds) before the first retransmit.
+    pub timeout_s: f64,
+    /// Multiplicative backoff factor applied per retransmit (>= 1).
+    pub backoff: f64,
+    /// Ceiling on the backed-off retransmit timeout (seconds).
+    pub max_timeout_s: f64,
+    /// Retransmit cap: after this many retries the message expires and the
+    /// protocol's degradation path runs.
+    pub retries: u32,
+}
+
+impl LossSpec {
+    pub fn from_json(v: &Json) -> Result<LossSpec> {
+        let mut model = String::from("uniform");
+        let mut p: Option<f64> = None;
+        let mut tiers: Option<Vec<f64>> = None;
+        let mut p_good: Option<f64> = None;
+        let mut p_bad: Option<f64> = None;
+        let mut good_s: Option<f64> = None;
+        let mut bad_s: Option<f64> = None;
+        let mut timeout_s = 2.0;
+        let mut backoff = 2.0;
+        let mut max_timeout_s = 30.0;
+        let mut retries = 3u64;
+        for (key, val) in v.as_obj()? {
+            match key.as_str() {
+                "model" => model = val.as_str()?.to_string(),
+                "p" => p = Some(val.as_f64()?),
+                "tiers" => {
+                    tiers = Some(
+                        val.as_arr()?
+                            .iter()
+                            .map(Json::as_f64)
+                            .collect::<Result<Vec<_>>>()?,
+                    )
+                }
+                "p_good" => p_good = Some(val.as_f64()?),
+                "p_bad" => p_bad = Some(val.as_f64()?),
+                "good_s" => good_s = Some(val.as_f64()?),
+                "bad_s" => bad_s = Some(val.as_f64()?),
+                "timeout_s" => timeout_s = val.as_f64()?,
+                "backoff" => backoff = val.as_f64()?,
+                "max_timeout_s" => max_timeout_s = val.as_f64()?,
+                "retries" => retries = val.as_u64()?,
+                other => bail!("unknown loss key {other:?}"),
+            }
+        }
+        let check_p = |name: &str, v: f64| -> Result<()> {
+            anyhow::ensure!(
+                v.is_finite() && (0.0..=1.0).contains(&v),
+                "loss.{name} must be a drop probability in [0, 1], got {v}"
+            );
+            Ok(())
+        };
+        let check_dwell = |name: &str, v: f64| -> Result<()> {
+            anyhow::ensure!(
+                v.is_finite() && v > 0.0,
+                "loss.{name} must be a finite positive dwell time in seconds, got {v}"
+            );
+            Ok(())
+        };
+        let model = match model.as_str() {
+            "uniform" => {
+                anyhow::ensure!(
+                    tiers.is_none()
+                        && p_good.is_none()
+                        && p_bad.is_none()
+                        && good_s.is_none()
+                        && bad_s.is_none(),
+                    "loss model \"uniform\" takes only \"p\" (classes/burst keys present)"
+                );
+                let p = p.unwrap_or(0.0);
+                check_p("p", p)?;
+                LossModelSpec::Uniform { p }
+            }
+            "classes" => {
+                anyhow::ensure!(
+                    p.is_none()
+                        && p_good.is_none()
+                        && p_bad.is_none()
+                        && good_s.is_none()
+                        && bad_s.is_none(),
+                    "loss model \"classes\" takes only \"tiers\" (uniform/burst keys present)"
+                );
+                let tiers = tiers.ok_or_else(|| {
+                    anyhow!(
+                        "loss model \"classes\" needs a \"tiers\" array of per-tier drop \
+                         probabilities"
+                    )
+                })?;
+                anyhow::ensure!(!tiers.is_empty(), "loss.tiers must not be empty");
+                for (i, &t) in tiers.iter().enumerate() {
+                    check_p(&format!("tiers[{i}]"), t)?;
+                }
+                LossModelSpec::Classes { tiers }
+            }
+            "burst" => {
+                anyhow::ensure!(
+                    p.is_none() && tiers.is_none(),
+                    "loss model \"burst\" takes p_good/p_bad/good_s/bad_s \
+                     (uniform/classes keys present)"
+                );
+                let p_good = p_good.unwrap_or(0.0);
+                let p_bad = p_bad.unwrap_or(0.0);
+                let good_s = good_s.unwrap_or(10.0);
+                let bad_s = bad_s.unwrap_or(1.0);
+                check_p("p_good", p_good)?;
+                check_p("p_bad", p_bad)?;
+                check_dwell("good_s", good_s)?;
+                check_dwell("bad_s", bad_s)?;
+                LossModelSpec::Burst { p_good, p_bad, good_s, bad_s }
+            }
+            other => bail!(
+                "unknown loss model {other:?} (expected \"uniform\", \"classes\", or \"burst\")"
+            ),
+        };
+        anyhow::ensure!(
+            timeout_s.is_finite() && timeout_s > 0.0,
+            "loss.timeout_s must be a finite positive number of seconds, got {timeout_s}"
+        );
+        anyhow::ensure!(
+            backoff.is_finite() && backoff >= 1.0,
+            "loss.backoff must be a finite factor >= 1, got {backoff}"
+        );
+        anyhow::ensure!(
+            max_timeout_s.is_finite() && max_timeout_s >= timeout_s,
+            "loss.max_timeout_s must be >= timeout_s ({timeout_s}), got {max_timeout_s}"
+        );
+        anyhow::ensure!(
+            (1..=u32::MAX as u64).contains(&retries),
+            "loss.retries must be in [1, {}], got {retries} (remove the loss section to \
+             disable retransmits entirely)",
+            u32::MAX
+        );
+        Ok(LossSpec {
+            model,
+            timeout_s,
+            backoff,
+            max_timeout_s,
+            retries: retries as u32,
+        })
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut kv: Vec<(&str, Json)> = match &self.model {
+            LossModelSpec::Uniform { p } => vec![
+                ("model", Json::Str("uniform".into())),
+                ("p", Json::Num(*p)),
+            ],
+            LossModelSpec::Classes { tiers } => vec![
+                ("model", Json::Str("classes".into())),
+                ("tiers", Json::Arr(tiers.iter().map(|&t| Json::Num(t)).collect())),
+            ],
+            LossModelSpec::Burst { p_good, p_bad, good_s, bad_s } => vec![
+                ("model", Json::Str("burst".into())),
+                ("p_good", Json::Num(*p_good)),
+                ("p_bad", Json::Num(*p_bad)),
+                ("good_s", Json::Num(*good_s)),
+                ("bad_s", Json::Num(*bad_s)),
+            ],
+        };
+        kv.push(("timeout_s", Json::Num(self.timeout_s)));
+        kv.push(("backoff", Json::Num(self.backoff)));
+        kv.push(("max_timeout_s", Json::Num(self.max_timeout_s)));
+        kv.push(("retries", Json::Num(self.retries as f64)));
+        Json::obj(kv)
+    }
+
+    /// `true` when every drop probability is exactly zero — the section is
+    /// then compiled away entirely (no loss layer, no reliability layer, no
+    /// extra RNG stream), preserving pre-loss fingerprints bit-for-bit.
+    pub fn is_lossless(&self) -> bool {
+        match &self.model {
+            LossModelSpec::Uniform { p } => *p == 0.0,
+            LossModelSpec::Classes { tiers } => tiers.iter().all(|&t| t == 0.0),
+            LossModelSpec::Burst { p_good, p_bad, .. } => *p_good == 0.0 && *p_bad == 0.0,
+        }
+    }
+}
+
 /// The `network` section of a [`super::ScenarioSpec`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct NetworkSpec {
@@ -196,6 +408,9 @@ pub struct NetworkSpec {
     /// Synthetic WAN geography shaping; absent = the built-in defaults
     /// seeded from `run.seed` (bit-identical to pre-section behaviour).
     pub latency: Option<LatencySpec>,
+    /// Per-message fault injection + reliability contract; absent (or
+    /// all-zero) = today's exactly-once delivery, bit-identical.
+    pub loss: Option<LossSpec>,
 }
 
 impl Default for NetworkSpec {
@@ -206,6 +421,7 @@ impl Default for NetworkSpec {
             classes: Vec::new(),
             trace_file: None,
             latency: None,
+            loss: None,
         }
     }
 }
@@ -238,8 +454,29 @@ impl NetworkSpec {
                         Some(LatencySpec::from_json(val)?)
                     }
                 }
+                "loss" => {
+                    out.loss = if *val == Json::Null {
+                        None
+                    } else {
+                        Some(LossSpec::from_json(val)?)
+                    }
+                }
                 other => bail!("unknown network key {other:?}"),
             }
+        }
+        if let Some(LossSpec { model: LossModelSpec::Classes { tiers }, .. }) = &out.loss {
+            anyhow::ensure!(
+                !out.classes.is_empty(),
+                "loss model \"classes\" needs network.classes bandwidth tiers to ride on, \
+                 but none are configured"
+            );
+            anyhow::ensure!(
+                tiers.len() == out.classes.len(),
+                "loss.tiers has {} entries but network.classes has {} tiers — they must \
+                 match one-to-one",
+                tiers.len(),
+                out.classes.len()
+            );
         }
         Ok(out)
     }
@@ -266,7 +503,47 @@ impl NetworkSpec {
                     None => Json::Null,
                 },
             ),
+            (
+                "loss",
+                match &self.loss {
+                    Some(l) => l.to_json(),
+                    None => Json::Null,
+                },
+            ),
         ])
+    }
+
+    /// Compile the loss section into the fabric's runtime drop model.
+    /// `None` when the section is absent *or* lossless — those sessions run
+    /// with no loss layer at all and replay pre-loss fingerprints.
+    pub fn loss_model(&self) -> Option<LossModel> {
+        let spec = self.loss.as_ref()?;
+        if spec.is_lossless() {
+            return None;
+        }
+        Some(match &spec.model {
+            LossModelSpec::Uniform { p } => LossModel::Uniform { p: *p },
+            LossModelSpec::Classes { tiers } => LossModel::Classes { tier_p: tiers.clone() },
+            LossModelSpec::Burst { p_good, p_bad, good_s, bad_s } => LossModel::Burst {
+                p_good: *p_good,
+                p_bad: *p_bad,
+                good_mean_s: *good_s,
+                bad_mean_s: *bad_s,
+            },
+        })
+    }
+
+    /// The ack/timeout/retransmit contract protocols run under, present
+    /// exactly when [`Self::loss_model`] is.
+    pub fn reliability(&self) -> Option<ReliabilityConfig> {
+        self.loss_model()?;
+        let spec = self.loss.as_ref().expect("loss_model implies loss spec");
+        Some(ReliabilityConfig {
+            timeout: SimTime::from_secs_f64(spec.timeout_s),
+            backoff: spec.backoff,
+            max_timeout: SimTime::from_secs_f64(spec.max_timeout_s),
+            retries: spec.retries,
+        })
     }
 
     /// Compile this section into the per-node capacity distribution the
@@ -492,9 +769,174 @@ mod tests {
             }],
             trace_file: None,
             latency: Some(LatencySpec { cities: 12, seed: Some(3), ..Default::default() }),
+            loss: Some(LossSpec {
+                model: LossModelSpec::Classes { tiers: vec![0.25] },
+                timeout_s: 1.5,
+                backoff: 1.5,
+                max_timeout_s: 20.0,
+                retries: 4,
+            }),
         };
         let back = NetworkSpec::from_json(&Json::parse(&spec.to_json().to_string()).unwrap())
             .unwrap();
         assert_eq!(spec, back);
+    }
+
+    fn parse_loss(body: &str) -> Result<NetworkSpec> {
+        NetworkSpec::from_json(&Json::parse(body).unwrap())
+    }
+
+    #[test]
+    fn loss_section_parses_every_model() {
+        let s = parse_loss(r#"{"loss": {"model": "uniform", "p": 0.2}}"#).unwrap();
+        assert_eq!(
+            s.loss.as_ref().unwrap().model,
+            LossModelSpec::Uniform { p: 0.2 }
+        );
+        assert!(matches!(s.loss_model(), Some(LossModel::Uniform { p }) if p == 0.2));
+        let rel = s.reliability().unwrap();
+        assert_eq!(rel.timeout, SimTime::from_secs_f64(2.0));
+        assert_eq!(rel.retries, 3);
+
+        // "model" defaults to uniform; bare {"p": ...} works.
+        let s = parse_loss(r#"{"loss": {"p": 0.1}}"#).unwrap();
+        assert_eq!(s.loss.as_ref().unwrap().model, LossModelSpec::Uniform { p: 0.1 });
+
+        let s = parse_loss(
+            r#"{"classes": [{"weight": 1.0, "up_mbps": 10.0, "down_mbps": 50.0},
+                            {"weight": 1.0, "up_mbps": 1.0, "down_mbps": 8.0}],
+                "loss": {"model": "classes", "tiers": [0.0, 0.3]}}"#,
+        )
+        .unwrap();
+        assert!(
+            matches!(s.loss_model(), Some(LossModel::Classes { ref tier_p }) if tier_p == &[0.0, 0.3])
+        );
+
+        let s = parse_loss(
+            r#"{"loss": {"model": "burst", "p_good": 0.01, "p_bad": 0.5,
+                         "good_s": 30.0, "bad_s": 3.0,
+                         "timeout_s": 1.0, "backoff": 3.0, "max_timeout_s": 10.0,
+                         "retries": 2}}"#,
+        )
+        .unwrap();
+        assert!(matches!(
+            s.loss_model(),
+            Some(LossModel::Burst { p_bad, bad_mean_s, .. }) if p_bad == 0.5 && bad_mean_s == 3.0
+        ));
+        let rel = s.reliability().unwrap();
+        assert_eq!(rel.backoff, 3.0);
+        assert_eq!(rel.retries, 2);
+    }
+
+    #[test]
+    fn lossless_sections_compile_away() {
+        // Absent, null, and all-zero sections all yield no loss model and
+        // no reliability layer — the bit-identical replay guarantee.
+        for body in [
+            r#"{}"#,
+            r#"{"loss": null}"#,
+            r#"{"loss": {"model": "uniform", "p": 0.0}}"#,
+            r#"{"loss": {"model": "burst", "p_good": 0.0, "p_bad": 0.0}}"#,
+        ] {
+            let s = parse_loss(body).unwrap();
+            assert!(s.loss_model().is_none(), "{body} produced a loss model");
+            assert!(s.reliability().is_none(), "{body} produced a reliability cfg");
+        }
+        let s = parse_loss(
+            r#"{"classes": [{"weight": 1.0, "up_mbps": 10.0, "down_mbps": 50.0}],
+                "loss": {"model": "classes", "tiers": [0.0]}}"#,
+        )
+        .unwrap();
+        assert!(s.loss_model().is_none());
+    }
+
+    #[test]
+    fn loss_probabilities_outside_unit_interval_fail_loudly() {
+        for (body, needle) in [
+            (r#"{"loss": {"p": 1.5}}"#, "loss.p must be a drop probability in [0, 1]"),
+            (r#"{"loss": {"p": -0.1}}"#, "loss.p must be a drop probability in [0, 1]"),
+            (
+                r#"{"loss": {"model": "burst", "p_good": 2.0}}"#,
+                "loss.p_good must be a drop probability in [0, 1]",
+            ),
+            (
+                r#"{"loss": {"model": "burst", "p_bad": -1.0}}"#,
+                "loss.p_bad must be a drop probability in [0, 1]",
+            ),
+        ] {
+            let err = parse_loss(body).unwrap_err().to_string();
+            assert!(err.contains(needle), "{body}: {err}");
+        }
+        // Out-of-range tier probabilities name the offending index.
+        let err = parse_loss(
+            r#"{"classes": [{"weight": 1.0, "up_mbps": 10.0, "down_mbps": 50.0},
+                            {"weight": 1.0, "up_mbps": 1.0, "down_mbps": 8.0}],
+                "loss": {"model": "classes", "tiers": [0.1, 7.0]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("loss.tiers[1]"), "{err}");
+    }
+
+    #[test]
+    fn non_positive_dwell_times_fail_loudly() {
+        for body in [
+            r#"{"loss": {"model": "burst", "p_bad": 0.5, "good_s": 0.0}}"#,
+            r#"{"loss": {"model": "burst", "p_bad": 0.5, "bad_s": -2.0}}"#,
+        ] {
+            let err = parse_loss(body).unwrap_err().to_string();
+            assert!(err.contains("dwell time"), "{body}: {err}");
+        }
+    }
+
+    #[test]
+    fn classes_loss_tier_count_must_match_bandwidth_tiers() {
+        // Mismatched counts.
+        let err = parse_loss(
+            r#"{"classes": [{"weight": 1.0, "up_mbps": 10.0, "down_mbps": 50.0},
+                            {"weight": 1.0, "up_mbps": 1.0, "down_mbps": 8.0}],
+                "loss": {"model": "classes", "tiers": [0.1]}}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("1 entries") && err.contains("2 tiers"), "{err}");
+        // Classes loss with no bandwidth tiers at all.
+        let err = parse_loss(r#"{"loss": {"model": "classes", "tiers": [0.1]}}"#)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("none are configured"), "{err}");
+        // Missing/empty tiers array.
+        assert!(parse_loss(r#"{"loss": {"model": "classes"}}"#).is_err());
+        assert!(parse_loss(
+            r#"{"classes": [{"weight": 1.0, "up_mbps": 10.0, "down_mbps": 50.0}],
+                "loss": {"model": "classes", "tiers": []}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn retry_and_backoff_params_validate() {
+        for (body, needle) in [
+            (r#"{"loss": {"p": 0.1, "timeout_s": 0.0}}"#, "loss.timeout_s"),
+            (r#"{"loss": {"p": 0.1, "timeout_s": -3.0}}"#, "loss.timeout_s"),
+            (r#"{"loss": {"p": 0.1, "backoff": 0.5}}"#, "loss.backoff"),
+            (
+                r#"{"loss": {"p": 0.1, "timeout_s": 5.0, "max_timeout_s": 1.0}}"#,
+                "loss.max_timeout_s",
+            ),
+            (r#"{"loss": {"p": 0.1, "retries": 0}}"#, "loss.retries"),
+        ] {
+            let err = parse_loss(body).unwrap_err().to_string();
+            assert!(err.contains(needle), "{body}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_loss_keys_and_models_fail() {
+        assert!(parse_loss(r#"{"loss": {"modle": "uniform"}}"#).is_err());
+        assert!(parse_loss(r#"{"loss": {"model": "gilbert"}}"#).is_err());
+        // Keys from another model are rejected, not silently ignored.
+        assert!(parse_loss(r#"{"loss": {"model": "uniform", "p_bad": 0.5}}"#).is_err());
+        assert!(parse_loss(r#"{"loss": {"model": "burst", "p": 0.5}}"#).is_err());
     }
 }

@@ -604,7 +604,13 @@ impl ScenarioSpec {
         let latency = self.build_latency(n);
         let bw = self.network.bandwidth_config()?;
         let mut rng = SimRng::new(self.run.seed).fork("bandwidth");
-        Ok(NetworkFabric::new(latency, &bw, n, &mut rng))
+        let mut fabric = NetworkFabric::new(latency, &bw, n, &mut rng);
+        if let Some(model) = self.network.loss_model() {
+            // A dedicated stream: lossless sessions never fork it, so
+            // their draw sequences — and fingerprints — are unchanged.
+            fabric.set_loss(model, SimRng::new(self.run.seed).fork("loss"));
+        }
+        Ok(fabric)
     }
 
     pub fn build_compute(&self, n: usize) -> ComputeModel {

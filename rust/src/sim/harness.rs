@@ -167,15 +167,41 @@ impl<M> Ctx<'_, M> {
 
     /// Send `msg` from `from` to `to`, charging `parts` bytes against the
     /// fabric (ledger + latency + per-link FIFO capacity). Self-sends are
-    /// loopback: no traffic, no delay.
+    /// loopback: no traffic, no delay. Under fault injection the fabric
+    /// may drop the message in flight — the bytes are charged and the
+    /// `Deliver` never fires; senders that must know arm an ack through
+    /// [`crate::sim::ReliableOutbox`].
     pub fn send(&mut self, from: NodeId, to: NodeId, parts: &[(MsgKind, u64)], msg: M) {
+        self.send_attempt(from, to, parts, msg, false);
+    }
+
+    /// [`Ctx::send`] with the ledger's retransmission tag: delivered bytes
+    /// count as wire cost but not goodput. Only the reliability layer
+    /// sends these.
+    pub fn send_retransmit(&mut self, from: NodeId, to: NodeId, parts: &[(MsgKind, u64)], msg: M) {
+        self.send_attempt(from, to, parts, msg, true);
+    }
+
+    fn send_attempt(
+        &mut self,
+        from: NodeId,
+        to: NodeId,
+        parts: &[(MsgKind, u64)],
+        msg: M,
+        retransmit: bool,
+    ) {
         if from == to {
             self.queue
                 .schedule_in(SimTime::ZERO, HarnessEvent::Deliver { to, msg });
             return;
         }
-        let at = self.fabric.transfer(self.queue.now(), from, to, parts);
-        self.queue.schedule_at(at, HarnessEvent::Deliver { to, msg });
+        match self
+            .fabric
+            .try_transfer(self.queue.now(), from, to, parts, retransmit)
+        {
+            Some(at) => self.queue.schedule_at(at, HarnessEvent::Deliver { to, msg }),
+            None => {} // lost in flight: charged, never delivered
+        }
     }
 
     /// Deliver `msg` to `to` immediately without touching the network

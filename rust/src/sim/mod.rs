@@ -15,6 +15,7 @@ pub mod engine;
 pub mod harness;
 pub mod node_table;
 pub mod population;
+pub mod reliability;
 pub mod rng;
 pub mod snapshot;
 pub mod time;
@@ -24,6 +25,9 @@ pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent}
 pub use node_table::NodeTable;
 pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, ResumeOptions, SimHarness};
 pub use population::{LivenessMirror, Population, Status};
+pub use reliability::{
+    Pending, ReliabilityConfig, ReliableOutbox, TimerVerdict, RELIABLE_TIMER_BIT,
+};
 pub use rng::{SamplingVersion, SimRng};
 pub use snapshot::{SnapshotReader, SnapshotWriter, SNAPSHOT_MAGIC, SNAPSHOT_VERSION};
 pub use time::SimTime;

@@ -49,7 +49,10 @@ use super::time::SimTime;
 /// First 8 bytes of every snapshot file.
 pub const SNAPSHOT_MAGIC: [u8; 8] = *b"MDSTSNAP";
 /// Current snapshot format version. Bump on ANY wire-layout change.
-pub const SNAPSHOT_VERSION: u32 = 1;
+/// v2: fabric gained per-node bandwidth tiers + the loss layer, the
+/// ledger its dropped/retransmitted columns, metrics the goodput split,
+/// and protocol sections their reliability outboxes.
+pub const SNAPSHOT_VERSION: u32 = 2;
 
 /// Sentinel model index meaning "inline payload follows" (vs a back-ref).
 const MODEL_INLINE: u32 = u32::MAX;

@@ -16,7 +16,7 @@ use super::json::Json;
 /// Bench-name prefixes whose regression fails the build. Everything else
 /// (aggregation kernels, view merges, ...) is tracked but advisory.
 pub const GUARDED_PREFIXES: &[&str] =
-    &["des/queue/", "fanout/", "sample/", "mem/", "snapshot/"];
+    &["des/queue/", "fanout/", "sample/", "mem/", "snapshot/", "loss/", "reliability/"];
 
 /// Guarded rows faster than this in BOTH snapshots are exempt from the
 /// ratio gate: a 2x swing on a tens-of-nanoseconds row is scheduler noise
@@ -229,6 +229,25 @@ mod tests {
         let bad = regressions(&compare_trend(&base, &new), 2.0);
         assert_eq!(bad.len(), 1);
         assert_eq!(bad[0].name, "snapshot/write/n=100k");
+        assert!(bad[0].guarded);
+    }
+
+    #[test]
+    fn loss_and_reliability_rows_are_guarded() {
+        // The fault-injection decision sits on the fabric's per-transfer
+        // hot path and the retransmit sweep bounds the outbox overhead; a
+        // 2x regression on either must fail the build like the DES queue.
+        let base = snapshot(&[
+            ("loss/decide/n=100000", 400_000),
+            ("reliability/retransmit-sweep/n=64,p=0.3", 8_000_000),
+        ]);
+        let new = snapshot(&[
+            ("loss/decide/n=100000", 1_000_000),
+            ("reliability/retransmit-sweep/n=64,p=0.3", 8_500_000),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "loss/decide/n=100000");
         assert!(bad[0].guarded);
     }
 

@@ -87,6 +87,63 @@ fn resume_matches_uninterrupted_for_every_protocol() {
     }
 }
 
+/// The lossy variant of [`churned_spec`]: ~20% average Gilbert–Elliott
+/// burst loss rides the same step churn, so snapshots taken mid-run carry
+/// in-flight retransmit state (armed outbox timers, pending attempts) and
+/// the loss RNG's channel states. Short retransmit timeouts keep outboxes
+/// busy at every checkpoint instant.
+fn lossy_churned_spec(protocol: &str) -> ScenarioSpec {
+    ScenarioSpec::from_json(&format!(
+        r#"{{
+            "workload": {{"dataset": "mock"}},
+            "population": {{"nodes": 14, "availability": {{
+                "model": "step", "amplitude": 0.3, "period_s": 50.0, "seed": 5}}}},
+            "protocol": {{"name": "{protocol}", "s": 4, "a": 2}},
+            "network": {{"loss": {{
+                "model": "burst", "p_good": 0.05, "p_bad": 0.5,
+                "good_s": 15.0, "bad_s": 7.5,
+                "timeout_s": 2.0, "backoff": 2.0, "max_timeout_s": 8.0,
+                "retries": 2}}}},
+            "run": {{"max_time_s": 400.0, "max_rounds": 18,
+                     "eval_interval_s": 10.0, "seed": 4242}}
+        }}"#
+    ))
+    .unwrap()
+}
+
+/// Under burst loss + churn, a checkpoint/resume must still be
+/// bit-identical to the uninterrupted run: the loss layer's per-receiver
+/// channel states, the forked loss RNG, and every protocol's in-flight
+/// retransmit state (seq counters, attempt counts, armed timers) all ride
+/// the snapshot. A single dropped or double-fired retransmit after resume
+/// would shift the event count and the ledger's drop column.
+#[test]
+fn lossy_resume_matches_uninterrupted_for_every_protocol() {
+    for name in ProtocolRegistry::builtins().names() {
+        let spec = lossy_churned_spec(name);
+        let (m0, t0) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        assert!(m0.events > 0 && t0.total() > 0, "{name} did nothing");
+        assert!(t0.dropped_bytes() > 0, "{name}: burst loss dropped nothing");
+        let want = fingerprint(&m0, &t0);
+        for (i, frac) in [0.3, 0.7].into_iter().enumerate() {
+            let at_s = m0.duration_s * frac;
+            let bytes = checkpoint_run(&spec, at_s, &format!("{name}_lossy_{i}"));
+            let (_, session) = resume_session(&bytes, None, None, None).unwrap();
+            let (m1, t1) = session.run();
+            assert_eq!(
+                fingerprint(&m1, &t1),
+                want,
+                "{name}: lossy resume from t={at_s:.1}s diverged from the uninterrupted run"
+            );
+            assert_eq!(
+                (t1.dropped_bytes(), t1.retransmitted_bytes()),
+                (t0.dropped_bytes(), t0.retransmitted_bytes()),
+                "{name}: loss columns diverged after resume"
+            );
+        }
+    }
+}
+
 #[test]
 fn snapshot_write_read_write_is_byte_identical() {
     for name in ProtocolRegistry::builtins().names() {
