@@ -24,7 +24,10 @@
 //! * **checkpoint/restore** at n=100k — full-session snapshot
 //!   serialization (`snapshot/write`), the complete resume path
 //!   (`snapshot/read`), and the on-disk size (`snapshot/bytes`), all
-//!   guarded rows.
+//!   guarded rows,
+//! * **streaming observability** — histogram record and HLL insert on the
+//!   per-transfer hot path, plus one full progress-tick render over
+//!   100k-sample state (`obs/*`, guarded).
 //!
 //! Run: `cargo bench --bench hotpaths` (BENCH_FAST=1 for a smoke pass).
 //! Results are also written machine-readable to `BENCH_hotpaths.json`
@@ -46,8 +49,8 @@ use modest_dl::scenario::{resume_session, run_scenario, ScenarioSpec};
 #[cfg(feature = "xla")]
 use modest_dl::runtime::XlaRuntime;
 use modest_dl::sim::{
-    CalendarEventQueue, ChurnSchedule, HeapEventQueue, Population, ReliabilityConfig,
-    SamplingVersion, SimRng, SimTime,
+    CalendarEventQueue, ChurnSchedule, HeapEventQueue, Hll, Population, ProgressLine,
+    ReliabilityConfig, SamplingVersion, SimRng, SimTime, StreamHistogram,
 };
 use modest_dl::util::bench::{black_box, Bencher};
 use modest_dl::NodeId;
@@ -493,6 +496,71 @@ fn main() {
         });
         b.bench("view/candidates/500-nodes", || {
             black_box(black_box(&a).candidates(50, 20));
+        });
+    }
+
+    // ---- streaming observability: the sketch operations sit on the
+    // per-transfer (histogram record, HLL insert) and per-round hot paths
+    // of every instrumented session, and the progress tick is promised to
+    // be bounded work regardless of session size. All rows are guarded
+    // (`obs/` prefix in the CI bench-diff gate). Single records are a few
+    // ns — below MIN_GUARDED_NS — so the record/insert rows batch enough
+    // work per iteration to sit safely above the noise exemption.
+    {
+        let mut h = StreamHistogram::new();
+        let mut x = 0x0B5u64;
+        b.bench("obs/hist-record/x1024", || {
+            for _ in 0..1024 {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                h.record(x >> 40);
+            }
+            black_box(h.total());
+        });
+        for n in [10_000u64, 100_000] {
+            let mut hll = Hll::with_salt(0x0B5);
+            b.bench(&format!("obs/hll-insert/n={n}"), || {
+                for i in 0..n {
+                    hll.insert(i);
+                }
+                black_box(hll.inserts());
+            });
+        }
+        // One progress tick over 100k-sample state: the quantile scans and
+        // HLL estimates dominate; the render reuses one buffer, so the
+        // steady-state tick allocates nothing (the /proc RSS read is left
+        // out — fs latency would only add CI noise to the guarded row).
+        let mut round_hist = StreamHistogram::new();
+        let mut lat_hist = StreamHistogram::new();
+        let mut peers = Hll::with_salt(0x7151);
+        let mut trainers = Hll::with_salt(0x7152);
+        for i in 0..100_000u64 {
+            round_hist.record(1_000_000 + (i * 7919) % 5_000_000);
+            lat_hist.record(10_000 + (i * 104_729) % 900_000);
+            peers.insert(i);
+            trainers.insert(i / 10);
+        }
+        let mut buf = String::new();
+        b.bench("obs/progress-tick/n=100000", || {
+            let line = ProgressLine {
+                t_s: 40.0,
+                alive: 100_000,
+                rounds: 2,
+                events: 1_000_000,
+                msgs: round_hist.total(),
+                bytes_total: 1 << 30,
+                bytes_goodput: 1 << 30,
+                round_p50_s: round_hist.quantile(0.5) as f64 / 1e6,
+                round_p95_s: round_hist.quantile(0.95) as f64 / 1e6,
+                lat_p50_ms: lat_hist.quantile(0.5) as f64 / 1e3,
+                lat_p95_ms: lat_hist.quantile(0.95) as f64 / 1e3,
+                xfer_p50_b: lat_hist.quantile(0.5),
+                peers_est: peers.count(),
+                trainers_est: trainers.count(),
+                ..Default::default()
+            };
+            buf.clear();
+            line.render(&mut buf);
+            black_box(buf.len());
         });
     }
 

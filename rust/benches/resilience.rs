@@ -64,7 +64,7 @@ fn main() {
             max
         );
     }
-    let last_round = m.round_starts.last().map(|&(r, t)| (r, t)).unwrap_or((0, 0.0));
+    let last_round = m.round_starts.last().unwrap_or((0, 0.0));
     println!();
     println!(
         "progress: round {} at t={:.0}s (crashes ended ~{crash_end:.0}s); best metric {:.3}",

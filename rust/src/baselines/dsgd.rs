@@ -56,6 +56,8 @@ pub struct DsgdConfig {
     /// network is lossy. `None` keeps every send a plain fire-and-forget
     /// [`Ctx::send`] with zero extra events or state.
     pub reliability: Option<ReliabilityConfig>,
+    /// Live JSONL progress stream (None = off).
+    pub progress: Option<crate::sim::ProgressConfig>,
 }
 
 impl Default for DsgdConfig {
@@ -73,6 +75,7 @@ impl Default for DsgdConfig {
             checkpoint_at: None,
             checkpoint_out: None,
             reliability: None,
+            progress: None,
         }
     }
 }
@@ -90,6 +93,7 @@ impl DsgdConfig {
             spec_json: self.spec_json.clone(),
             checkpoint_at: self.checkpoint_at,
             checkpoint_out: self.checkpoint_out.clone(),
+            progress: self.progress.clone(),
         }
     }
 }
@@ -648,6 +652,7 @@ pub fn dsgd_config(spec: &ScenarioSpec) -> DsgdConfig {
         checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
         checkpoint_out: spec.run.checkpoint_out.clone(),
         reliability: spec.network.reliability(),
+        progress: None,
     }
 }
 
@@ -696,7 +701,11 @@ impl SessionBuilder for DsgdBuilder {
         let task = spec.build_task(runtime)?;
         let fabric = spec.build_fabric(n)?;
         let compute = spec.build_compute(n);
-        Ok(Box::new(DsgdSession::new(dsgd_config(spec), n, task, compute, fabric, churn)))
+        // `dsgd_config` is infallible; the fallible progress validation
+        // happens here at the spec boundary, like the other builders.
+        let mut cfg = dsgd_config(spec);
+        cfg.progress = spec.progress_config()?;
+        Ok(Box::new(DsgdSession::new(cfg, n, task, compute, fabric, churn)))
     }
 }
 
@@ -779,7 +788,7 @@ mod tests {
         };
         let (m, traffic) = session_with_churn(8, cfg, churn).run();
         assert!(m.final_round >= 25, "barrier stalled at round {}", m.final_round);
-        let late = m.round_starts.iter().filter(|&&(_, t)| t > 60.0).count();
+        let late = m.round_starts.iter().filter(|&(_, t)| t > 60.0).count();
         assert!(late > 5, "no progress after the crash window: {late}");
         assert!(traffic.is_conserved());
     }
@@ -812,13 +821,13 @@ mod tests {
         assert_eq!(a.final_round, b.final_round);
         assert_eq!(ta.total(), tb.total());
         let trace = |m: &SessionMetrics| -> Vec<(Round, u64)> {
-            m.round_starts.iter().map(|&(r, t)| (r, t.to_bits())).collect()
+            m.round_starts.iter().map(|(r, t)| (r, t.to_bits())).collect()
         };
         assert_eq!(trace(&a), trace(&b));
         // The handoff recorded rounds past the leave instant, monotonically.
-        let late = a.round_starts.iter().filter(|&&(_, t)| t > 25.0).count();
+        let late = a.round_starts.iter().filter(|&(_, t)| t > 25.0).count();
         assert!(late > 0, "recorder handoff lost the trace after node 0 left");
-        let rounds: Vec<Round> = a.round_starts.iter().map(|&(r, _)| r).collect();
+        let rounds: Vec<Round> = a.round_starts.iter().map(|(r, _)| r).collect();
         let mut sorted = rounds.clone();
         sorted.sort_unstable();
         sorted.dedup();
@@ -855,7 +864,7 @@ mod tests {
         // final_round is the min over LIVE nodes, so a recovered node
         // stuck at its crash-time round would pin it low.
         assert!(m.final_round >= 25, "stalled at round {}", m.final_round);
-        let late = m.round_starts.iter().filter(|&&(_, t)| t > 50.0).count();
+        let late = m.round_starts.iter().filter(|&(_, t)| t > 50.0).count();
         assert!(late > 3, "no progress after the recovery: {late}");
         assert!(traffic.is_conserved());
         // Deterministic replay, monotone trace — same bar as the other
@@ -864,7 +873,7 @@ mod tests {
         assert_eq!(m.events, b.events);
         assert_eq!(m.final_round, b.final_round);
         assert_eq!(traffic.total(), tb.total());
-        let rounds: Vec<Round> = m.round_starts.iter().map(|&(r, _)| r).collect();
+        let rounds: Vec<Round> = m.round_starts.iter().map(|(r, _)| r).collect();
         let mut sorted = rounds.clone();
         sorted.sort_unstable();
         sorted.dedup();

@@ -11,10 +11,19 @@
 //! either snapshot are skipped (benches come and go across PRs), so an
 //! empty baseline passes with a warning: CI falls back to the committed
 //! `rust/BENCH_baseline.json` seed when the base commit has no artifact.
+//!
+//! That skip-and-pass fallback used to be *silent* when it made the gate
+//! vacuous: a base snapshot that was empty, or simply predated a guarded
+//! prefix, let every row under it sail through unchecked with no trace in
+//! the log. Both cases now emit GitHub `::warning::` annotations (via
+//! [`missing_guarded_coverage`]) so a green gate that checked nothing is
+//! visible on the PR.
 
 use anyhow::{bail, Context, Result};
 
-use modest_dl::util::trend::{compare_trend, parse_snapshot, regressions};
+use modest_dl::util::trend::{
+    compare_trend, missing_guarded_coverage, parse_snapshot, regressions,
+};
 
 fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,6 +52,19 @@ fn main() -> Result<()> {
     let new = parse_snapshot(
         &std::fs::read_to_string(new_path).with_context(|| new_path.to_string())?,
     )?;
+
+    if base.is_empty() {
+        println!(
+            "::warning::bench-diff: base snapshot {base_path} has no rows — \
+             the trend gate is vacuous for this run"
+        );
+    }
+    for prefix in missing_guarded_coverage(&base, &new) {
+        println!(
+            "::warning::bench-diff: base snapshot {base_path} has no rows under \
+             guarded prefix {prefix:?} — regressions there cannot be caught this run"
+        );
+    }
 
     let diffs = compare_trend(&base, &new);
     if diffs.is_empty() {

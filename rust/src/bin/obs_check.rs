@@ -1,0 +1,196 @@
+//! `obs-check` — the observability gate CI runs against live sessions.
+//!
+//! ```text
+//! obs_check selftest
+//! obs_check progress FILE.jsonl
+//! ```
+//!
+//! * `selftest` re-derives the documented error bounds of the streaming
+//!   sketches against exact oracles computed in-process: HyperLogLog
+//!   distinct counts within 5% of the true cardinality at n ∈ {1k, 100k},
+//!   histogram quantiles within 6.25% (1/16) of the exact order statistic,
+//!   and merge associativity for both. A bound drifting past its table
+//!   entry in `rust/README.md` fails the build here, not in a dashboard
+//!   three PRs later.
+//! * `progress FILE` validates a JSONL stream written by
+//!   `--progress-every/--progress-out` (or `run.progress` in a scenario):
+//!   sim-time must be non-strictly monotone, the byte ledger must
+//!   reconcile on every line (`bytes_total == goodput + dropped +
+//!   retrans`), and the final line must show at least one completed round.
+//!   The final line is echoed so CI can upload it as the run's summary
+//!   artifact. Any violation exits non-zero with the offending line.
+
+use anyhow::{bail, Context, Result};
+
+use modest_dl::sim::{Hll, StreamHistogram};
+use modest_dl::util::Json;
+
+/// splitmix64 finalizer — mirrors `sim::obs::mix64` so the selftest salts
+/// match the python oracle in the design notes.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// HLL distinct-count estimates vs the exact cardinality. The keys are a
+/// bijective mix of 0..n (odd-constant multiply), so the oracle is n
+/// itself; the bound is the documented 5% (σ ≈ 1.6% at 2^12 registers).
+fn check_hll_bounds() -> Result<()> {
+    for n in [1_000u64, 100_000] {
+        for salt_seed in [0u64, 1, 0xCAFE] {
+            let mut hll = Hll::with_salt(mix64(salt_seed));
+            for i in 0..n {
+                hll.insert(i.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(7));
+            }
+            let est = hll.estimate();
+            let err = (est - n as f64).abs() / n as f64;
+            println!("hll: n={n} salt_seed={salt_seed:#x} est={est:.1} err={err:.4}");
+            if err > 0.05 {
+                bail!("hll estimate {est:.1} misses exact {n} by {err:.4} (> 0.05)");
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Histogram quantiles vs the exact order statistic of the same sample.
+/// The estimate is the bucket upper bound, so it may only over-shoot, and
+/// by less than one sub-bucket width (1/16 relative).
+fn check_hist_bounds() -> Result<()> {
+    let mut h = StreamHistogram::new();
+    let mut vals = Vec::new();
+    let mut x = 0x2545F4914F6CDD1Du64;
+    for _ in 0..50_000 {
+        x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        let v = 1 + (x >> 40); // ~[1, 2^24]
+        h.record(v);
+        vals.push(v);
+    }
+    vals.sort_unstable();
+    for q in [0.01, 0.1, 0.5, 0.9, 0.95, 0.99] {
+        let est = h.quantile(q) as f64;
+        let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+        let exact = vals[rank - 1] as f64;
+        let err = (est - exact).abs() / exact;
+        println!("hist: q={q} est={est} exact={exact} err={err:.4}");
+        if err > 0.0625 + 1e-9 {
+            bail!("histogram q={q} estimate {est} misses exact {exact} by {err:.4}");
+        }
+    }
+    Ok(())
+}
+
+/// Merge must be exactly associative for both sketches — the property a
+/// future sharded harness leans on to combine per-shard state in any
+/// order.
+fn check_merge_associativity() -> Result<()> {
+    let fill_hist = |seed: u64, n: u64| {
+        let mut h = StreamHistogram::new();
+        let mut x = seed;
+        for _ in 0..n {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            h.record(x >> 44);
+        }
+        h
+    };
+    let (a, b, c) = (fill_hist(1, 5_000), fill_hist(2, 8_000), fill_hist(3, 3_000));
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a;
+    right.merge(&bc);
+    if left != right {
+        bail!("histogram merge is not associative");
+    }
+    println!("hist: merge associative over {} samples", left.total());
+
+    let salt = mix64(9);
+    let fill_hll = |lo: u64, hi: u64| {
+        let mut s = Hll::with_salt(salt);
+        for i in lo..hi {
+            s.insert(i);
+        }
+        s
+    };
+    let (a, b, c) = (fill_hll(0, 4_000), fill_hll(2_000, 9_000), fill_hll(8_000, 12_000));
+    let mut left = a.clone();
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b.clone();
+    bc.merge(&c);
+    let mut right = a;
+    right.merge(&bc);
+    if left != right {
+        bail!("hll merge is not associative");
+    }
+    println!("hll: merge associative, union count {}", left.count());
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    check_hll_bounds()?;
+    check_hist_bounds()?;
+    check_merge_associativity()?;
+    println!("obs-check: selftest OK — all sketches within documented bounds");
+    Ok(())
+}
+
+/// Validate one progress JSONL stream and echo its final line.
+fn cmd_progress(path: &str) -> Result<()> {
+    let text = std::fs::read_to_string(path).with_context(|| path.to_string())?;
+    let mut prev_t = f64::NEG_INFINITY;
+    let mut last_line = None;
+    let mut count = 0usize;
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let lineno = i + 1;
+        let v = Json::parse(line)
+            .with_context(|| format!("{path}:{lineno}: not valid JSON: {line}"))?;
+        let t_s = v.field("t_s")?.as_f64()?;
+        if !(t_s >= prev_t) {
+            bail!("{path}:{lineno}: sim-time went backwards ({prev_t} -> {t_s})");
+        }
+        prev_t = t_s;
+        let total = v.field("bytes_total")?.as_u64()?;
+        let good = v.field("bytes_goodput")?.as_u64()?;
+        let dropped = v.field("bytes_dropped")?.as_u64()?;
+        let retrans = v.field("bytes_retrans")?.as_u64()?;
+        if total != good + dropped + retrans {
+            bail!(
+                "{path}:{lineno}: byte ledger does not reconcile: \
+                 total {total} != goodput {good} + dropped {dropped} + retrans {retrans}"
+            );
+        }
+        // Presence checks for the remaining schema fields, so a renamed
+        // field fails here instead of silently vanishing from dashboards.
+        for key in ["alive", "rounds", "events", "msgs", "peers_est", "rss_kb"] {
+            v.field(key)?.as_u64()?;
+        }
+        last_line = Some((lineno, line));
+        count += 1;
+    }
+    let Some((lineno, line)) = last_line else {
+        bail!("{path}: progress stream has no lines");
+    };
+    let rounds = Json::parse(line)?.field("rounds")?.as_u64()?;
+    if rounds == 0 {
+        bail!("{path}:{lineno}: final line shows zero completed rounds");
+    }
+    println!("obs-check: {path} OK — {count} lines, final:");
+    println!("{line}");
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("selftest") if args.len() == 1 => cmd_selftest(),
+        Some("progress") if args.len() == 2 => cmd_progress(&args[1]),
+        _ => bail!("usage: obs_check selftest | obs_check progress FILE.jsonl"),
+    }
+}

@@ -54,6 +54,8 @@ pub struct GossipConfig {
     /// Ack/retransmit contract; `Some` exactly when the session's fabric
     /// injects loss (lossless sessions run the pre-loss code path).
     pub reliability: Option<ReliabilityConfig>,
+    /// Live JSONL progress stream (None = off).
+    pub progress: Option<crate::sim::ProgressConfig>,
 }
 
 impl Default for GossipConfig {
@@ -71,6 +73,7 @@ impl Default for GossipConfig {
             checkpoint_at: None,
             checkpoint_out: None,
             reliability: None,
+            progress: None,
         }
     }
 }
@@ -460,6 +463,7 @@ impl GossipSession {
             spec_json: cfg.spec_json.clone(),
             checkpoint_at: cfg.checkpoint_at,
             checkpoint_out: cfg.checkpoint_out.clone(),
+            progress: cfg.progress.clone(),
         };
         let outbox = cfg.reliability.map(ReliableOutbox::new);
         let protocol = GossipProtocol {
@@ -567,6 +571,7 @@ impl SessionBuilder for GossipBuilder {
             checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
             checkpoint_out: spec.run.checkpoint_out.clone(),
             reliability: spec.network.reliability(),
+            progress: spec.progress_config()?,
         };
         Ok(Box::new(GossipSession::new(cfg, n, task, compute, fabric, churn)))
     }
@@ -657,7 +662,7 @@ mod tests {
         let (m, traffic) = session_with_churn(10, cfg, churn).run();
         // Live replicas keep making rounds well past the churn window.
         assert!(m.final_round >= 10, "stalled at round {}", m.final_round);
-        let late = m.round_starts.iter().filter(|&&(_, t)| t > 100.0).count();
+        let late = m.round_starts.iter().filter(|&(_, t)| t > 100.0).count();
         assert!(late > 0, "no round progress after the churn window");
         assert!(traffic.is_conserved());
         assert!(m.best_metric(true).unwrap() > 0.3);
@@ -725,7 +730,7 @@ mod tests {
         // single (round, time) pair under crash churn.
         let trace =
             |m: &SessionMetrics| -> Vec<(Round, u64)> {
-                m.round_starts.iter().map(|&(r, t)| (r, t.to_bits())).collect()
+                m.round_starts.iter().map(|(r, t)| (r, t.to_bits())).collect()
             };
         assert_eq!(trace(&a), trace(&b));
         assert!(!a.round_starts.is_empty());

@@ -24,7 +24,7 @@ use anyhow::{bail, Result};
 use modest_dl::experiments::{self, ExpOptions};
 use modest_dl::net::traffic::fmt_bytes;
 use modest_dl::runtime::XlaRuntime;
-use modest_dl::scenario::{ProtocolRegistry, ScenarioSpec};
+use modest_dl::scenario::{ProgressSpec, ProtocolRegistry, ScenarioSpec};
 use modest_dl::sim::{ChurnSchedule, SamplingVersion};
 use modest_dl::util::cli::Args;
 
@@ -34,7 +34,8 @@ repro — MoDeST: decentralized learning with client sampling
 USAGE:
   repro run   [--config scenario.json] [--protocol NAME] [--dataset D]
               [--s N] [--a N] [--sf F] [--nodes N]
-              [--checkpoint-at S --checkpoint-out FILE] [common flags]
+              [--checkpoint-at S --checkpoint-out FILE]
+              [--progress-every S [--progress-out FILE]] [common flags]
               (`repro train ...` is an alias)
   repro resume --snapshot FILE [--config overlay.json] [--fork LABEL]
               [--out DIR]  (what-if branching: the overlay is a partial
@@ -106,6 +107,13 @@ fn cmd_run(args: &Args) -> Result<()> {
             if let Some(av) = &mut s.population.availability {
                 if let Some(resolved) = av.trace_file.as_deref().and_then(resolve) {
                     av.trace_file = Some(resolved);
+                }
+            }
+            // `run.progress.out` gets the same treatment: a preset that
+            // streams next to itself works from any cwd.
+            if let Some(p) = &mut s.run.progress {
+                if let Some(resolved) = p.out.as_deref().and_then(resolve) {
+                    p.out = Some(resolved);
                 }
             }
             s
@@ -187,6 +195,18 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if spec.run.checkpoint_at_s.is_some() != spec.run.checkpoint_out.is_some() {
         bail!("--checkpoint-at and --checkpoint-out must be given together");
+    }
+    // Live progress stream. `--progress-every` alone streams to stderr;
+    // `--progress-out` redirects to a file (cwd-relative, unlike a
+    // config's `run.progress.out` which resolves against the config dir).
+    let progress_out = args.get_opt("progress-out");
+    if let Some(e) = args.get_opt("progress-every") {
+        let every_s = e
+            .parse::<f64>()
+            .map_err(|err| anyhow::anyhow!("--progress-every {e:?}: {err}"))?;
+        spec.run.progress = Some(ProgressSpec { every_s, out: progress_out });
+    } else if progress_out.is_some() {
+        bail!("--progress-out requires --progress-every");
     }
     args.reject_unknown()?;
 

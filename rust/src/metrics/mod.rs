@@ -8,7 +8,7 @@ use std::path::Path;
 use anyhow::Result;
 
 use crate::net::TrafficLedger;
-use crate::sim::SimTime;
+use crate::sim::{ObsState, RoundWindow, SimTime};
 use crate::{NodeId, Round};
 
 /// One point on a convergence curve (Fig. 1/3/6 top).
@@ -68,6 +68,9 @@ pub struct TrafficSummary {
     pub dropped: u64,
     /// Bytes of delivered retransmissions.
     pub retransmitted: u64,
+    /// Distinct (sender, receiver) pairs contacted — an HLL estimate from
+    /// the ledger's streaming sketch (≈1.6% standard error).
+    pub distinct_peers: u64,
 }
 
 impl TrafficSummary {
@@ -83,6 +86,7 @@ impl TrafficSummary {
             goodput: ledger.goodput(),
             dropped: ledger.dropped_bytes(),
             retransmitted: ledger.retransmitted_bytes(),
+            distinct_peers: ledger.distinct_peers(),
         }
     }
 }
@@ -92,8 +96,16 @@ impl TrafficSummary {
 pub struct SessionMetrics {
     pub curve: Vec<CurvePoint>,
     pub samples: Vec<SampleTiming>,
-    /// First dispatch time of each round (round, time_s).
-    pub round_starts: Vec<(Round, f64)>,
+    /// First dispatch time of each round: a bounded ring of the last
+    /// [`crate::sim::obs::ROUND_WINDOW`] `(round, time_s)` pairs (the
+    /// first entry and total count survive eviction, so whole-session
+    /// aggregates stay exact). O(1) in rounds — million-round sessions no
+    /// longer materialize their round trace.
+    pub round_starts: RoundWindow,
+    /// Streaming observability sketches (round-duration / message-latency
+    /// histograms, distinct-trainers HLL). Serialized as the snapshot's
+    /// own `"obs"` section by the harness.
+    pub obs: ObsState,
     pub joins: Vec<JoinTrace>,
     pub traffic: TrafficSummary,
     /// Final round reached.
@@ -129,7 +141,6 @@ impl SessionMetrics {
         };
         let mut m = SessionMetrics::default();
         m.curve.reserve_exact(probes.min(MAX_PREALLOC));
-        m.round_starts.reserve_exact(rounds);
         m.samples.reserve_exact(rounds.min(Self::MAX_SAMPLES));
         m
     }
@@ -183,9 +194,19 @@ impl SessionMetrics {
     }
 
     pub fn record_round_start(&mut self, round: Round, now: SimTime) {
-        if self.round_starts.last().map(|&(r, _)| r) != Some(round) {
-            self.round_starts.push((round, now.as_secs_f64()));
+        if self.round_starts.last().map(|(r, _)| r) == Some(round) {
+            return;
         }
+        let t = now.as_secs_f64();
+        if let Some((_, prev_t)) = self.round_starts.last() {
+            // Feed the round-duration histogram (µs) from consecutive
+            // round-start gaps — the streaming form of the old full trace.
+            let dt_us = ((t - prev_t) * 1e6).round();
+            if dt_us >= 0.0 {
+                self.obs.round_hist.record(dt_us as u64);
+            }
+        }
+        self.round_starts.record(round, t);
     }
 
     /// Serialize everything recorded so far, including the reservoir's
@@ -208,11 +229,7 @@ impl SessionMetrics {
             w.write_u64(s.round);
             w.write_u32(s.retries);
         }
-        w.write_usize(self.round_starts.len());
-        for &(round, t) in &self.round_starts {
-            w.write_u64(round);
-            w.write_f64(t);
-        }
+        self.round_starts.write_into(w);
         w.write_usize(self.joins.len());
         for j in &self.joins {
             w.write_u32(j.joiner);
@@ -232,6 +249,7 @@ impl SessionMetrics {
         w.write_u64(self.traffic.goodput);
         w.write_u64(self.traffic.dropped);
         w.write_u64(self.traffic.retransmitted);
+        w.write_u64(self.traffic.distinct_peers);
         w.write_u64(self.final_round);
         w.write_f64(self.duration_s);
         w.write_u64(self.events);
@@ -258,11 +276,7 @@ impl SessionMetrics {
                 retries: r.read_u32()?,
             });
         }
-        for _ in 0..r.read_usize()? {
-            let round = r.read_u64()?;
-            let t = r.read_f64()?;
-            m.round_starts.push((round, t));
-        }
+        m.round_starts = RoundWindow::read_from(r)?;
         for _ in 0..r.read_usize()? {
             let joiner = r.read_u32()?;
             let joined_at_s = r.read_f64()?;
@@ -284,6 +298,7 @@ impl SessionMetrics {
             goodput: r.read_u64()?,
             dropped: r.read_u64()?,
             retransmitted: r.read_u64()?,
+            distinct_peers: r.read_u64()?,
         };
         m.final_round = r.read_u64()?;
         m.duration_s = r.read_f64()?;
@@ -318,14 +333,16 @@ impl SessionMetrics {
         }
     }
 
-    /// Mean round duration over a time window (Fig. 6 annotation).
+    /// Mean round duration over the whole session (Fig. 6 annotation).
+    /// Exact despite the windowing: the window retains the first entry and
+    /// the total count across evictions.
     pub fn mean_round_time_s(&self) -> Option<f64> {
-        if self.round_starts.len() < 2 {
+        if self.round_starts.seen() < 2 {
             return None;
         }
-        let n = self.round_starts.len() - 1;
-        let span = self.round_starts[n].1 - self.round_starts[0].1;
-        Some(span / n as f64)
+        let first = self.round_starts.first()?;
+        let last = self.round_starts.last()?;
+        Some((last.1 - first.1) / (self.round_starts.seen() - 1) as f64)
     }
 
     /// Dump the convergence curve as CSV.
@@ -440,11 +457,39 @@ mod tests {
     fn with_budget_preallocates_from_the_round_budget() {
         let m = SessionMetrics::with_budget(100, 32);
         assert!(m.curve.capacity() >= 32);
-        assert!(m.round_starts.capacity() >= 102);
+        assert!(m.samples.capacity() >= 100);
         assert!(m.curve.is_empty() && m.samples.is_empty());
-        // Unlimited budgets must not preallocate the round vectors at all.
+        // Unlimited budgets must not preallocate the per-round vectors.
         let u = SessionMetrics::with_budget(0, 8);
-        assert_eq!(u.round_starts.capacity(), 0);
+        assert_eq!(u.samples.capacity(), 0);
+        assert!(u.round_starts.is_empty());
+    }
+
+    #[test]
+    fn round_durations_feed_the_streaming_histogram() {
+        let mut m = SessionMetrics::default();
+        for r in 1..=50u64 {
+            m.record_round_start(r, SimTime::from_secs_f64(r as f64 * 2.0));
+        }
+        // 49 gaps of exactly 2s = 2_000_000 µs each.
+        assert_eq!(m.obs.round_hist.total(), 49);
+        let p50 = m.obs.round_hist.quantile(0.5) as f64;
+        assert!((p50 / 2e6 - 1.0).abs() <= 0.0625, "p50 {p50} vs 2e6");
+        assert!((m.mean_round_time_s().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mean_round_time_stays_exact_after_window_eviction() {
+        use crate::sim::obs::ROUND_WINDOW;
+        let mut m = SessionMetrics::default();
+        let total = ROUND_WINDOW as u64 + 500;
+        for r in 0..total {
+            m.record_round_start(r, SimTime::from_secs_f64(r as f64 * 3.0));
+        }
+        assert_eq!(m.round_starts.len(), ROUND_WINDOW);
+        assert_eq!(m.round_starts.seen(), total);
+        // (last - first) / (seen - 1) = 3.0 exactly, eviction or not.
+        assert!((m.mean_round_time_s().unwrap() - 3.0).abs() < 1e-9);
     }
 
     #[test]

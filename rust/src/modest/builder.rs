@@ -28,6 +28,7 @@ pub fn modest_config(spec: &ScenarioSpec) -> Result<ModestConfig> {
         checkpoint_at: spec.run.checkpoint_at_s.map(SimTime::from_secs_f64),
         checkpoint_out: spec.run.checkpoint_out.clone(),
         reliability: spec.network.reliability(),
+        progress: spec.progress_config()?,
     })
 }
 

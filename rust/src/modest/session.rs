@@ -84,6 +84,8 @@ pub struct ModestConfig {
     /// membership advertisements keep their native best-effort semantics
     /// (Alg. 1's candidate walk already retries on its own Δt clock).
     pub reliability: Option<ReliabilityConfig>,
+    /// Live JSONL progress stream (None = off).
+    pub progress: Option<crate::sim::ProgressConfig>,
 }
 
 impl Default for ModestConfig {
@@ -105,6 +107,7 @@ impl Default for ModestConfig {
             checkpoint_at: None,
             checkpoint_out: None,
             reliability: None,
+            progress: None,
         }
     }
 }
@@ -122,6 +125,7 @@ impl ModestConfig {
             spec_json: self.spec_json.clone(),
             checkpoint_at: self.checkpoint_at,
             checkpoint_out: self.checkpoint_out.clone(),
+            progress: self.progress.clone(),
         }
     }
 }
@@ -1116,7 +1120,7 @@ mod tests {
             ..Default::default()
         };
         let (m, _) = quick_session(10, cfg).run();
-        let rounds: Vec<Round> = m.round_starts.iter().map(|&(r, _)| r).collect();
+        let rounds: Vec<Round> = m.round_starts.iter().map(|(r, _)| r).collect();
         let mut sorted = rounds.clone();
         sorted.sort_unstable();
         assert_eq!(rounds, sorted);
@@ -1229,7 +1233,7 @@ mod tests {
         let session = ModestSession::new(cfg, 12, Box::new(task), compute, fabric, churn);
         let (m, _) = session.run();
         // Progress after the crash window (crashes end at t=60).
-        let late_rounds = m.round_starts.iter().filter(|&&(_, t)| t > 120.0).count();
+        let late_rounds = m.round_starts.iter().filter(|&(_, t)| t > 120.0).count();
         assert!(late_rounds > 5, "no progress after crashes: {late_rounds}");
     }
 

@@ -275,6 +275,10 @@ impl NetworkFabric {
         &self.ledger
     }
 
+    pub fn ledger_mut(&mut self) -> &mut TrafficLedger {
+        &mut self.ledger
+    }
+
     pub fn into_ledger(self) -> TrafficLedger {
         self.ledger
     }

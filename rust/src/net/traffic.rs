@@ -6,6 +6,7 @@
 //! computed as `total - model payload`.
 
 use super::message::MsgKind;
+use crate::sim::{Hll, StreamHistogram};
 use crate::NodeId;
 
 /// Index of the sent counter in a per-node usage record.
@@ -31,6 +32,16 @@ pub struct TrafficLedger {
     /// goodput (the payload already counted on its first delivery attempt
     /// or is a duplicate the receiver discards).
     retrans: u64,
+    /// Streaming log-bucketed histogram of per-attempt transfer sizes
+    /// (bytes). Bounded memory regardless of session length.
+    xfer_hist: StreamHistogram,
+    /// Distinct directed `(from, to)` pairs that ever carried traffic —
+    /// an HLL sketch, so 1M-node sessions stay O(1) in attempts.
+    peers: Hll,
+    /// Running wire total (== the sum of all `sent` columns), kept so the
+    /// per-tick progress emitter reads [`Self::total`] in O(1) instead of
+    /// scanning a million-entry usage table. Recomputed on restore.
+    wire: u64,
 }
 
 fn kind_idx(kind: MsgKind) -> usize {
@@ -50,7 +61,17 @@ impl TrafficLedger {
             messages: 0,
             dropped: 0,
             retrans: 0,
+            xfer_hist: StreamHistogram::new(),
+            peers: Hll::with_salt(0),
+            wire: 0,
         }
+    }
+
+    /// Install the observability hash salt on the peer sketch. Must be
+    /// called before the first attempt is recorded; a no-op afterwards
+    /// (see [`Hll::set_salt`]), so restored ledgers keep their state.
+    pub fn set_obs_salt(&mut self, salt: u64) {
+        self.peers.set_salt(salt);
     }
 
     /// Grow the ledger when nodes join beyond the initial population.
@@ -101,6 +122,9 @@ impl TrafficLedger {
             self.by_kind[kind_idx(kind)] += bytes;
         }
         self.messages += 1;
+        self.wire += total;
+        self.xfer_hist.record(total);
+        self.peers.insert(((from as u64) << 32) | to as u64);
     }
 
     /// Record a single-kind message.
@@ -119,9 +143,10 @@ impl TrafficLedger {
     }
 
     /// Total wire bytes: every attempt counted once at the sender,
-    /// including dropped and retransmitted traffic.
+    /// including dropped and retransmitted traffic. O(1): maintained as a
+    /// running counter alongside the per-node columns.
     pub fn total(&self) -> u64 {
-        self.usage.iter().map(|u| u[SENT]).sum()
+        self.wire
     }
 
     /// Bytes lost in flight to fault injection.
@@ -139,6 +164,17 @@ impl TrafficLedger {
     /// number; [`Self::total`] remains the true wire cost.
     pub fn goodput(&self) -> u64 {
         self.total().saturating_sub(self.dropped).saturating_sub(self.retrans)
+    }
+
+    /// Streaming histogram of per-attempt transfer sizes (bytes).
+    pub fn xfer_hist(&self) -> &StreamHistogram {
+        &self.xfer_hist
+    }
+
+    /// Estimated number of distinct directed `(from, to)` pairs that
+    /// carried traffic (HLL; within ~5% of the true count).
+    pub fn distinct_peers(&self) -> u64 {
+        self.peers.count()
     }
 
     /// Bytes attributed to one traffic class.
@@ -196,6 +232,8 @@ impl TrafficLedger {
         w.write_u64(self.messages);
         w.write_u64(self.dropped);
         w.write_u64(self.retrans);
+        self.xfer_hist.write_into(w);
+        self.peers.write_into(w);
     }
 
     pub fn read_from(r: &mut crate::sim::SnapshotReader) -> anyhow::Result<TrafficLedger> {
@@ -213,7 +251,10 @@ impl TrafficLedger {
         let messages = r.read_u64()?;
         let dropped = r.read_u64()?;
         let retrans = r.read_u64()?;
-        Ok(TrafficLedger { usage, by_kind, messages, dropped, retrans })
+        let xfer_hist = StreamHistogram::read_from(r)?;
+        let peers = Hll::read_from(r)?;
+        let wire = usage.iter().map(|u| u[SENT]).sum();
+        Ok(TrafficLedger { usage, by_kind, messages, dropped, retrans, xfer_hist, peers, wire })
     }
 
     /// Conservation check: every sent byte was either received exactly
@@ -371,6 +412,43 @@ mod tests {
         assert_eq!(back.goodput(), 0);
         assert_eq!(back.total(), t.total());
         assert!(back.is_conserved());
+    }
+
+    #[test]
+    fn sketches_track_attempts_and_roundtrip() {
+        let mut t = TrafficLedger::new(8);
+        t.set_obs_salt(0x5EED);
+        for i in 0..6u32 {
+            t.record(i, (i + 1) % 8, MsgKind::ModelPayload, 100 * (i as u64 + 1));
+        }
+        // Repeats of an existing pair must not grow the distinct count.
+        t.record(0, 1, MsgKind::ModelPayload, 100);
+        assert_eq!(t.distinct_peers(), 6, "small-n HLL counts are exact");
+        assert_eq!(t.xfer_hist().total(), 7);
+        assert_eq!(t.xfer_hist().min(), 100);
+        assert_eq!(t.xfer_hist().max(), 600);
+
+        let mut w = crate::sim::SnapshotWriter::new();
+        w.begin_section("ledger");
+        t.write_into(&mut w);
+        w.end_section();
+        let bytes = w.finish();
+        let mut r = crate::sim::SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("ledger").unwrap();
+        let back = TrafficLedger::read_from(&mut r).unwrap();
+        assert_eq!(back.distinct_peers(), t.distinct_peers());
+        assert_eq!(back.xfer_hist(), t.xfer_hist());
+    }
+
+    #[test]
+    fn obs_salt_is_frozen_after_first_attempt() {
+        let mut t = TrafficLedger::new(2);
+        t.set_obs_salt(1);
+        t.record(0, 1, MsgKind::Control, 10);
+        let before = t.distinct_peers();
+        t.set_obs_salt(2); // ignored: sketch already has inserts
+        t.record(0, 1, MsgKind::Control, 10);
+        assert_eq!(t.distinct_peers(), before);
     }
 
     #[test]

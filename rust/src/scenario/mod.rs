@@ -32,4 +32,6 @@ pub use registry::{
     run_scenario, ProtocolMeta, ProtocolRegistry, Session, SessionBuilder,
 };
 pub use resume::{embedded_spec, resume_session};
-pub use spec::{PopulationSpec, ProtocolSpec, RunSpec, ScenarioSpec, WorkloadSpec};
+pub use spec::{
+    PopulationSpec, ProgressSpec, ProtocolSpec, RunSpec, ScenarioSpec, WorkloadSpec,
+};

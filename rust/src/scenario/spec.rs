@@ -21,7 +21,7 @@ use crate::config::preset;
 use crate::learning::{ComputeModel, MockTask, Task};
 use crate::net::{LatencyMatrix, LatencyParams, NetworkFabric};
 use crate::runtime::XlaRuntime;
-use crate::sim::{ChurnKind, ChurnSchedule, SamplingVersion, SimRng};
+use crate::sim::{ChurnKind, ChurnSchedule, ProgressConfig, SamplingVersion, SimRng, SimTime};
 use crate::util::Json;
 
 use super::availability::AvailabilitySpec;
@@ -116,6 +116,16 @@ impl ProtocolSpec {
     }
 }
 
+/// The `run.progress` section: live JSONL progress snapshots.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProgressSpec {
+    /// Emit one snapshot line every this many virtual seconds.
+    pub every_s: f64,
+    /// Output file path (`None` = stderr). Relative paths are resolved
+    /// against the config file's directory, like availability traces.
+    pub out: Option<String>,
+}
+
 /// The `run` section: budgets, eval cadence, stop target, seed.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RunSpec {
@@ -139,6 +149,9 @@ pub struct RunSpec {
     pub checkpoint_at_s: Option<f64>,
     /// Snapshot file path for `checkpoint_at_s`.
     pub checkpoint_out: Option<String>,
+    /// Live progress stream (`None` = off: zero extra events or RNG
+    /// draws, so recorded same-seed fingerprints stay bit-identical).
+    pub progress: Option<ProgressSpec>,
 }
 
 impl Default for RunSpec {
@@ -152,6 +165,7 @@ impl Default for RunSpec {
             sampling: SamplingVersion::default(),
             checkpoint_at_s: None,
             checkpoint_out: None,
+            progress: None,
         }
     }
 }
@@ -267,6 +281,36 @@ impl ScenarioSpec {
                                     None
                                 } else {
                                     Some(val.as_str()?.to_string())
+                                }
+                            }
+                            "progress" => {
+                                spec.run.progress = if *val == Json::Null {
+                                    None
+                                } else {
+                                    let mut p = ProgressSpec { every_s: 0.0, out: None };
+                                    let mut saw_every = false;
+                                    for (pk, pv) in val.as_obj()? {
+                                        match pk.as_str() {
+                                            "every_s" => {
+                                                p.every_s = pv.as_f64()?;
+                                                saw_every = true;
+                                            }
+                                            "out" => {
+                                                p.out = if *pv == Json::Null {
+                                                    None
+                                                } else {
+                                                    Some(pv.as_str()?.to_string())
+                                                }
+                                            }
+                                            other => {
+                                                bail!("unknown run.progress key {other:?}")
+                                            }
+                                        }
+                                    }
+                                    if !saw_every {
+                                        bail!("run.progress requires \"every_s\"");
+                                    }
+                                    Some(p)
                                 }
                             }
                             other => bail!("unknown run key {other:?}"),
@@ -396,6 +440,22 @@ impl ScenarioSpec {
                             None => Json::Null,
                         },
                     ),
+                    (
+                        "progress",
+                        match &self.run.progress {
+                            Some(p) => Json::obj(vec![
+                                ("every_s", Json::Num(p.every_s)),
+                                (
+                                    "out",
+                                    match &p.out {
+                                        Some(o) => Json::Str(o.clone()),
+                                        None => Json::Null,
+                                    },
+                                ),
+                            ]),
+                            None => Json::Null,
+                        },
+                    ),
                 ]),
             ),
         ])
@@ -431,6 +491,39 @@ impl ScenarioSpec {
 
     pub fn resolved_a(&self) -> Result<usize> {
         Ok(if self.protocol.a > 0 { self.protocol.a } else { preset(&self.workload.dataset)?.a })
+    }
+
+    /// Validate `run.progress` into the harness-level [`ProgressConfig`].
+    ///
+    /// Loud at build time: a non-positive or non-finite `every_s` and an
+    /// unopenable `out` path are rejected here, not hours into a
+    /// million-node run. The writability probe opens append+create (never
+    /// truncating), so probing a resumed session's existing stream is
+    /// harmless.
+    pub fn progress_config(&self) -> Result<Option<ProgressConfig>> {
+        let Some(p) = self.run.progress.as_ref() else {
+            return Ok(None);
+        };
+        if !(p.every_s.is_finite() && p.every_s > 0.0) {
+            bail!(
+                "run.progress.every_s must be a positive finite number of seconds \
+                 (got {})",
+                p.every_s
+            );
+        }
+        if let Some(out) = p.out.as_deref() {
+            std::fs::OpenOptions::new()
+                .append(true)
+                .create(true)
+                .open(out)
+                .map_err(|e| {
+                    anyhow::anyhow!("run.progress.out {out:?} is not writable: {e}")
+                })?;
+        }
+        Ok(Some(ProgressConfig {
+            every: SimTime::from_secs_f64(p.every_s),
+            out: p.out.clone(),
+        }))
     }
 
     // -------------------------------------------------------- churn wiring
@@ -710,6 +803,8 @@ mod tests {
         spec.protocol.params = vec![("fanout".into(), 3.0)];
         spec.run.target_metric = Some(0.8);
         spec.run.sampling = SamplingVersion::V2Partial;
+        spec.run.progress =
+            Some(ProgressSpec { every_s: 5.0, out: Some("/tmp/p.jsonl".into()) });
         spec.network.bandwidth_sigma = 0.6;
         let text = spec.to_json().to_string();
         let back = ScenarioSpec::from_json(&text).unwrap();
@@ -864,5 +959,89 @@ mod tests {
         let mut spec = ScenarioSpec::new("mock", "modest");
         spec.population.nodes = 12;
         assert!(spec.build_task(None).is_ok());
+    }
+
+    #[test]
+    fn progress_parses_nested_null_and_rejects_unknown_keys() {
+        let spec = ScenarioSpec::from_json(
+            r#"{"run": {"progress": {"every_s": 5.0, "out": "p.jsonl"}}}"#,
+        )
+        .unwrap();
+        let p = spec.run.progress.as_ref().expect("progress parsed");
+        assert_eq!(p.every_s, 5.0);
+        assert_eq!(p.out.as_deref(), Some("p.jsonl"));
+        // `out` is optional (stderr) and `null` disables the section.
+        let spec =
+            ScenarioSpec::from_json(r#"{"run": {"progress": {"every_s": 2.0}}}"#).unwrap();
+        assert_eq!(spec.run.progress.as_ref().unwrap().out, None);
+        let spec = ScenarioSpec::from_json(r#"{"run": {"progress": null}}"#).unwrap();
+        assert!(spec.run.progress.is_none());
+        // every_s is mandatory; unknown keys fail loudly.
+        assert!(ScenarioSpec::from_json(r#"{"run": {"progress": {}}}"#).is_err());
+        assert!(ScenarioSpec::from_json(
+            r#"{"run": {"progress": {"every_s": 5.0, "evry": 1}}}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn progress_config_rejects_nonpositive_every() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.run.progress = Some(ProgressSpec { every_s: 0.0, out: None });
+        let err = spec.progress_config().unwrap_err();
+        assert!(err.to_string().contains("positive finite"), "{err:#}");
+        spec.run.progress = Some(ProgressSpec { every_s: -3.0, out: None });
+        assert!(spec.progress_config().is_err());
+    }
+
+    #[test]
+    fn progress_config_rejects_non_finite_every() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.run.progress = Some(ProgressSpec { every_s: f64::NAN, out: None });
+        assert!(spec.progress_config().is_err());
+        spec.run.progress = Some(ProgressSpec { every_s: f64::INFINITY, out: None });
+        assert!(spec.progress_config().is_err());
+    }
+
+    #[test]
+    fn progress_config_rejects_unwritable_out() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.run.progress = Some(ProgressSpec {
+            every_s: 5.0,
+            out: Some("/nonexistent_dir_modest_obs/x.jsonl".into()),
+        });
+        let err = spec.progress_config().unwrap_err();
+        assert!(err.to_string().contains("not writable"), "{err:#}");
+    }
+
+    #[test]
+    fn progress_config_accepts_writable_out_without_truncating() {
+        let path = std::env::temp_dir().join("modest_spec_progress_probe.jsonl");
+        std::fs::write(&path, "existing line\n").unwrap();
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.run.progress = Some(ProgressSpec {
+            every_s: 5.0,
+            out: Some(path.to_str().unwrap().to_string()),
+        });
+        let cfg = spec.progress_config().unwrap().expect("config built");
+        assert_eq!(cfg.every, SimTime::from_secs_f64(5.0));
+        // The writability probe must not clobber an existing stream.
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "existing line\n");
+        std::fs::remove_file(&path).ok();
+        // Absent progress builds to None with no side effects.
+        assert!(ScenarioSpec::new("mock", "modest").progress_config().unwrap().is_none());
+    }
+
+    #[test]
+    fn snapshot_json_keeps_progress_but_clears_checkpoint() {
+        let mut spec = ScenarioSpec::new("mock", "modest");
+        spec.run.checkpoint_at_s = Some(10.0);
+        spec.run.checkpoint_out = Some("snap.bin".into());
+        spec.run.progress = Some(ProgressSpec { every_s: 5.0, out: Some("p.jsonl".into()) });
+        let back = ScenarioSpec::from_json(&spec.snapshot_json()).unwrap();
+        assert!(back.run.checkpoint_at_s.is_none());
+        assert!(back.run.checkpoint_out.is_none());
+        // The resumed session must keep streaming to the same file.
+        assert_eq!(back.run.progress, spec.run.progress);
     }
 }

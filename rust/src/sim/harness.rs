@@ -28,6 +28,7 @@ use crate::{NodeId, Round};
 
 use super::churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 use super::engine::EventQueue;
+use super::obs::{peak_rss_kb, ObsState, ProgressConfig, ProgressLine};
 use super::population::Population;
 use super::rng::{SamplingVersion, SimRng};
 use super::snapshot::{SnapshotReader, SnapshotWriter};
@@ -63,6 +64,10 @@ pub struct HarnessConfig {
     pub checkpoint_at: Option<SimTime>,
     /// Where the checkpoint snapshot file goes.
     pub checkpoint_out: Option<String>,
+    /// Live progress stream: emit one JSONL [`ProgressLine`] every
+    /// `every` of sim-time. `None` (the default everywhere) arms nothing —
+    /// zero extra events, zero RNG draws, bit-identical fingerprints.
+    pub progress: Option<ProgressConfig>,
 }
 
 /// How a snapshot is replayed into a freshly built harness.
@@ -86,6 +91,10 @@ pub enum HarnessEvent<M> {
     TrainDone { node: NodeId, seq: u64 },
     Churn(usize),
     Probe,
+    /// Periodic progress emission (only ever scheduled when
+    /// [`HarnessConfig::progress`] is set). Rides snapshots like any other
+    /// event, so a resumed run continues the same JSONL cadence.
+    ProgressTick,
 }
 
 /// One probe-time evaluation produced by a protocol.
@@ -195,11 +204,13 @@ impl<M> Ctx<'_, M> {
                 .schedule_in(SimTime::ZERO, HarnessEvent::Deliver { to, msg });
             return;
         }
-        match self
-            .fabric
-            .try_transfer(self.queue.now(), from, to, parts, retransmit)
-        {
-            Some(at) => self.queue.schedule_at(at, HarnessEvent::Deliver { to, msg }),
+        let now = self.queue.now();
+        match self.fabric.try_transfer(now, from, to, parts, retransmit) {
+            Some(at) => {
+                // Streaming latency histogram (send → deliver, µs).
+                self.metrics.obs.latency_hist.record(at.0.saturating_sub(now.0));
+                self.queue.schedule_at(at, HarnessEvent::Deliver { to, msg })
+            }
             None => {} // lost in flight: charged, never delivered
         }
     }
@@ -330,6 +341,58 @@ macro_rules! harness_ctx {
     };
 }
 
+/// Live progress stream state: the validated config plus the reusable
+/// buffers that keep per-tick work allocation-free once warmed up. The
+/// sink opens lazily at the first emit so a checkpoint taken before any
+/// tick leaves no empty file behind, and a resumed run can append to the
+/// stream the interrupted run started.
+struct ProgressEmitter {
+    cfg: ProgressConfig,
+    sink: Option<Box<dyn std::io::Write + Send>>,
+    line: String,
+    rss_buf: String,
+    wall_start: std::time::Instant,
+}
+
+impl ProgressEmitter {
+    fn new(cfg: ProgressConfig) -> ProgressEmitter {
+        ProgressEmitter {
+            cfg,
+            sink: None,
+            line: String::new(),
+            rss_buf: String::new(),
+            wall_start: std::time::Instant::now(),
+        }
+    }
+
+    /// Render and write one line. `append` selects the sink-open mode on
+    /// the first emit: a fresh run truncates its out file, a resumed run
+    /// appends so checkpoint/resume produces one seamless stream.
+    fn emit(&mut self, mut line: ProgressLine, append: bool) {
+        use std::io::Write as _;
+        line.wall_s = self.wall_start.elapsed().as_secs_f64();
+        line.rss_kb = peak_rss_kb(&mut self.rss_buf);
+        self.line.clear();
+        line.render(&mut self.line);
+        let sink = self.sink.get_or_insert_with(|| match self.cfg.out.as_deref() {
+            None => Box::new(std::io::stderr()),
+            Some(path) => {
+                let f = if append {
+                    std::fs::OpenOptions::new().append(true).create(true).open(path)
+                } else {
+                    std::fs::File::create(path)
+                };
+                match f {
+                    Ok(f) => Box::new(f) as Box<dyn std::io::Write + Send>,
+                    Err(e) => panic!("opening progress stream {path}: {e}"),
+                }
+            }
+        });
+        let _ = sink.write_all(self.line.as_bytes());
+        let _ = sink.flush();
+    }
+}
+
 /// The shared session driver: owns every simulation substrate and drives a
 /// [`Protocol`] to its time/round/metric budget.
 pub struct SimHarness<P: Protocol> {
@@ -350,6 +413,8 @@ pub struct SimHarness<P: Protocol> {
     /// prologue (churn/probe scheduling, bootstrap, baseline probe) —
     /// everything it would schedule is already in the restored queue.
     resumed: bool,
+    /// Armed iff `cfg.progress` is set.
+    progress: Option<ProgressEmitter>,
 }
 
 impl<P: Protocol> SimHarness<P> {
@@ -369,6 +434,14 @@ impl<P: Protocol> SimHarness<P> {
         let population = Population::new(total_nodes, initial_alive);
         fabric.ensure_nodes(total_nodes);
         let rng = SimRng::new(cfg.seed ^ 0x5b_4841_524e_4553); // "HARNES"
+        // Observability hash salt from a dedicated stream of the raw seed:
+        // same-seed runs emit identical sketches, and the session RNG above
+        // never sees a draw for it (fingerprints are untouched). On resume
+        // the restored sketches keep their serialized salt (`set_salt` is a
+        // no-op once a sketch has inserts, and restore replaces these
+        // objects wholesale anyway).
+        let obs_salt = SimRng::new(cfg.seed).fork("obs").next_u64();
+        fabric.ledger_mut().set_obs_salt(obs_salt);
         // Size the metrics sink up front: the probe schedule and the round
         // budget bound the curve/round-start growth exactly, so long runs
         // never reallocate those vectors mid-session.
@@ -377,7 +450,9 @@ impl<P: Protocol> SimHarness<P> {
         } else {
             2
         };
-        let metrics = SessionMetrics::with_budget(cfg.max_rounds, probes);
+        let mut metrics = SessionMetrics::with_budget(cfg.max_rounds, probes);
+        metrics.obs.set_salt(obs_salt);
+        let progress = cfg.progress.clone().map(ProgressEmitter::new);
         SimHarness {
             cfg,
             protocol,
@@ -391,6 +466,7 @@ impl<P: Protocol> SimHarness<P> {
             metrics,
             done: false,
             resumed: false,
+            progress,
         }
     }
 
@@ -408,7 +484,8 @@ impl<P: Protocol> SimHarness<P> {
     ///
     /// Section order (write order == read order): `spec` (the canonical
     /// scenario JSON the resume path rebuilds the static substrate from),
-    /// `rng`, `pop`, `churn`, `fabric`, `metrics`, `protocol`, `queue`.
+    /// `rng`, `pop`, `churn`, `fabric`, `metrics`, `obs`, `protocol`,
+    /// `queue`.
     /// Everything re-derivable from the spec — latency matrix, bandwidth
     /// config, task data, static graphs, calendar-queue geometry — is
     /// rebuilt on restore and never serialized.
@@ -446,6 +523,9 @@ impl<P: Protocol> SimHarness<P> {
         w.begin_section("metrics");
         self.metrics.write_into(&mut w);
         w.end_section();
+        w.begin_section("obs");
+        self.metrics.obs.write_into(&mut w);
+        w.end_section();
         w.begin_section("protocol");
         self.protocol.snapshot(&mut w)?;
         w.end_section();
@@ -480,6 +560,7 @@ impl<P: Protocol> SimHarness<P> {
                     w.write_usize(*i);
                 }
                 HarnessEvent::Probe => w.write_u8(4),
+                HarnessEvent::ProgressTick => w.write_u8(5),
             }
         }
         w.end_section();
@@ -533,6 +614,9 @@ impl<P: Protocol> SimHarness<P> {
         r.begin_section("metrics")?;
         self.metrics = SessionMetrics::read_from(r)?;
         r.end_section()?;
+        r.begin_section("obs")?;
+        self.metrics.obs = ObsState::read_from(r)?;
+        r.end_section()?;
         r.begin_section("protocol")?;
         self.protocol.restore(r)?;
         r.end_section()?;
@@ -564,6 +648,7 @@ impl<P: Protocol> SimHarness<P> {
                 }
                 3 => HarnessEvent::Churn(r.read_usize()?),
                 4 => HarnessEvent::Probe,
+                5 => HarnessEvent::ProgressTick,
                 t => anyhow::bail!("snapshot: unknown harness event tag {t}"),
             };
             events.push((at, s, ev));
@@ -649,6 +734,43 @@ impl<P: Protocol> SimHarness<P> {
         }
     }
 
+    /// Assemble the deterministic fields of one progress line (the
+    /// emitter stamps the wall-clock tail). O(1) in nodes and rounds:
+    /// every input is a counter, a sketch, or a fixed-size histogram.
+    fn progress_line(&self) -> ProgressLine {
+        let ledger = self.fabric.ledger();
+        let obs: &ObsState = &self.metrics.obs;
+        ProgressLine {
+            t_s: self.queue.now().as_secs_f64(),
+            alive: self.population.alive_count() as u64,
+            rounds: self.protocol.final_round() as u64,
+            events: self.queue.events_processed(),
+            msgs: ledger.messages(),
+            bytes_total: ledger.total(),
+            bytes_goodput: ledger.goodput(),
+            bytes_dropped: ledger.dropped_bytes(),
+            bytes_retrans: ledger.retransmitted_bytes(),
+            round_p50_s: obs.round_hist.quantile(0.5) as f64 / 1e6,
+            round_p95_s: obs.round_hist.quantile(0.95) as f64 / 1e6,
+            lat_p50_ms: obs.latency_hist.quantile(0.5) as f64 / 1e3,
+            lat_p95_ms: obs.latency_hist.quantile(0.95) as f64 / 1e3,
+            xfer_p50_b: ledger.xfer_hist().quantile(0.5),
+            peers_est: ledger.distinct_peers(),
+            trainers_est: obs.trainers.count(),
+            wall_s: 0.0,
+            rss_kb: 0,
+        }
+    }
+
+    fn emit_progress(&mut self) {
+        if self.progress.is_none() {
+            return;
+        }
+        let line = self.progress_line();
+        let append = self.resumed;
+        self.progress.as_mut().unwrap().emit(line, append);
+    }
+
     /// Run to completion; returns the collected metrics and the ledger.
     pub fn run(self) -> (SessionMetrics, TrafficLedger) {
         let (metrics, ledger, _) = self.run_into_parts();
@@ -667,6 +789,14 @@ impl<P: Protocol> SimHarness<P> {
                 self.queue.schedule_at(t, HarnessEvent::Probe);
                 t += self.cfg.eval_interval;
             }
+            // One live tick in flight at a time: each tick reschedules the
+            // next, so an early-finished session doesn't idle to max_time
+            // on a lattice of pre-scheduled ticks.
+            if let Some(p) = self.cfg.progress.as_ref() {
+                if p.every <= self.cfg.max_time {
+                    self.queue.schedule_at(p.every, HarnessEvent::ProgressTick);
+                }
+            }
             {
                 let mut ctx = harness_ctx!(self);
                 self.protocol.bootstrap(&mut ctx);
@@ -675,6 +805,7 @@ impl<P: Protocol> SimHarness<P> {
             self.probe();
         }
 
+        let mut checkpointed = false;
         loop {
             // Checkpoint *between* events, before the trigger-crossing event
             // pops: the snapshot captures the queue with that event still
@@ -689,6 +820,7 @@ impl<P: Protocol> SimHarness<P> {
                     let bytes = self.snapshot_bytes().expect("snapshot serialization failed");
                     std::fs::write(out, &bytes)
                         .unwrap_or_else(|e| panic!("writing checkpoint {out}: {e}"));
+                    checkpointed = true;
                     break;
                 }
             }
@@ -711,13 +843,32 @@ impl<P: Protocol> SimHarness<P> {
                 }
                 HarnessEvent::TrainDone { node, seq } => {
                     if self.is_alive(node) {
+                        self.metrics.obs.trainers.insert(node as u64);
                         let mut ctx = harness_ctx!(self);
                         self.protocol.on_train_done(&mut ctx, node, seq);
                     }
                 }
                 HarnessEvent::Churn(i) => self.handle_churn(i),
                 HarnessEvent::Probe => self.probe(),
+                HarnessEvent::ProgressTick => {
+                    self.emit_progress();
+                    if let Some(p) = self.cfg.progress.as_ref() {
+                        let next = SimTime::from_micros(now.0 + p.every.0);
+                        // Reschedule only while other events remain: a
+                        // drained session must end, not tick to max_time.
+                        if next <= self.cfg.max_time && !self.queue.is_empty() {
+                            self.queue.schedule_at(next, HarnessEvent::ProgressTick);
+                        }
+                    }
+                }
             }
+        }
+
+        // Final progress line at session end. A checkpoint-interrupted run
+        // skips it — the resumed run appends the rest of the stream and
+        // owns the terminal line.
+        if !checkpointed {
+            self.emit_progress();
         }
 
         // Terminal evaluation so short sessions still produce a curve.
@@ -808,6 +959,7 @@ mod tests {
                 spec_json: None,
                 checkpoint_at: None,
                 checkpoint_out: None,
+                progress: None,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -867,6 +1019,113 @@ mod tests {
     }
 
     #[test]
+    fn progress_stream_emits_reconciling_jsonl() {
+        let out = std::env::temp_dir().join("modest_harness_progress_unit.jsonl");
+        let out_s = out.to_str().unwrap().to_string();
+        let n = 4;
+        let task = MockTask::new(n, 8, 0.2, 1);
+        let model = task.init_model();
+        let latency = LatencyMatrix::uniform(n, SimTime::from_millis(20));
+        let fabric = NetworkFabric::uniform(latency, 10e6, n);
+        let h = SimHarness::new(
+            HarnessConfig {
+                max_time: SimTime::from_secs_f64(60.0),
+                max_rounds: 0,
+                eval_interval: SimTime::from_secs_f64(5.0),
+                target_metric: None,
+                seed: 9,
+                sampling: SamplingVersion::default(),
+                spec_json: None,
+                checkpoint_at: None,
+                checkpoint_out: None,
+                progress: Some(super::ProgressConfig {
+                    every: SimTime::from_secs_f64(10.0),
+                    out: Some(out_s),
+                }),
+            },
+            RingProtocol { n, delivered: 0, round: 1, model },
+            n,
+            n,
+            Box::new(task),
+            ComputeModel::uniform(n, 0.01),
+            fabric,
+            ChurnSchedule::empty(),
+        );
+        let (m, ledger) = h.run();
+        let text = std::fs::read_to_string(&out).unwrap();
+        std::fs::remove_file(&out).ok();
+        let lines: Vec<&str> = text.lines().collect();
+        // Ticks at 10, 20, ..., 60 plus the terminal line.
+        assert!(lines.len() >= 6, "{} lines:\n{text}", lines.len());
+        let mut prev = -1.0;
+        for l in &lines {
+            let j = crate::util::Json::parse(l).unwrap();
+            let t = j.field("t_s").unwrap().as_f64().unwrap();
+            assert!(t >= prev, "sim-time went backwards: {t} after {prev}");
+            prev = t;
+            let total = j.field("bytes_total").unwrap().as_u64().unwrap();
+            let good = j.field("bytes_goodput").unwrap().as_u64().unwrap();
+            let drop = j.field("bytes_dropped").unwrap().as_u64().unwrap();
+            let re = j.field("bytes_retrans").unwrap().as_u64().unwrap();
+            assert_eq!(total, good + drop + re, "ledger does not reconcile: {l}");
+        }
+        // The terminal line agrees with the final summary exactly.
+        let last = crate::util::Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(last.field("bytes_total").unwrap().as_u64().unwrap(), ledger.total());
+        assert_eq!(last.field("rounds").unwrap().as_u64().unwrap(), m.final_round as u64);
+        assert_eq!(
+            last.field("peers_est").unwrap().as_u64().unwrap(),
+            m.traffic.distinct_peers
+        );
+        assert_eq!(last.field("events").unwrap().as_u64().unwrap(), m.events);
+    }
+
+    #[test]
+    fn absent_progress_changes_nothing() {
+        // A progress-enabled run and a plain run share the session RNG
+        // stream: the convergence curve (metric bits) must match exactly.
+        let out = std::env::temp_dir().join("modest_harness_progress_absent.jsonl");
+        let (plain, _) = ring_harness(5, 0).run();
+        let n = 5;
+        let task = MockTask::new(n, 8, 0.2, 1);
+        let model = task.init_model();
+        let latency = LatencyMatrix::uniform(n, SimTime::from_millis(20));
+        let fabric = NetworkFabric::uniform(latency, 10e6, n);
+        let h = SimHarness::new(
+            HarnessConfig {
+                max_time: SimTime::from_secs_f64(60.0),
+                max_rounds: 0,
+                eval_interval: SimTime::from_secs_f64(5.0),
+                target_metric: None,
+                seed: 9,
+                sampling: SamplingVersion::default(),
+                spec_json: None,
+                checkpoint_at: None,
+                checkpoint_out: None,
+                progress: Some(super::ProgressConfig {
+                    every: SimTime::from_secs_f64(7.0),
+                    out: Some(out.to_str().unwrap().to_string()),
+                }),
+            },
+            RingProtocol { n, delivered: 0, round: 1, model },
+            n,
+            n,
+            Box::new(task),
+            ComputeModel::uniform(n, 0.01),
+            fabric,
+            ChurnSchedule::empty(),
+        );
+        let (with_progress, _) = h.run();
+        std::fs::remove_file(&out).ok();
+        let ca: Vec<(Round, u64)> =
+            plain.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect();
+        let cb: Vec<(Round, u64)> =
+            with_progress.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect();
+        assert_eq!(ca, cb);
+        assert_eq!(plain.final_round, with_progress.final_round);
+    }
+
+    #[test]
     fn dead_nodes_drop_deliveries() {
         use crate::sim::churn::{ChurnEvent, ChurnKind};
         let n = 4;
@@ -890,6 +1149,7 @@ mod tests {
                 spec_json: None,
                 checkpoint_at: None,
                 checkpoint_out: None,
+                progress: None,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,

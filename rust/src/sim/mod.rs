@@ -14,6 +14,7 @@ pub mod churn;
 pub mod engine;
 pub mod harness;
 pub mod node_table;
+pub mod obs;
 pub mod population;
 pub mod reliability;
 pub mod rng;
@@ -24,6 +25,7 @@ pub use churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent};
 pub use node_table::NodeTable;
 pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, ResumeOptions, SimHarness};
+pub use obs::{Hll, ObsState, ProgressConfig, ProgressLine, RoundWindow, StreamHistogram};
 pub use population::{LivenessMirror, Population, Status};
 pub use reliability::{
     Pending, ReliabilityConfig, ReliableOutbox, TimerVerdict, RELIABLE_TIMER_BIT,

@@ -1,0 +1,747 @@
+//! Bounded-memory streaming observability: the structures every
+//! million-node session records into and the live progress stream they
+//! feed.
+//!
+//! Everything here is fixed-size and deterministic:
+//!
+//! * [`StreamHistogram`] — log-bucketed u64 counters (≤ [`HIST_BUCKETS`]
+//!   buckets, 16 sub-buckets per power of two, values < 16 exact). No
+//!   floats in state; quantile queries return a bucket upper bound, so the
+//!   relative error is at most 1/16 = 6.25%. Merge is element-wise counter
+//!   addition — exactly associative and commutative, which is what a
+//!   future sharded harness needs to combine per-shard state.
+//! * [`Hll`] — a dense HyperLogLog sketch with fixed `2^12 = 4096` one-byte
+//!   registers (standard error `1.04/sqrt(4096)` ≈ 1.6%; the documented
+//!   bound, checked by `obs_check selftest` against exact oracles, is 5%).
+//!   The only randomness is a hash salt taken from a dedicated
+//!   `fork("obs")` stream of the session seed, so same-seed runs emit
+//!   bit-identical sketches and the session RNG stream is untouched.
+//! * [`RoundWindow`] — a ring buffer of the last [`ROUND_WINDOW`] round
+//!   starts. The first entry and the total count are retained besides the
+//!   ring, so whole-session aggregates (mean round time) stay exact after
+//!   eviction.
+//! * [`ProgressLine`] — one compact JSONL snapshot of a running session,
+//!   rendered into a caller-owned buffer (zero heap growth per tick once
+//!   the buffer has grown to line size). Deterministic fields come first;
+//!   the wall-clock tail (`wall_s`, `rss_kb`) is last so differential
+//!   tests can strip it textually.
+//!
+//! The live emitter itself lives in `sim::harness` (it owns the clock and
+//! the output file); `run.progress { every_s, out }` in the scenario spec
+//! arms it.
+
+use std::collections::VecDeque;
+use std::fmt::Write as _;
+
+use super::snapshot::{SnapshotReader, SnapshotWriter};
+use super::time::SimTime;
+
+/// Buckets in a [`StreamHistogram`]: 16 exact small values + 16 sub-buckets
+/// for each exponent 4..=63 (index `(e-3)*16 + mantissa`, max 975).
+pub const HIST_BUCKETS: usize = 976;
+
+/// Ring capacity of [`RoundWindow`] (last W round starts kept).
+pub const ROUND_WINDOW: usize = 4096;
+
+/// HyperLogLog precision: `2^12 = 4096` registers.
+pub const HLL_P: u32 = 12;
+const HLL_M: usize = 1 << HLL_P;
+
+// ---------------------------------------------------------------- histogram
+
+/// Fixed-size log-bucketed histogram over u64 values. All state is u64
+/// counters (floats appear only in quantile queries), so merge and
+/// serialization are exact and deterministic.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct StreamHistogram {
+    /// Lazily sized to [`HIST_BUCKETS`] on first record, so an unused
+    /// histogram costs three words.
+    counts: Vec<u64>,
+    total: u64,
+    /// Saturating sum of recorded values (mean query).
+    sum: u64,
+    min: u64,
+    max: u64,
+}
+
+/// Bucket index of `v`: exact below 16, then 16 sub-buckets per power of
+/// two (relative width 1/16).
+fn hist_bucket(v: u64) -> usize {
+    if v < 16 {
+        return v as usize;
+    }
+    let e = 63 - v.leading_zeros() as usize; // >= 4
+    (e - 3) * 16 + ((v >> (e - 4)) & 15) as usize
+}
+
+/// Upper bound of bucket `idx` — the quantile representative. Conservative
+/// (over-estimates by < 1/16 relative).
+fn hist_rep(idx: usize) -> u64 {
+    if idx < 16 {
+        return idx as u64;
+    }
+    let e = idx / 16 + 3;
+    let lo = (1u64 << e) + (((idx % 16) as u64) << (e - 4));
+    lo + (1u64 << (e - 4)) - 1
+}
+
+impl StreamHistogram {
+    pub fn new() -> StreamHistogram {
+        StreamHistogram { counts: Vec::new(), total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    pub fn record(&mut self, v: u64) {
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        self.counts[hist_bucket(v)] += 1;
+        self.total += 1;
+        self.sum = self.sum.saturating_add(v);
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    /// Estimate of the `q`-quantile (q in [0, 1]): the upper bound of the
+    /// bucket holding the rank-⌈q·total⌉ value, clamped to the observed
+    /// [min, max]. Relative error ≤ 1/16 against the exact order statistic.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((q * self.total as f64).ceil() as u64).clamp(1, self.total);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return hist_rep(i).clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Element-wise counter merge — exactly associative/commutative.
+    pub fn merge(&mut self, other: &StreamHistogram) {
+        if other.total == 0 {
+            return;
+        }
+        if self.counts.is_empty() {
+            self.counts = vec![0; HIST_BUCKETS];
+        }
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum = self.sum.saturating_add(other.sum);
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Serialize (sparse: only non-zero buckets), byte-stable across
+    /// write→read→write.
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        w.write_u64(self.total);
+        w.write_u64(self.sum);
+        w.write_u64(self.min);
+        w.write_u64(self.max);
+        let nonzero = self.counts.iter().filter(|&&c| c != 0).count();
+        w.write_usize(nonzero);
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c != 0 {
+                w.write_u32(i as u32);
+                w.write_u64(c);
+            }
+        }
+    }
+
+    pub fn read_from(r: &mut SnapshotReader) -> anyhow::Result<StreamHistogram> {
+        let total = r.read_u64()?;
+        let sum = r.read_u64()?;
+        let min = r.read_u64()?;
+        let max = r.read_u64()?;
+        let nonzero = r.read_usize()?;
+        let mut counts = Vec::new();
+        if total > 0 {
+            counts = vec![0; HIST_BUCKETS];
+        }
+        for _ in 0..nonzero {
+            let i = r.read_u32()? as usize;
+            anyhow::ensure!(i < HIST_BUCKETS, "histogram bucket index {i} out of range");
+            counts[i] = r.read_u64()?;
+        }
+        Ok(StreamHistogram { counts, total, sum, min, max })
+    }
+}
+
+// ---------------------------------------------------------------------- hll
+
+/// splitmix64 finalizer — the avalanche function salting HLL inserts.
+fn mix64(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// Dense HyperLogLog with `2^12` fixed one-byte registers. Distinct-count
+/// estimates carry ≈1.6% standard error (documented bound 5%, verified by
+/// `obs_check selftest`). Deterministic: the salt is the only entropy.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Hll {
+    /// Lazily sized to [`HLL_M`] on first insert.
+    registers: Vec<u8>,
+    salt: u64,
+    inserts: u64,
+}
+
+impl Hll {
+    pub fn with_salt(salt: u64) -> Hll {
+        Hll { registers: Vec::new(), salt, inserts: 0 }
+    }
+
+    /// Re-salt an empty sketch (the harness installs the `fork("obs")`
+    /// stream's salt after construction). No-op guard: changing the salt
+    /// after inserts would silently mix two hash spaces.
+    pub fn set_salt(&mut self, salt: u64) {
+        if self.inserts == 0 {
+            self.salt = salt;
+        }
+    }
+
+    pub fn insert(&mut self, x: u64) {
+        if self.registers.is_empty() {
+            self.registers = vec![0; HLL_M];
+        }
+        self.inserts += 1;
+        let h = mix64(x ^ self.salt);
+        let idx = (h >> (64 - HLL_P)) as usize;
+        let rest = h << HLL_P;
+        let rho = (rest.leading_zeros() + 1).min(64 - HLL_P + 1) as u8;
+        if rho > self.registers[idx] {
+            self.registers[idx] = rho;
+        }
+    }
+
+    /// Total inserts observed (not distinct).
+    pub fn inserts(&self) -> u64 {
+        self.inserts
+    }
+
+    /// Distinct-count estimate: standard HLL harmonic mean with the
+    /// linear-counting small-range correction.
+    pub fn estimate(&self) -> f64 {
+        if self.registers.is_empty() {
+            return 0.0;
+        }
+        let m = HLL_M as f64;
+        let alpha = 0.7213 / (1.0 + 1.079 / m);
+        let mut sum = 0.0f64;
+        let mut zeros = 0u64;
+        for &r in &self.registers {
+            sum += 1.0 / (1u64 << r) as f64;
+            if r == 0 {
+                zeros += 1;
+            }
+        }
+        let raw = alpha * m * m / sum;
+        if raw <= 2.5 * m && zeros > 0 {
+            return m * (m / zeros as f64).ln();
+        }
+        raw
+    }
+
+    /// Rounded estimate for reporting.
+    pub fn count(&self) -> u64 {
+        self.estimate().round() as u64
+    }
+
+    /// Element-wise register max — exactly associative/commutative (same
+    /// salt required for the union to be meaningful).
+    pub fn merge(&mut self, other: &Hll) {
+        if other.registers.is_empty() {
+            return;
+        }
+        if self.registers.is_empty() {
+            self.registers = vec![0; HLL_M];
+        }
+        for (a, &b) in self.registers.iter_mut().zip(&other.registers) {
+            *a = (*a).max(b);
+        }
+        self.inserts += other.inserts;
+    }
+
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        w.write_u64(self.salt);
+        w.write_u64(self.inserts);
+        w.write_bool(!self.registers.is_empty());
+        for &r in &self.registers {
+            w.write_u8(r);
+        }
+    }
+
+    pub fn read_from(r: &mut SnapshotReader) -> anyhow::Result<Hll> {
+        let salt = r.read_u64()?;
+        let inserts = r.read_u64()?;
+        let dense = r.read_bool()?;
+        let mut registers = Vec::new();
+        if dense {
+            registers.reserve_exact(HLL_M);
+            for _ in 0..HLL_M {
+                registers.push(r.read_u8()?);
+            }
+        }
+        Ok(Hll { registers, salt, inserts })
+    }
+}
+
+// ------------------------------------------------------------- round window
+
+/// Ring buffer of the last [`ROUND_WINDOW`] `(round, start-time)` pairs,
+/// plus the retained first entry and total count so whole-session
+/// aggregates stay exact after eviction. This replaces the unbounded
+/// `round_starts: Vec` — the last materialize-in-rounds growth in
+/// `SessionMetrics`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RoundWindow {
+    entries: VecDeque<(u64, f64)>,
+    first: Option<(u64, f64)>,
+    seen: u64,
+}
+
+impl RoundWindow {
+    pub fn record(&mut self, round: u64, time_s: f64) {
+        if self.first.is_none() {
+            self.first = Some((round, time_s));
+        }
+        if self.entries.len() == ROUND_WINDOW {
+            self.entries.pop_front();
+        }
+        self.entries.push_back((round, time_s));
+        self.seen += 1;
+    }
+
+    /// Entries currently retained (≤ [`ROUND_WINDOW`]).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total round starts ever recorded (including evicted ones).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The very first recorded round start (survives eviction).
+    pub fn first(&self) -> Option<(u64, f64)> {
+        self.first
+    }
+
+    pub fn last(&self) -> Option<(u64, f64)> {
+        self.entries.back().copied()
+    }
+
+    /// Chronological iteration over the retained window.
+    pub fn iter(&self) -> impl Iterator<Item = (u64, f64)> + '_ {
+        self.entries.iter().copied()
+    }
+
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        w.write_u64(self.seen);
+        w.write_bool(self.first.is_some());
+        if let Some((r, t)) = self.first {
+            w.write_u64(r);
+            w.write_f64(t);
+        }
+        w.write_usize(self.entries.len());
+        for &(r, t) in &self.entries {
+            w.write_u64(r);
+            w.write_f64(t);
+        }
+    }
+
+    pub fn read_from(r: &mut SnapshotReader) -> anyhow::Result<RoundWindow> {
+        let seen = r.read_u64()?;
+        let first = if r.read_bool()? {
+            let round = r.read_u64()?;
+            Some((round, r.read_f64()?))
+        } else {
+            None
+        };
+        let n = r.read_usize()?;
+        anyhow::ensure!(n <= ROUND_WINDOW, "round window length {n} exceeds capacity");
+        let mut entries = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            let round = r.read_u64()?;
+            entries.push_back((round, r.read_f64()?));
+        }
+        Ok(RoundWindow { entries, first, seen })
+    }
+}
+
+// ----------------------------------------------------------- progress spec
+
+/// Validated `run.progress` config: emit one [`ProgressLine`] every
+/// `every` of sim-time to `out` (a file path; `None` = stderr).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProgressConfig {
+    pub every: SimTime,
+    pub out: Option<String>,
+}
+
+// ----------------------------------------------------------- progress line
+
+/// One JSONL snapshot of a running session. Deterministic fields first;
+/// the wall-clock tail (`wall_s`, `rss_kb`) last, so checkpoint/resume
+/// differentials can strip it with a textual cut at `,"wall_s":`.
+#[derive(Debug, Clone, Default)]
+pub struct ProgressLine {
+    pub t_s: f64,
+    pub alive: u64,
+    pub rounds: u64,
+    pub events: u64,
+    pub msgs: u64,
+    pub bytes_total: u64,
+    pub bytes_goodput: u64,
+    pub bytes_dropped: u64,
+    pub bytes_retrans: u64,
+    pub round_p50_s: f64,
+    pub round_p95_s: f64,
+    pub lat_p50_ms: f64,
+    pub lat_p95_ms: f64,
+    pub xfer_p50_b: u64,
+    pub peers_est: u64,
+    pub trainers_est: u64,
+    pub wall_s: f64,
+    pub rss_kb: u64,
+}
+
+impl ProgressLine {
+    /// Render one JSONL line (with trailing newline) into `out`. Appends —
+    /// callers clear and reuse the buffer, so steady-state ticks allocate
+    /// nothing once the buffer has reached line size.
+    pub fn render(&self, out: &mut String) {
+        let _ = write!(
+            out,
+            concat!(
+                "{{\"t_s\":{:.6},\"alive\":{},\"rounds\":{},\"events\":{},",
+                "\"msgs\":{},\"bytes_total\":{},\"bytes_goodput\":{},",
+                "\"bytes_dropped\":{},\"bytes_retrans\":{},",
+                "\"round_p50_s\":{:.6},\"round_p95_s\":{:.6},",
+                "\"lat_p50_ms\":{:.3},\"lat_p95_ms\":{:.3},",
+                "\"xfer_p50_b\":{},\"peers_est\":{},\"trainers_est\":{},",
+                "\"wall_s\":{:.3},\"rss_kb\":{}}}\n"
+            ),
+            self.t_s,
+            self.alive,
+            self.rounds,
+            self.events,
+            self.msgs,
+            self.bytes_total,
+            self.bytes_goodput,
+            self.bytes_dropped,
+            self.bytes_retrans,
+            self.round_p50_s,
+            self.round_p95_s,
+            self.lat_p50_ms,
+            self.lat_p95_ms,
+            self.xfer_p50_b,
+            self.peers_est,
+            self.trainers_est,
+            self.wall_s,
+            self.rss_kb,
+        );
+    }
+}
+
+/// Peak resident set size in kB from `/proc/self/status` (`VmHWM`), best
+/// effort: 0 where unreadable (non-Linux). `buf` is a caller-owned scratch
+/// buffer so steady-state ticks don't grow the heap.
+pub fn peak_rss_kb(buf: &mut String) -> u64 {
+    buf.clear();
+    use std::io::Read as _;
+    let Ok(mut f) = std::fs::File::open("/proc/self/status") else {
+        return 0;
+    };
+    if f.read_to_string(buf).is_err() {
+        return 0;
+    }
+    for line in buf.lines() {
+        if let Some(rest) = line.strip_prefix("VmHWM:") {
+            return rest.trim().trim_end_matches(" kB").trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+// ------------------------------------------------------- per-session state
+
+/// The harness-side observability state folded into `SessionMetrics`:
+/// round-duration and message-latency histograms (µs) plus the
+/// distinct-trainers sketch. Serialized as its own `"obs"` snapshot
+/// section (format v3).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ObsState {
+    /// Round durations, µs (consecutive round-start gaps).
+    pub round_hist: StreamHistogram,
+    /// Message delivery latencies, µs (send → deliver).
+    pub latency_hist: StreamHistogram,
+    /// Distinct nodes that completed a training job.
+    pub trainers: Hll,
+}
+
+impl ObsState {
+    /// Install the dedicated `fork("obs")` salt (no-op after inserts).
+    pub fn set_salt(&mut self, salt: u64) {
+        self.trainers.set_salt(salt);
+    }
+
+    pub fn write_into(&self, w: &mut SnapshotWriter) {
+        self.round_hist.write_into(w);
+        self.latency_hist.write_into(w);
+        self.trainers.write_into(w);
+    }
+
+    pub fn read_from(r: &mut SnapshotReader) -> anyhow::Result<ObsState> {
+        Ok(ObsState {
+            round_hist: StreamHistogram::read_from(r)?,
+            latency_hist: StreamHistogram::read_from(r)?,
+            trainers: Hll::read_from(r)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hist_buckets_are_monotone_and_covering() {
+        // Every value lands in exactly one bucket whose [lo, hi] range is
+        // contiguous with its neighbours'.
+        let mut prev_hi: i128 = -1;
+        for idx in 0..HIST_BUCKETS {
+            let (lo, hi) = if idx < 16 {
+                (idx as u64, idx as u64)
+            } else {
+                let e = idx / 16 + 3;
+                let lo = (1u64 << e) + (((idx % 16) as u64) << (e - 4));
+                (lo, lo + (1u64 << (e - 4)) - 1)
+            };
+            assert_eq!(lo as i128, prev_hi + 1, "gap before bucket {idx}");
+            prev_hi = hi as i128;
+            assert_eq!(hist_bucket(lo), idx);
+            assert_eq!(hist_bucket(hi), idx);
+            assert_eq!(hist_rep(idx), hi);
+        }
+        assert_eq!(hist_bucket(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn hist_quantiles_within_relative_bound() {
+        // LCG-driven sample vs the exact order statistic: the bucket upper
+        // bound over-estimates by less than 1/16.
+        let mut h = StreamHistogram::new();
+        let mut vals = Vec::new();
+        let mut x = 0x2545F4914F6CDD1Du64;
+        for _ in 0..20_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let v = 1 + (x >> 40); // ~[1, 2^24]
+            h.record(v);
+            vals.push(v);
+        }
+        vals.sort_unstable();
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let est = h.quantile(q) as f64;
+            let rank = ((q * vals.len() as f64).ceil() as usize).clamp(1, vals.len());
+            let exact = vals[rank - 1] as f64;
+            let err = (est - exact).abs() / exact;
+            assert!(err <= 0.0625 + 1e-9, "q={q}: est {est} vs exact {exact} ({err:.4})");
+        }
+        assert_eq!(h.quantile(0.0), *vals.first().unwrap());
+        assert_eq!(h.quantile(1.0), *vals.last().unwrap());
+    }
+
+    #[test]
+    fn hist_merge_is_associative_and_deterministic() {
+        let fill = |seed: u64, n: u64| {
+            let mut h = StreamHistogram::new();
+            let mut x = seed;
+            for _ in 0..n {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                h.record(x >> 44);
+            }
+            h
+        };
+        let (a, b, c) = (fill(1, 500), fill(2, 800), fill(3, 300));
+        let mut left = a.clone();
+        left.merge(&b);
+        left.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "merge not associative");
+        assert_eq!(left.total(), 1600);
+        assert_eq!(fill(7, 1000), fill(7, 1000), "record not deterministic");
+    }
+
+    #[test]
+    fn hll_estimates_within_documented_bound() {
+        // Salts mirror the python oracle in the design notes; 5% is the
+        // documented bound (σ ≈ 1.6% at 2^12 registers).
+        for n in [1_000u64, 100_000] {
+            for salt_seed in [0u64, 1, 0xCAFE] {
+                let mut hll = Hll::with_salt(mix64(salt_seed));
+                for i in 0..n {
+                    hll.insert(i.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(7));
+                }
+                let est = hll.estimate();
+                let err = (est - n as f64).abs() / n as f64;
+                assert!(err <= 0.05, "n={n} salt={salt_seed}: est {est:.1} ({err:.4})");
+            }
+        }
+    }
+
+    #[test]
+    fn hll_merge_equals_union_and_duplicates_are_free() {
+        let salt = mix64(9);
+        let mut a = Hll::with_salt(salt);
+        let mut b = Hll::with_salt(salt);
+        let mut union = Hll::with_salt(salt);
+        for i in 0..5_000u64 {
+            a.insert(i);
+            union.insert(i);
+        }
+        for i in 2_500..7_500u64 {
+            b.insert(i);
+            union.insert(i);
+        }
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.registers, union.registers, "merge != union sketch");
+        // Re-inserting everything changes nothing.
+        let before = union.registers.clone();
+        for i in 0..7_500u64 {
+            union.insert(i);
+        }
+        assert_eq!(union.registers, before);
+    }
+
+    #[test]
+    fn round_window_matches_full_materialization_oracle() {
+        let mut w = RoundWindow::default();
+        let mut oracle: Vec<(u64, f64)> = Vec::new();
+        for r in 0..10_000u64 {
+            let t = r as f64 * 0.37;
+            w.record(r, t);
+            oracle.push((r, t));
+        }
+        assert_eq!(w.seen(), oracle.len() as u64);
+        assert_eq!(w.first(), Some(oracle[0]));
+        assert_eq!(w.last(), oracle.last().copied());
+        assert_eq!(w.len(), ROUND_WINDOW);
+        let tail: Vec<(u64, f64)> = w.iter().collect();
+        assert_eq!(tail.as_slice(), &oracle[oracle.len() - ROUND_WINDOW..]);
+        // Below capacity the window IS the full materialization.
+        let mut small = RoundWindow::default();
+        for r in 0..100u64 {
+            small.record(r, r as f64);
+        }
+        let all: Vec<(u64, f64)> = small.iter().collect();
+        assert_eq!(all.len(), 100);
+        assert_eq!(small.len(), 100);
+    }
+
+    #[test]
+    fn obs_state_snapshot_roundtrips_byte_identically() {
+        let mut obs = ObsState::default();
+        obs.set_salt(0xDEC0DE);
+        for i in 0..3_000u64 {
+            obs.round_hist.record(i * 17 + 3);
+            obs.latency_hist.record(i % 977);
+            obs.trainers.insert(i % 700);
+        }
+        let write = |o: &ObsState| {
+            let mut w = SnapshotWriter::new();
+            w.begin_section("obs");
+            o.write_into(&mut w);
+            w.end_section();
+            w.finish()
+        };
+        let bytes = write(&obs);
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("obs").unwrap();
+        let back = ObsState::read_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, obs);
+        // write→read→write byte identity: the wire form is canonical.
+        assert_eq!(write(&back), bytes);
+    }
+
+    #[test]
+    fn round_window_snapshot_roundtrips_after_eviction() {
+        let mut w = RoundWindow::default();
+        for r in 0..(ROUND_WINDOW as u64 + 123) {
+            w.record(r, r as f64 * 0.5);
+        }
+        let write = |win: &RoundWindow| {
+            let mut sw = SnapshotWriter::new();
+            sw.begin_section("w");
+            win.write_into(&mut sw);
+            sw.end_section();
+            sw.finish()
+        };
+        let bytes = write(&w);
+        let mut r = SnapshotReader::new(&bytes).unwrap();
+        r.begin_section("w").unwrap();
+        let back = RoundWindow::read_from(&mut r).unwrap();
+        r.end_section().unwrap();
+        r.finish().unwrap();
+        assert_eq!(back, w);
+        assert_eq!(write(&back), bytes);
+    }
+
+    #[test]
+    fn progress_line_renders_wall_fields_last() {
+        let mut buf = String::new();
+        ProgressLine { t_s: 5.0, bytes_total: 10, bytes_goodput: 10, ..Default::default() }
+            .render(&mut buf);
+        assert!(buf.starts_with("{\"t_s\":5.000000,"), "{buf}");
+        assert!(buf.ends_with("}\n"), "{buf}");
+        let cut = buf.find(",\"wall_s\":").expect("wall tail missing");
+        // Everything after the cut is the non-deterministic tail.
+        assert!(buf[cut..].contains("\"rss_kb\":"));
+        // The stripped prefix is itself followed only by the tail.
+        assert!(!buf[..cut].contains("wall_s"));
+    }
+}

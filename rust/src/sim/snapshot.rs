@@ -52,7 +52,13 @@ pub const SNAPSHOT_MAGIC: [u8; 8] = *b"MDSTSNAP";
 /// v2: fabric gained per-node bandwidth tiers + the loss layer, the
 /// ledger its dropped/retransmitted columns, metrics the goodput split,
 /// and protocol sections their reliability outboxes.
-pub const SNAPSHOT_VERSION: u32 = 2;
+/// v3: streaming observability — the harness writes an `obs` section
+/// (round/latency histograms + distinct-trainers HLL), the ledger carries
+/// its transfer-size histogram and distinct-peers sketch, metrics'
+/// round-start record became a bounded ring window and its traffic
+/// summary gained `distinct_peers`, and the queue section knows the
+/// `ProgressTick` event tag (5).
+pub const SNAPSHOT_VERSION: u32 = 3;
 
 /// Sentinel model index meaning "inline payload follows" (vs a back-ref).
 const MODEL_INLINE: u32 = u32::MAX;

@@ -15,8 +15,16 @@ use super::json::Json;
 
 /// Bench-name prefixes whose regression fails the build. Everything else
 /// (aggregation kernels, view merges, ...) is tracked but advisory.
-pub const GUARDED_PREFIXES: &[&str] =
-    &["des/queue/", "fanout/", "sample/", "mem/", "snapshot/", "loss/", "reliability/"];
+pub const GUARDED_PREFIXES: &[&str] = &[
+    "des/queue/",
+    "fanout/",
+    "sample/",
+    "mem/",
+    "snapshot/",
+    "loss/",
+    "reliability/",
+    "obs/",
+];
 
 /// Guarded rows faster than this in BOTH snapshots are exempt from the
 /// ratio gate: a 2x swing on a tens-of-nanoseconds row is scheduler noise
@@ -95,6 +103,23 @@ pub fn regressions(diffs: &[TrendDiff], threshold: f64) -> Vec<&TrendDiff> {
     let mut out: Vec<&TrendDiff> = diffs.iter().filter(|d| d.fails(threshold)).collect();
     out.sort_by(|a, b| b.ratio.total_cmp(&a.ratio));
     out
+}
+
+/// Guarded prefixes the gate is *blind* to in this comparison: the new
+/// snapshot has rows under the prefix but the base has none, so no
+/// regression there can ever trip. Historically this failed silently — a
+/// stale or empty baseline made the whole gate pass vacuously while
+/// looking green. `bench-diff` turns each returned prefix into a loud CI
+/// `::warning::` annotation instead.
+pub fn missing_guarded_coverage(base: &[BenchRow], new: &[BenchRow]) -> Vec<&'static str> {
+    GUARDED_PREFIXES
+        .iter()
+        .filter(|p| {
+            new.iter().any(|r| r.name.starts_with(**p))
+                && !base.iter().any(|r| r.name.starts_with(**p))
+        })
+        .copied()
+        .collect()
 }
 
 #[cfg(test)]
@@ -249,6 +274,46 @@ mod tests {
         assert_eq!(bad.len(), 1);
         assert_eq!(bad[0].name, "loss/decide/n=100000");
         assert!(bad[0].guarded);
+    }
+
+    #[test]
+    fn obs_rows_are_guarded() {
+        // The streaming-observability rows sit on per-transfer and
+        // per-round hot paths (histogram record, HLL insert) plus the
+        // progress-tick render; a 2x regression there would make the
+        // "bounded work per tick" promise a lie, so they gate like the
+        // DES queue.
+        let base = snapshot(&[
+            ("obs/hist-record/x1024", 4_000),
+            ("obs/hll-insert/n=100000", 300_000),
+            ("obs/progress-tick/n=100000", 2_000),
+        ]);
+        let new = snapshot(&[
+            ("obs/hist-record/x1024", 12_000),
+            ("obs/hll-insert/n=100000", 310_000),
+            ("obs/progress-tick/n=100000", 2_100),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "obs/hist-record/x1024");
+        assert!(bad[0].guarded);
+    }
+
+    #[test]
+    fn missing_guarded_coverage_flags_blind_prefixes() {
+        // Base lacks any obs/ row while the new snapshot has one: the
+        // gate cannot catch obs regressions, and the caller must warn.
+        let base = snapshot(&[("des/queue/hold-100000/calendar", 80_000_000)]);
+        let new = snapshot(&[
+            ("des/queue/hold-100000/calendar", 81_000_000),
+            ("obs/hll-insert/n=100000", 300_000),
+        ]);
+        assert_eq!(missing_guarded_coverage(&base, &new), vec!["obs/"]);
+        // An empty base is blind to every guarded prefix present in new.
+        assert_eq!(missing_guarded_coverage(&[], &new), vec!["des/queue/", "obs/"]);
+        // Full coverage (or a prefix absent from new too) warns nothing.
+        assert!(missing_guarded_coverage(&new, &new).is_empty());
+        assert!(missing_guarded_coverage(&base, &base).is_empty());
     }
 
     #[test]

@@ -103,7 +103,7 @@ fn sf_below_one_tolerates_failures() {
     sp.run.max_rounds = 0;
     sp.run.max_time_s = 500.0;
     let (m, _) = run_scenario(&sp, None, churn).unwrap();
-    let last_round_start = m.round_starts.last().map(|&(_, t)| t).unwrap_or(0.0);
+    let last_round_start = m.round_starts.last().map(|(_, t)| t).unwrap_or(0.0);
     assert!(
         last_round_start > 200.0,
         "stalled at t={last_round_start} (final round {})",

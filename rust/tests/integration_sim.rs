@@ -111,7 +111,7 @@ fn mass_crash_session_keeps_making_progress() {
     spec.run.max_rounds = 0;
     spec.run.max_time_s = 600.0;
     let (m, _) = run_scenario(&spec, None, churn).unwrap();
-    let after_crashes = m.round_starts.iter().filter(|&&(_, t)| t > 200.0).count();
+    let after_crashes = m.round_starts.iter().filter(|&(_, t)| t > 200.0).count();
     assert!(after_crashes > 3, "no rounds after the crash wave");
 }
 

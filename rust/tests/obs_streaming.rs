@@ -1,0 +1,134 @@
+//! End-to-end tests of the live progress stream through the scenario
+//! layer: every registered protocol armed with `run.progress` writes a
+//! JSONL stream whose every line reconciles and whose final line agrees
+//! with the session's own terminal metrics — and arming the stream must
+//! not perturb the session at all (same RNG draws, same fingerprints, on
+//! both queue backends via the CI feature matrix).
+
+use modest_dl::scenario::{run_scenario, ProgressSpec, ProtocolRegistry, ScenarioSpec};
+use modest_dl::sim::ChurnSchedule;
+use modest_dl::util::Json;
+
+/// A small churned mock scenario (the snapshot-differential shape): step
+/// availability takes a slice of the population down and up again, so the
+/// stream covers an `alive` dip, retries, and mid-run round stalls.
+fn churned_spec(protocol: &str) -> ScenarioSpec {
+    ScenarioSpec::from_json(&format!(
+        r#"{{
+            "workload": {{"dataset": "mock"}},
+            "population": {{"nodes": 14, "availability": {{
+                "model": "step", "amplitude": 0.3, "period_s": 50.0, "seed": 5}}}},
+            "protocol": {{"name": "{protocol}", "s": 4, "a": 2}},
+            "run": {{"max_time_s": 150.0, "max_rounds": 18,
+                     "eval_interval_s": 10.0, "seed": 4242}}
+        }}"#
+    ))
+    .unwrap()
+}
+
+fn stream_path(tag: &str) -> std::path::PathBuf {
+    let backend = if cfg!(feature = "queue-heap") { "heap" } else { "cal" };
+    std::env::temp_dir().join(format!("obs_streaming_{tag}_{backend}.jsonl"))
+}
+
+#[test]
+fn every_protocol_streams_a_reconciling_jsonl() {
+    for name in ProtocolRegistry::builtins().names() {
+        let path = stream_path(name);
+        let mut spec = churned_spec(name);
+        spec.run.progress = Some(ProgressSpec {
+            every_s: 10.0,
+            out: Some(path.to_string_lossy().into_owned()),
+        });
+        let (m, ledger) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("{name}: progress stream never written: {e}"));
+        let _ = std::fs::remove_file(&path);
+
+        let lines: Vec<&str> = text.lines().collect();
+        // 150 sim-seconds at 10s cadence (rounds may end the run early,
+        // but never before a few ticks) plus the terminal line.
+        assert!(lines.len() >= 4, "{name}: only {} progress lines", lines.len());
+        let mut prev_t = f64::NEG_INFINITY;
+        for l in &lines {
+            let j = Json::parse(l).unwrap_or_else(|e| panic!("{name}: bad line {l}: {e}"));
+            let t_s = j.field("t_s").unwrap().as_f64().unwrap();
+            assert!(t_s >= prev_t, "{name}: sim-time went backwards in {l}");
+            prev_t = t_s;
+            let total = j.field("bytes_total").unwrap().as_u64().unwrap();
+            let good = j.field("bytes_goodput").unwrap().as_u64().unwrap();
+            let dropped = j.field("bytes_dropped").unwrap().as_u64().unwrap();
+            let retrans = j.field("bytes_retrans").unwrap().as_u64().unwrap();
+            assert_eq!(total, good + dropped + retrans, "{name}: no reconcile: {l}");
+        }
+        // The terminal line agrees with the final metrics/ledger exactly —
+        // the stream is the same bookkeeping, not a parallel estimate.
+        let last = Json::parse(lines.last().unwrap()).unwrap();
+        assert_eq!(last.field("bytes_total").unwrap().as_u64().unwrap(), ledger.total());
+        assert_eq!(
+            last.field("rounds").unwrap().as_u64().unwrap(),
+            m.final_round,
+            "{name}: final line disagrees on rounds"
+        );
+        assert_eq!(last.field("events").unwrap().as_u64().unwrap(), m.events);
+        assert_eq!(
+            last.field("peers_est").unwrap().as_u64().unwrap(),
+            m.traffic.distinct_peers,
+            "{name}: final line disagrees with TrafficSummary.distinct_peers"
+        );
+        let trainers = last.field("trainers_est").unwrap().as_u64().unwrap();
+        assert!(
+            (1..=14 + 2).contains(&trainers),
+            "{name}: implausible distinct-trainers estimate {trainers} for 14 nodes"
+        );
+    }
+}
+
+#[test]
+fn arming_progress_does_not_perturb_the_session() {
+    // The acceptance bar for zero observer effect at the scenario layer:
+    // with and without `run.progress`, the convergence curve (metric
+    // bits), event count, and traffic totals are bit-identical.
+    let spec_plain = churned_spec("modest");
+    let (m0, t0) = run_scenario(&spec_plain, None, ChurnSchedule::empty()).unwrap();
+    let path = stream_path("perturb");
+    let mut spec_obs = churned_spec("modest");
+    spec_obs.run.progress = Some(ProgressSpec {
+        every_s: 7.0,
+        out: Some(path.to_string_lossy().into_owned()),
+    });
+    let (m1, t1) = run_scenario(&spec_obs, None, ChurnSchedule::empty()).unwrap();
+    let _ = std::fs::remove_file(&path);
+    let bits = |m: &modest_dl::metrics::SessionMetrics| -> Vec<(u64, u64)> {
+        m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect()
+    };
+    assert_eq!(m0.final_round, m1.final_round);
+    assert_eq!(m0.events, m1.events, "progress ticks leaked into the event count");
+    assert_eq!(bits(&m0), bits(&m1), "progress stream perturbed the RNG");
+    assert_eq!(t0.total(), t1.total());
+}
+
+#[test]
+fn invalid_progress_specs_fail_loudly_at_build_time() {
+    // The scenario boundary rejects a bad progress config before any
+    // session state is built, for every protocol's builder path.
+    for name in ProtocolRegistry::builtins().names() {
+        let mut spec = churned_spec(name);
+        spec.run.progress = Some(ProgressSpec { every_s: 0.0, out: None });
+        let err = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("every_s"),
+            "{name}: unhelpful error {err:#}"
+        );
+        let mut spec = churned_spec(name);
+        spec.run.progress = Some(ProgressSpec {
+            every_s: 5.0,
+            out: Some("/nonexistent_dir_modest_obs/stream.jsonl".into()),
+        });
+        let err = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("not writable"),
+            "{name}: unhelpful error {err:#}"
+        );
+    }
+}

@@ -11,7 +11,9 @@
 
 use modest_dl::metrics::SessionMetrics;
 use modest_dl::net::TrafficLedger;
-use modest_dl::scenario::{resume_session, run_scenario, ProtocolRegistry, ScenarioSpec};
+use modest_dl::scenario::{
+    resume_session, run_scenario, ProgressSpec, ProtocolRegistry, ScenarioSpec,
+};
 use modest_dl::sim::ChurnSchedule;
 
 fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
@@ -142,6 +144,54 @@ fn lossy_resume_matches_uninterrupted_for_every_protocol() {
             );
         }
     }
+}
+
+/// The progress JSONL stream rides checkpoints: a run that checkpoints at
+/// T (suppressing its terminal line) and then resumes must *append* to the
+/// same file and end up with exactly the lines an uninterrupted run
+/// streams — compared after stripping the non-deterministic wall-clock
+/// tail of each line with a textual cut at `,"wall_s":`.
+#[test]
+fn progress_stream_rides_checkpoint_resume() {
+    let backend = if cfg!(feature = "queue-heap") { "heap" } else { "cal" };
+    let full_path =
+        std::env::temp_dir().join(format!("progress_diff_full_{backend}.jsonl"));
+    let stitched_path =
+        std::env::temp_dir().join(format!("progress_diff_stitched_{backend}.jsonl"));
+
+    let mut spec = churned_spec("modest");
+    spec.run.progress = Some(ProgressSpec {
+        every_s: 10.0,
+        out: Some(full_path.to_string_lossy().into_owned()),
+    });
+    let (m0, _) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+    let full = std::fs::read_to_string(&full_path).unwrap();
+    let _ = std::fs::remove_file(&full_path);
+
+    // Same session split across a process-equivalent boundary, streaming
+    // into one stitched file: part 1 truncates on its first emit, the
+    // resumed part appends (the spec — progress config included — rides
+    // the snapshot).
+    let mut ck = spec.clone();
+    ck.run.progress.as_mut().unwrap().out =
+        Some(stitched_path.to_string_lossy().into_owned());
+    let bytes = checkpoint_run(&ck, m0.duration_s * 0.5, "modest_progress");
+    let (_, session) = resume_session(&bytes, None, None, None).unwrap();
+    let _ = session.run();
+    let stitched = std::fs::read_to_string(&stitched_path).unwrap();
+    let _ = std::fs::remove_file(&stitched_path);
+
+    let strip = |text: &str| -> Vec<String> {
+        text.lines()
+            .map(|l| {
+                let cut = l.find(",\"wall_s\":").expect("wall tail missing");
+                l[..cut].to_string()
+            })
+            .collect()
+    };
+    let (a, b) = (strip(&full), strip(&stitched));
+    assert!(a.len() >= 4, "uninterrupted run streamed only {} lines", a.len());
+    assert_eq!(a, b, "checkpoint+resume progress stream diverged from uninterrupted");
 }
 
 #[test]
