@@ -58,6 +58,9 @@ pub struct DsgdConfig {
     pub reliability: Option<ReliabilityConfig>,
     /// Live JSONL progress stream (None = off).
     pub progress: Option<crate::sim::ProgressConfig>,
+    /// Event-queue execution threads (1 = classic single-threaded loop;
+    /// T > 1 runs the sharded conservative-window scheduler, bit-identical).
+    pub threads: usize,
 }
 
 impl Default for DsgdConfig {
@@ -76,6 +79,7 @@ impl Default for DsgdConfig {
             checkpoint_out: None,
             reliability: None,
             progress: None,
+            threads: 1,
         }
     }
 }
@@ -94,6 +98,7 @@ impl DsgdConfig {
             checkpoint_at: self.checkpoint_at,
             checkpoint_out: self.checkpoint_out.clone(),
             progress: self.progress.clone(),
+            threads: self.threads,
         }
     }
 }
@@ -653,6 +658,7 @@ pub fn dsgd_config(spec: &ScenarioSpec) -> DsgdConfig {
         checkpoint_out: spec.run.checkpoint_out.clone(),
         reliability: spec.network.reliability(),
         progress: None,
+        threads: spec.run.threads,
     }
 }
 

@@ -56,6 +56,9 @@ pub struct GossipConfig {
     pub reliability: Option<ReliabilityConfig>,
     /// Live JSONL progress stream (None = off).
     pub progress: Option<crate::sim::ProgressConfig>,
+    /// Event-queue execution threads (1 = classic single-threaded loop;
+    /// T > 1 runs the sharded conservative-window scheduler, bit-identical).
+    pub threads: usize,
 }
 
 impl Default for GossipConfig {
@@ -74,6 +77,7 @@ impl Default for GossipConfig {
             checkpoint_out: None,
             reliability: None,
             progress: None,
+            threads: 1,
         }
     }
 }
@@ -464,6 +468,7 @@ impl GossipSession {
             checkpoint_at: cfg.checkpoint_at,
             checkpoint_out: cfg.checkpoint_out.clone(),
             progress: cfg.progress.clone(),
+            threads: cfg.threads,
         };
         let outbox = cfg.reliability.map(ReliableOutbox::new);
         let protocol = GossipProtocol {
@@ -572,6 +577,7 @@ impl SessionBuilder for GossipBuilder {
             checkpoint_out: spec.run.checkpoint_out.clone(),
             reliability: spec.network.reliability(),
             progress: spec.progress_config()?,
+            threads: spec.run.threads,
         };
         Ok(Box::new(GossipSession::new(cfg, n, task, compute, fabric, churn)))
     }

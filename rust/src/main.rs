@@ -59,6 +59,8 @@ COMMON FLAGS:
   --bw-sigma F     capacity heterogeneity, lognormal sigma (default 0)
   --sampling V     peer-sampling stream: v1 (frozen full shuffle, default)
                    or v2 (O(k) partial shuffle for 100k-node sessions)
+  --threads N      event-queue execution threads (default 1); N > 1 shards
+                   the queue across N workers, bit-identical to N = 1
   --artifacts DIR  AOT artifact dir (default artifacts)
   --out DIR        CSV output dir (default results)
   --mock           use the mock task (no artifacts needed)
@@ -183,6 +185,15 @@ fn cmd_run(args: &Args) -> Result<()> {
     }
     if let Some(v) = args.get_opt("sampling") {
         spec.run.sampling = SamplingVersion::parse(&v)?;
+    }
+    if let Some(t) = args.get_opt("threads") {
+        let threads = t
+            .parse::<usize>()
+            .map_err(|e| anyhow::anyhow!("--threads {t:?}: {e}"))?;
+        if threads == 0 {
+            bail!("--threads must be >= 1 (got 0)");
+        }
+        spec.run.threads = threads;
     }
     if let Some(t) = args.get_opt("checkpoint-at") {
         spec.run.checkpoint_at_s = Some(

@@ -29,6 +29,7 @@ pub fn modest_config(spec: &ScenarioSpec) -> Result<ModestConfig> {
         checkpoint_out: spec.run.checkpoint_out.clone(),
         reliability: spec.network.reliability(),
         progress: spec.progress_config()?,
+        threads: spec.run.threads,
     })
 }
 

@@ -86,6 +86,9 @@ pub struct ModestConfig {
     pub reliability: Option<ReliabilityConfig>,
     /// Live JSONL progress stream (None = off).
     pub progress: Option<crate::sim::ProgressConfig>,
+    /// Event-queue execution threads (1 = classic single-threaded loop;
+    /// T > 1 runs the sharded conservative-window scheduler, bit-identical).
+    pub threads: usize,
 }
 
 impl Default for ModestConfig {
@@ -108,6 +111,7 @@ impl Default for ModestConfig {
             checkpoint_out: None,
             reliability: None,
             progress: None,
+            threads: 1,
         }
     }
 }
@@ -126,6 +130,7 @@ impl ModestConfig {
             checkpoint_at: self.checkpoint_at,
             checkpoint_out: self.checkpoint_out.clone(),
             progress: self.progress.clone(),
+            threads: self.threads,
         }
     }
 }

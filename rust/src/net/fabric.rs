@@ -271,6 +271,14 @@ impl NetworkFabric {
         self.latency.one_way(a, b)
     }
 
+    /// Minimum pairwise one-way latency of the quantized matrix — exported
+    /// as the conservative lookahead of the sharded scheduler
+    /// ([`crate::sim::parallel`]). Zero means the session has a
+    /// zero-latency link and no conservative window exists.
+    pub fn min_one_way(&self) -> SimTime {
+        self.latency.min_one_way()
+    }
+
     pub fn ledger(&self) -> &TrafficLedger {
         &self.ledger
     }

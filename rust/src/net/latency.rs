@@ -127,6 +127,15 @@ impl LatencyMatrix {
         SimTime(max)
     }
 
+    /// Minimum one-way latency over every city pair (including same-city
+    /// links) — the conservative lookahead of the sharded scheduler in
+    /// [`crate::sim::parallel`]: no message can arrive sooner than this, so
+    /// a window of that width can never pop out of order. O(cities²), a
+    /// one-off at session build, independent of node count.
+    pub fn min_one_way(&self) -> SimTime {
+        SimTime(self.lat_us.iter().copied().min().unwrap_or(0))
+    }
+
     /// Median one-way latency from `a` to all other nodes (the paper fixes
     /// the FL server at the node with the lowest median latency).
     pub fn median_from(&self, a: NodeId, n: usize) -> SimTime {
@@ -219,5 +228,22 @@ mod tests {
         let m = LatencyMatrix::uniform(5, SimTime::from_millis(10));
         assert_eq!(m.one_way(0, 4), SimTime::from_millis(10));
         assert_eq!(m.rtt(1, 2), SimTime::from_millis(20));
+    }
+
+    #[test]
+    fn min_one_way_is_a_true_lower_bound() {
+        let m = matrix(60);
+        let min = m.min_one_way();
+        assert!(min > SimTime::ZERO, "synthetic base cost keeps links positive");
+        for a in 0..60u32 {
+            for b in 0..60u32 {
+                assert!(m.one_way(a, b) >= min, "{a}->{b} under the reported minimum");
+            }
+        }
+        assert_eq!(
+            LatencyMatrix::uniform(4, SimTime::from_millis(10)).min_one_way(),
+            SimTime::from_millis(10)
+        );
+        assert_eq!(LatencyMatrix::uniform(4, SimTime::ZERO).min_one_way(), SimTime::ZERO);
     }
 }

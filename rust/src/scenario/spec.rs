@@ -152,6 +152,11 @@ pub struct RunSpec {
     /// Live progress stream (`None` = off: zero extra events or RNG
     /// draws, so recorded same-seed fingerprints stay bit-identical).
     pub progress: Option<ProgressSpec>,
+    /// Event-queue execution threads (must be ≥ 1). 1 — the default — is
+    /// the classic single-threaded loop; T > 1 shards the queue across T
+    /// worker threads under the conservative-window scheduler, bit-identical
+    /// to T = 1 (fingerprints, ledgers, progress streams, snapshots).
+    pub threads: usize,
 }
 
 impl Default for RunSpec {
@@ -166,6 +171,7 @@ impl Default for RunSpec {
             checkpoint_at_s: None,
             checkpoint_out: None,
             progress: None,
+            threads: 1,
         }
     }
 }
@@ -313,6 +319,23 @@ impl ScenarioSpec {
                                     Some(p)
                                 }
                             }
+                            "threads" => {
+                                let t = val.as_usize()?;
+                                if t == 0 {
+                                    bail!("run.threads must be >= 1 (got 0)");
+                                }
+                                let avail = std::thread::available_parallelism()
+                                    .map(|n| n.get())
+                                    .unwrap_or(1);
+                                if t > avail {
+                                    eprintln!(
+                                        "warning: run.threads = {t} exceeds available \
+                                         parallelism ({avail}); the run stays \
+                                         deterministic but threads will contend"
+                                    );
+                                }
+                                spec.run.threads = t;
+                            }
                             other => bail!("unknown run key {other:?}"),
                         }
                     }
@@ -456,6 +479,7 @@ impl ScenarioSpec {
                             None => Json::Null,
                         },
                     ),
+                    ("threads", Json::Num(self.run.threads as f64)),
                 ]),
             ),
         ])
@@ -805,10 +829,27 @@ mod tests {
         spec.run.sampling = SamplingVersion::V2Partial;
         spec.run.progress =
             Some(ProgressSpec { every_s: 5.0, out: Some("/tmp/p.jsonl".into()) });
+        spec.run.threads = 4;
         spec.network.bandwidth_sigma = 0.6;
         let text = spec.to_json().to_string();
         let back = ScenarioSpec::from_json(&text).unwrap();
         assert_eq!(spec, back);
+    }
+
+    #[test]
+    fn run_threads_parses_defaults_and_rejects_zero() {
+        // Absent = 1: every pre-existing config stays single-threaded.
+        let spec = ScenarioSpec::from_json(r#"{"run": {"seed": 3}}"#).unwrap();
+        assert_eq!(spec.run.threads, 1);
+        let spec = ScenarioSpec::from_json(r#"{"run": {"threads": 4}}"#).unwrap();
+        assert_eq!(spec.run.threads, 4);
+        // Zero threads cannot execute anything: loud error, not a warning.
+        let err = ScenarioSpec::from_json(r#"{"run": {"threads": 0}}"#)
+            .expect_err("threads = 0 must be rejected");
+        assert!(err.to_string().contains("threads"), "{err}");
+        // The flat-key compat shim predates `threads` and stays frozen:
+        // a flat `threads` key is unknown vocabulary.
+        assert!(ScenarioSpec::from_json(r#"{"threads": 2}"#).is_err());
     }
 
     #[test]

@@ -167,9 +167,10 @@ impl<E> EventArena<E> {
 }
 
 /// Validate a snapshot's queue section before rebuilding a backend from it.
-/// Shared by both backends so `queue-heap` sessions reject the same corrupt
-/// inputs. `events` must arrive sorted ascending by `(at, seq)`.
-fn validate_restore<E>(
+/// Shared by both backends (and the sharded wrapper in `sim::parallel`) so
+/// every restore path rejects the same corrupt inputs. `events` must
+/// arrive sorted ascending by `(at, seq)`.
+pub(crate) fn validate_restore<E>(
     now: SimTime,
     seq: u64,
     peak_capacity: usize,
@@ -367,12 +368,43 @@ impl<E> HeapEventQueue<E> {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.pop_entry().map(|(at, _, e)| (at, e))
+    }
+
+    /// Pop the earliest event together with its insertion seq — the sharded
+    /// merge needs the full `(at, seq)` key to interleave partitions in the
+    /// exact single-queue order. Advances the clock like `pop`.
+    pub fn pop_entry(&mut self) -> Option<(SimTime, u64, E)> {
         let entry = self.heap.pop()?;
         let (at, event) = self.arena.remove(entry.handle);
         debug_assert!(at >= self.now, "event queue went back in time");
         self.now = at;
         self.popped += 1;
-        Some((at, event))
+        Some((at, entry.seq, event))
+    }
+
+    /// Insert an event whose `(at, seq)` key was minted elsewhere — the
+    /// sharded execution path, where one central counter assigns seqs
+    /// across every queue partition. The internal counter ratchets past
+    /// `seq` so the live-seq < counter invariant keeps holding.
+    pub fn schedule_preassigned(&mut self, at: SimTime, seq: u64, event: E) {
+        self.seq = self.seq.max(seq + 1);
+        self.schedule_raw(at, seq, event);
+    }
+
+    /// Remove and return every live event sorted ascending by `(at, seq)`,
+    /// WITHOUT advancing the clock or the processed counter. The sharded
+    /// snapshot path serializes a merged cross-partition view and then
+    /// reinserts the events via [`HeapEventQueue::schedule_preassigned`];
+    /// a plain pop loop would ratchet `now` forward and make the reinsert
+    /// non-monotone.
+    pub fn drain_sorted(&mut self) -> Vec<(SimTime, u64, E)> {
+        let mut v = Vec::with_capacity(self.heap.len());
+        while let Some(entry) = self.heap.pop() {
+            let (at, event) = self.arena.remove(entry.handle);
+            v.push((at, entry.seq, event));
+        }
+        v
     }
 
     /// Peek at the next event time without popping.
@@ -695,6 +727,51 @@ impl<E> CalendarEventQueue<E> {
 
     /// Pop the earliest event, advancing the clock to its timestamp.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
+        self.pop_entry().map(|(at, _, e)| (at, e))
+    }
+
+    /// Insert an event whose `(at, seq)` key was minted elsewhere — the
+    /// sharded execution path, where one central counter assigns seqs
+    /// across every queue partition. The internal counter ratchets past
+    /// `seq` so the live-seq < counter invariant keeps holding.
+    pub fn schedule_preassigned(&mut self, at: SimTime, seq: u64, event: E) {
+        self.seq = self.seq.max(seq + 1);
+        self.schedule_raw(at, seq, event);
+    }
+
+    /// Remove and return every live event sorted ascending by `(at, seq)`,
+    /// WITHOUT advancing the clock or the processed counter. The sharded
+    /// snapshot path serializes a merged cross-partition view and then
+    /// reinserts the events via
+    /// [`CalendarEventQueue::schedule_preassigned`]; a plain pop loop would
+    /// ratchet `now` forward and make the reinsert non-monotone.
+    pub fn drain_sorted(&mut self) -> Vec<(SimTime, u64, E)> {
+        let mut handles: Vec<u32> = Vec::with_capacity(self.len());
+        for b in &mut self.buckets[self.cursor..] {
+            handles.extend(b.drain(..));
+        }
+        while let Some(e) = self.far.pop() {
+            handles.push(e.handle);
+        }
+        {
+            let arena = &self.arena;
+            handles.sort_unstable_by_key(|&h| arena.key(h));
+        }
+        self.near_len = 0;
+        self.cursor = 0;
+        let mut v = Vec::with_capacity(handles.len());
+        for h in handles {
+            let seq = self.arena.key(h).1;
+            let (at, event) = self.arena.remove(h);
+            v.push((at, seq, event));
+        }
+        v
+    }
+
+    /// Pop the earliest event together with its insertion seq — the sharded
+    /// merge needs the full `(at, seq)` key to interleave partitions in the
+    /// exact single-queue order. Advances the clock like `pop`.
+    pub fn pop_entry(&mut self) -> Option<(SimTime, u64, E)> {
         if self.near_len == 0 {
             if self.far.is_empty() {
                 return None;
@@ -707,6 +784,7 @@ impl<E> CalendarEventQueue<E> {
         }
         let h = self.buckets[self.cursor].pop_front().expect("non-empty bucket");
         self.near_len -= 1;
+        let seq = self.arena.key(h).1;
         let (at, event) = self.arena.remove(h);
         debug_assert!(at >= self.now, "event queue went back in time");
         // Clamp the sample so one idle jump (a probe tick after traffic
@@ -717,7 +795,7 @@ impl<E> CalendarEventQueue<E> {
         self.gap_ema = 0.9 * self.gap_ema + 0.1 * gap;
         self.now = at;
         self.popped += 1;
-        Some((at, event))
+        Some((at, seq, event))
     }
 
     /// Peek at the next event time without popping.
@@ -928,6 +1006,46 @@ mod tests {
                     .is_err());
                     // Event seqs at/above the seq counter are inconsistent.
                     assert!($q::restore(SimTime::ZERO, 1, 0, live.len(), live).is_err());
+                }
+
+                #[test]
+                fn drain_sorted_roundtrips_through_preassigned_reinsert() {
+                    // The sharded snapshot dance: drain every live event
+                    // (sorted, clock untouched), reinsert with the same
+                    // keys, and keep popping exactly as if nothing
+                    // happened — including events earlier than the latest
+                    // drained one, which a pop-based drain would corrupt
+                    // by ratcheting `now` to the maximum.
+                    let mut q = $q::new();
+                    for i in 0..200u64 {
+                        q.schedule_at(SimTime::from_micros(100 + (i * 37) % 90), i);
+                    }
+                    for _ in 0..50 {
+                        q.pop();
+                    }
+                    let (now, popped, len) = (q.now(), q.events_processed(), q.len());
+                    let drained = q.drain_sorted();
+                    assert_eq!(drained.len(), len);
+                    assert!(q.is_empty());
+                    assert_eq!(q.now(), now, "drain moved the clock");
+                    assert_eq!(q.events_processed(), popped, "drain counted pops");
+                    assert!(
+                        drained.windows(2).all(|w| (w[0].0 .0, w[0].1) < (w[1].0 .0, w[1].1)),
+                        "drain not sorted by (at, seq)"
+                    );
+                    for &(at, seq, e) in &drained {
+                        q.schedule_preassigned(at, seq, e);
+                    }
+                    // Post-reinsert pushes continue from past the drained
+                    // seqs (the counter ratchets), so interleaving stays
+                    // exact.
+                    q.schedule_at(SimTime::from_micros(150), 999);
+                    let mut keys = Vec::new();
+                    while let Some((at, seq, _)) = q.pop_entry() {
+                        keys.push((at.0, seq));
+                    }
+                    assert!(keys.windows(2).all(|w| w[0] < w[1]), "pop order broke");
+                    assert_eq!(keys.len(), len + 1);
                 }
 
                 #[test]

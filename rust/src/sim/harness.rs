@@ -29,6 +29,7 @@ use crate::{NodeId, Round};
 use super::churn::{ChurnEvent, ChurnKind, ChurnSchedule};
 use super::engine::EventQueue;
 use super::obs::{peak_rss_kb, ObsState, ProgressConfig, ProgressLine};
+use super::parallel::{SessionQueue, ShardedQueue};
 use super::population::Population;
 use super::rng::{SamplingVersion, SimRng};
 use super::snapshot::{SnapshotReader, SnapshotWriter};
@@ -68,6 +69,14 @@ pub struct HarnessConfig {
     /// `every` of sim-time. `None` (the default everywhere) arms nothing —
     /// zero extra events, zero RNG draws, bit-identical fingerprints.
     pub progress: Option<ProgressConfig>,
+    /// Event-queue execution threads. 1 (the default everywhere) is the
+    /// classic single-threaded loop; T > 1 runs T sharded queue partitions
+    /// under the conservative-window scheduler in [`crate::sim::parallel`],
+    /// with the minimum pairwise fabric latency as lookahead —
+    /// bit-identical to T = 1 by construction. Sessions whose latency
+    /// matrix contains a zero-latency link have no conservative window and
+    /// fall back to single-threaded execution with a loud warning.
+    pub threads: usize,
 }
 
 /// How a snapshot is replayed into a freshly built harness.
@@ -111,7 +120,7 @@ pub struct EvalPoint {
 /// compute model, the RNG, the metrics sink, and scheduling methods. The
 /// event queue itself stays private to the harness.
 pub struct Ctx<'a, M> {
-    queue: &'a mut EventQueue<HarnessEvent<M>>,
+    queue: &'a mut SessionQueue<HarnessEvent<M>>,
     pub fabric: &'a mut NetworkFabric,
     pub task: &'a mut dyn Task,
     pub compute: &'a ComputeModel,
@@ -261,8 +270,10 @@ impl<M> Ctx<'_, M> {
 /// A protocol drivable by [`SimHarness`]: pure reactions to deliveries,
 /// timers, training completions, and churn, plus an evaluation hook.
 pub trait Protocol {
-    /// Wire-message type delivered between nodes.
-    type Msg;
+    /// Wire-message type delivered between nodes. `Send + 'static` so
+    /// queued deliveries may live in a sharded queue partition owned by a
+    /// worker thread (every payload here is plain data or `Arc`s of it).
+    type Msg: Send + 'static;
 
     /// Kick the protocol off at t=0 (schedule round 1, start training, …).
     fn bootstrap(&mut self, ctx: &mut Ctx<'_, Self::Msg>);
@@ -393,12 +404,25 @@ impl ProgressEmitter {
     }
 }
 
+/// Stable routing key of a harness event — the node it concerns, which is
+/// what partitions state across shards (probe/progress housekeeping pins
+/// to shard family 0).
+fn route_event<M>(e: &HarnessEvent<M>) -> u64 {
+    match e {
+        HarnessEvent::Deliver { to, .. } => *to as u64,
+        HarnessEvent::Timer { node, .. } => *node as u64,
+        HarnessEvent::TrainDone { node, .. } => *node as u64,
+        HarnessEvent::Churn(i) => *i as u64,
+        HarnessEvent::Probe | HarnessEvent::ProgressTick => 0,
+    }
+}
+
 /// The shared session driver: owns every simulation substrate and drives a
 /// [`Protocol`] to its time/round/metric budget.
 pub struct SimHarness<P: Protocol> {
     cfg: HarnessConfig,
     protocol: P,
-    queue: EventQueue<HarnessEvent<P::Msg>>,
+    queue: SessionQueue<HarnessEvent<P::Msg>>,
     fabric: NetworkFabric,
     /// The liveness subsystem: status table, O(1) alive counter, and the
     /// Fenwick alive index behind [`Ctx::sample_peers`].
@@ -453,10 +477,28 @@ impl<P: Protocol> SimHarness<P> {
         let mut metrics = SessionMetrics::with_budget(cfg.max_rounds, probes);
         metrics.obs.set_salt(obs_salt);
         let progress = cfg.progress.clone().map(ProgressEmitter::new);
+        let queue = match Self::shard_plan(&cfg, &fabric) {
+            Some((threads, lookahead)) => SessionQueue::Sharded(ShardedQueue::new(
+                threads,
+                lookahead,
+                route_event::<P::Msg>,
+            )),
+            None => {
+                if cfg.threads > 1 {
+                    eprintln!(
+                        "warning: run.threads = {} requested but the latency matrix \
+                         contains a zero-latency link (conservative lookahead would be \
+                         empty); falling back to single-threaded execution",
+                        cfg.threads
+                    );
+                }
+                SessionQueue::Single(EventQueue::new())
+            }
+        };
         SimHarness {
             cfg,
             protocol,
-            queue: EventQueue::new(),
+            queue,
             fabric,
             population,
             task,
@@ -468,6 +510,20 @@ impl<P: Protocol> SimHarness<P> {
             resumed: false,
             progress,
         }
+    }
+
+    /// Decide whether this run executes sharded: `Some((threads, lookahead))`
+    /// iff `cfg.threads > 1` and the latency matrix's minimum one-way delay
+    /// is positive (a zero-latency link leaves no conservative window).
+    fn shard_plan(cfg: &HarnessConfig, fabric: &NetworkFabric) -> Option<(usize, SimTime)> {
+        if cfg.threads <= 1 {
+            return None;
+        }
+        let lookahead = fabric.min_one_way();
+        if lookahead.0 == 0 {
+            return None;
+        }
+        Some((cfg.threads, lookahead))
     }
 
     pub fn protocol(&self) -> &P {
@@ -534,35 +590,37 @@ impl<P: Protocol> SimHarness<P> {
         w.write_u64(self.queue.seq_counter());
         w.write_u64(self.queue.events_processed());
         w.write_usize(self.queue.arena_capacity());
-        let live = self.queue.live_events();
-        w.write_usize(live.len());
-        for (at, seq, ev) in live {
-            w.write_time(at);
-            w.write_u64(seq);
-            match ev {
-                HarnessEvent::Deliver { to, msg } => {
-                    w.write_u8(0);
-                    w.write_u32(*to);
-                    self.protocol.write_msg(&mut w, msg)?;
+        self.queue.with_live_events(|live| -> Result<()> {
+            w.write_usize(live.len());
+            for &(at, seq, ev) in live {
+                w.write_time(at);
+                w.write_u64(seq);
+                match ev {
+                    HarnessEvent::Deliver { to, msg } => {
+                        w.write_u8(0);
+                        w.write_u32(*to);
+                        self.protocol.write_msg(&mut w, msg)?;
+                    }
+                    HarnessEvent::Timer { node, id } => {
+                        w.write_u8(1);
+                        w.write_u32(*node);
+                        w.write_u64(*id);
+                    }
+                    HarnessEvent::TrainDone { node, seq } => {
+                        w.write_u8(2);
+                        w.write_u32(*node);
+                        w.write_u64(*seq);
+                    }
+                    HarnessEvent::Churn(i) => {
+                        w.write_u8(3);
+                        w.write_usize(*i);
+                    }
+                    HarnessEvent::Probe => w.write_u8(4),
+                    HarnessEvent::ProgressTick => w.write_u8(5),
                 }
-                HarnessEvent::Timer { node, id } => {
-                    w.write_u8(1);
-                    w.write_u32(*node);
-                    w.write_u64(*id);
-                }
-                HarnessEvent::TrainDone { node, seq } => {
-                    w.write_u8(2);
-                    w.write_u32(*node);
-                    w.write_u64(*seq);
-                }
-                HarnessEvent::Churn(i) => {
-                    w.write_u8(3);
-                    w.write_usize(*i);
-                }
-                HarnessEvent::Probe => w.write_u8(4),
-                HarnessEvent::ProgressTick => w.write_u8(5),
             }
-        }
+            Ok(())
+        })?;
         w.end_section();
         Ok(w.finish())
     }
@@ -660,7 +718,15 @@ impl<P: Protocol> SimHarness<P> {
             // fresh seqs (the what-if future differs by design).
             events.retain(|(_, _, e)| !matches!(e, HarnessEvent::Churn(_)));
         }
-        self.queue = EventQueue::restore(now, seq, popped, peak, events)?;
+        self.queue = SessionQueue::restore(
+            Self::shard_plan(&self.cfg, &self.fabric),
+            route_event::<P::Msg>,
+            now,
+            seq,
+            popped,
+            peak,
+            events,
+        )?;
         if opts.reschedule_churn {
             for i in 0..self.churn.events().len() {
                 let ev = self.churn.events()[i];
@@ -944,6 +1010,10 @@ mod tests {
     }
 
     fn ring_harness(n: usize, max_rounds: Round) -> SimHarness<RingProtocol> {
+        ring_harness_t(n, max_rounds, 1)
+    }
+
+    fn ring_harness_t(n: usize, max_rounds: Round, threads: usize) -> SimHarness<RingProtocol> {
         let task = MockTask::new(n, 8, 0.2, 1);
         let model = task.init_model();
         let latency = LatencyMatrix::uniform(n, SimTime::from_millis(20));
@@ -960,6 +1030,7 @@ mod tests {
                 checkpoint_at: None,
                 checkpoint_out: None,
                 progress: None,
+                threads,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -1042,6 +1113,7 @@ mod tests {
                     every: SimTime::from_secs_f64(10.0),
                     out: Some(out_s),
                 }),
+                threads: 1,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -1106,6 +1178,7 @@ mod tests {
                     every: SimTime::from_secs_f64(7.0),
                     out: Some(out.to_str().unwrap().to_string()),
                 }),
+                threads: 1,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -1150,6 +1223,7 @@ mod tests {
                 checkpoint_at: None,
                 checkpoint_out: None,
                 progress: None,
+                threads: 1,
             },
             RingProtocol { n, delivered: 0, round: 1, model },
             n,
@@ -1164,5 +1238,21 @@ mod tests {
         // delivery at a dead node.
         let (m, _) = h.run();
         assert!(m.duration_s <= 30.0 + 1e-6);
+    }
+
+    #[test]
+    fn sharded_run_is_bit_identical_to_single_thread() {
+        let (base, tb) = ring_harness_t(6, 0, 1).run();
+        let cb: Vec<(Round, u64)> =
+            base.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect();
+        for threads in [2, 4] {
+            let (m, t) = ring_harness_t(6, 0, threads).run();
+            assert_eq!(m.events, base.events, "t={threads}");
+            assert_eq!(m.final_round, base.final_round, "t={threads}");
+            assert_eq!(t.total(), tb.total(), "t={threads}");
+            let c: Vec<(Round, u64)> =
+                m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect();
+            assert_eq!(c, cb, "t={threads}");
+        }
     }
 }

@@ -15,6 +15,7 @@ pub mod engine;
 pub mod harness;
 pub mod node_table;
 pub mod obs;
+pub mod parallel;
 pub mod population;
 pub mod reliability;
 pub mod rng;
@@ -26,6 +27,7 @@ pub use engine::{CalendarEventQueue, EventQueue, HeapEventQueue, ScheduledEvent}
 pub use node_table::NodeTable;
 pub use harness::{Ctx, EvalPoint, HarnessConfig, HarnessEvent, Protocol, ResumeOptions, SimHarness};
 pub use obs::{Hll, ObsState, ProgressConfig, ProgressLine, RoundWindow, StreamHistogram};
+pub use parallel::{stable_shard, SessionQueue, ShardedQueue};
 pub use population::{LivenessMirror, Population, Status};
 pub use reliability::{
     Pending, ReliabilityConfig, ReliableOutbox, TimerVerdict, RELIABLE_TIMER_BIT,

@@ -24,6 +24,7 @@ pub const GUARDED_PREFIXES: &[&str] = &[
     "loss/",
     "reliability/",
     "obs/",
+    "par/",
 ];
 
 /// Guarded rows faster than this in BOTH snapshots are exempt from the
@@ -296,6 +297,28 @@ mod tests {
         let bad = regressions(&compare_trend(&base, &new), 2.0);
         assert_eq!(bad.len(), 1);
         assert_eq!(bad[0].name, "obs/hist-record/x1024");
+        assert!(bad[0].guarded);
+    }
+
+    #[test]
+    fn par_rows_are_guarded() {
+        // The sharded-scheduler rows are the parallel-speedup acceptance
+        // bar: a window-merge slowdown or the t=4 hold model drifting back
+        // toward t=1 silently erases the headline win, so they gate like
+        // the DES queue rows they shard.
+        let base = snapshot(&[
+            ("par/window-merge/n=100k", 20_000_000),
+            ("par/harness-step/n=100k,t=1", 300_000_000),
+            ("par/harness-step/n=100k,t=4", 120_000_000),
+        ]);
+        let new = snapshot(&[
+            ("par/window-merge/n=100k", 55_000_000),
+            ("par/harness-step/n=100k,t=1", 310_000_000),
+            ("par/harness-step/n=100k,t=4", 130_000_000),
+        ]);
+        let bad = regressions(&compare_trend(&base, &new), 2.0);
+        assert_eq!(bad.len(), 1);
+        assert_eq!(bad[0].name, "par/window-merge/n=100k");
         assert!(bad[0].guarded);
     }
 

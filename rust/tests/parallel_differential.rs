@@ -1,0 +1,207 @@
+//! Differential tests for the sharded conservative-window scheduler: for
+//! every registered protocol, a same-seed session run under `run.threads`
+//! of 2 or 4 must produce a fingerprint bit-identical to the
+//! single-threaded run — metrics curve bits, event counts, and traffic
+//! ledger bytes included — under churn and under burst loss. Runs under
+//! both queue backends via the CI feature matrix (`--features queue-heap`
+//! swaps the per-shard partitions under the same test body). Also pinned
+//! here: snapshots are thread-count-agnostic (a T=4 checkpoint resumes
+//! under T=1 and vice versa), and T=1/T=4 progress streams differ in
+//! nothing but the non-deterministic `wall_s`/`rss_kb` tail.
+
+use modest_dl::metrics::SessionMetrics;
+use modest_dl::net::TrafficLedger;
+use modest_dl::scenario::{
+    resume_session, run_scenario, ProgressSpec, ProtocolRegistry, ScenarioSpec,
+};
+use modest_dl::sim::ChurnSchedule;
+use modest_dl::util::Json;
+
+fn fingerprint(m: &SessionMetrics, t: &TrafficLedger) -> (u64, u64, Vec<(u64, u64)>, u64) {
+    (
+        m.final_round,
+        m.events,
+        m.curve.iter().map(|p| (p.round, p.metric.to_bits())).collect(),
+        t.total(),
+    )
+}
+
+/// The snapshot-differential churn scenario, reused verbatim so the
+/// thread-count axis covers the same dead-node/mid-revival state space.
+fn churned_spec(protocol: &str, threads: usize) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::from_json(&format!(
+        r#"{{
+            "workload": {{"dataset": "mock"}},
+            "population": {{"nodes": 14, "availability": {{
+                "model": "step", "amplitude": 0.3, "period_s": 50.0, "seed": 5}}}},
+            "protocol": {{"name": "{protocol}", "s": 4, "a": 2}},
+            "run": {{"max_time_s": 150.0, "max_rounds": 18,
+                     "eval_interval_s": 10.0, "seed": 4242}}
+        }}"#
+    ))
+    .unwrap();
+    spec.run.threads = threads;
+    spec
+}
+
+/// Churn plus ~20% Gilbert–Elliott burst loss: retransmit timers fire well
+/// inside the lookahead window and reliability state spans shards, so a
+/// single mis-merged or re-ordered event shifts the drop column.
+fn lossy_churned_spec(protocol: &str, threads: usize) -> ScenarioSpec {
+    let mut spec = ScenarioSpec::from_json(&format!(
+        r#"{{
+            "workload": {{"dataset": "mock"}},
+            "population": {{"nodes": 14, "availability": {{
+                "model": "step", "amplitude": 0.3, "period_s": 50.0, "seed": 5}}}},
+            "protocol": {{"name": "{protocol}", "s": 4, "a": 2}},
+            "network": {{"loss": {{
+                "model": "burst", "p_good": 0.05, "p_bad": 0.5,
+                "good_s": 15.0, "bad_s": 7.5,
+                "timeout_s": 2.0, "backoff": 2.0, "max_timeout_s": 8.0,
+                "retries": 2}}}},
+            "run": {{"max_time_s": 400.0, "max_rounds": 18,
+                     "eval_interval_s": 10.0, "seed": 4242}}
+        }}"#
+    ))
+    .unwrap();
+    spec.run.threads = threads;
+    spec
+}
+
+#[test]
+fn fingerprints_are_thread_count_invariant_for_every_protocol() {
+    for name in ProtocolRegistry::builtins().names() {
+        let (m0, t0) =
+            run_scenario(&churned_spec(name, 1), None, ChurnSchedule::empty()).unwrap();
+        assert!(m0.events > 0 && t0.total() > 0, "{name} did nothing");
+        let want = fingerprint(&m0, &t0);
+        for threads in [2, 4] {
+            let (m, t) =
+                run_scenario(&churned_spec(name, threads), None, ChurnSchedule::empty())
+                    .unwrap();
+            assert_eq!(
+                fingerprint(&m, &t),
+                want,
+                "{name}: T={threads} diverged from the single-threaded run"
+            );
+        }
+    }
+}
+
+#[test]
+fn lossy_fingerprints_are_thread_count_invariant_for_every_protocol() {
+    for name in ProtocolRegistry::builtins().names() {
+        let (m0, t0) =
+            run_scenario(&lossy_churned_spec(name, 1), None, ChurnSchedule::empty()).unwrap();
+        assert!(t0.dropped_bytes() > 0, "{name}: burst loss dropped nothing");
+        let want = fingerprint(&m0, &t0);
+        for threads in [2, 4] {
+            let (m, t) =
+                run_scenario(&lossy_churned_spec(name, threads), None, ChurnSchedule::empty())
+                    .unwrap();
+            assert_eq!(
+                fingerprint(&m, &t),
+                want,
+                "{name}: lossy T={threads} diverged from the single-threaded run"
+            );
+            assert_eq!(
+                (t.dropped_bytes(), t.retransmitted_bytes()),
+                (t0.dropped_bytes(), t0.retransmitted_bytes()),
+                "{name}: loss columns diverged at T={threads}"
+            );
+        }
+    }
+}
+
+fn snap_path(tag: &str) -> std::path::PathBuf {
+    let backend = if cfg!(feature = "queue-heap") { "heap" } else { "cal" };
+    std::env::temp_dir().join(format!("parallel_diff_{tag}_{backend}.snap"))
+}
+
+/// Run `spec` with a checkpoint at `at_s`, returning the snapshot bytes.
+fn checkpoint_run(spec: &ScenarioSpec, at_s: f64, tag: &str) -> Vec<u8> {
+    let path = snap_path(tag);
+    let mut ck = spec.clone();
+    ck.run.checkpoint_at_s = Some(at_s);
+    ck.run.checkpoint_out = Some(path.to_string_lossy().into_owned());
+    let _ = run_scenario(&ck, None, ChurnSchedule::empty()).unwrap();
+    let bytes = std::fs::read(&path)
+        .unwrap_or_else(|e| panic!("checkpoint at t={at_s}s was never written ({tag}): {e}"));
+    let _ = std::fs::remove_file(&path);
+    bytes
+}
+
+/// Snapshots are thread-count-agnostic: a session checkpointed under T=4
+/// must resume under T=1 (and vice versa) and still land on the
+/// single-threaded fingerprint. The resumed run's thread count comes from
+/// a `{"run": {"threads": N}}` overlay merged over the embedded spec.
+#[test]
+fn checkpoints_cross_restore_between_thread_counts() {
+    for name in ProtocolRegistry::builtins().names() {
+        let spec = lossy_churned_spec(name, 1);
+        let (m0, t0) = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        let want = fingerprint(&m0, &t0);
+        let at_s = m0.duration_s * 0.5;
+        for (ck_threads, resume_threads) in [(4, 1), (1, 4)] {
+            let bytes = checkpoint_run(
+                &lossy_churned_spec(name, ck_threads),
+                at_s,
+                &format!("{name}_t{ck_threads}"),
+            );
+            let overlay = format!(r#"{{"run": {{"threads": {resume_threads}}}}}"#);
+            let (spec2, session) =
+                resume_session(&bytes, Some(&overlay), None, None).unwrap();
+            assert_eq!(spec2.run.threads, resume_threads, "{name}: overlay did not apply");
+            let (m1, t1) = session.run();
+            assert_eq!(
+                fingerprint(&m1, &t1),
+                want,
+                "{name}: T={ck_threads} checkpoint resumed under T={resume_threads} \
+                 diverged from the uninterrupted single-threaded run"
+            );
+        }
+    }
+}
+
+/// The live progress stream is part of the determinism contract: between a
+/// T=1 and a T=4 run, the ONLY fields allowed to differ are the
+/// non-deterministic wall-clock tail (`wall_s`, `rss_kb`) — event
+/// counters, byte columns, and estimator sketches are merged globally,
+/// never per-shard.
+#[test]
+fn progress_streams_differ_only_in_wall_clock_fields() {
+    let backend = if cfg!(feature = "queue-heap") { "heap" } else { "cal" };
+    let mut streams = Vec::new();
+    for threads in [1usize, 4] {
+        let path = std::env::temp_dir()
+            .join(format!("parallel_diff_progress_t{threads}_{backend}.jsonl"));
+        let mut spec = churned_spec("modest", threads);
+        spec.run.progress = Some(ProgressSpec {
+            every_s: 10.0,
+            out: Some(path.to_string_lossy().into_owned()),
+        });
+        let _ = run_scenario(&spec, None, ChurnSchedule::empty()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        streams.push(text);
+    }
+    let (a, b) = (&streams[0], &streams[1]);
+    assert!(a.lines().count() >= 4, "only {} progress lines", a.lines().count());
+    assert_eq!(a.lines().count(), b.lines().count(), "line counts diverged");
+    for (i, (la, lb)) in a.lines().zip(b.lines()).enumerate() {
+        let ja = Json::parse(la).unwrap();
+        let jb = Json::parse(lb).unwrap();
+        let fa = ja.as_obj().unwrap();
+        let fb = jb.as_obj().unwrap();
+        let keys = |f: &[(String, Json)]| -> Vec<String> {
+            f.iter().map(|(k, _)| k.clone()).collect()
+        };
+        assert_eq!(keys(fa), keys(fb), "line {i}: field sets diverged");
+        for ((k, va), (_, vb)) in fa.iter().zip(fb.iter()) {
+            if k == "wall_s" || k == "rss_kb" {
+                continue;
+            }
+            assert_eq!(va, vb, "line {i}: field {k:?} diverged between T=1 and T=4");
+        }
+    }
+}
